@@ -1,0 +1,48 @@
+//! Mini Table 2 ablation (M1–M7) on one model: swing x generator x
+//! latent-optimization x GENIE-M, at W2A4 where the gaps are widest.
+//!
+//!   cargo run --release --example ablation [model]
+
+use anyhow::Result;
+use genie::coordinator::{
+    distill, eval_quantized, pretrain::teacher_or_pretrain, quantize,
+    DistillCfg, DistillMode, Metrics, PretrainCfg, QuantCfg,
+};
+use genie::data::Dataset;
+use genie::runtime::{ModelRt, Runtime};
+
+fn main() -> Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "toy".into());
+    let rt = Runtime::cpu()?;
+    let mrt = ModelRt::load(&rt, "artifacts", &model)?;
+    let dataset = Dataset::load("artifacts")?;
+    let mut metrics = Metrics::new();
+    let teacher = teacher_or_pretrain(
+        &mrt, &dataset, &PretrainCfg { steps: 400, ..Default::default() },
+        std::path::Path::new("runs"), &mut metrics,
+    )?;
+
+    let arms: [(&str, DistillMode, bool, bool); 7] = [
+        ("M1 zeroq           ", DistillMode::Direct, false, false),
+        ("M2 zeroq+GENIE-M   ", DistillMode::Direct, false, true),
+        ("M3 zeroq+swing     ", DistillMode::Direct, true, false),
+        ("M4 GBA             ", DistillMode::Gba, false, false),
+        ("M5 gen+z           ", DistillMode::Genie, false, false),
+        ("M6 gen+z+swing     ", DistillMode::Genie, true, false),
+        ("M7 GENIE (full)    ", DistillMode::Genie, true, true),
+    ];
+    for (name, mode, swing, genie_m) in arms {
+        let dcfg = DistillCfg { mode, swing, samples: 64, steps: 100,
+                                ..Default::default() };
+        let mut qcfg = QuantCfg { wbits: 2, abits: 4, steps_per_block: 100,
+                                  ..Default::default() };
+        if !genie_m {
+            qcfg = qcfg.adaround();
+        }
+        let images = distill(&mrt, &teacher, &dcfg, &mut metrics)?.images;
+        let qstate = quantize(&mrt, &teacher, &images, &qcfg, &mut metrics)?;
+        let acc = eval_quantized(&mrt, &teacher, &qstate, &dataset)?;
+        println!("{name} W2A4: {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}

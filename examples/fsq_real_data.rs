@@ -1,0 +1,47 @@
+//! Few-shot quantization on real calibration data (the Table 5 setting):
+//! GENIE-M vs the AdaRound baseline, with and without QDrop, at W2A4.
+//!
+//!   cargo run --release --example fsq_real_data [model] [samples]
+
+use anyhow::Result;
+use genie::coordinator::{
+    eval_fp32, eval_quantized, pretrain::teacher_or_pretrain, quantize,
+    Metrics, PretrainCfg, QuantCfg,
+};
+use genie::data::Dataset;
+use genie::runtime::{ModelRt, Runtime};
+use genie::tensor::Pcg32;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("resnet14");
+    let samples: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+
+    let rt = Runtime::cpu()?;
+    let mrt = ModelRt::load(&rt, "artifacts", model)?;
+    let dataset = Dataset::load("artifacts")?;
+    let mut metrics = Metrics::new();
+    let teacher = teacher_or_pretrain(
+        &mrt, &dataset, &PretrainCfg { steps: 800, ..Default::default() },
+        std::path::Path::new("runs"), &mut metrics,
+    )?;
+    println!("{model} FP32 top-1: {:.2}%",
+             eval_fp32(&mrt, &teacher, &dataset)? * 100.0);
+
+    let mut rng = Pcg32::new(0xf5a);
+    let (calib, _) = dataset.calibration(&mut rng, samples);
+    let base = QuantCfg { wbits: 2, abits: 4, steps_per_block: 150,
+                          ..Default::default() };
+    let arms = [
+        ("AdaRound+NoDrop", base.clone().adaround().no_drop()),
+        ("AdaRound+QDrop ", base.clone().adaround()),
+        ("GENIE-M +NoDrop", base.clone().no_drop()),
+        ("GENIE-M +QDrop ", base.clone()),
+    ];
+    for (name, q) in arms {
+        let qstate = quantize(&mrt, &teacher, &calib, &q, &mut metrics)?;
+        let acc = eval_quantized(&mrt, &teacher, &qstate, &dataset)?;
+        println!("{name}  W2A4 ({samples} real imgs): {:.2}%", acc * 100.0);
+    }
+    Ok(())
+}

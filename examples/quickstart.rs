@@ -1,0 +1,34 @@
+//! Quickstart: the smallest end-to-end GENIE run (toy model, one distilled
+//! batch, W4A4). ~1 minute on a single CPU core.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use genie::coordinator::{
+    eval_fp32, pretrain::teacher_or_pretrain, zsq, DistillCfg, Metrics,
+    PretrainCfg, QuantCfg,
+};
+use genie::data::Dataset;
+use genie::runtime::{ModelRt, Runtime};
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let mrt = ModelRt::load(&rt, "artifacts", "toy")?;
+    let dataset = Dataset::load("artifacts")?;
+    let mut metrics = Metrics::new();
+
+    // FP32 teacher (cached under runs/)
+    let pcfg = PretrainCfg { steps: 200, ..Default::default() };
+    let teacher = teacher_or_pretrain(
+        &mrt, &dataset, &pcfg, std::path::Path::new("runs"), &mut metrics,
+    )?;
+    println!("teacher FP32 top-1: {:.2}%",
+             eval_fp32(&mrt, &teacher, &dataset)? * 100.0);
+
+    // zero-shot quantization: GENIE-D data + GENIE-M W4A4
+    let dcfg = DistillCfg { samples: 64, steps: 80, ..Default::default() };
+    let qcfg = QuantCfg { steps_per_block: 80, ..Default::default() };
+    let out = zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut metrics)?;
+    out.print("quickstart");
+    Ok(())
+}

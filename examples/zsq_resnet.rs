@@ -1,0 +1,53 @@
+//! End-to-end driver (the DESIGN.md validation run): pretrain the
+//! resnet14 teacher on the procedural dataset, log its loss curve, run the
+//! full GENIE zero-shot pipeline at W4A4 and W2A4, and report FP32 vs
+//! quantized accuracy plus phase wall-clock. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!   cargo run --release --example zsq_resnet [model] [distill_steps] [quant_steps]
+
+use anyhow::Result;
+use genie::coordinator::{
+    eval_fp32, pretrain::teacher_or_pretrain, zsq, DistillCfg, Metrics,
+    PretrainCfg, QuantCfg,
+};
+use genie::data::Dataset;
+use genie::runtime::{ModelRt, Runtime};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("resnet14");
+    let dsteps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let qsteps: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(150);
+
+    let rt = Runtime::cpu()?;
+    let mrt = ModelRt::load(&rt, "artifacts", model)?;
+    let dataset = Dataset::load("artifacts")?;
+    let mut metrics =
+        Metrics::with_dir(format!("runs/example_zsq_{model}"))?;
+
+    let pcfg = PretrainCfg { steps: 800, ..Default::default() };
+    let teacher = teacher_or_pretrain(
+        &mrt, &dataset, &pcfg, std::path::Path::new("runs"), &mut metrics,
+    )?;
+    let fp = eval_fp32(&mrt, &teacher, &dataset)?;
+    println!("{model} FP32 top-1: {:.2}%", fp * 100.0);
+    if let Some(series) = metrics.series("pretrain/loss") {
+        println!("pretrain loss curve (step, loss):");
+        for (s, v) in series {
+            println!("  {s:>5}  {v:.4}");
+        }
+    }
+
+    for (w, a) in [(4u32, 4u32), (2, 4)] {
+        let dcfg = DistillCfg { samples: 128, steps: dsteps, ..Default::default() };
+        let qcfg = QuantCfg {
+            wbits: w, abits: a, steps_per_block: qsteps, ..Default::default()
+        };
+        let out = zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut metrics)?;
+        out.print(&format!("zsq W{w}A{a}"));
+    }
+    metrics.flush()?;
+    println!("loss curves flushed to runs/example_zsq_{model}/");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+"""AOT driver: lower every entrypoint of every requested model to HLO text
+and emit the manifest + initial parameters + the synthetic dataset.
+
+HLO *text* (not HloModuleProto.serialize) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 rust crate links) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            --models toy,resnet14,mobilenetv2_t
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, generator, tensorstore
+from .entries import build_entries
+from .models import ZOO, get_model
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def build_dataset(out_dir, train_n, test_n):
+    xs, ys = data.make_dataset(train_n, seed=1)
+    xte, yte = data.make_dataset(test_n, seed=2)
+    path = os.path.join(out_dir, "dataset.bin")
+    tensorstore.save(path, [
+        ("train_x", xs), ("train_y", ys), ("test_x", xte), ("test_y", yte),
+    ])
+    print(f"dataset: {path} ({train_n}+{test_n} images)")
+
+
+def build_model(name, out_dir, seed=0):
+    t0 = time.time()
+    model = get_model(name)
+    mdir = os.path.join(out_dir, name)
+    os.makedirs(mdir, exist_ok=True)
+
+    params, bn = model.init(jax.random.PRNGKey(seed))
+    gen = generator.init(jax.random.PRNGKey(seed + 1), model.image)
+    tensors = ([(n, np.asarray(v)) for n, v in params.items()]
+               + [(n, np.asarray(v)) for n, v in bn.items()]
+               + [(n, np.asarray(v)) for n, v in gen.items()])
+    tensorstore.save(os.path.join(mdir, "init.bin"), tensors)
+
+    entries, meta = build_entries(model)
+    eps = {}
+    for e in entries:
+        t1 = time.time()
+        # keep_unused: XLA must keep every manifest argument as an entry
+        # parameter even if the graph ignores it (e.g. the classifier
+        # head inside the BNS-loss distill graphs), or the rust-side
+        # buffer count would not match the manifest.
+        lowered = jax.jit(e.fn, keep_unused=True).lower(*e.avals())
+        text = to_hlo_text(lowered)
+        fname = f"{e.name}.hlo.txt"
+        with open(os.path.join(mdir, fname), "w") as f:
+            f.write(text)
+        eps[e.name] = {"file": fname, "args": e.args, "results": e.results}
+        print(f"  {name}/{e.name}: {len(text)//1024}KiB "
+              f"({time.time()-t1:.1f}s)")
+    meta["entrypoints"] = eps
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"{name}: done in {time.time()-t0:.1f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="toy,resnet14,mobilenetv2_t")
+    ap.add_argument("--train-size", type=int, default=8192)
+    ap.add_argument("--test-size", type=int, default=2048)
+    ap.add_argument("--no-dataset", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if not args.no_dataset:
+        build_dataset(args.out_dir, args.train_size, args.test_size)
+    for i, name in enumerate(args.models.split(",")):
+        name = name.strip()
+        if not name:
+            continue
+        assert name in ZOO, f"unknown model {name}; have {list(ZOO)}"
+        build_model(name, args.out_dir, seed=i)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Entrypoint catalogue: the named, ordered argument/result specs of every
+AOT graph, shared between the lowering driver (aot.py) and manifest.json.
+
+An Entry is a flat-positional function plus (name, dtype, shape) lists for
+arguments and results. The rust runtime wires buffers purely by these
+names (rust/src/runtime/manifest.rs)."""
+
+import jax
+import jax.numpy as jnp
+
+from . import generator, ir, steps
+
+F32, I32, U32 = "f32", "i32", "u32"
+_NP = {F32: jnp.float32, I32: jnp.int32, U32: jnp.uint32}
+
+# Baked batch sizes (manifest `batch`): rust slices its data accordingly.
+BATCH = {"train": 64, "distill": 64, "recon": 32, "eval": 256, "stats": 64}
+
+
+class Entry:
+    def __init__(self, name, fn, args, results):
+        self.name = name
+        self.fn = fn
+        self.args = args          # [(name, dtype, shape)]
+        self.results = results    # [(name, dtype, shape)]
+
+    def avals(self):
+        return [jax.ShapeDtypeStruct(tuple(sh), _NP[dt])
+                for _, dt, sh in self.args]
+
+
+def _f(name, shape):
+    return (name, F32, list(shape))
+
+
+def _named(specs, prefix=""):
+    return [_f(prefix + n, sh) for n, sh in specs]
+
+
+def _dict_from(flat, specs, prefix=""):
+    return {n: a for (n, _), a in zip(specs, flat)}
+
+
+def _bounds_shapes(model, batch):
+    params, bn = model.init(jax.random.PRNGKey(0))
+    x = jnp.zeros((batch,) + tuple(model.image), jnp.float32)
+    bounds = steps.collect_teacher(model, params, bn, x)
+    return [list(b.shape) for b in bounds]
+
+
+def build_entries(model):
+    """All entrypoints for one model. Returns (entries, meta)."""
+    pspecs = model.param_specs()
+    bnspecs = model.bn_specs()
+    qspecs = model.qstate_specs()
+    gspecs = generator.param_specs(model.image)
+    img = tuple(model.image)
+    nb = len(model.blocks)
+    bshapes = _bounds_shapes(model, BATCH["recon"])
+    entries = []
+
+    n_p, n_bn, n_q, n_g = len(pspecs), len(bnspecs), len(qspecs), len(gspecs)
+
+    # ---- train_step ----
+    def train_fn(*flat):
+        i = 0
+        params = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+        ms = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        vs = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        t, x, y, lr = flat[i:i + 4]
+        p2, bn2, m2, v2, loss, acc = steps.train_step(
+            model, params, bn, ms, vs, t, x, y, lr)
+        return (tuple(p2[n] for n, _ in pspecs)
+                + tuple(bn2[n] for n, _ in bnspecs)
+                + tuple(m2[n] for n, _ in pspecs)
+                + tuple(v2[n] for n, _ in pspecs) + (loss, acc))
+
+    bt = BATCH["train"]
+    args = (_named(pspecs) + _named(bnspecs)
+            + _named(pspecs, "am.") + _named(pspecs, "av.")
+            + [_f("t", ()), _f("x", (bt,) + img), ("y", I32, [bt]),
+               _f("lr", ())])
+    res = (_named(pspecs) + _named(bnspecs) + _named(pspecs, "am.")
+           + _named(pspecs, "av.") + [_f("loss", ()), _f("acc", ())])
+    entries.append(Entry("train_step", train_fn, args, res))
+
+    # ---- eval_batch ----
+    be = BATCH["eval"]
+
+    def eval_fn(*flat):
+        params = _dict_from(flat[:n_p], pspecs)
+        bn = _dict_from(flat[n_p:n_p + n_bn], bnspecs)
+        return (steps.eval_batch(model, params, bn, flat[-1]),)
+
+    entries.append(Entry(
+        "eval_batch", eval_fn,
+        _named(pspecs) + _named(bnspecs) + [_f("x", (be,) + img)],
+        [_f("logits", (be, model.nclasses))]))
+
+    # ---- act_stats ----
+    bs = BATCH["stats"]
+    nql = len(model.quant_layers())
+
+    def stats_fn(*flat):
+        params = _dict_from(flat[:n_p], pspecs)
+        bn = _dict_from(flat[n_p:n_p + n_bn], bnspecs)
+        return (steps.act_stats(model, params, bn, flat[-1]),)
+
+    entries.append(Entry(
+        "act_stats", stats_fn,
+        _named(pspecs) + _named(bnspecs) + [_f("x", (bs,) + img)],
+        [_f("act_stats", (nql,))]))
+
+    # ---- collect_teacher ----
+    br = BATCH["recon"]
+
+    def collect_t_fn(*flat):
+        params = _dict_from(flat[:n_p], pspecs)
+        bn = _dict_from(flat[n_p:n_p + n_bn], bnspecs)
+        return tuple(steps.collect_teacher(model, params, bn, flat[-1]))
+
+    entries.append(Entry(
+        "collect_teacher", collect_t_fn,
+        _named(pspecs) + _named(bnspecs) + [_f("x", (br,) + img)],
+        [_f(f"bound.{i}", sh) for i, sh in enumerate(bshapes)]))
+
+    # ---- collect_student ----
+    def collect_s_fn(*flat):
+        i = 0
+        params = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+        qs = _dict_from(flat[i:i + n_q], qspecs); i += n_q
+        x, key = flat[i], steps.unwrap_key(flat[i + 1])
+        return tuple(steps.collect_student(model, params, bn, qs, x, key))
+
+    entries.append(Entry(
+        "collect_student", collect_s_fn,
+        _named(pspecs) + _named(bnspecs) + _named(qspecs)
+        + [_f("x", (br,) + img), ("key", U32, [2])],
+        [_f(f"bound.{i}", sh) for i, sh in enumerate(bshapes)]))
+
+    # ---- eval_quant ----
+    def eval_q_fn(*flat):
+        i = 0
+        params = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+        qs = _dict_from(flat[i:i + n_q], qspecs); i += n_q
+        return (steps.eval_quant(model, params, bn, qs, flat[i]),)
+
+    entries.append(Entry(
+        "eval_quant", eval_q_fn,
+        _named(pspecs) + _named(bnspecs) + _named(qspecs)
+        + [_f("x", (be,) + img)],
+        [_f("logits", (be, model.nclasses))]))
+
+    # ---- gen_init / gen_images ----
+    def gen_init_fn(raw):
+        gp = generator.init(steps.unwrap_key(raw), model.image)
+        return tuple(gp[n] for n, _ in gspecs)
+
+    entries.append(Entry("gen_init", gen_init_fn, [("key", U32, [2])],
+                         _named(gspecs)))
+
+    bd = BATCH["distill"]
+
+    def gen_images_fn(*flat):
+        gp = _dict_from(flat[:n_g], gspecs)
+        return (generator.apply(gp, flat[-1], model.image),)
+
+    entries.append(Entry(
+        "gen_images", gen_images_fn,
+        _named(gspecs) + [_f("z", (bd, generator.LATENT))],
+        [_f("images", (bd,) + img)]))
+
+    # ---- distill steps ----
+    for swing in (True, False):
+        tag = "swing" if swing else "noswing"
+
+        def genie_fn(*flat, _swing=swing):
+            i = 0
+            gp = _dict_from(flat[i:i + n_g], gspecs); i += n_g
+            gm = _dict_from(flat[i:i + n_g], gspecs); i += n_g
+            gv = _dict_from(flat[i:i + n_g], gspecs); i += n_g
+            z, zm, zv, t = flat[i:i + 4]; i += 4
+            params = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+            bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+            key, lr_g, lr_z = steps.unwrap_key(flat[i]), flat[i + 1], flat[i + 2]
+            gp2, gm2, gv2, z2, zm2, zv2, loss = steps.distill_genie_step(
+                model, gp, gm, gv, z, zm, zv, t, params, bn, key, lr_g,
+                lr_z, _swing)
+            return (tuple(gp2[n] for n, _ in gspecs)
+                    + tuple(gm2[n] for n, _ in gspecs)
+                    + tuple(gv2[n] for n, _ in gspecs)
+                    + (z2, zm2, zv2, loss))
+
+        zsh = (bd, generator.LATENT)
+        args = (_named(gspecs) + _named(gspecs, "am.") + _named(gspecs, "av.")
+                + [_f("z", zsh), _f("zm", zsh), _f("zv", zsh), _f("t", ())]
+                + _named(pspecs) + _named(bnspecs)
+                + [("key", U32, [2]), _f("lr_g", ()), _f("lr_z", ())])
+        res = (_named(gspecs) + _named(gspecs, "am.") + _named(gspecs, "av.")
+               + [_f("z", zsh), _f("zm", zsh), _f("zv", zsh), _f("loss", ())])
+        entries.append(Entry(f"distill_genie_{tag}", genie_fn, args, res))
+
+        def direct_fn(*flat, _swing=swing):
+            i = 0
+            x, xm, xv, t = flat[i:i + 4]; i += 4
+            params = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+            bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+            key, lr = steps.unwrap_key(flat[i]), flat[i + 1]
+            return steps.distill_direct_step(model, x, xm, xv, t, params,
+                                             bn, key, lr, _swing)
+
+        xsh = (bd,) + img
+        args = ([_f("x", xsh), _f("xm", xsh), _f("xv", xsh), _f("t", ())]
+                + _named(pspecs) + _named(bnspecs)
+                + [("key", U32, [2]), _f("lr", ())])
+        res = [_f("x", xsh), _f("xm", xsh), _f("xv", xsh), _f("loss", ())]
+        entries.append(Entry(f"distill_direct_{tag}", direct_fn, args, res))
+
+    # ---- qat_step / eval_qat (netwise Min-Max QAT baseline) ----
+    def qat_fn(*flat):
+        i = 0
+        sp = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        ms = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        vs = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        t = flat[i]; i += 1
+        tp = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+        x, lr, wp, ap = flat[i:i + 4]
+        p2, m2, v2, loss = steps.qat_step(model, sp, ms, vs, t, tp, bn, x,
+                                          lr, wp, ap)
+        return (tuple(p2[n] for n, _ in pspecs)
+                + tuple(m2[n] for n, _ in pspecs)
+                + tuple(v2[n] for n, _ in pspecs) + (loss,))
+
+    args = (_named(pspecs, "s.") + _named(pspecs, "am.")
+            + _named(pspecs, "av.") + [_f("t", ())]
+            + _named(pspecs) + _named(bnspecs)
+            + [_f("x", (bt,) + img), _f("lr", ()), _f("wp", ()),
+               _f("ap", ())])
+    res = (_named(pspecs, "s.") + _named(pspecs, "am.")
+           + _named(pspecs, "av.") + [_f("loss", ())])
+    entries.append(Entry("qat_step", qat_fn, args, res))
+
+    def eval_qat_fn(*flat):
+        i = 0
+        sp = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+        bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+        x, wp, ap = flat[i:i + 3]
+        return (steps.eval_qat(model, sp, bn, x, wp, ap),)
+
+    entries.append(Entry(
+        "eval_qat", eval_qat_fn,
+        _named(pspecs, "s.") + _named(bnspecs)
+        + [_f("x", (be,) + img), _f("wp", ()), _f("ap", ())],
+        [_f("logits", (be, model.nclasses))]))
+
+    # ---- quant_step_{b} ----
+    for b in range(nb):
+        bp = model.block_param_specs(b)
+        bbn = model.block_bn_specs(b)
+        bq = model.block_qstate_specs(b)
+        learn = model.qstate_learnable(block=b)
+        lspecs = [(n, sh) for n, sh in bq if n in learn]
+        n_bp, n_bbn, n_bq, n_l = len(bp), len(bbn), len(bq), len(lspecs)
+
+        def qstep_fn(*flat, _b=b, _bp=bp, _bbn=bbn, _bq=bq, _ls=lspecs):
+            i = 0
+            params = _dict_from(flat[i:i + len(_bp)], _bp); i += len(_bp)
+            bn = _dict_from(flat[i:i + len(_bbn)], _bbn); i += len(_bbn)
+            qs = _dict_from(flat[i:i + len(_bq)], _bq); i += len(_bq)
+            ms = _dict_from(flat[i:i + len(_ls)], _ls); i += len(_ls)
+            vs = _dict_from(flat[i:i + len(_ls)], _ls); i += len(_ls)
+            (t, x_in, y_ref, key, lr_sw, lr_v, lr_sa, lam, beta,
+             drop_p) = flat[i:i + 10]
+            out, m2, v2, loss, rec = steps.quant_block_step(
+                model, _b, params, bn, qs, ms, vs, t, x_in, y_ref,
+                steps.unwrap_key(key), lr_sw, lr_v, lr_sa, lam, beta,
+                drop_p)
+            return (tuple(out[n] for n, _ in _ls)
+                    + tuple(m2[n] for n, _ in _ls)
+                    + tuple(v2[n] for n, _ in _ls) + (loss, rec))
+
+        args = (_named(bp) + _named(bbn) + _named(bq)
+                + _named(lspecs, "am.") + _named(lspecs, "av.")
+                + [_f("t", ()), _f("x_in", bshapes[b]),
+                   _f("y_ref", bshapes[b + 1]), ("key", U32, [2]),
+                   _f("lr_sw", ()), _f("lr_v", ()), _f("lr_sa", ()),
+                   _f("lam", ()), _f("beta", ()), _f("drop_p", ())])
+        res = (_named(lspecs) + _named(lspecs, "am.") + _named(lspecs, "av.")
+               + [_f("loss", ()), _f("rec", ())])
+        entries.append(Entry(f"quant_step_{b}", qstep_fn, args, res))
+
+    meta = {
+        "model": model.name,
+        "image": list(model.image),
+        "num_classes": model.nclasses,
+        "num_blocks": nb,
+        "latent": generator.LATENT,
+        "batch": BATCH,
+        "params": [[n, list(sh)] for n, sh in pspecs],
+        "bn": [[n, list(sh)] for n, sh in bnspecs],
+        "qstate": [[n, list(sh)] for n, sh in qspecs],
+        "gen_params": [[n, list(sh)] for n, sh in gspecs],
+        "quant_layers": [
+            {"name": ql.name, "w_shape": list(ql.w_shape),
+             "out_ch": ql.out_ch, "flat_k": ql.flat_k, "block": ql.block}
+            for ql in model.quant_layers()],
+        "learnable": {str(b): model.qstate_learnable(block=b)
+                      for b in range(nb)},
+        "bounds": bshapes,
+    }
+    return entries, meta

@@ -1,0 +1,83 @@
+"""GDFQ-style image generator for GENIE-D (appendix E).
+
+z[B, LATENT] -> dense -> [B, H/2, W/2, C0] -> BN -> LeakyReLU
+  -> nearest-upsample x2 -> conv3x3 -> BN -> LeakyReLU  (the single
+     "upscale block" of Figure A3)
+  -> conv3x3 -> tanh  -> images in [-1, 1]
+
+Generator BN uses batch statistics only (no running state): every distilled
+batch re-initializes the generator (appendix A), so there is nothing to
+track across batches. The rust coordinator re-initializes per batch via the
+`gen_init` entrypoint.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bns_stats
+
+LATENT = 256
+C0 = 32
+LRELU = 0.2
+BN_EPS = 1e-5
+
+
+def param_specs(image):
+    h, w, c = image
+    h0, w0 = h // 2, w // 2
+    return [
+        ("gen.fc.w", (LATENT, h0 * w0 * C0)), ("gen.fc.b", (h0 * w0 * C0,)),
+        ("gen.bn0.gamma", (C0,)), ("gen.bn0.beta", (C0,)),
+        ("gen.c1.w", (3, 3, C0, C0)),
+        ("gen.bn1.gamma", (C0,)), ("gen.bn1.beta", (C0,)),
+        ("gen.c2.w", (3, 3, C0, c)), ("gen.c2.b", (c,)),
+    ]
+
+
+def init(key, image):
+    params = {}
+    for name, shape in param_specs(image):
+        key, sub = jax.random.split(key)
+        if name.endswith(".gamma"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".beta") or name.endswith(".b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = (2.0 / max(fan_in, 1)) ** 0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _bn_batch(x, gamma, beta):
+    m, v = bns_stats(x)
+    return (x - m) * jax.lax.rsqrt(v + BN_EPS) * gamma + beta
+
+
+def _lrelu(x):
+    return jnp.where(x >= 0, x, LRELU * x)
+
+
+def _upsample2(x):
+    n, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (n, h, 2, w, 2, c))
+    return x.reshape(n, h * 2, w * 2, c)
+
+
+def apply(params, z, image):
+    h, w, c = image
+    h0, w0 = h // 2, w // 2
+    x = z @ params["gen.fc.w"] + params["gen.fc.b"]
+    x = x.reshape(z.shape[0], h0, w0, C0)
+    x = _lrelu(_bn_batch(x, params["gen.bn0.gamma"], params["gen.bn0.beta"]))
+    x = _upsample2(x)
+    x = jax.lax.conv_general_dilated(
+        x, params["gen.c1.w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = _lrelu(_bn_batch(x, params["gen.bn1.gamma"], params["gen.bn1.beta"]))
+    x = jax.lax.conv_general_dilated(
+        x, params["gen.c2.w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["gen.c2.b"]
+    return jnp.tanh(x)

@@ -1,0 +1,382 @@
+"""Op-list IR and functional interpreter for the CNN model zoo.
+
+A model is a list of blocks; a block is a list of ops. One interpreter
+executes the IR in every mode the GENIE pipeline needs:
+
+  * FP32 train   (batch-norm batch stats + running-stat update)
+  * FP32 eval    (running stats)
+  * BNS collect  (eval normalization, per-BN batch stats recorded via the
+                  pallas bns_stats kernel -- the Eq. 5 loss inputs)
+  * swing        (stride-n convs replaced by swing convolution, 3.1.1)
+  * block collect(record activations at block boundaries for BRECQ-style
+                  reconstruction)
+  * quantized    (GENIE-M fake-quant weights + LSQ activations + QDrop),
+                  soft (optimization) or hard (eval) softbits
+  * act stats    (mean |x| at every activation-quant site, for LSQ s_a init)
+
+Blocks never share residual state, so block-wise reconstruction simply runs
+a block's op list on a cached boundary activation.
+
+All parameters / BN state / quant state are flat name->array dicts so the
+rust coordinator can wire buffers generically from the manifest.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (bns_stats, fake_quant, fake_quant_hard, lsq_quant,
+                      swing_select)
+
+BN_EPS = 1e-5
+
+
+@dataclass
+class Conv:
+    name: str
+    cin: int
+    cout: int
+    k: int
+    stride: int = 1
+    groups: int = 1
+
+
+@dataclass
+class BN:
+    name: str
+    c: int
+
+
+@dataclass
+class Relu:
+    cap: Optional[float] = None  # None -> relu, 6.0 -> relu6
+
+
+@dataclass
+class Save:
+    tag: str
+
+
+@dataclass
+class Merge:
+    """current += run(ops, saved[tag]); optional projection shortcut."""
+    tag: str
+    ops: List = field(default_factory=list)
+
+
+@dataclass
+class GAP:
+    pass
+
+
+@dataclass
+class Dense:
+    name: str
+    cin: int
+    cout: int
+
+
+@dataclass
+class QuantLayer:
+    """One weight+activation quantization site (a conv or dense)."""
+    name: str
+    w_shape: tuple
+    out_ch: int
+    flat_k: int
+    block: int
+
+
+class ModelDef:
+    def __init__(self, name, image, nclasses, blocks):
+        self.name = name
+        self.image = image          # (H, W, C)
+        self.nclasses = nclasses
+        self.blocks = blocks        # list[(block_name, [ops])]
+
+    # -- static structure ---------------------------------------------------
+
+    def _walk(self, ops=None):
+        if ops is None:
+            for _, bops in self.blocks:
+                yield from self._walk(bops)
+            return
+        for op in ops:
+            yield op
+            if isinstance(op, Merge):
+                yield from self._walk(op.ops)
+
+    def param_specs(self):
+        specs = []
+        for op in self._walk():
+            if isinstance(op, Conv):
+                kshape = (op.k, op.k, op.cin // op.groups, op.cout)
+                specs.append((f"{op.name}.w", kshape))
+            elif isinstance(op, BN):
+                specs.append((f"{op.name}.gamma", (op.c,)))
+                specs.append((f"{op.name}.beta", (op.c,)))
+            elif isinstance(op, Dense):
+                specs.append((f"{op.name}.w", (op.cin, op.cout)))
+                specs.append((f"{op.name}.b", (op.cout,)))
+        return specs
+
+    def bn_specs(self):
+        specs = []
+        for op in self._walk():
+            if isinstance(op, BN):
+                specs.append((f"{op.name}.mean", (op.c,)))
+                specs.append((f"{op.name}.var", (op.c,)))
+        return specs
+
+    def bn_names(self):
+        return [op.name for op in self._walk() if isinstance(op, BN)]
+
+    def quant_layers(self):
+        out = []
+        for bi, (_, bops) in enumerate(self.blocks):
+            for op in self._walk(bops):
+                if isinstance(op, Conv):
+                    ksh = (op.k, op.k, op.cin // op.groups, op.cout)
+                    flat_k = op.k * op.k * (op.cin // op.groups)
+                    out.append(QuantLayer(op.name, ksh, op.cout, flat_k, bi))
+                elif isinstance(op, Dense):
+                    out.append(QuantLayer(op.name, (op.cin, op.cout),
+                                          op.cout, op.cin, bi))
+        return out
+
+    def qstate_specs(self):
+        """Flat quant-state tensors, rust-initialized (Eq. 6 / LSQ init)."""
+        specs = []
+        for ql in self.quant_layers():
+            o, k = ql.out_ch, ql.flat_k
+            specs += [
+                (f"q.{ql.name}.sw", (o,)), (f"q.{ql.name}.v", (o, k)),
+                (f"q.{ql.name}.b", (o, k)), (f"q.{ql.name}.zp", (o,)),
+                (f"q.{ql.name}.wn", ()), (f"q.{ql.name}.wp", ()),
+                (f"q.{ql.name}.sa", ()), (f"q.{ql.name}.an", ()),
+                (f"q.{ql.name}.ap", ()),
+            ]
+        return specs
+
+    def qstate_learnable(self, block=None):
+        """Names of learnable quant tensors (sw, v, sa), optionally per block."""
+        names = []
+        for ql in self.quant_layers():
+            if block is not None and ql.block != block:
+                continue
+            names += [f"q.{ql.name}.sw", f"q.{ql.name}.v", f"q.{ql.name}.sa"]
+        return names
+
+    def _specs_for(self, ops):
+        specs = []
+        for op in self._walk(ops):
+            if isinstance(op, Conv):
+                specs.append((f"{op.name}.w",
+                              (op.k, op.k, op.cin // op.groups, op.cout)))
+            elif isinstance(op, BN):
+                specs.append((f"{op.name}.gamma", (op.c,)))
+                specs.append((f"{op.name}.beta", (op.c,)))
+            elif isinstance(op, Dense):
+                specs.append((f"{op.name}.w", (op.cin, op.cout)))
+                specs.append((f"{op.name}.b", (op.cout,)))
+        return specs
+
+    def block_param_specs(self, b):
+        return self._specs_for(self.blocks[b][1])
+
+    def block_bn_specs(self, b):
+        specs = []
+        for op in self._walk(self.blocks[b][1]):
+            if isinstance(op, BN):
+                specs.append((f"{op.name}.mean", (op.c,)))
+                specs.append((f"{op.name}.var", (op.c,)))
+        return specs
+
+    def block_qstate_specs(self, b):
+        prefixes = [f"q.{ql.name}." for ql in self.quant_layers()
+                    if ql.block == b]
+        return [(n, sh) for n, sh in self.qstate_specs()
+                if any(n.startswith(p) for p in prefixes)]
+
+    # -- initialization -----------------------------------------------------
+
+    def init(self, key):
+        params, bn_state = {}, {}
+        for name, shape in self.param_specs():
+            key, sub = jax.random.split(key)
+            if name.endswith(".gamma"):
+                params[name] = jnp.ones(shape, jnp.float32)
+            elif name.endswith(".beta") or name.endswith(".b"):
+                params[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                fan_in = 1
+                for d in shape[:-1]:
+                    fan_in *= d
+                std = (2.0 / max(fan_in, 1)) ** 0.5
+                params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+        for name, shape in self.bn_specs():
+            bn_state[name] = (jnp.zeros(shape, jnp.float32)
+                              if name.endswith(".mean")
+                              else jnp.ones(shape, jnp.float32))
+        return params, bn_state
+
+
+class Ctx:
+    """Per-forward mutable interpreter context."""
+
+    def __init__(self, params, bn_state, *, train=False, momentum=0.1,
+                 swing_key=None, collect_bns=False, qctx=None, hard=False,
+                 drop_key=None, drop_p=None, act_stats=False, minmax=None):
+        self.params = params
+        self.bn_state = dict(bn_state)
+        self.train = train
+        self.momentum = momentum
+        self.swing_key = swing_key
+        self.collect_bns = collect_bns
+        self.bns = []
+        self.qctx = qctx
+        self.hard = hard
+        self.drop_key = drop_key
+        self.drop_p = drop_p
+        self.act_stats = act_stats
+        # minmax: (wp, ap) scalars -> netwise Min-Max QAT fake-quant mode
+        # (the GDFQ/AIT-style quantizer of the Table 4 baseline).
+        self.minmax = minmax
+        self.stats = []
+        self.new_bn = {}
+        self._fold = 0
+
+    def next_key(self, base):
+        self._fold += 1
+        return jax.random.fold_in(base, self._fold)
+
+
+def _conv(x, w, stride, groups):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _quant_weight(ctx, name, w, out_ch):
+    q = ctx.qctx
+    fq = fake_quant_hard if ctx.hard else fake_quant
+    wq = fq(q[f"q.{name}.sw"], q[f"q.{name}.v"], q[f"q.{name}.b"],
+            q[f"q.{name}.zp"], q[f"q.{name}.wn"], q[f"q.{name}.wp"])
+    return jnp.moveaxis(wq.reshape((w.shape[-1],) + w.shape[:-1]), 0, -1)
+
+
+def _minmax_w(w, wp):
+    """Per-tensor symmetric Min-Max weight fake-quant (Eq. 3), STE via
+    the lsq kernel with a stop-gradient step size."""
+    s = jax.lax.stop_gradient(jnp.max(jnp.abs(w)) / wp + 1e-8)
+    return lsq_quant(w, s, -wp - 1.0, wp)
+
+
+def _minmax_a(x, ap):
+    """Dynamic per-batch symmetric activation fake-quant."""
+    s = jax.lax.stop_gradient(jnp.max(jnp.abs(x)) / ap + 1e-8)
+    return lsq_quant(x, s, -ap - 1.0, ap)
+
+
+def _quant_act(ctx, name, x):
+    q = ctx.qctx
+    xq = lsq_quant(x, q[f"q.{name}.sa"], q[f"q.{name}.an"], q[f"q.{name}.ap"])
+    if ctx.drop_key is not None:
+        # QDrop: each element keeps its FP value with probability drop_p.
+        keep_fp = jax.random.bernoulli(
+            ctx.next_key(ctx.drop_key), ctx.drop_p, x.shape)
+        xq = jnp.where(keep_fp, x, xq)
+    return xq
+
+
+def run_ops(ops, x, ctx):
+    saved = {}
+    for op in ops:
+        if isinstance(op, Conv):
+            w = ctx.params[f"{op.name}.w"]
+            if ctx.act_stats:
+                ctx.stats.append(jnp.mean(jnp.abs(x)))
+            if ctx.minmax is not None:
+                w = _minmax_w(w, ctx.minmax[0])
+                x = _minmax_a(x, ctx.minmax[1])
+            if ctx.qctx is not None:
+                w = _quant_weight(ctx, op.name, w, op.cout)
+                x = _quant_act(ctx, op.name, x)
+            if ctx.swing_key is not None and op.stride > 1:
+                pad = op.stride - 1
+                xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                             mode="reflect")
+                off = jax.random.randint(
+                    ctx.next_key(ctx.swing_key), (2,), 0, 2 * pad + 1)
+                x = swing_select(xp, off, x.shape[1], x.shape[2])
+            x = _conv(x, w, op.stride, op.groups)
+        elif isinstance(op, BN):
+            gamma = ctx.params[f"{op.name}.gamma"]
+            beta = ctx.params[f"{op.name}.beta"]
+            rm = ctx.bn_state[f"{op.name}.mean"]
+            rv = ctx.bn_state[f"{op.name}.var"]
+            if ctx.train or ctx.collect_bns:
+                bm, bv = bns_stats(x)
+                if ctx.collect_bns:
+                    ctx.bns.append((bm, bv))
+            if ctx.train:
+                mean, var = bm, bv
+                mom = ctx.momentum
+                ctx.new_bn[f"{op.name}.mean"] = (1 - mom) * rm + mom * bm
+                ctx.new_bn[f"{op.name}.var"] = (1 - mom) * rv + mom * bv
+            else:
+                mean, var = rm, rv
+            x = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * gamma + beta
+        elif isinstance(op, Relu):
+            x = jnp.maximum(x, 0.0)
+            if op.cap is not None:
+                x = jnp.minimum(x, op.cap)
+        elif isinstance(op, Save):
+            saved[op.tag] = x
+        elif isinstance(op, Merge):
+            x = x + run_ops(op.ops, saved[op.tag], ctx)
+        elif isinstance(op, GAP):
+            x = jnp.mean(x, axis=(1, 2))
+        elif isinstance(op, Dense):
+            w = ctx.params[f"{op.name}.w"]
+            b = ctx.params[f"{op.name}.b"]
+            if ctx.act_stats:
+                ctx.stats.append(jnp.mean(jnp.abs(x)))
+            if ctx.minmax is not None:
+                w = _minmax_w(w, ctx.minmax[0])
+                x = _minmax_a(x, ctx.minmax[1])
+            if ctx.qctx is not None:
+                wq = _quant_weight_dense(ctx, op.name, w)
+                x = _quant_act(ctx, op.name, x)
+                x = x @ wq + b
+            else:
+                x = x @ w + b
+        else:
+            raise TypeError(f"unknown op {op!r}")
+    return x
+
+
+def _quant_weight_dense(ctx, name, w):
+    q = ctx.qctx
+    fq = fake_quant_hard if ctx.hard else fake_quant
+    wq = fq(q[f"q.{name}.sw"], q[f"q.{name}.v"], q[f"q.{name}.b"],
+            q[f"q.{name}.zp"], q[f"q.{name}.wn"], q[f"q.{name}.wp"])
+    return wq.T  # stored [cout, cin] -> [cin, cout]
+
+
+def forward(model, params, bn_state, x, *, collect_blocks=False, **kw):
+    ctx = Ctx(params, bn_state, **kw)
+    bounds = [x]
+    for _, bops in model.blocks:
+        x = run_ops(bops, x, ctx)
+        bounds.append(x)
+    if collect_blocks:
+        return x, ctx, bounds
+    return x, ctx
+
+
+def forward_block(model, b, params, bn_state, x, **kw):
+    ctx = Ctx(params, bn_state, **kw)
+    return run_ops(model.blocks[b][1], x, ctx), ctx

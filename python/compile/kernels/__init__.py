@@ -1,0 +1,19 @@
+"""L1: Pallas kernels for GENIE's compute hot-spots.
+
+Every kernel is wrapped in jax.custom_vjp with an analytic backward pass and
+is verified against the pure-jnp oracles in ref.py (values and cotangents)
+by python/tests/. All kernels lower with interpret=True so the AOT HLO runs
+on the CPU PJRT client (see DESIGN.md section Hardware-Adaptation for the
+TPU tiling rationale).
+"""
+
+from .fake_quant import fake_quant, fake_quant_hard
+from .lsq_quant import lsq_quant
+from .bns_stats import bns_stats
+from .soft_round_reg import soft_round_reg
+from .swing_select import swing_select
+
+__all__ = [
+    "fake_quant", "fake_quant_hard", "lsq_quant", "bns_stats",
+    "soft_round_reg", "swing_select",
+]

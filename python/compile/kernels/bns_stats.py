@@ -1,0 +1,77 @@
+"""Per-channel batch statistics (the BNS-loss reduction) as a Pallas kernel.
+
+Computes mean[C] and biased var[C] of an NHWC tensor over (N, H, W), the
+inner reduction of the paper's Eq. 5 BNS loss.
+
+TPU shaping: NHWC is flattened to (M, C) with the channel axis minor so
+the per-channel reduction vectorizes across lanes; a single program reduces
+the whole (M_pad x C_pad) block to (sum, sum-of-squares) rows that the
+wrapper turns into mean/var (sublane-tiled grids ran ~300x slower under
+the sequential interpret-mode grid; EXPERIMENTS.md section Perf). Backward
+is the analytic cotangent (cheap, pure jnp). interpret=True: see
+fake_quant.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+LANE_TILE = 128
+
+
+def _part_kernel(x_ref, s1_ref, s2_ref):
+    x = x_ref[...]
+    s1_ref[...] = jnp.sum(x, axis=0)[None, :]
+    s2_ref[...] = jnp.sum(x * x, axis=0)[None, :]
+
+
+def _partial_sums(x2, rows_p, cols_p):
+    return pl.pallas_call(
+        _part_kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec((rows_p, cols_p), lambda: (0, 0))],
+        out_specs=[pl.BlockSpec((1, cols_p), lambda: (0, 0)),
+                   pl.BlockSpec((1, cols_p), lambda: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, cols_p), x2.dtype),
+                   jax.ShapeDtypeStruct((1, cols_p), x2.dtype)],
+        interpret=True,
+    )(x2)
+
+
+@jax.custom_vjp
+def bns_stats(x):
+    """Pallas per-channel (mean, biased var); semantics of ref.bns_stats_ref."""
+    return _bns_impl(x)
+
+
+def _bns_impl(x):
+    n, h, w, c = x.shape
+    m_rows = n * h * w
+    rows_p = -(-m_rows // ROW_TILE) * ROW_TILE
+    cols_p = -(-c // LANE_TILE) * LANE_TILE
+    x2 = x.reshape(m_rows, c)
+    x2 = jnp.pad(x2, ((0, rows_p - m_rows), (0, cols_p - c)))
+    s1, s2 = _partial_sums(x2, rows_p, cols_p)
+    inv = 1.0 / jnp.asarray(m_rows, x.dtype)
+    mean = jnp.sum(s1, axis=0)[:c] * inv
+    ex2 = jnp.sum(s2, axis=0)[:c] * inv
+    var = jnp.maximum(ex2 - mean * mean, 0.0)
+    return mean, var
+
+
+def _bns_fwd(x):
+    m, v = _bns_impl(x)
+    return (m, v), (x, m)
+
+
+def _bns_bwd(res, g):
+    x, m = res
+    gm, gv = g
+    cnt = x.shape[0] * x.shape[1] * x.shape[2]
+    inv = 1.0 / jnp.asarray(cnt, x.dtype)
+    d_x = gm * inv + gv * 2.0 * (x - m) * inv
+    return (d_x,)
+
+
+bns_stats.defvjp(_bns_fwd, _bns_bwd)

@@ -1,0 +1,140 @@
+"""GENIE-M soft weight fake-quantizer as a Pallas kernel (L1 hot-spot).
+
+Forward:  Wq = s * (clip(B + h(V), n, p) - z)       (paper Eq. 9-10)
+Backward: Eq. 11 with B, z detached -- implemented as a custom_vjp whose
+cotangents match `ref.fake_quant_ref` exactly.
+
+TPU shaping: the weight matrix is padded to (8, 128) multiples and tiled
+into (O_pad x 128) VMEM column blocks -- the grid walks lane tiles only.
+Earlier revisions also tiled the row axis at 8 (grid = O/8 x K/128); in
+interpret mode every grid program executes sequentially, which made the
+AOT graphs ~300x slower end-to-end (EXPERIMENTS.md section Perf), and on a
+real TPU fine row tiles under-utilize the 8x128 VPU anyway. Column blocks
+of a few hundred KiB stay well inside the ~16 MiB VMEM budget (the
+footprint estimate lives in DESIGN.md section Hardware-Adaptation).
+interpret=True everywhere: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ZETA, GAMMA, h_sigmoid_grad
+
+ROW_TILE = 8
+LANE_TILE = 128
+
+
+def _h(v):
+    sig = 1.0 / (1.0 + jnp.exp(-v))
+    return jnp.clip(sig * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def _fwd_kernel(s_ref, v_ref, b_ref, z_ref, n_ref, p_ref, o_ref):
+    n = n_ref[0]
+    p = p_ref[0]
+    soft = b_ref[...] + _h(v_ref[...])
+    c = jnp.clip(soft, n, p)
+    o_ref[...] = s_ref[...][:, None] * (c - z_ref[...][:, None])
+
+
+def _bwd_kernel(s_ref, v_ref, b_ref, z_ref, n_ref, p_ref, g_ref,
+                ds_part_ref, dv_ref):
+    n = n_ref[0]
+    p = p_ref[0]
+    g = g_ref[...]
+    soft = b_ref[...] + _h(v_ref[...])
+    c = jnp.clip(soft, n, p)
+    in_range = ((soft > n) & (soft < p)).astype(g.dtype)
+    dv_ref[...] = g * s_ref[...][:, None] * in_range * h_sigmoid_grad(v_ref[...])
+    # per-(row-tile, lane-tile) partial sum for d_s; reduced by the wrapper.
+    ds_part_ref[...] = jnp.sum(g * (c - z_ref[...][:, None]), axis=1)[:, None]
+
+
+def _pad2(a, rows, cols):
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+def _pad1(a, rows):
+    return jnp.pad(a, ((0, rows - a.shape[0]),))
+
+
+def _tiles(o, k):
+    op = -(-o // ROW_TILE) * ROW_TILE
+    kp = -(-k // LANE_TILE) * LANE_TILE
+    return op, kp
+
+
+def _row_spec(op):
+    return pl.BlockSpec((op,), lambda j: (0,))
+
+
+def _mat_spec(op):
+    return pl.BlockSpec((op, LANE_TILE), lambda j: (0, j))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda j: (0,))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant(w_s, v, b, z, n, p):
+    """Pallas GENIE-M soft quantizer; semantics of ref.fake_quant_ref."""
+    return _fake_quant_fwd_impl(w_s, v, b, z, n, p)
+
+
+def _fake_quant_fwd_impl(w_s, v, b, z, n, p):
+    o, k = v.shape
+    op, kp = _tiles(o, k)
+    grid = (kp // LANE_TILE,)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[_row_spec(op), _mat_spec(op), _mat_spec(op), _row_spec(op),
+                  _scalar_spec(), _scalar_spec()],
+        out_specs=_mat_spec(op),
+        out_shape=jax.ShapeDtypeStruct((op, kp), v.dtype),
+        interpret=True,
+    )(_pad1(w_s, op), _pad2(v, op, kp), _pad2(b, op, kp), _pad1(z, op),
+      jnp.reshape(n, (1,)), jnp.reshape(p, (1,)))
+    return out[:o, :k]
+
+
+def _fq_fwd(w_s, v, b, z, n, p):
+    return _fake_quant_fwd_impl(w_s, v, b, z, n, p), (w_s, v, b, z, n, p)
+
+
+def _fq_bwd(res, g):
+    w_s, v, b, z, n, p = res
+    o, k = v.shape
+    op, kp = _tiles(o, k)
+    n_lane_tiles = kp // LANE_TILE
+    grid = (n_lane_tiles,)
+    ds_part, dv = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[_row_spec(op), _mat_spec(op), _mat_spec(op), _row_spec(op),
+                  _scalar_spec(), _scalar_spec(), _mat_spec(op)],
+        out_specs=[pl.BlockSpec((op, 1), lambda j: (0, j)),
+                   _mat_spec(op)],
+        out_shape=[jax.ShapeDtypeStruct((op, n_lane_tiles), v.dtype),
+                   jax.ShapeDtypeStruct((op, kp), v.dtype)],
+        interpret=True,
+    )(_pad1(w_s, op), _pad2(v, op, kp), _pad2(b, op, kp), _pad1(z, op),
+      jnp.reshape(n, (1,)), jnp.reshape(p, (1,)), _pad2(g, op, kp))
+    d_s = jnp.sum(ds_part, axis=1)[:o]
+    d_v = dv[:o, :k]
+    return (d_s, d_v, jnp.zeros_like(b), jnp.zeros_like(z),
+            jnp.zeros_like(n), jnp.zeros_like(p))
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_hard(w_s, v, b, z, n, p):
+    """Eval-time hard rounding of the softbits (no gradient path)."""
+    hh = (_h(v) >= 0.5).astype(v.dtype)
+    c = jnp.clip(b + hh, n, p)
+    return w_s[:, None] * (c - z[:, None])

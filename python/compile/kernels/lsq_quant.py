@@ -1,0 +1,110 @@
+"""LSQ activation fake-quantizer (per-tensor, symmetric) as a Pallas kernel.
+
+Forward:  xq = s * clip(round(x/s), qn, qp)
+Backward: clipped-STE for x, LSQ gradient for s (Esser et al., ICLR'20),
+matching ref.lsq_quant_ref.
+
+TPU shaping: activations of any rank are flattened into a (rows x 128)
+lane-aligned block processed by a single program (row-tiled grids ran
+~300x slower under the sequential interpret-mode grid; see fake_quant.py
+and EXPERIMENTS.md section Perf). The s-gradient partial sum is emitted
+per program and reduced by the wrapper. interpret=True: see fake_quant.py.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+LANE_TILE = 128
+
+
+def _fwd_kernel(x_ref, s_ref, qn_ref, qp_ref, o_ref):
+    s = s_ref[0]
+    o_ref[...] = s * jnp.clip(jnp.round(x_ref[...] / s), qn_ref[0], qp_ref[0])
+
+
+def _bwd_kernel(x_ref, s_ref, qn_ref, qp_ref, g_ref, dx_ref, ds_part_ref):
+    s = s_ref[0]
+    qn = qn_ref[0]
+    qp = qp_ref[0]
+    g = g_ref[...]
+    vv = x_ref[...] / s
+    inside = (vv >= qn) & (vv <= qp)
+    dx_ref[...] = g * inside.astype(g.dtype)
+    per = jnp.where(vv < qn, qn, jnp.where(vv > qp, qp, jnp.round(vv) - vv))
+    ds_part_ref[...] = jnp.sum(g * per)[None, None]
+
+
+def _shape2d(numel):
+    cols = LANE_TILE
+    rows = -(-numel // cols)
+    rows_p = -(-rows // ROW_TILE) * ROW_TILE
+    return rows_p, cols
+
+
+def _flatten_pad(x, rows_p, cols):
+    flat = jnp.ravel(x)
+    flat = jnp.pad(flat, (0, rows_p * cols - flat.shape[0]))
+    return flat.reshape(rows_p, cols)
+
+
+def _mat_spec(rows_p):
+    return pl.BlockSpec((rows_p, LANE_TILE), lambda: (0, 0))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda: (0,))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def lsq_quant(x, s, qn, qp):
+    """Pallas LSQ fake-quant; semantics of ref.lsq_quant_ref."""
+    return _lsq_fwd_impl(x, s, qn, qp)
+
+
+def _lsq_fwd_impl(x, s, qn, qp):
+    rows_p, cols = _shape2d(x.size)
+    x2 = _flatten_pad(x, rows_p, cols)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(),
+        in_specs=[_mat_spec(rows_p), _scalar_spec(), _scalar_spec(),
+                  _scalar_spec()],
+        out_specs=_mat_spec(rows_p),
+        out_shape=jax.ShapeDtypeStruct((rows_p, cols), x.dtype),
+        interpret=True,
+    )(x2, jnp.reshape(s, (1,)), jnp.reshape(qn, (1,)), jnp.reshape(qp, (1,)))
+    return jnp.ravel(out)[: x.size].reshape(x.shape)
+
+
+def _lsq_fwd(x, s, qn, qp):
+    return _lsq_fwd_impl(x, s, qn, qp), (x, s, qn, qp)
+
+
+def _lsq_bwd(res, g):
+    x, s, qn, qp = res
+    rows_p, cols = _shape2d(x.size)
+    x2 = _flatten_pad(x, rows_p, cols)
+    # Padding lanes carry x=0, g=0 -> contribute g*per = 0 to the s-gradient.
+    g2 = _flatten_pad(g, rows_p, cols)
+    dx2, ds_part = pl.pallas_call(
+        _bwd_kernel,
+        grid=(),
+        in_specs=[_mat_spec(rows_p), _scalar_spec(), _scalar_spec(),
+                  _scalar_spec(), _mat_spec(rows_p)],
+        out_specs=[_mat_spec(rows_p), pl.BlockSpec((1, 1), lambda: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows_p, cols), x.dtype),
+                   jax.ShapeDtypeStruct((1, 1), x.dtype)],
+        interpret=True,
+    )(x2, jnp.reshape(s, (1,)), jnp.reshape(qn, (1,)), jnp.reshape(qp, (1,)),
+      g2)
+    d_x = jnp.ravel(dx2)[: x.size].reshape(x.shape)
+    gs = 1.0 / jnp.sqrt(jnp.asarray(x.size, g.dtype) * jnp.maximum(qp, 1.0))
+    d_s = jnp.sum(ds_part) * gs
+    return d_x, jnp.reshape(d_s, s.shape), jnp.zeros_like(qn), jnp.zeros_like(qp)
+
+
+lsq_quant.defvjp(_lsq_fwd, _lsq_bwd)

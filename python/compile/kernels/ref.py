@@ -1,0 +1,205 @@
+"""Pure-jnp differentiable oracles for every Pallas kernel.
+
+These define the *intended semantics* (forward values AND custom gradients)
+of the L1 kernels. pytest compares each pallas kernel against its oracle for
+both the forward pass and the vjp cotangents. The oracles themselves are used
+nowhere in the AOT path -- kernels/*.py are.
+
+Notation follows the paper (GENIE, Jeon et al.):
+  h(V)  rectified sigmoid softbit (AdaRound / Eq. 10)
+  Wq = s * (clip(B + h(V), n, p) - z)   GENIE-M soft weight quantizer
+  B detached from s (Eq. 9-11) -- B and z are plain inputs here.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+ZETA = 1.1
+GAMMA = -0.1
+
+
+def h_sigmoid(v):
+    """Rectified sigmoid h(V) in [0, 1] (Louizos et al. / AdaRound)."""
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def h_sigmoid_grad(v):
+    """dh/dv, masked where the outer clip saturates."""
+    sig = jax.nn.sigmoid(v)
+    inner = sig * (ZETA - GAMMA) + GAMMA
+    mask = ((inner > 0.0) & (inner < 1.0)).astype(v.dtype)
+    return mask * (ZETA - GAMMA) * sig * (1.0 - sig)
+
+
+def h_hard(v):
+    """Hardened softbit: 1 where h(V) >= 0.5 else 0 (eval-time rounding)."""
+    return (h_sigmoid(v) >= 0.5).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant: GENIE-M soft weight quantizer
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant_ref(w_s, v, b, z, n, p):
+    """Soft-quantized weights.
+
+    w_s: [O]    learnable per-channel step size
+    v:   [O,K]  softbits (learnable)
+    b:   [O,K]  detached base integer grid  clip(floor(W/s0)+z0, n, p)
+    z:   [O]    detached per-channel zero point
+    n,p: []     integer-grid bounds as f32 scalars (runtime-configurable bits)
+    """
+    c = jnp.clip(b + h_sigmoid(v), n, p)
+    return w_s[:, None] * (c - z[:, None])
+
+
+def _fake_quant_fwd(w_s, v, b, z, n, p):
+    soft = b + h_sigmoid(v)
+    c = jnp.clip(soft, n, p)
+    out = w_s[:, None] * (c - z[:, None])
+    return out, (w_s, v, b, z, n, p, soft, c)
+
+
+def _fake_quant_bwd(res, g):
+    w_s, v, b, z, n, p, soft, c = res
+    in_range = ((soft > n) & (soft < p)).astype(g.dtype)
+    d_s = jnp.sum(g * (c - z[:, None]), axis=1)
+    d_v = g * w_s[:, None] * in_range * h_sigmoid_grad(v)
+    zeros_b = jnp.zeros_like(b)
+    zeros_z = jnp.zeros_like(z)
+    zero = jnp.zeros_like(n)
+    return d_s, d_v, zeros_b, zeros_z, zero, zero
+
+
+fake_quant_ref.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def fake_quant_hard_ref(w_s, v, b, z, n, p):
+    """Eval-time hard quantizer (not differentiated)."""
+    c = jnp.clip(b + h_hard(v), n, p)
+    return w_s[:, None] * (c - z[:, None])
+
+
+# ---------------------------------------------------------------------------
+# lsq_quant: LSQ activation fake-quant (per-tensor, symmetric)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def lsq_quant_ref(x, s, qn, qp):
+    """xq = s * clip(round(x/s), qn, qp); LSQ gradient for s, clipped STE for x."""
+    return s * jnp.clip(jnp.round(x / s), qn, qp)
+
+
+def _lsq_fwd(x, s, qn, qp):
+    vv = x / s
+    out = s * jnp.clip(jnp.round(vv), qn, qp)
+    return out, (x, s, qn, qp, vv)
+
+
+def _lsq_bwd(res, g):
+    x, s, qn, qp, vv = res
+    inside = (vv >= qn) & (vv <= qp)
+    d_x = g * inside.astype(g.dtype)
+    gs = 1.0 / jnp.sqrt(jnp.asarray(x.size, g.dtype) * jnp.maximum(qp, 1.0))
+    per = jnp.where(vv < qn, qn, jnp.where(vv > qp, qp, jnp.round(vv) - vv))
+    d_s = jnp.sum(g * per) * gs
+    zero = jnp.zeros_like(qn)
+    return d_x, d_s, zero, zero
+
+
+lsq_quant_ref.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# bns_stats: per-channel batch statistics over (N, H, W) of an NHWC tensor
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def bns_stats_ref(x):
+    """Returns (mean[C], biased var[C]) over all but the channel axis."""
+    m = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.mean((x - m) ** 2, axis=(0, 1, 2))
+    return m, var
+
+
+def _bns_fwd(x):
+    m = jnp.mean(x, axis=(0, 1, 2))
+    var = jnp.mean((x - m) ** 2, axis=(0, 1, 2))
+    return (m, var), (x, m)
+
+
+def _bns_bwd(res, g):
+    x, m = res
+    gm, gv = g
+    cnt = x.shape[0] * x.shape[1] * x.shape[2]
+    inv = 1.0 / jnp.asarray(cnt, x.dtype)
+    d_x = gm * inv + gv * 2.0 * (x - m) * inv
+    return (d_x,)
+
+
+bns_stats_ref.defvjp(_bns_fwd, _bns_bwd)
+
+
+# ---------------------------------------------------------------------------
+# soft_round_reg: AdaRound rounding regularizer sum(1 - |2h(V)-1|^beta)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def soft_round_reg_ref(v, beta):
+    hh = h_sigmoid(v)
+    return jnp.sum(1.0 - jnp.abs(2.0 * hh - 1.0) ** beta)
+
+
+def _reg_fwd(v, beta):
+    hh = h_sigmoid(v)
+    t = 2.0 * hh - 1.0
+    return jnp.sum(1.0 - jnp.abs(t) ** beta), (v, beta, t)
+
+
+def _reg_bwd(res, g):
+    v, beta, t = res
+    at = jnp.abs(t)
+    # d/dt |t|^beta = beta * |t|^(beta-1) * sign(t); guard |t|=0.
+    safe = jnp.maximum(at, 1e-12)
+    d_t = -beta * safe ** (beta - 1.0) * jnp.sign(t)
+    d_v = g * d_t * 2.0 * h_sigmoid_grad(v)
+    return d_v, jnp.zeros_like(beta)
+
+
+soft_round_reg_ref.defvjp(_reg_fwd, _reg_bwd)
+
+
+# ---------------------------------------------------------------------------
+# swing_select: stochastic stride-phase crop of a reflection-padded map
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def swing_select_ref(xpad, off, out_h, out_w):
+    """Crop out_h x out_w window at integer offsets off=[oy, ox] from xpad.
+
+    xpad: [N, Hp, Wp, C] reflection-padded feature map
+    off:  int32[2]
+    """
+    n, _, _, c = xpad.shape
+    return jax.lax.dynamic_slice(
+        xpad, (0, off[0], off[1], 0), (n, out_h, out_w, c)
+    )
+
+
+def _swing_fwd(xpad, off, out_h, out_w):
+    out = swing_select_ref(xpad, off, out_h, out_w)
+    return out, (xpad, off)
+
+
+def _swing_bwd(out_h, out_w, res, g):
+    xpad, off = res
+    d_x = jax.lax.dynamic_update_slice(
+        jnp.zeros_like(xpad), g, (0, off[0], off[1], 0)
+    )
+    return d_x, jnp.zeros_like(off)
+
+
+swing_select_ref.defvjp(_swing_fwd, _swing_bwd)

@@ -1,0 +1,80 @@
+"""AdaRound rounding regularizer sum(1 - |2h(V)-1|^beta) as a Pallas kernel.
+
+The annealed regularizer of Eq. A2 that pushes softbits to {0,1}. Beta is a
+runtime scalar so the rust coordinator drives the annealing schedule.
+
+TPU shaping: same flatten-to-lane-aligned-block scheme as lsq_quant
+(single program; see the grid note there). Backward matches
+ref.soft_round_reg_ref.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import h_sigmoid, h_sigmoid_grad
+
+ROW_TILE = 8
+LANE_TILE = 128
+
+
+def _fwd_kernel(v_ref, beta_ref, mask_ref, part_ref):
+    t = 2.0 * h_sigmoid(v_ref[...]) - 1.0
+    term = (1.0 - jnp.abs(t) ** beta_ref[0]) * mask_ref[...]
+    part_ref[...] = jnp.sum(term)[None, None]
+
+
+def _shape2d(numel):
+    cols = LANE_TILE
+    rows = -(-numel // cols)
+    rows_p = -(-rows // ROW_TILE) * ROW_TILE
+    return rows_p, cols
+
+
+def _flatten_pad(x, rows_p, cols, value=0.0):
+    flat = jnp.ravel(x)
+    flat = jnp.pad(flat, (0, rows_p * cols - flat.shape[0]),
+                   constant_values=value)
+    return flat.reshape(rows_p, cols)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def soft_round_reg(v, beta):
+    """Pallas rounding regularizer; semantics of ref.soft_round_reg_ref."""
+    return _reg_impl(v, beta)
+
+
+def _reg_impl(v, beta):
+    rows_p, cols = _shape2d(v.size)
+    v2 = _flatten_pad(v, rows_p, cols)
+    # Padding lanes would contribute 1 - |2h(0)-1|^beta != 0; mask them out.
+    mask = _flatten_pad(jnp.ones(v.size, v.dtype), rows_p, cols)
+    parts = pl.pallas_call(
+        _fwd_kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec((rows_p, cols), lambda: (0, 0)),
+                  pl.BlockSpec((1,), lambda: (0,)),
+                  pl.BlockSpec((rows_p, cols), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), v.dtype),
+        interpret=True,
+    )(v2, jnp.reshape(beta, (1,)), mask)
+    return jnp.sum(parts)
+
+
+def _reg_fwd(v, beta):
+    return _reg_impl(v, beta), (v, beta)
+
+
+def _reg_bwd(res, g):
+    v, beta = res
+    t = 2.0 * h_sigmoid(v) - 1.0
+    safe = jnp.maximum(jnp.abs(t), 1e-12)
+    d_t = -beta * safe ** (beta - 1.0) * jnp.sign(t)
+    d_v = g * d_t * 2.0 * h_sigmoid_grad(v)
+    return d_v, jnp.zeros_like(beta)
+
+
+soft_round_reg.defvjp(_reg_fwd, _reg_bwd)

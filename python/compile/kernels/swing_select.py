@@ -1,0 +1,58 @@
+"""Stochastic stride-phase selection -- the core of swing convolution.
+
+Swing conv (paper section 3.1.1, Figure 4) = reflection-pad the feature map
+by (stride-1) on every side, crop back to the original size at a random
+integer offset, then run the ordinary strided conv. This kernel is the crop:
+an offset-indexed dynamic window over the padded map. The conv itself stays
+in XLA (on TPU the MXU conv is already optimal; the paper's randomness lives
+entirely in *which phase* the strided conv samples).
+
+TPU shaping: the offset-window read is expressed as a dynamic slice of the
+padded map (BlockSpec-style HBM->VMEM gather); backward scatters the
+cotangent back into pad-space. interpret=True: see fake_quant.py.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _crop_kernel(off_ref, x_ref, o_ref, *, out_h, out_w):
+    oy = off_ref[0]
+    ox = off_ref[1]
+    o_ref[...] = pl.load(
+        x_ref,
+        (slice(None), pl.dslice(oy, out_h), pl.dslice(ox, out_w), slice(None)),
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def swing_select(xpad, off, out_h, out_w):
+    """Pallas offset crop; semantics of ref.swing_select_ref."""
+    return _swing_impl(xpad, off, out_h, out_w)
+
+
+def _swing_impl(xpad, off, out_h, out_w):
+    n, hp, wp, c = xpad.shape
+    return pl.pallas_call(
+        partial(_crop_kernel, out_h=out_h, out_w=out_w),
+        out_shape=jax.ShapeDtypeStruct((n, out_h, out_w, c), xpad.dtype),
+        interpret=True,
+    )(off, xpad)
+
+
+def _swing_fwd(xpad, off, out_h, out_w):
+    return _swing_impl(xpad, off, out_h, out_w), (xpad, off)
+
+
+def _swing_bwd(out_h, out_w, res, g):
+    xpad, off = res
+    d_x = jax.lax.dynamic_update_slice(
+        jnp.zeros_like(xpad), g, (0, off[0], off[1], 0)
+    )
+    return d_x, jnp.zeros_like(off)
+
+
+swing_select.defvjp(_swing_fwd, _swing_bwd)

@@ -1,0 +1,25 @@
+"""Model zoo registry.
+
+Scaled-down (16x16, 10-class) members of the same block families the paper
+evaluates (DESIGN.md section 3): plain residual (resnet14 ~ ResNet-18),
+bottleneck residual (resnet26b ~ ResNet-50), depthwise-separable
+(mobilenetv1_t ~ MobileNet-b), inverted residual (mobilenetv2_t ~
+MobileNetV2, mnasnet_t ~ MnasNet-1.0), plus `toy` for fast integration
+tests. Every model has stride-2 convolutions -- the swing-conv target.
+"""
+
+from .resnet import resnet14, resnet26b, toy
+from .mobilenet import mobilenetv1_t, mobilenetv2_t, mnasnet_t
+
+ZOO = {
+    "toy": toy,
+    "resnet14": resnet14,
+    "resnet26b": resnet26b,
+    "mobilenetv1_t": mobilenetv1_t,
+    "mobilenetv2_t": mobilenetv2_t,
+    "mnasnet_t": mnasnet_t,
+}
+
+
+def get_model(name):
+    return ZOO[name]()

@@ -1,0 +1,64 @@
+"""Depthwise-separable and inverted-residual members of the zoo."""
+
+from ..ir import BN, Conv, Dense, GAP, Merge, ModelDef, Relu, Save
+
+IMAGE = (16, 16, 3)
+NCLASSES = 10
+
+
+def _ds(pfx, cin, cout, stride):
+    """MobileNetV1 depthwise-separable unit: dw 3x3 + pw 1x1."""
+    return [
+        Conv(f"{pfx}.dw", cin, cin, 3, stride, groups=cin),
+        BN(f"{pfx}.dwbn", cin), Relu(cap=6.0),
+        Conv(f"{pfx}.pw", cin, cout, 1, 1), BN(f"{pfx}.pwbn", cout),
+        Relu(cap=6.0),
+    ]
+
+
+def _ir(pfx, cin, cout, expand, stride, k=3):
+    """MobileNetV2/MnasNet inverted residual: expand -> dw(k) -> project."""
+    mid = cin * expand
+    ops = []
+    if expand != 1:
+        ops += [Conv(f"{pfx}.ex", cin, mid, 1, 1), BN(f"{pfx}.exbn", mid),
+                Relu(cap=6.0)]
+    ops += [Conv(f"{pfx}.dw", mid, mid, k, stride, groups=mid),
+            BN(f"{pfx}.dwbn", mid), Relu(cap=6.0),
+            Conv(f"{pfx}.pr", mid, cout, 1, 1), BN(f"{pfx}.prbn", cout)]
+    if stride == 1 and cin == cout:
+        return [Save(f"{pfx}.in")] + ops + [Merge(f"{pfx}.in", [])]
+    return ops
+
+
+def mobilenetv1_t():
+    b0 = ([Conv("stem", 3, 16, 3, 1), BN("stembn", 16), Relu(cap=6.0)]
+          + _ds("d1", 16, 32, 1))
+    b1 = _ds("d2", 32, 64, 2) + _ds("d3", 64, 64, 1)
+    b2 = (_ds("d4", 64, 128, 2) + _ds("d5", 128, 128, 1)
+          + [GAP(), Dense("fc", 128, NCLASSES)])
+    return ModelDef("mobilenetv1_t", IMAGE, NCLASSES,
+                    [("b0", b0), ("b1", b1), ("b2", b2)])
+
+
+def mobilenetv2_t():
+    b0 = ([Conv("stem", 3, 16, 3, 1), BN("stembn", 16), Relu(cap=6.0)]
+          + _ir("i1", 16, 16, 1, 1))
+    b1 = _ir("i2", 16, 24, 4, 2) + _ir("i3", 24, 24, 4, 1)
+    b2 = (_ir("i4", 24, 40, 4, 2) + _ir("i5", 40, 40, 4, 1)
+          + [Conv("head", 40, 128, 1, 1), BN("headbn", 128), Relu(cap=6.0),
+             GAP(), Dense("fc", 128, NCLASSES)])
+    return ModelDef("mobilenetv2_t", IMAGE, NCLASSES,
+                    [("b0", b0), ("b1", b1), ("b2", b2)])
+
+
+def mnasnet_t():
+    """MnasNet flavour: mixes 3x3 and 5x5 inverted residuals, expand 3/6."""
+    b0 = ([Conv("stem", 3, 16, 3, 1), BN("stembn", 16), Relu(cap=6.0)]
+          + _ir("m1", 16, 16, 1, 1))
+    b1 = _ir("m2", 16, 24, 3, 2, k=3) + _ir("m3", 24, 24, 3, 1, k=3)
+    b2 = (_ir("m4", 24, 40, 6, 2, k=5) + _ir("m5", 40, 40, 6, 1, k=5)
+          + [Conv("head", 40, 128, 1, 1), BN("headbn", 128), Relu(cap=6.0),
+             GAP(), Dense("fc", 128, NCLASSES)])
+    return ModelDef("mnasnet_t", IMAGE, NCLASSES,
+                    [("b0", b0), ("b1", b1), ("b2", b2)])

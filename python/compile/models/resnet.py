@@ -1,0 +1,62 @@
+"""Plain- and bottleneck-residual members of the zoo (He et al. families)."""
+
+from ..ir import BN, Conv, Dense, GAP, Merge, ModelDef, Relu, Save
+
+IMAGE = (16, 16, 3)
+NCLASSES = 10
+
+
+def _res(pfx, cin, cout, stride):
+    """Basic residual unit: 3x3 -> 3x3 with (projected) identity."""
+    short = []
+    if stride != 1 or cin != cout:
+        short = [Conv(f"{pfx}.sc", cin, cout, 1, stride),
+                 BN(f"{pfx}.scbn", cout)]
+    return [
+        Save(f"{pfx}.in"),
+        Conv(f"{pfx}.c1", cin, cout, 3, stride), BN(f"{pfx}.bn1", cout), Relu(),
+        Conv(f"{pfx}.c2", cout, cout, 3, 1), BN(f"{pfx}.bn2", cout),
+        Merge(f"{pfx}.in", short), Relu(),
+    ]
+
+
+def _bneck(pfx, cin, mid, cout, stride):
+    """Bottleneck unit: 1x1 reduce -> 3x3 -> 1x1 expand."""
+    short = []
+    if stride != 1 or cin != cout:
+        short = [Conv(f"{pfx}.sc", cin, cout, 1, stride),
+                 BN(f"{pfx}.scbn", cout)]
+    return [
+        Save(f"{pfx}.in"),
+        Conv(f"{pfx}.c1", cin, mid, 1, 1), BN(f"{pfx}.bn1", mid), Relu(),
+        Conv(f"{pfx}.c2", mid, mid, 3, stride), BN(f"{pfx}.bn2", mid), Relu(),
+        Conv(f"{pfx}.c3", mid, cout, 1, 1), BN(f"{pfx}.bn3", cout),
+        Merge(f"{pfx}.in", short), Relu(),
+    ]
+
+
+def toy():
+    """Two-block micro-model for integration tests."""
+    b0 = [Conv("stem", 3, 8, 3, 1), BN("stembn", 8), Relu()] + _res("r1", 8, 16, 2)
+    b1 = _res("r2", 16, 16, 1) + [GAP(), Dense("fc", 16, NCLASSES)]
+    return ModelDef("toy", IMAGE, NCLASSES, [("b0", b0), ("b1", b1)])
+
+
+def resnet14():
+    """stem + 3 stages x 2 basic blocks (16/32/64 channels)."""
+    b0 = ([Conv("stem", 3, 16, 3, 1), BN("stembn", 16), Relu()]
+          + _res("s1.0", 16, 16, 1) + _res("s1.1", 16, 16, 1))
+    b1 = _res("s2.0", 16, 32, 2) + _res("s2.1", 32, 32, 1)
+    b2 = (_res("s3.0", 32, 64, 2) + _res("s3.1", 64, 64, 1)
+          + [GAP(), Dense("fc", 64, NCLASSES)])
+    return ModelDef("resnet14", IMAGE, NCLASSES, [("b0", b0), ("b1", b1), ("b2", b2)])
+
+
+def resnet26b():
+    """Bottleneck variant (~ResNet-50 family) with 4x expansion."""
+    b0 = ([Conv("stem", 3, 16, 3, 1), BN("stembn", 16), Relu()]
+          + _bneck("s1.0", 16, 16, 64, 1) + _bneck("s1.1", 64, 16, 64, 1))
+    b1 = _bneck("s2.0", 64, 32, 128, 2) + _bneck("s2.1", 128, 32, 128, 1)
+    b2 = (_bneck("s3.0", 128, 64, 256, 2) + _bneck("s3.1", 256, 64, 256, 1)
+          + [GAP(), Dense("fc", 256, NCLASSES)])
+    return ModelDef("resnet26b", IMAGE, NCLASSES, [("b0", b0), ("b1", b1), ("b2", b2)])

@@ -1,0 +1,29 @@
+"""Adam, as baked into the AOT step graphs.
+
+State (m, v) and the step counter are threaded through every call so the
+rust coordinator owns optimizer state; learning rates are runtime scalars
+so rust drives every schedule (cosine annealing, exponential decay,
+ReduceLROnPlateau) without re-lowering."""
+
+import jax.numpy as jnp
+
+B1 = 0.9
+B2 = 0.999
+EPS = 1e-8
+
+
+def adam_update(p, g, m, v, t, lr):
+    m2 = B1 * m + (1.0 - B1) * g
+    v2 = B2 * v + (1.0 - B2) * g * g
+    mhat = m2 / (1.0 - B1 ** t)
+    vhat = v2 / (1.0 - B2 ** t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + EPS), m2, v2
+
+
+def adam_update_tree(params, grads, ms, vs, t, lr):
+    """Dict-of-arrays variant; returns (params', ms', vs')."""
+    p2, m2, v2 = {}, {}, {}
+    for k in params:
+        p2[k], m2[k], v2[k] = adam_update(params[k], grads[k], ms[k], vs[k],
+                                          t, lr)
+    return p2, m2, v2

@@ -1,0 +1,179 @@
+"""The AOT step graphs: pretraining, distillation (GENIE-D), block-wise
+reconstruction (GENIE-M), collection and evaluation.
+
+Every function here is pure and jit-lowerable; optimizer state, RNG keys,
+learning rates and all annealed hyperparameters are runtime inputs so the
+rust coordinator owns every schedule (appendix A)."""
+
+import jax
+import jax.numpy as jnp
+
+from . import generator, ir
+from .kernels import soft_round_reg
+from .optim import adam_update, adam_update_tree
+
+BN_EPS = 1e-5
+
+
+def unwrap_key(raw):
+    """uint32[2] -> typed threefry key (keys cross the FFI as raw words)."""
+    return jax.random.wrap_key_data(raw, impl="threefry2x32")
+
+
+# ---------------------------------------------------------------------------
+# FP32 pretraining / evaluation
+# ---------------------------------------------------------------------------
+
+def train_step(model, params, bn_state, ms, vs, t, x, y, lr):
+    def loss_fn(p):
+        logits, ctx = ir.forward(model, p, bn_state, x, train=True)
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+        return ce, (logits, ctx.new_bn)
+
+    (loss, (logits, new_bn)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params)
+    p2, m2, v2 = adam_update_tree(params, grads, ms, vs, t, lr)
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return p2, new_bn, m2, v2, loss, acc
+
+
+def eval_batch(model, params, bn_state, x):
+    logits, _ = ir.forward(model, params, bn_state, x)
+    return logits
+
+
+def act_stats(model, params, bn_state, x):
+    """mean |x| at every activation-quant site (LSQ s_a initialization)."""
+    ctx = ir.Ctx(params, bn_state, act_stats=True)
+    for _, bops in model.blocks:
+        x = ir.run_ops(bops, x, ctx)
+    return jnp.stack(ctx.stats)
+
+
+# ---------------------------------------------------------------------------
+# GENIE-D distillation
+# ---------------------------------------------------------------------------
+
+def bns_loss(model, params, bn_state, x, key, swing):
+    """Eq. 5: match per-BN batch stats of x to the learned running stats."""
+    ctx = ir.Ctx(params, bn_state, collect_bns=True,
+                 swing_key=(jax.random.fold_in(key, 1) if swing else None))
+    h = x
+    for _, bops in model.blocks:
+        h = ir.run_ops(bops, h, ctx)
+    loss = 0.0
+    for (bm, bv), name in zip(ctx.bns, model.bn_names()):
+        rm = bn_state[f"{name}.mean"]
+        rv = bn_state[f"{name}.var"]
+        loss = loss + jnp.sum((bm - rm) ** 2)
+        loss = loss + jnp.sum((jnp.sqrt(bv + BN_EPS) - jnp.sqrt(rv + BN_EPS)) ** 2)
+    return loss
+
+
+def distill_genie_step(model, gen_params, gm, gv, z, zm, zv, t, params,
+                       bn_state, key, lr_g, lr_z, swing):
+    """One GENIE-D step: update both generator weights and latents (Alg. 1).
+
+    GBA ablation arm = same graph driven with lr_z = 0."""
+    def loss_fn(gp, zz):
+        x = generator.apply(gp, zz, model.image)
+        return bns_loss(model, params, bn_state, x, key, swing)
+
+    loss, (g_gen, g_z) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        gen_params, z)
+    gp2, gm2, gv2 = adam_update_tree(gen_params, g_gen, gm, gv, t, lr_g)
+    z2, zm2, zv2 = adam_update(z, g_z, zm, zv, t, lr_z)
+    return gp2, gm2, gv2, z2, zm2, zv2, loss
+
+
+def distill_direct_step(model, x, xm, xv, t, params, bn_state, key, lr,
+                        swing):
+    """ZeroQ-style direct distillation (DBA); M1/M3 ablation arms."""
+    loss, g_x = jax.value_and_grad(
+        lambda xx: bns_loss(model, params, bn_state, xx, key, swing))(x)
+    x2, xm2, xv2 = adam_update(x, g_x, xm, xv, t, lr)
+    return x2, xm2, xv2, loss
+
+
+# ---------------------------------------------------------------------------
+# Collection + GENIE-M block reconstruction
+# ---------------------------------------------------------------------------
+
+def collect_teacher(model, params, bn_state, x):
+    _, _, bounds = ir.forward(model, params, bn_state, x,
+                              collect_blocks=True)
+    return bounds
+
+
+def collect_student(model, params, bn_state, qstate, x, key):
+    """Block boundaries under the soft-quantized prefix (BRECQ-style
+    sequential input refresh). No QDrop at collection time."""
+    _, _, bounds = ir.forward(model, params, bn_state, x,
+                              collect_blocks=True, qctx=qstate)
+    return bounds
+
+
+def eval_quant(model, params, bn_state, qstate, x):
+    logits, _ = ir.forward(model, params, bn_state, x, qctx=qstate,
+                           hard=True)
+    return logits
+
+
+def qat_step(model, sparams, ms, vs, t, teacher_params, bn_state, x, lr,
+             wp, ap):
+    """Netwise Min-Max QAT baseline (Table 4 / A2: GDFQ/AIT-style).
+
+    Student weights are trained under per-tensor Min-Max fake-quant with
+    STE; the loss is the KL divergence to the FP32 teacher's logits
+    (AIT's KL-only observation). BN uses the teacher's running stats."""
+    t_logits, _ = ir.forward(model, teacher_params, bn_state, x)
+    t_prob = jax.nn.softmax(t_logits)
+
+    def loss_fn(sp):
+        logits, _ = ir.forward(model, sp, bn_state, x, minmax=(wp, ap))
+        logq = jax.nn.log_softmax(logits)
+        return jnp.mean(jnp.sum(t_prob * (jnp.log(t_prob + 1e-9) - logq),
+                                axis=1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(sparams)
+    p2, m2, v2 = adam_update_tree(sparams, grads, ms, vs, t, lr)
+    return p2, m2, v2, loss
+
+
+def eval_qat(model, sparams, bn_state, x, wp, ap):
+    logits, _ = ir.forward(model, sparams, bn_state, x, minmax=(wp, ap))
+    return logits
+
+
+def quant_block_step(model, b, params, bn_state, qstate_b, ms, vs, t,
+                     x_in, y_ref, key, lr_sw, lr_v, lr_sa, lam, beta,
+                     drop_p):
+    """One GENIE-M reconstruction step on block b (Eq. A2 / Alg. A1).
+
+    Learnables: per-layer s_w, softbits V, s_a. AdaRound baseline = lr_sw=0;
+    NoDrop = drop_p=0. beta anneals via the rust-side schedule."""
+    learn_names = model.qstate_learnable(block=b)
+    learn = {k: qstate_b[k] for k in learn_names}
+    v_names = [k for k in learn_names if k.endswith(".v")]
+
+    def loss_fn(lrn):
+        qctx = dict(qstate_b)
+        qctx.update(lrn)
+        y, _ = ir.forward_block(model, b, params, bn_state, x_in, qctx=qctx,
+                                drop_key=jax.random.fold_in(key, 7),
+                                drop_p=drop_p)
+        rec = jnp.mean((y - y_ref) ** 2)
+        reg = 0.0
+        for k in v_names:
+            reg = reg + soft_round_reg(lrn[k], beta)
+        return rec + lam * reg, rec
+
+    (loss, rec), grads = jax.value_and_grad(loss_fn, has_aux=True)(learn)
+    out, m2, v2 = {}, {}, {}
+    for k in learn_names:
+        lr = lr_v if k.endswith(".v") else (lr_sw if k.endswith(".sw")
+                                            else lr_sa)
+        out[k], m2[k], v2[k] = adam_update(learn[k], grads[k], ms[k], vs[k],
+                                           t, lr)
+    return out, m2, v2, loss, rec

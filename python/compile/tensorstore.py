@@ -1,0 +1,56 @@
+"""GTS1: the tiny named-tensor binary interchange format.
+
+Used for everything that crosses the python(build) / rust(runtime) boundary
+besides HLO: initial parameters, the synthetic dataset, checkpoints. The
+rust mirror lives in rust/src/store. Layout (little-endian):
+
+  b"GTS1"  u32 count
+  per tensor: u16 name_len | name utf8 | u8 dtype (0=f32,1=i32,2=u32)
+              u8 ndim | u32 dims[ndim] | u64 nbytes | raw data
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GTS1"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1,
+          np.dtype(np.uint32): 2}
+
+
+def save(path, tensors):
+    """tensors: list[(name, np.ndarray)] (order preserved)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            code = _CODES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def load(path):
+    """Returns list[(name, np.ndarray)]."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            shape = tuple(struct.unpack("<I", f.read(4))[0]
+                          for _ in range(ndim))
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            arr = np.frombuffer(f.read(nbytes), dtype=_DTYPES[code])
+            out.append((name, arr.reshape(shape)))
+    return out

@@ -1,0 +1,44 @@
+"""Entrypoint catalogue consistency: declared arg/result specs match the
+actual traced shapes for every entrypoint (jax.eval_shape -- no execution),
+i.e. manifest.json can never drift from the graphs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.entries import build_entries, _NP
+from compile.models import get_model
+
+
+@pytest.fixture(scope="module")
+def toy_entries():
+    return build_entries(get_model("toy"))
+
+
+def test_all_entries_shape_check(toy_entries):
+    entries, meta = toy_entries
+    assert len(entries) == 14 + meta["num_blocks"]
+    for e in entries:
+        out = jax.eval_shape(e.fn, *e.avals())
+        assert len(out) == len(e.results), e.name
+        for got, (name, dt, sh) in zip(out, e.results):
+            assert tuple(got.shape) == tuple(sh), (e.name, name)
+            assert got.dtype == _NP[dt], (e.name, name)
+
+
+def test_manifest_meta(toy_entries):
+    _, meta = toy_entries
+    assert meta["model"] == "toy"
+    assert meta["image"] == [16, 16, 3]
+    assert len(meta["bounds"]) == meta["num_blocks"] + 1
+    assert meta["bounds"][0] == [meta["batch"]["recon"], 16, 16, 3]
+    learn = sum((v for v in meta["learnable"].values()), [])
+    qnames = [n for n, _ in meta["qstate"]]
+    assert all(l in qnames for l in learn)
+
+
+def test_train_and_distill_arg_names_unique(toy_entries):
+    entries, _ = toy_entries
+    for e in entries:
+        names = [n for n, _, _ in e.args]
+        assert len(names) == len(set(names)), e.name

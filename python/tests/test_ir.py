@@ -1,0 +1,90 @@
+"""IR/interpreter invariants beyond the per-model zoo tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ir
+from compile.models import get_model
+
+
+@pytest.fixture(scope="module")
+def toy():
+    m = get_model("toy")
+    p, b = m.init(jax.random.PRNGKey(0))
+    return m, p, b
+
+
+def test_walk_yields_merge_subops():
+    m = get_model("resnet14")
+    names = [op.name for op in m._walk() if isinstance(op, ir.Conv)]
+    # projection shortcut convs (inside Merge) must be visible to the walk
+    assert "s2.0.sc" in names and "s3.0.sc" in names
+
+
+def test_param_specs_unique_names():
+    for name in ["toy", "resnet14", "resnet26b", "mobilenetv2_t"]:
+        m = get_model(name)
+        specs = [n for n, _ in m.param_specs()]
+        assert len(specs) == len(set(specs)), name
+
+
+def test_swing_deterministic_given_key(toy):
+    m, p, b = toy
+    x = jax.random.normal(jax.random.PRNGKey(1), (2,) + tuple(m.image))
+    k = jax.random.PRNGKey(7)
+    y1, _ = ir.forward(m, p, b, x, swing_key=k)
+    y2, _ = ir.forward(m, p, b, x, swing_key=k)
+    np.testing.assert_array_equal(y1, y2)
+    y3, _ = ir.forward(m, p, b, x, swing_key=jax.random.PRNGKey(8))
+    # different key -> different stride phase (almost surely)
+    assert float(jnp.abs(y1 - y3).max()) > 0
+
+
+def test_block_qstate_partition_disjoint():
+    m = get_model("mnasnet_t")
+    seen = set()
+    for bi in range(len(m.blocks)):
+        for n, _ in m.block_qstate_specs(bi):
+            assert n not in seen
+            seen.add(n)
+    assert seen == {n for n, _ in m.qstate_specs()}
+
+
+def test_qdrop_interpolates_between_fp_and_quant(toy):
+    """drop_p=1 -> pure FP activations; drop_p=0 -> fully quantized."""
+    m, p, b = toy
+    x = jax.random.normal(jax.random.PRNGKey(2), (2,) + tuple(m.image))
+    from tests.test_models import _dummy_qstate
+    qs = _dummy_qstate(m)
+    key = jax.random.PRNGKey(3)
+    q0, _ = ir.forward(m, p, b, x, qctx=qs, drop_key=key,
+                       drop_p=jnp.float32(0.0))
+    q0b, _ = ir.forward(m, p, b, x, qctx=qs)
+    np.testing.assert_allclose(q0, q0b, rtol=1e-5, atol=1e-5)
+
+
+def test_minmax_qat_mode_quantizes(toy):
+    m, p, b = toy
+    x = jax.random.normal(jax.random.PRNGKey(4), (2,) + tuple(m.image))
+    fp, _ = ir.forward(m, p, b, x)
+    q, _ = ir.forward(m, p, b, x, minmax=(jnp.float32(7.0), jnp.float32(7.0)))
+    assert q.shape == fp.shape
+    assert float(jnp.abs(q - fp).max()) > 0  # 4-bit minmax must perturb
+    q8, _ = ir.forward(m, p, b, x,
+                       minmax=(jnp.float32(32767.0), jnp.float32(32767.0)))
+    # 16-bit minmax is nearly exact
+    np.testing.assert_allclose(q8, fp, rtol=1e-2, atol=1e-2)
+
+
+def test_act_stats_order_matches_quant_layers(toy):
+    m, p, b = toy
+    x = jax.random.normal(jax.random.PRNGKey(5), (4,) + tuple(m.image))
+    ctx = ir.Ctx(p, b, act_stats=True)
+    h = x
+    for _, bops in m.blocks:
+        h = ir.run_ops(bops, h, ctx)
+    assert len(ctx.stats) == len(m.quant_layers())
+    # first stat site sees the raw input
+    np.testing.assert_allclose(ctx.stats[0], jnp.mean(jnp.abs(x)), rtol=1e-5)

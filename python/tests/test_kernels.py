@@ -1,0 +1,198 @@
+"""L1 correctness: every pallas kernel vs its pure-jnp oracle, forward
+values AND vjp cotangents, swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (bns_stats, fake_quant, fake_quant_hard,
+                             lsq_quant, soft_round_reg, swing_select)
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def keyseq(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- fake_quant
+
+def _fq_inputs(seed, o, k, bits):
+    ks = keyseq(seed, 4)
+    p = float(2 ** bits - 1)
+    s = jax.random.uniform(ks[0], (o,), minval=0.01, maxval=0.3)
+    v = jax.random.normal(ks[1], (o, k)) * 2.0
+    b = jnp.floor(jax.random.uniform(ks[2], (o, k), minval=-1.0, maxval=p + 1))
+    z = jnp.round(jax.random.uniform(ks[3], (o,), minval=0.0, maxval=p))
+    return s, v, b, z, jnp.float32(0.0), jnp.float32(p)
+
+
+@given(o=st.integers(1, 40), k=st.integers(1, 300),
+       bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 99))
+def test_fake_quant_forward(o, k, bits, seed):
+    args = _fq_inputs(seed, o, k, bits)
+    np.testing.assert_allclose(fake_quant(*args), ref.fake_quant_ref(*args),
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(o=st.integers(1, 20), k=st.integers(1, 200), seed=st.integers(0, 99))
+def test_fake_quant_grads(o, k, seed):
+    s, v, b, z, n, p = _fq_inputs(seed, o, k, 4)
+    g = jax.random.normal(jax.random.PRNGKey(seed + 1), (o, k))
+    f1 = lambda s_, v_: jnp.vdot(fake_quant(s_, v_, b, z, n, p), g)
+    f2 = lambda s_, v_: jnp.vdot(ref.fake_quant_ref(s_, v_, b, z, n, p), g)
+    g1 = jax.grad(f1, (0, 1))(s, v)
+    g2 = jax.grad(f2, (0, 1))(s, v)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-5, atol=1e-6)
+
+
+def test_fake_quant_hard_is_binary_rounding():
+    s, v, b, z, n, p = _fq_inputs(0, 8, 50, 4)
+    got = fake_quant_hard(s, v, b, z, n, p)
+    np.testing.assert_allclose(got, ref.fake_quant_hard_ref(s, v, b, z, n, p))
+    # hard ints live on the integer grid within [n, p]
+    ints = got / s[:, None] + z[:, None]
+    np.testing.assert_allclose(ints, jnp.round(ints), atol=1e-4)
+    assert float(ints.min()) >= -1e-4 and float(ints.max()) <= 15.0 + 1e-4
+
+
+def test_fake_quant_base_detached():
+    """Eq. 11: no gradient flows to B or z."""
+    s, v, b, z, n, p = _fq_inputs(3, 4, 9, 4)
+    g_b = jax.grad(lambda b_: jnp.sum(fake_quant(s, v, b_, z, n, p)))(b)
+    g_z = jax.grad(lambda z_: jnp.sum(fake_quant(s, v, b, z_, n, p)))(z)
+    assert float(jnp.abs(g_b).max()) == 0.0
+    assert float(jnp.abs(g_z).max()) == 0.0
+
+
+# ----------------------------------------------------------------- lsq_quant
+
+@given(shape=st.sampled_from([(3,), (2, 5), (2, 3, 4, 5), (1, 16, 16, 3),
+                              (128,), (7, 129)]),
+       bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 99))
+def test_lsq_forward(shape, bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 3.0
+    s = jnp.float32(0.17)
+    qn, qp = jnp.float32(-(2 ** (bits - 1))), jnp.float32(2 ** (bits - 1) - 1)
+    np.testing.assert_allclose(lsq_quant(x, s, qn, qp),
+                               ref.lsq_quant_ref(x, s, qn, qp),
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(shape=st.sampled_from([(5,), (3, 7), (2, 4, 4, 3)]),
+       seed=st.integers(0, 99))
+def test_lsq_grads(shape, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 3.0
+    s = jnp.float32(0.21)
+    qn, qp = jnp.float32(-8.0), jnp.float32(7.0)
+    g = jax.random.normal(jax.random.PRNGKey(seed + 1), shape)
+    f1 = lambda x_, s_: jnp.vdot(lsq_quant(x_, s_, qn, qp), g)
+    f2 = lambda x_, s_: jnp.vdot(ref.lsq_quant_ref(x_, s_, qn, qp), g)
+    g1 = jax.grad(f1, (0, 1))(x, s)
+    g2 = jax.grad(f2, (0, 1))(x, s)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-4, atol=1e-6)
+
+
+def test_lsq_values_on_grid():
+    x = jnp.linspace(-3, 3, 97)
+    s = jnp.float32(0.25)
+    out = lsq_quant(x, s, jnp.float32(-8.0), jnp.float32(7.0))
+    ints = out / s
+    np.testing.assert_allclose(ints, jnp.round(ints), atol=1e-5)
+    assert float(out.min()) >= -8 * 0.25 and float(out.max()) <= 7 * 0.25
+
+
+# ----------------------------------------------------------------- bns_stats
+
+@given(n=st.integers(1, 4), h=st.integers(1, 9), c=st.integers(1, 140),
+       seed=st.integers(0, 99))
+def test_bns_forward(n, h, c, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, h, h, c)) * 2 + 0.5
+    m1, v1 = bns_stats(x)
+    m2, v2 = ref.bns_stats_ref(x)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(v1, v2, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 99))
+def test_bns_grads(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 5, 5, 7))
+    ks = keyseq(seed + 1, 2)
+    gm = jax.random.normal(ks[0], (7,))
+    gv = jax.random.normal(ks[1], (7,))
+
+    def scal(f):
+        return lambda x_: (lambda mv: jnp.vdot(mv[0], gm)
+                           + jnp.vdot(mv[1], gv))(f(x_))
+
+    np.testing.assert_allclose(jax.grad(scal(bns_stats))(x),
+                               jax.grad(scal(ref.bns_stats_ref))(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------ soft_round_reg
+
+@given(o=st.integers(1, 30), k=st.integers(1, 200),
+       beta=st.floats(1.5, 25.0), seed=st.integers(0, 99))
+def test_reg_forward(o, k, beta, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (o, k)) * 2
+    b = jnp.float32(beta)
+    np.testing.assert_allclose(soft_round_reg(v, b),
+                               ref.soft_round_reg_ref(v, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 99), beta=st.floats(2.0, 20.0))
+def test_reg_grads(seed, beta):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (6, 37)) * 2
+    b = jnp.float32(beta)
+    np.testing.assert_allclose(
+        jax.grad(lambda v_: soft_round_reg(v_, b))(v),
+        jax.grad(lambda v_: ref.soft_round_reg_ref(v_, b))(v),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_reg_bounds():
+    """Regularizer is 0 when all softbits are hard, maximal at h=0.5."""
+    v_hard = jnp.full((4, 4), 10.0)  # h -> 1
+    assert float(soft_round_reg(v_hard, jnp.float32(4.0))) < 1e-5
+    v_mid = jnp.zeros((4, 4))  # h(0) = 0.5
+    assert abs(float(soft_round_reg(v_mid, jnp.float32(4.0))) - 16.0) < 1e-4
+
+
+# -------------------------------------------------------------- swing_select
+
+@given(n=st.integers(1, 3), h=st.integers(4, 12), c=st.integers(1, 8),
+       pad=st.integers(1, 2), seed=st.integers(0, 99))
+def test_swing_forward(n, h, c, pad, seed):
+    ks = keyseq(seed, 2)
+    xp = jax.random.normal(ks[0], (n, h + 2 * pad, h + 2 * pad, c))
+    off = jax.random.randint(ks[1], (2,), 0, 2 * pad + 1)
+    a = swing_select(xp, off, h, h)
+    b = ref.swing_select_ref(xp, off, h, h)
+    np.testing.assert_allclose(a, b)
+
+
+@given(seed=st.integers(0, 99))
+def test_swing_grads(seed):
+    ks = keyseq(seed, 3)
+    xp = jax.random.normal(ks[0], (2, 8, 8, 3))
+    off = jax.random.randint(ks[1], (2,), 0, 3)
+    g = jax.random.normal(ks[2], (2, 6, 6, 3))
+    f1 = lambda x_: jnp.vdot(swing_select(x_, off, 6, 6), g)
+    f2 = lambda x_: jnp.vdot(ref.swing_select_ref(x_, off, 6, 6), g)
+    np.testing.assert_allclose(jax.grad(f1)(xp), jax.grad(f2)(xp))
+
+
+def test_swing_identity_at_center():
+    """Offset (pad, pad) on a reflect-padded map is the identity crop."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 6, 2))
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)), mode="reflect")
+    out = swing_select(xp, jnp.array([1, 1], jnp.int32), 6, 6)
+    np.testing.assert_allclose(out, x)

@@ -1,0 +1,141 @@
+"""L2 model-zoo invariants: shapes, BN semantics, block decomposition,
+quantized-forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ir
+from compile.models import ZOO, get_model
+
+MODELS = list(ZOO)
+
+
+def _init(name, seed=0):
+    m = get_model(name)
+    params, bn = m.init(jax.random.PRNGKey(seed))
+    return m, params, bn
+
+
+def _dummy_qstate(model, seed=7, bits=4):
+    ks = iter(jax.random.split(jax.random.PRNGKey(seed), 512))
+    p = float(2 ** bits - 1)
+    qs = {}
+    for name, shape in model.qstate_specs():
+        if name.endswith(".sw"):
+            qs[name] = jnp.full(shape, 0.05)
+        elif name.endswith(".sa"):
+            qs[name] = jnp.float32(0.1)
+        elif name.endswith((".wn", ".an")):
+            qs[name] = jnp.float32(-8.0 if name.endswith(".an") else 0.0)
+        elif name.endswith((".wp", ".ap")):
+            qs[name] = jnp.float32(7.0 if name.endswith(".ap") else p)
+        elif name.endswith(".v"):
+            qs[name] = jax.random.normal(next(ks), shape) * 0.5
+        elif name.endswith(".b"):
+            qs[name] = jnp.round(
+                jax.random.uniform(next(ks), shape, minval=0.0, maxval=p))
+        else:
+            qs[name] = jnp.zeros(shape)
+    return qs
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_forward_shape(name):
+    m, params, bn = _init(name)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2,) + tuple(m.image))
+    logits, _ = ir.forward(m, params, bn, x)
+    assert logits.shape == (2, m.nclasses)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_block_decomposition_matches_full_forward(name):
+    """Sequential per-block execution == monolithic forward (the property
+    BRECQ-style reconstruction relies on)."""
+    m, params, bn = _init(name)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2,) + tuple(m.image))
+    full, _, bounds = ir.forward(m, params, bn, x, collect_blocks=True)
+    h = x
+    for b in range(len(m.blocks)):
+        np.testing.assert_allclose(h, bounds[b], rtol=1e-5, atol=1e-5)
+        h, _ = ir.forward_block(m, b, params, bn, h)
+    np.testing.assert_allclose(h, full, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["toy", "resnet14"])
+def test_bn_train_updates_running_stats(name):
+    m, params, bn = _init(name)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8,) + tuple(m.image)) * 3
+    _, ctx = ir.forward(m, params, bn, x, train=True)
+    assert set(ctx.new_bn) == set(dict(m.bn_specs()))
+    moved = sum(float(jnp.abs(ctx.new_bn[k] - bn[k]).max()) > 1e-6
+                for k in bn)
+    assert moved > 0
+
+
+@pytest.mark.parametrize("name", ["toy", "mobilenetv2_t"])
+def test_bns_collect_matches_layer_count(name):
+    m, params, bn = _init(name)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4,) + tuple(m.image))
+    _, ctx = ir.forward(m, params, bn, x, collect_bns=True)
+    assert len(ctx.bns) == len(m.bn_names())
+    for bm, bv in ctx.bns:
+        assert bool(jnp.all(bv >= 0))
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_swing_changes_only_strided_path(name):
+    """Swing forward differs from plain forward (strided convs exist) but
+    has identical output shape; with offset-center keys the set of possible
+    outputs includes the plain one."""
+    m, params, bn = _init(name)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2,) + tuple(m.image))
+    plain, _ = ir.forward(m, params, bn, x)
+    sw, _ = ir.forward(m, params, bn, x, swing_key=jax.random.PRNGKey(11))
+    assert sw.shape == plain.shape
+    assert bool(jnp.all(jnp.isfinite(sw)))
+
+
+@pytest.mark.parametrize("name", ["toy", "resnet14", "mobilenetv2_t"])
+def test_quantized_forward_soft_vs_hard(name):
+    m, params, bn = _init(name)
+    qs = _dummy_qstate(m)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2,) + tuple(m.image))
+    soft, _ = ir.forward(m, params, bn, x, qctx=qs)
+    hard, _ = ir.forward(m, params, bn, x, qctx=qs, hard=True)
+    assert soft.shape == hard.shape == (2, m.nclasses)
+    assert bool(jnp.all(jnp.isfinite(soft)))
+    assert bool(jnp.all(jnp.isfinite(hard)))
+    # Pushing all softbits hard makes soft == hard.
+    qs2 = {k: (jnp.sign(v - 0.0) * 10.0 if k.endswith(".v") else v)
+           for k, v in qs.items()}
+    soft2, _ = ir.forward(m, params, bn, x, qctx=qs2)
+    hard2, _ = ir.forward(m, params, bn, x, qctx=qs2, hard=True)
+    np.testing.assert_allclose(soft2, hard2, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_qstate_specs_cover_quant_layers(name):
+    m = get_model(name)
+    qls = m.quant_layers()
+    specs = dict(m.qstate_specs())
+    assert len(specs) == 9 * len(qls)
+    for ql in qls:
+        assert specs[f"q.{ql.name}.v"] == (ql.out_ch, ql.flat_k)
+        assert specs[f"q.{ql.name}.sw"] == (ql.out_ch,)
+    # block partition covers everything exactly once
+    union = []
+    for b in range(len(m.blocks)):
+        union += [n for n, _ in m.block_qstate_specs(b)]
+    assert sorted(union) == sorted(specs)
+
+
+@pytest.mark.parametrize("name", ["toy", "mnasnet_t"])
+def test_param_init_deterministic(name):
+    m = get_model(name)
+    p1, b1 = m.init(jax.random.PRNGKey(0))
+    p2, b2 = m.init(jax.random.PRNGKey(0))
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])

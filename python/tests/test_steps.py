@@ -1,0 +1,151 @@
+"""Step-graph behaviour: optimization actually reduces the right losses and
+collection graphs are consistent with each other."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import generator, ir, steps
+from compile.models import get_model
+
+
+@pytest.fixture(scope="module")
+def toy():
+    m = get_model("toy")
+    params, bn = m.init(jax.random.PRNGKey(0))
+    return m, params, bn
+
+
+def _zeros_like_tree(d):
+    return {k: jnp.zeros_like(v) for k, v in d.items()}
+
+
+def test_train_step_reduces_loss(toy):
+    m, params, bn = toy
+    x = jax.random.normal(jax.random.PRNGKey(1), (16,) + tuple(m.image))
+    y = jnp.arange(16) % 10
+    ms, vs = _zeros_like_tree(params), _zeros_like_tree(params)
+    losses = []
+    step = jax.jit(lambda p, b, ms_, vs_, t: steps.train_step(
+        m, p, b, ms_, vs_, t, x, y, jnp.float32(5e-3)))
+    for t in range(1, 13):
+        params, bn, ms, vs, loss, acc = step(params, bn, ms, vs,
+                                             jnp.float32(t))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_distill_direct_reduces_bns_loss(toy):
+    m, params, bn = toy
+    # teacher with non-trivial running stats
+    bn = {k: (v + 0.3 if k.endswith(".mean") else v * 1.7) for k, v in bn.items()}
+    x = jax.random.normal(jax.random.PRNGKey(2), (8,) + tuple(m.image))
+    xm, xv = jnp.zeros_like(x), jnp.zeros_like(x)
+    key = jax.random.PRNGKey(3)
+    step = jax.jit(lambda x_, xm_, xv_, t: steps.distill_direct_step(
+        m, x_, xm_, xv_, t, params, bn, key, jnp.float32(0.1), False))
+    losses = []
+    for t in range(1, 31):
+        x, xm, xv, loss = step(x, xm, xv, jnp.float32(t))
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_distill_genie_reduces_bns_loss(toy):
+    m, params, bn = toy
+    bn = {k: (v + 0.3 if k.endswith(".mean") else v * 1.7) for k, v in bn.items()}
+    gp = generator.init(jax.random.PRNGKey(4), m.image)
+    gm, gv = _zeros_like_tree(gp), _zeros_like_tree(gp)
+    z = jax.random.normal(jax.random.PRNGKey(5), (8, generator.LATENT))
+    zm, zv = jnp.zeros_like(z), jnp.zeros_like(z)
+    key = jax.random.PRNGKey(6)
+    step = jax.jit(lambda gp_, gm_, gv_, z_, zm_, zv_, t: (
+        steps.distill_genie_step(m, gp_, gm_, gv_, z_, zm_, zv_, t, params,
+                                 bn, key, jnp.float32(0.01),
+                                 jnp.float32(0.1), True)))
+    losses = []
+    for t in range(1, 31):
+        gp, gm, gv, z, zm, zv, loss = step(gp, gm, gv, z, zm, zv,
+                                           jnp.float32(t))
+        losses.append(float(loss))
+    assert losses[-1] < 0.7 * losses[0]
+
+
+def _toy_qstate(m, params, seed=9, bits=4):
+    """Well-formed qstate from the actual weights (python mirror of the
+    rust initializer, used only in tests)."""
+    qs = {}
+    p = float(2 ** bits - 1)
+    for ql in m.quant_layers():
+        w = params[f"{ql.name}.w"]
+        wf = (jnp.moveaxis(w, -1, 0).reshape(ql.out_ch, -1)
+              if w.ndim == 4 else w.T)
+        lo = jnp.min(wf, axis=1)
+        hi = jnp.max(wf, axis=1)
+        s = jnp.maximum((hi - lo) / p, 1e-8)
+        z = jnp.round(-lo / s)
+        base = jnp.clip(jnp.floor(wf / s[:, None]) + z[:, None], 0.0, p)
+        r = jnp.clip(wf / s[:, None] + z[:, None] - base, 0.01, 0.99)
+        v = jnp.log((r - 0.0) / (1.0 - r))  # approx logit init
+        qs[f"q.{ql.name}.sw"] = s
+        qs[f"q.{ql.name}.v"] = v
+        qs[f"q.{ql.name}.b"] = base
+        qs[f"q.{ql.name}.zp"] = z
+        qs[f"q.{ql.name}.wn"] = jnp.float32(0.0)
+        qs[f"q.{ql.name}.wp"] = jnp.float32(p)
+        qs[f"q.{ql.name}.sa"] = jnp.float32(0.2)
+        qs[f"q.{ql.name}.an"] = jnp.float32(-8.0)
+        qs[f"q.{ql.name}.ap"] = jnp.float32(7.0)
+    return qs
+
+
+def test_quant_block_step_reduces_reconstruction(toy):
+    m, params, bn = toy
+    qs = _toy_qstate(m, params)
+    x = jax.random.normal(jax.random.PRNGKey(10), (4,) + tuple(m.image))
+    bounds = steps.collect_teacher(m, params, bn, x)
+    learn = m.qstate_learnable(block=0)
+    ms = {k: jnp.zeros_like(qs[k]) for k in learn}
+    vs = {k: jnp.zeros_like(qs[k]) for k in learn}
+    key = jax.random.PRNGKey(11)
+    recs = []
+    step = jax.jit(lambda qs_, ms_, vs_, t: steps.quant_block_step(
+        m, 0, params, bn, qs_, ms_, vs_, t, bounds[0], bounds[1], key,
+        jnp.float32(1e-4), jnp.float32(1e-2), jnp.float32(4e-5),
+        jnp.float32(0.0), jnp.float32(20.0), jnp.float32(0.0)))
+    for t in range(1, 41):
+        out, ms, vs, loss, rec = step(qs, ms, vs, jnp.float32(t))
+        qs.update(out)
+        recs.append(float(rec))
+    assert recs[-1] < recs[0]
+
+
+def test_collect_teacher_vs_eval(toy):
+    m, params, bn = toy
+    x = jax.random.normal(jax.random.PRNGKey(12), (4,) + tuple(m.image))
+    bounds = steps.collect_teacher(m, params, bn, x)
+    logits = steps.eval_batch(m, params, bn, x)
+    np.testing.assert_allclose(bounds[-1], logits, rtol=1e-5, atol=1e-5)
+
+
+def test_collect_student_fp_limit(toy):
+    """With huge act step-bounds and hard-equivalent softbits == FP? No --
+    but with 8-bit-like fine grids the student stays close to teacher."""
+    m, params, bn = toy
+    qs = _toy_qstate(m, params, bits=8)
+    x = jax.random.normal(jax.random.PRNGKey(13), (4,) + tuple(m.image))
+    t = steps.collect_teacher(m, params, bn, x)
+    sx = steps.collect_student(m, params, bn, qs, x,
+                               jax.random.PRNGKey(14))
+    err = float(jnp.abs(sx[1] - t[1]).mean())
+    scale = float(jnp.abs(t[1]).mean())
+    assert err < 0.5 * scale
+
+
+def test_act_stats_positive(toy):
+    m, params, bn = toy
+    x = jax.random.normal(jax.random.PRNGKey(15), (4,) + tuple(m.image))
+    st = steps.act_stats(m, params, bn, x)
+    assert st.shape == (len(m.quant_layers()),)
+    assert bool(jnp.all(st > 0))

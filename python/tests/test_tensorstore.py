@@ -1,0 +1,41 @@
+"""GTS1 round-trip tests (mirrors rust/src/store tests)."""
+
+import numpy as np
+import pytest
+
+from compile import tensorstore
+
+
+def test_roundtrip(tmp_path):
+    p = tmp_path / "t.bin"
+    tensors = [
+        ("a", np.arange(24, dtype=np.float32).reshape(2, 3, 4)),
+        ("b.scalar", np.float32(3.5).reshape(())),
+        ("c", np.array([1, -2, 3], np.int32)),
+        ("d", np.array([7, 8], np.uint32)),
+    ]
+    tensorstore.save(p, tensors)
+    out = tensorstore.load(p)
+    assert [n for n, _ in out] == [n for n, _ in tensors]
+    for (_, x), (_, y) in zip(tensors, out):
+        np.testing.assert_array_equal(np.asarray(x), y)
+        assert np.asarray(x).dtype == y.dtype
+
+
+def test_empty(tmp_path):
+    p = tmp_path / "e.bin"
+    tensorstore.save(p, [])
+    assert tensorstore.load(p) == []
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOPE\x00\x00\x00\x00")
+    with pytest.raises(AssertionError):
+        tensorstore.load(p)
+
+
+def test_unicode_names(tmp_path):
+    p = tmp_path / "u.bin"
+    tensorstore.save(p, [("q.layer.v", np.zeros((1,), np.float32))])
+    assert tensorstore.load(p)[0][0] == "q.layer.v"

@@ -1,0 +1,107 @@
+//! Pipeline-step benches over the real toy artifacts: per-step cost of
+//! each phase graph (the numbers behind Table 6 / EXPERIMENTS.md §Perf).
+
+use genie::coordinator::pretrain::{teacher_or_pretrain, PretrainCfg};
+use genie::coordinator::{insert_zeros, Metrics};
+use genie::data::Dataset;
+use genie::runtime::{ModelRt, Runtime};
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::{bench_secs, report};
+
+fn main() {
+    if !std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        println!("bench pipeline/*: skipped (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mrt = ModelRt::load(&rt, "artifacts", "toy").unwrap();
+    let dataset = Dataset::load("artifacts").unwrap();
+    let m = &mrt.manifest;
+    let mut rng = Pcg32::new(13);
+    let mut metrics = Metrics::new();
+    let teacher = teacher_or_pretrain(
+        &mrt, &dataset,
+        &PretrainCfg { steps: 30, ..Default::default() },
+        std::path::Path::new("runs"), &mut metrics,
+    )
+    .unwrap();
+
+    // train step
+    {
+        let mut s = mrt.init_store().unwrap();
+        insert_zeros(&mut s, &m.params, "am.");
+        insert_zeros(&mut s, &m.params, "av.");
+        let bs = m.batch("train");
+        let (x, y) = dataset.train_batch(&mut rng, bs);
+        s.insert("x", x);
+        s.insert("y", Tensor::from_i32(&[bs], y));
+        s.insert("t", Tensor::scalar_f32(1.0));
+        s.insert("lr", Tensor::scalar_f32(1e-3));
+        let e = mrt.entry("train_step").unwrap();
+        report("pipeline/train_step_b64", bench_secs(3, 20, || {
+            rt.call(&e, &mut s).unwrap();
+        }));
+    }
+
+    // distill step (genie, swing)
+    {
+        let mut s = teacher.clone();
+        s.insert("key", Tensor::key(1, 2));
+        mrt.call("gen_init", &mut s).unwrap();
+        insert_zeros(&mut s, &m.gen_params, "am.");
+        insert_zeros(&mut s, &m.gen_params, "av.");
+        let zshape = [m.batch("distill"), m.latent];
+        s.insert("z", Tensor::randn(&zshape, &mut rng, 1.0));
+        s.insert("zm", Tensor::zeros(&zshape));
+        s.insert("zv", Tensor::zeros(&zshape));
+        s.insert("t", Tensor::scalar_f32(1.0));
+        s.insert("lr_g", Tensor::scalar_f32(0.01));
+        s.insert("lr_z", Tensor::scalar_f32(0.1));
+        let e = mrt.entry("distill_genie_swing").unwrap();
+        report("pipeline/distill_genie_swing_b64", bench_secs(3, 20, || {
+            rt.call(&e, &mut s).unwrap();
+        }));
+        let e = mrt.entry("distill_genie_noswing").unwrap();
+        report("pipeline/distill_genie_noswing_b64", bench_secs(3, 20, || {
+            rt.call(&e, &mut s).unwrap();
+        }));
+    }
+
+    // quant block step via the full quantize path's graphs
+    {
+        use genie::quant::{init_qstate, BitConfig};
+        let qs = init_qstate(m, &teacher, BitConfig::new(4, 4), 2.4, None)
+            .unwrap();
+        let mut s = teacher.clone();
+        s.absorb(&qs);
+        let br = m.batch("recon");
+        let (x, _) = dataset.train_batch(&mut rng, br);
+        s.insert("x", x.clone());
+        mrt.call("collect_teacher", &mut s).unwrap();
+        let b0 = s.get("bound.0").unwrap().clone();
+        let b1 = s.get("bound.1").unwrap().clone();
+        for name in m.learnable_block(0) {
+            let shape = s.get(name).unwrap().shape.clone();
+            s.insert(&format!("am.{name}"), Tensor::zeros(&shape));
+            s.insert(&format!("av.{name}"), Tensor::zeros(&shape));
+        }
+        s.insert("x_in", b0);
+        s.insert("y_ref", b1);
+        s.insert("key", Tensor::key(3, 4));
+        s.insert("t", Tensor::scalar_f32(1.0));
+        for (k, v) in [("lr_sw", 1e-4f32), ("lr_v", 1e-2), ("lr_sa", 4e-5),
+                       ("lam", 1.0), ("beta", 20.0), ("drop_p", 0.5)] {
+            s.insert(k, Tensor::scalar_f32(v));
+        }
+        let e = mrt.entry("quant_step_0").unwrap();
+        report("pipeline/quant_step_block0_b32", bench_secs(3, 20, || {
+            rt.call(&e, &mut s).unwrap();
+        }));
+        let e = mrt.entry("eval_quant").unwrap();
+        let (xe, _) = dataset.train_batch(&mut rng, m.batch("eval"));
+        s.insert("x", xe);
+        report("pipeline/eval_quant_b256", bench_secs(2, 10, || {
+            rt.call(&e, &mut s).unwrap();
+        }));
+    }
+}

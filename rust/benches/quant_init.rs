@@ -1,0 +1,36 @@
+//! Host-side GENIE-M initialization benches: the Eq. 6 / Eq. A3 p-norm
+//! grid search, weight flattening, and softbit init (the only non-PJRT
+//! compute on the quantization path).
+
+use genie::quant::{flatten_out_major, search_step_sizes, softbit_init};
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::{bench_secs, report};
+
+fn main() {
+    let mut rng = Pcg32::new(11);
+    for (o, k, label) in [
+        (16usize, 144usize, "conv3x3_16x16"),
+        (64, 576, "conv3x3_64x64"),
+        (256, 256, "conv1x1_256x256"),
+    ] {
+        let rows: Vec<f32> =
+            (0..o * k).map(|_| rng.normal() * 0.2).collect();
+        report(
+            &format!("quant_init/grid_search_{label}"),
+            bench_secs(1, 10, || {
+                std::hint::black_box(search_step_sizes(&rows, o, k, 4, 2.4));
+            }),
+        );
+    }
+    let w = Tensor::randn(&[3, 3, 64, 64], &mut rng, 0.2);
+    report("quant_init/flatten_3x3x64x64", bench_secs(3, 100, || {
+        std::hint::black_box(flatten_out_major(&w));
+    }));
+    report("quant_init/softbit_init_1e5", bench_secs(3, 50, || {
+        let mut acc = 0.0f32;
+        for i in 0..100_000 {
+            acc += softbit_init((i as f32 / 100_000.0).clamp(0.01, 0.99));
+        }
+        std::hint::black_box(acc);
+    }));
+}

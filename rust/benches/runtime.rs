@@ -1,0 +1,79 @@
+//! Runtime micro-benchmarks: entrypoint dispatch latency (the L3 hot
+//! path), literal marshalling, store ops, tensorstore IO.
+//! In-tree harness (no criterion in the offline image); harness = false.
+
+use genie::coordinator::Metrics;
+use genie::coordinator::pretrain::{teacher_or_pretrain, PretrainCfg};
+use genie::data::Dataset;
+use genie::runtime::{ModelRt, Runtime};
+use genie::store::Store;
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::{bench_secs, report};
+
+fn main() {
+    // host-only benches always run
+    let mut rng = Pcg32::new(7);
+    let big = Tensor::randn(&[64, 16, 16, 3], &mut rng, 1.0);
+    let mut store = Store::new();
+    for i in 0..200 {
+        store.insert(&format!("t{i}"), Tensor::randn(&[32], &mut rng, 1.0));
+    }
+    report("store/insert_overwrite", bench_secs(10, 1000, || {
+        store.insert("t7", Tensor::zeros(&[32]));
+    }));
+    report("store/get", bench_secs(10, 10000, || {
+        store.get("t199").unwrap();
+    }));
+    let dir = std::env::temp_dir().join("genie_bench_store.bin");
+    let mut io_store = Store::new();
+    io_store.insert("x", big.clone());
+    report("tensorstore/save_196KiB", bench_secs(3, 50, || {
+        io_store.save(&dir).unwrap();
+    }));
+    report("tensorstore/load_196KiB", bench_secs(3, 50, || {
+        Store::load(&dir).unwrap();
+    }));
+    report("tensor/gather_rows_32_of_8192", {
+        let data = Tensor::randn(&[8192, 16 * 16 * 3], &mut rng, 1.0);
+        let idx: Vec<usize> = (0..32).map(|i| i * 13 % 8192).collect();
+        bench_secs(3, 200, || {
+            std::hint::black_box(data.gather_rows(&idx));
+        })
+    });
+
+    // device benches need artifacts
+    if !std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        println!("bench runtime/*: skipped (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mrt = ModelRt::load(&rt, "artifacts", "toy").unwrap();
+    let dataset = Dataset::load("artifacts").unwrap();
+    let mut metrics = Metrics::new();
+    let pcfg = PretrainCfg { steps: 30, ..Default::default() };
+    let teacher = teacher_or_pretrain(
+        &mrt, &dataset, &pcfg, std::path::Path::new("runs"), &mut metrics,
+    )
+    .unwrap();
+
+    let entry = mrt.entry("eval_batch").unwrap();
+    let mut s = teacher.clone();
+    s.insert("x", Tensor::zeros(&[256, 16, 16, 3]));
+    report("runtime/eval_batch_dispatch_b256", bench_secs(3, 30, || {
+        rt.call(&entry, &mut s).unwrap();
+    }));
+
+    let entry = mrt.entry("collect_teacher").unwrap();
+    s.insert("x", Tensor::zeros(&[32, 16, 16, 3]));
+    report("runtime/collect_teacher_b32", bench_secs(3, 30, || {
+        rt.call(&entry, &mut s).unwrap();
+    }));
+
+    for (name, calls) in rt.dispatch_stats() {
+        println!(
+            "dispatch {name:<24} {:>6} calls  {:>8.2} ms avg",
+            calls.calls,
+            calls.total_secs * 1e3 / calls.calls as f64
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Run configuration: one struct covering every phase, buildable from
+//! `key=value` CLI overrides (std-only; no clap in the offline testbed).
+//!
+//! Example:
+//!   genie zsq --model resnet14 wbits=2 abits=4 distill.samples=256 \
+//!       distill.mode=genie quant.drop_p=0.5
+
+use anyhow::{bail, Result};
+
+use super::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub artifacts: String,
+    pub runs_dir: String,
+    pub seed: u64,
+    pub pretrain: PretrainCfg,
+    pub distill: DistillCfg,
+    pub quant: QuantCfg,
+    /// few-shot calibration sample count (fsq)
+    pub fsq_samples: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "resnet14".into(),
+            artifacts: "artifacts".into(),
+            runs_dir: "runs".into(),
+            seed: 1234,
+            pretrain: PretrainCfg::default(),
+            distill: DistillCfg::default(),
+            quant: QuantCfg::default(),
+            fsq_samples: 128,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply one `key=value` override; nested keys use dots
+    /// (e.g. `distill.steps=300`, `quant.lr_v=0.01`, `wbits=2`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        macro_rules! p {
+            ($t:ty) => {
+                value.parse::<$t>().map_err(|e| {
+                    anyhow::anyhow!("bad value '{value}' for {key}: {e}")
+                })?
+            };
+        }
+        match key {
+            "model" => self.model = value.to_string(),
+            "artifacts" => self.artifacts = value.to_string(),
+            "runs_dir" => self.runs_dir = value.to_string(),
+            "seed" => {
+                self.seed = p!(u64);
+                self.pretrain.seed = self.seed ^ 1;
+                self.distill.seed = self.seed ^ 2;
+                self.quant.seed = self.seed ^ 3;
+            }
+            "wbits" | "quant.wbits" => self.quant.wbits = p!(u32),
+            "abits" | "quant.abits" => self.quant.abits = p!(u32),
+            "fsq_samples" => self.fsq_samples = p!(usize),
+            "pretrain.steps" => self.pretrain.steps = p!(usize),
+            "pretrain.lr" => self.pretrain.lr = p!(f32),
+            "distill.mode" => self.distill.mode = DistillMode::parse(value)?,
+            "distill.swing" => self.distill.swing = p!(bool),
+            "distill.samples" => self.distill.samples = p!(usize),
+            "distill.steps" => self.distill.steps = p!(usize),
+            "distill.lr_g" => self.distill.lr_g = p!(f32),
+            "distill.lr_z" => self.distill.lr_z = p!(f32),
+            "quant.steps" => self.quant.steps_per_block = p!(usize),
+            "quant.lr_sw" => self.quant.lr_sw = p!(f32),
+            "quant.lr_v" => self.quant.lr_v = p!(f32),
+            "quant.lr_sa" => self.quant.lr_sa = p!(f32),
+            "quant.lam" => self.quant.lam = p!(f32),
+            "quant.drop_p" => self.quant.drop_p = p!(f32),
+            "quant.pnorm" => self.quant.pnorm = p!(f32),
+            "quant.refresh_student" => self.quant.refresh_student = p!(bool),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a list of `key=value` strings.
+    pub fn apply_overrides(&mut self, kvs: &[String]) -> Result<()> {
+        for kv in kvs {
+            let Some((k, v)) = kv.split_once('=') else {
+                bail!("expected key=value, got '{kv}'");
+            };
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = RunConfig::default();
+        c.apply_overrides(&[
+            "wbits=2".into(),
+            "distill.mode=gba".into(),
+            "quant.drop_p=0".into(),
+            "distill.swing=false".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.quant.wbits, 2);
+        assert_eq!(c.distill.mode, DistillMode::Gba);
+        assert_eq!(c.quant.drop_p, 0.0);
+        assert!(!c.distill.swing);
+    }
+
+    #[test]
+    fn seed_fans_out() {
+        let mut c = RunConfig::default();
+        c.set("seed", "99").unwrap();
+        assert_ne!(c.pretrain.seed, c.distill.seed);
+        assert_ne!(c.distill.seed, c.quant.seed);
+    }
+
+    #[test]
+    fn bad_key_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.apply_overrides(&["garbage".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.set("wbits", "two").is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! GENIE-D data distillation scheduler (Algorithm 1) plus the baseline
+//! arms of the Table 2 ablation:
+//!
+//!   * `Genie`  — generator + learnable latents (lr_z > 0), Alg. 1
+//!   * `Gba`    — generator only, latents frozen (lr_z = 0) — M4
+//!   * `Direct` — ZeroQ-style image-space distillation — M1/M3
+//!
+//! Each batch is distilled independently: the generator is re-initialized
+//! per batch via the `gen_init` graph (appendix A: "the weights of the
+//! generator are shared only within a batch"). Generator LR decays
+//! exponentially (gamma 0.95 / 100 steps); latent LR follows
+//! ReduceLROnPlateau "like that in ZeroQ". Swing conv is selected by
+//! lowering variant (`*_swing` / `*_noswing` entrypoints).
+
+use anyhow::Result;
+
+use crate::runtime::ModelRt;
+use crate::schedule::{ExponentialDecay, ReduceLROnPlateau};
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+use super::{insert_zeros, Metrics};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistillMode {
+    Genie,
+    Gba,
+    Direct,
+}
+
+impl DistillMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "genie" => Ok(DistillMode::Genie),
+            "gba" => Ok(DistillMode::Gba),
+            "direct" | "zeroq" => Ok(DistillMode::Direct),
+            other => anyhow::bail!("unknown distill mode '{other}'"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DistillCfg {
+    pub mode: DistillMode,
+    pub swing: bool,
+    /// number of synthetic images to distill (rounded up to whole batches)
+    pub samples: usize,
+    /// optimization steps per batch
+    pub steps: usize,
+    pub lr_g: f32,
+    pub lr_z: f32,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for DistillCfg {
+    fn default() -> Self {
+        DistillCfg {
+            mode: DistillMode::Genie,
+            swing: true,
+            samples: 128,
+            steps: 200,
+            lr_g: 0.01,
+            lr_z: 0.1,
+            log_every: 50,
+            seed: 23,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct DistillOutput {
+    /// [samples, H, W, C] synthetic calibration images
+    pub images: Tensor,
+    /// BNS loss trace (per logged step, averaged over batches)
+    pub loss_trace: Vec<(usize, f32)>,
+    /// final BNS loss averaged over batches
+    pub final_loss: f32,
+}
+
+/// Distill a synthetic calibration set from the teacher's BN statistics.
+pub fn distill(
+    mrt: &ModelRt,
+    teacher: &Store,
+    cfg: &DistillCfg,
+    metrics: &mut Metrics,
+) -> Result<DistillOutput> {
+    let m = &mrt.manifest;
+    let bd = m.batch("distill");
+    let n_batches = cfg.samples.div_ceil(bd);
+    let mut rng = Pcg32::new(cfg.seed);
+    let tag = if cfg.swing { "swing" } else { "noswing" };
+    let mode_name = match cfg.mode {
+        DistillMode::Genie => "genie",
+        DistillMode::Gba => "gba",
+        DistillMode::Direct => "direct",
+    };
+
+    metrics.start("distill");
+    let mut parts: Vec<Tensor> = Vec::new();
+    let mut traces: Vec<Vec<f32>> = Vec::new();
+    let mut final_losses = Vec::new();
+    for b in 0..n_batches {
+        let (imgs, trace) = match cfg.mode {
+            DistillMode::Direct => distill_direct(mrt, teacher, cfg, tag, &mut rng)?,
+            _ => distill_genie(mrt, teacher, cfg, tag, &mut rng)?,
+        };
+        final_losses.push(*trace.last().unwrap());
+        traces.push(trace);
+        parts.push(imgs);
+        if b == 0 || b == n_batches - 1 {
+            println!(
+                "distill[{}/{mode_name}/{tag}] batch {}/{}: loss {:.3}",
+                m.model,
+                b + 1,
+                n_batches,
+                final_losses.last().unwrap()
+            );
+        }
+    }
+    let secs = metrics.stop("distill");
+
+    // average trace across batches at each logged step
+    let steps_logged = traces[0].len();
+    let mut loss_trace = Vec::with_capacity(steps_logged);
+    for i in 0..steps_logged {
+        let avg = traces.iter().map(|t| t[i]).sum::<f32>() / traces.len() as f32;
+        let step = (i + 1) * cfg.log_every.min(cfg.steps);
+        metrics.log(&format!("distill/{mode_name}/bns_loss"), step, avg);
+        loss_trace.push((step, avg));
+    }
+
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    let images = Tensor::concat_rows(&refs).take_rows(cfg.samples);
+    let final_loss =
+        final_losses.iter().sum::<f32>() / final_losses.len() as f32;
+    println!(
+        "distill[{}/{mode_name}/{tag}]: {} images in {:.1}s (final BNS {:.3})",
+        m.model, cfg.samples, secs, final_loss
+    );
+    Ok(DistillOutput { images, loss_trace, final_loss })
+}
+
+/// One generator-based batch (GENIE / GBA). Returns (images, loss trace).
+fn distill_genie(
+    mrt: &ModelRt,
+    teacher: &Store,
+    cfg: &DistillCfg,
+    tag: &str,
+    rng: &mut Pcg32,
+) -> Result<(Tensor, Vec<f32>)> {
+    let m = &mrt.manifest;
+    let bd = m.batch("distill");
+    let mut store = teacher.clone();
+
+    // fresh generator per batch (appendix A)
+    let (kh, kl) = rng.key_pair();
+    store.insert("key", Tensor::key(kh, kl));
+    mrt.call("gen_init", &mut store)?;
+    insert_zeros(&mut store, &m.gen_params, "am.");
+    insert_zeros(&mut store, &m.gen_params, "av.");
+
+    // latents z ~ N(0, I), learnable (the GLO insight, section 3.1)
+    let zshape = [bd, m.latent];
+    store.insert("z", Tensor::randn(&zshape, rng, 1.0));
+    store.insert("zm", Tensor::zeros(&zshape));
+    store.insert("zv", Tensor::zeros(&zshape));
+
+    let gen_sched = ExponentialDecay::new(cfg.lr_g, 0.95, 100);
+    let mut z_sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
+    let lr_z_active = cfg.mode == DistillMode::Genie;
+
+    let entry = mrt.entry(&format!("distill_genie_{tag}"))?;
+    let mut trace = Vec::new();
+    let mut lr_z = if lr_z_active { cfg.lr_z } else { 0.0 };
+    for t in 1..=cfg.steps {
+        let (kh, kl) = rng.key_pair();
+        store.insert("key", Tensor::key(kh, kl));
+        store.insert("t", Tensor::scalar_f32(t as f32));
+        store.insert("lr_g", Tensor::scalar_f32(gen_sched.lr(t - 1)));
+        store.insert("lr_z", Tensor::scalar_f32(lr_z));
+        let scalars = mrt.rt.call(&entry, &mut store)?;
+        let loss = scalars["loss"];
+        if lr_z_active {
+            lr_z = z_sched.observe(loss);
+        }
+        if t % cfg.log_every == 0 || t == cfg.steps {
+            trace.push(loss);
+        }
+    }
+    mrt.call("gen_images", &mut store)?;
+    Ok((store.get("images")?.clone(), trace))
+}
+
+/// One direct (ZeroQ/DBA) batch: images themselves are the parameters.
+fn distill_direct(
+    mrt: &ModelRt,
+    teacher: &Store,
+    cfg: &DistillCfg,
+    tag: &str,
+    rng: &mut Pcg32,
+) -> Result<(Tensor, Vec<f32>)> {
+    let m = &mrt.manifest;
+    let bd = m.batch("distill");
+    let img = &m.image;
+    let xshape = [bd, img[0], img[1], img[2]];
+    let mut store = teacher.clone();
+    store.insert("x", Tensor::randn(&xshape, rng, 1.0));
+    store.insert("xm", Tensor::zeros(&xshape));
+    store.insert("xv", Tensor::zeros(&xshape));
+
+    let mut sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
+    let entry = mrt.entry(&format!("distill_direct_{tag}"))?;
+    let mut trace = Vec::new();
+    let mut lr = cfg.lr_z;
+    for t in 1..=cfg.steps {
+        let (kh, kl) = rng.key_pair();
+        store.insert("key", Tensor::key(kh, kl));
+        store.insert("t", Tensor::scalar_f32(t as f32));
+        store.insert("lr", Tensor::scalar_f32(lr));
+        let scalars = mrt.rt.call(&entry, &mut store)?;
+        let loss = scalars["loss"];
+        lr = sched.observe(loss);
+        if t % cfg.log_every == 0 || t == cfg.steps {
+            trace.push(loss);
+        }
+    }
+    Ok((store.get("x")?.clone(), trace))
+}

@@ -1,0 +1,49 @@
+//! Top-1 accuracy evaluation for the FP32 teacher (`eval_batch`) and the
+//! hard-quantized student (`eval_quant`) over padded fixed-size batches.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::ModelRt;
+use crate::store::Store;
+use crate::tensor::accuracy;
+
+/// FP32 teacher top-1 on the test set.
+pub fn eval_fp32(mrt: &ModelRt, teacher: &Store, dataset: &Dataset) -> Result<f32> {
+    let bs = mrt.manifest.batch("eval");
+    let entry = mrt.entry("eval_batch")?;
+    let mut store = teacher.clone();
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    for (x, y, valid) in dataset.eval_batches(bs) {
+        store.insert("x", x);
+        mrt.rt.call(&entry, &mut store)?;
+        let acc = accuracy(store.get("logits")?, &y, valid);
+        correct += acc as f64 * valid as f64;
+        total += valid;
+    }
+    Ok((correct / total as f64) as f32)
+}
+
+/// Hard-quantized student top-1 on the test set.
+pub fn eval_quantized(
+    mrt: &ModelRt,
+    teacher: &Store,
+    qstate: &Store,
+    dataset: &Dataset,
+) -> Result<f32> {
+    let bs = mrt.manifest.batch("eval");
+    let entry = mrt.entry("eval_quant")?;
+    let mut store = teacher.clone();
+    store.absorb(qstate);
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    for (x, y, valid) in dataset.eval_batches(bs) {
+        store.insert("x", x);
+        mrt.rt.call(&entry, &mut store)?;
+        let acc = accuracy(store.get("logits")?, &y, valid);
+        correct += acc as f64 * valid as f64;
+        total += valid;
+    }
+    Ok((correct / total as f64) as f32)
+}

@@ -1,0 +1,124 @@
+//! Metrics: named scalar series + phase wall-clock timers, flushed as CSV
+//! under a run directory. EXPERIMENTS.md tables are generated from these.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::Result;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    run_dir: Option<PathBuf>,
+    series: Vec<(String, Vec<(usize, f32)>)>,
+    index: HashMap<String, usize>,
+    timers: Vec<(String, f64)>,
+    open: HashMap<String, Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn with_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(Metrics { run_dir: Some(dir.as_ref().to_path_buf()), ..Default::default() })
+    }
+
+    pub fn log(&mut self, name: &str, step: usize, value: f32) {
+        let idx = *self.index.entry(name.to_string()).or_insert_with(|| {
+            self.series.push((name.to_string(), Vec::new()));
+            self.series.len() - 1
+        });
+        self.series[idx].1.push((step, value));
+    }
+
+    pub fn series(&self, name: &str) -> Option<&[(usize, f32)]> {
+        self.index.get(name).map(|&i| self.series[i].1.as_slice())
+    }
+
+    pub fn last(&self, name: &str) -> Option<f32> {
+        self.series(name).and_then(|s| s.last()).map(|&(_, v)| v)
+    }
+
+    pub fn start(&mut self, phase: &str) {
+        self.open.insert(phase.to_string(), Instant::now());
+    }
+
+    pub fn stop(&mut self, phase: &str) -> f64 {
+        let secs = self
+            .open
+            .remove(phase)
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        self.timers.push((phase.to_string(), secs));
+        secs
+    }
+
+    pub fn timer_total(&self, phase: &str) -> f64 {
+        self.timers
+            .iter()
+            .filter(|(n, _)| n == phase)
+            .map(|(_, s)| s)
+            .sum()
+    }
+
+    /// Flush every series to `<run_dir>/<name>.csv` (step,value rows).
+    pub fn flush(&self) -> Result<()> {
+        let Some(dir) = &self.run_dir else { return Ok(()) };
+        for (name, rows) in &self.series {
+            let safe = name.replace(['/', ' '], "_");
+            let mut f = std::fs::File::create(dir.join(format!("{safe}.csv")))?;
+            writeln!(f, "step,value")?;
+            for (s, v) in rows {
+                writeln!(f, "{s},{v}")?;
+            }
+        }
+        if !self.timers.is_empty() {
+            let mut f = std::fs::File::create(dir.join("timers.csv"))?;
+            writeln!(f, "phase,seconds")?;
+            for (n, s) in &self.timers {
+                writeln!(f, "{n},{s:.3}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_and_query() {
+        let mut m = Metrics::new();
+        m.log("loss", 1, 2.0);
+        m.log("loss", 2, 1.0);
+        assert_eq!(m.last("loss"), Some(1.0));
+        assert_eq!(m.series("loss").unwrap().len(), 2);
+        assert_eq!(m.last("nope"), None);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let mut m = Metrics::new();
+        m.start("p");
+        m.stop("p");
+        m.start("p");
+        m.stop("p");
+        assert!(m.timer_total("p") >= 0.0);
+        assert_eq!(m.timers.len(), 2);
+    }
+
+    #[test]
+    fn flush_writes_csv() {
+        let dir = std::env::temp_dir().join("genie_metrics_test");
+        let mut m = Metrics::with_dir(&dir).unwrap();
+        m.log("a b/c", 0, 1.5);
+        m.flush().unwrap();
+        let text = std::fs::read_to_string(dir.join("a_b_c.csv")).unwrap();
+        assert!(text.contains("0,1.5"));
+    }
+}

@@ -1,0 +1,83 @@
+//! L3 pipeline coordinator: the GENIE zero-shot-quantization state machine.
+//!
+//! Phases (Figure 2 of the paper):
+//!   1. [`pretrain`]  — FP32 teacher training via the `train_step` graph
+//!      (substitute for the paper's downloaded ImageNet checkpoints).
+//!   2. [`distill`]   — GENIE-D: per-batch generator re-init, joint
+//!      latent+generator optimization against the BNS loss, swing conv;
+//!      plus the ZeroQ (direct) and GBA (frozen-latent) baseline arms.
+//!   3. [`quantize`]  — GENIE-M: Eq. 6 step-size search, AdaRound softbit
+//!      init, LSQ activation steps, block-sequential reconstruction with
+//!      QDrop and the annealed rounding regularizer.
+//!   4. [`evaluate`]  — FP32 / hard-quantized top-1 accuracy.
+//!
+//! All schedules (cosine, exponential, plateau, beta anneal) are computed
+//! here and fed to the AOT graphs as runtime scalars.
+
+pub mod config;
+pub mod metrics;
+pub mod pretrain;
+pub mod distill;
+pub mod quantize;
+pub mod evaluate;
+pub mod pipeline;
+
+pub use config::RunConfig;
+pub use distill::{distill, DistillCfg, DistillMode, DistillOutput};
+pub use evaluate::{eval_fp32, eval_quantized};
+pub use metrics::Metrics;
+pub use pipeline::{fsq, zsq, PipelineOutcome};
+pub use pretrain::{pretrain, PretrainCfg};
+pub use quantize::{quantize, QuantCfg};
+
+use crate::runtime::manifest::NamedShape;
+use crate::store::Store;
+use crate::tensor::Tensor;
+
+/// Insert zero tensors for every (name, shape) with an optional prefix —
+/// used for Adam moment states ("am." / "av." + param name).
+pub fn insert_zeros(store: &mut Store, specs: &[NamedShape], prefix: &str) {
+    for (name, shape) in specs {
+        store.insert(&format!("{prefix}{name}"), Tensor::zeros(shape));
+    }
+}
+
+/// Subset of a store by exact names.
+pub fn subset(store: &Store, names: impl IntoIterator<Item = String>) -> Store {
+    let mut out = Store::new();
+    for n in names {
+        out.insert(&n, store.get(&n).unwrap().clone());
+    }
+    out
+}
+
+/// Names of the FP32 teacher tensors (params + BN state) in a manifest.
+pub fn teacher_names(m: &crate::runtime::Manifest) -> Vec<String> {
+    m.params
+        .iter()
+        .chain(m.bn.iter())
+        .map(|(n, _)| n.clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_zeros_prefixes() {
+        let mut s = Store::new();
+        insert_zeros(&mut s, &[("w".into(), vec![2, 2])], "am.");
+        assert_eq!(s.get("am.w").unwrap().numel(), 4);
+    }
+
+    #[test]
+    fn subset_picks() {
+        let mut s = Store::new();
+        s.insert("a", Tensor::scalar_f32(1.0));
+        s.insert("b", Tensor::scalar_f32(2.0));
+        let sub = subset(&s, ["b".to_string()]);
+        assert_eq!(sub.len(), 1);
+        assert!(sub.contains("b"));
+    }
+}

@@ -1,0 +1,101 @@
+//! End-to-end pipelines:
+//!
+//!   * [`zsq`] — zero-shot: teacher -> GENIE-D synthetic calibration ->
+//!     GENIE-M -> eval (the paper's headline setting).
+//!   * [`fsq`] — few-shot: teacher -> real calibration samples ->
+//!     GENIE-M -> eval (Table 5).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::ModelRt;
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+use super::{
+    distill, eval_fp32, eval_quantized, quantize, DistillCfg, Metrics,
+    QuantCfg,
+};
+
+#[derive(Debug, Clone)]
+pub struct PipelineOutcome {
+    pub model: String,
+    pub fp_acc: f32,
+    pub q_acc: f32,
+    pub distill_secs: f64,
+    pub quant_secs: f64,
+    pub final_bns_loss: f32,
+}
+
+impl PipelineOutcome {
+    pub fn print(&self, label: &str) {
+        println!(
+            "== {label} [{}]: FP32 {:.2}%  quant {:.2}%  (distill {:.0}s, quant {:.0}s)",
+            self.model,
+            self.fp_acc * 100.0,
+            self.q_acc * 100.0,
+            self.distill_secs,
+            self.quant_secs
+        );
+    }
+}
+
+/// Zero-shot quantization: synthesize calibration data, then quantize.
+pub fn zsq(
+    mrt: &ModelRt,
+    teacher: &Store,
+    dataset: &Dataset,
+    dcfg: &DistillCfg,
+    qcfg: &QuantCfg,
+    metrics: &mut Metrics,
+) -> Result<PipelineOutcome> {
+    let out = distill(mrt, teacher, dcfg, metrics)?;
+    let qstate = quantize(mrt, teacher, &out.images, qcfg, metrics)?;
+    let fp_acc = eval_fp32(mrt, teacher, dataset)?;
+    let q_acc = eval_quantized(mrt, teacher, &qstate, dataset)?;
+    Ok(PipelineOutcome {
+        model: mrt.manifest.model.clone(),
+        fp_acc,
+        q_acc,
+        distill_secs: metrics.timer_total("distill"),
+        quant_secs: metrics.timer_total("quantize"),
+        final_bns_loss: out.final_loss,
+    })
+}
+
+/// Few-shot quantization on real calibration samples (Table 5 setting).
+pub fn fsq(
+    mrt: &ModelRt,
+    teacher: &Store,
+    dataset: &Dataset,
+    samples: usize,
+    qcfg: &QuantCfg,
+    metrics: &mut Metrics,
+) -> Result<PipelineOutcome> {
+    let mut rng = Pcg32::new(qcfg.seed ^ 0x5eed);
+    let (calib, _) = dataset.calibration(&mut rng, samples);
+    let qstate = quantize(mrt, teacher, &calib, qcfg, metrics)?;
+    let fp_acc = eval_fp32(mrt, teacher, dataset)?;
+    let q_acc = eval_quantized(mrt, teacher, &qstate, dataset)?;
+    Ok(PipelineOutcome {
+        model: mrt.manifest.model.clone(),
+        fp_acc,
+        q_acc,
+        distill_secs: 0.0,
+        quant_secs: metrics.timer_total("quantize"),
+        final_bns_loss: f32::NAN,
+    })
+}
+
+/// Quantize with a provided calibration image tensor (experiment harness).
+pub fn quantize_with(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &Tensor,
+    dataset: &Dataset,
+    qcfg: &QuantCfg,
+    metrics: &mut Metrics,
+) -> Result<f32> {
+    let qstate = quantize(mrt, teacher, calib, qcfg, metrics)?;
+    eval_quantized(mrt, teacher, &qstate, dataset)
+}

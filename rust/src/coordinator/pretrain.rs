@@ -1,0 +1,93 @@
+//! FP32 teacher pretraining — the substitute for the paper's downloaded
+//! ImageNet checkpoints (DESIGN.md section 3). Drives the AOT `train_step`
+//! graph (Adam + BN running-stat updates baked in) with shuffled batches
+//! from the procedural dataset; cosine-annealed LR; checkpoints the
+//! params+BN store.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::ModelRt;
+use crate::schedule::CosineAnnealing;
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+use super::{insert_zeros, subset, teacher_names, Metrics};
+
+#[derive(Debug, Clone)]
+pub struct PretrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for PretrainCfg {
+    fn default() -> Self {
+        PretrainCfg { steps: 600, lr: 4e-3, log_every: 50, seed: 17 }
+    }
+}
+
+/// Train the FP32 teacher; returns the params+BN store (the "pre-trained
+/// model" every later phase consumes).
+pub fn pretrain(
+    mrt: &ModelRt,
+    dataset: &Dataset,
+    cfg: &PretrainCfg,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    let m = &mrt.manifest;
+    let bs = m.batch("train");
+    let mut rng = Pcg32::new(cfg.seed);
+    let sched = CosineAnnealing::new(cfg.lr, cfg.steps);
+
+    let mut store = mrt.init_store()?;
+    insert_zeros(&mut store, &m.params, "am.");
+    insert_zeros(&mut store, &m.params, "av.");
+
+    metrics.start("pretrain");
+    let entry = mrt.entry("train_step")?;
+    for t in 1..=cfg.steps {
+        let (x, y) = dataset.train_batch(&mut rng, bs);
+        store.insert("x", x);
+        store.insert("y", Tensor::from_i32(&[bs], y));
+        store.insert("t", Tensor::scalar_f32(t as f32));
+        store.insert("lr", Tensor::scalar_f32(sched.lr(t - 1)));
+        let scalars = mrt.rt.call(&entry, &mut store)?;
+        if t % cfg.log_every == 0 || t == cfg.steps {
+            metrics.log("pretrain/loss", t, scalars["loss"]);
+            metrics.log("pretrain/acc", t, scalars["acc"]);
+        }
+    }
+    let secs = metrics.stop("pretrain");
+    println!(
+        "pretrain[{}]: {} steps in {:.1}s  loss={:.3} acc={:.3}",
+        m.model,
+        cfg.steps,
+        secs,
+        metrics.last("pretrain/loss").unwrap_or(f32::NAN),
+        metrics.last("pretrain/acc").unwrap_or(f32::NAN)
+    );
+    Ok(subset(&store, teacher_names(m)))
+}
+
+/// Load a cached checkpoint if present, otherwise pretrain and cache it.
+pub fn teacher_or_pretrain(
+    mrt: &ModelRt,
+    dataset: &Dataset,
+    cfg: &PretrainCfg,
+    runs_dir: &std::path::Path,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    let ckpt = runs_dir.join(format!("teacher_{}.bin", mrt.manifest.model));
+    if ckpt.exists() {
+        let s = Store::load(&ckpt)?;
+        println!("teacher[{}]: loaded {:?}", mrt.manifest.model, ckpt);
+        return Ok(s);
+    }
+    let teacher = pretrain(mrt, dataset, cfg, metrics)?;
+    std::fs::create_dir_all(runs_dir)?;
+    teacher.save(&ckpt)?;
+    println!("teacher[{}]: saved {:?}", mrt.manifest.model, ckpt);
+    Ok(teacher)
+}

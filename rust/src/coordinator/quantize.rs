@@ -1,0 +1,227 @@
+//! GENIE-M block-sequential post-training quantization (Algorithm 2 /
+//! Algorithm A1):
+//!
+//!   1. LSQ activation-step init from teacher `act_stats`.
+//!   2. Host-side quant-state init: Eq. 6 p-norm grid search for s_w,
+//!      AdaRound base grid B + softbit V (crate::quant).
+//!   3. Teacher block-boundary collection over the calibration set.
+//!   4. Per block, Adam on (s_w, V, s_a) against the block reconstruction
+//!      error + annealed rounding regularizer (Eq. A2), with QDrop.
+//!      Block inputs come from the *quantized prefix* (refreshed via
+//!      `collect_student` before each block, BRECQ-style).
+//!
+//! Ablation arms are pure config: `lr_sw = 0` -> AdaRound (no joint step
+//! size, M1 vs M2 / Table 5), `drop_p = 0` -> NoDrop.
+
+use anyhow::Result;
+
+use crate::data::image_batches;
+use crate::quant::{init_qstate, set_act_steps, BitConfig};
+use crate::runtime::ModelRt;
+use crate::schedule::{BetaAnneal, CosineAnnealing};
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+use super::{subset, Metrics};
+
+#[derive(Debug, Clone)]
+pub struct QuantCfg {
+    pub wbits: u32,
+    pub abits: u32,
+    pub steps_per_block: usize,
+    /// weight step-size LR (0 => AdaRound baseline: s_w frozen)
+    pub lr_sw: f32,
+    /// softbit LR
+    pub lr_v: f32,
+    /// activation step LR (LSQ)
+    pub lr_sa: f32,
+    /// rounding-regularizer weight (paper: 1.0 for GENIE-M)
+    pub lam: f32,
+    pub beta_start: f32,
+    pub beta_end: f32,
+    /// QDrop keep-FP probability (0 => NoDrop)
+    pub drop_p: f32,
+    /// Eq. A3 p-norm for the step-size search (Fig. A2; default 2.4)
+    pub pnorm: f32,
+    /// refresh block inputs through the quantized prefix (BRECQ-style)
+    pub refresh_student: bool,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for QuantCfg {
+    fn default() -> Self {
+        QuantCfg {
+            wbits: 4,
+            abits: 4,
+            steps_per_block: 250,
+            lr_sw: 1e-4,
+            lr_v: 1e-2,
+            lr_sa: 4e-5,
+            lam: 1.0,
+            beta_start: 20.0,
+            beta_end: 2.0,
+            drop_p: 0.5,
+            pnorm: 2.4,
+            refresh_student: true,
+            log_every: 50,
+            seed: 31,
+        }
+    }
+}
+
+impl QuantCfg {
+    /// AdaRound baseline arm: frozen step sizes.
+    pub fn adaround(mut self) -> Self {
+        self.lr_sw = 0.0;
+        self.lr_sa = 0.0;
+        self
+    }
+
+    /// NoDrop arm.
+    pub fn no_drop(mut self) -> Self {
+        self.drop_p = 0.0;
+        self
+    }
+}
+
+/// Run GENIE-M over a calibration set; returns the optimized quant state.
+pub fn quantize(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &Tensor,
+    cfg: &QuantCfg,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    let m = &mrt.manifest;
+    let nb = m.num_blocks;
+    let br = m.batch("recon");
+    let mut rng = Pcg32::new(cfg.seed);
+    metrics.start("quantize");
+
+    // 1. activation statistics for LSQ init
+    let stats = {
+        let bs = m.batch("stats");
+        let first = pad_to(calib, bs);
+        let mut store = teacher.clone();
+        store.insert("x", first);
+        mrt.call("act_stats", &mut store)?;
+        store.get("act_stats")?.as_f32().to_vec()
+    };
+
+    // 2. host-side quant-state init (Eq. 6 grid search + AdaRound)
+    let bits = BitConfig::new(cfg.wbits, cfg.abits);
+    let mut qstate = init_qstate(m, teacher, bits, cfg.pnorm, Some(&stats))?;
+    set_act_steps(&mut qstate, &m.quant_layers, &stats)?;
+
+    // 3. teacher block boundaries over calibration batches
+    let batches = image_batches(calib, br);
+    let mut teacher_bounds: Vec<Vec<Tensor>> = Vec::new();
+    {
+        let mut store = teacher.clone();
+        for (bx, _) in &batches {
+            store.insert("x", bx.clone());
+            mrt.call("collect_teacher", &mut store)?;
+            let bounds = (0..=nb)
+                .map(|i| store.get(&format!("bound.{i}")).map(Clone::clone))
+                .collect::<Result<Vec<_>>>()?;
+            teacher_bounds.push(bounds);
+        }
+    }
+
+    // one store holds teacher + qstate + adam + per-step scalars
+    let mut store = teacher.clone();
+    store.absorb(&qstate);
+
+    // 4. block-sequential reconstruction
+    for b in 0..nb {
+        // block inputs through the quantized prefix
+        let inputs: Vec<Tensor> = if b == 0 || !cfg.refresh_student {
+            teacher_bounds.iter().map(|t| t[b].clone()).collect()
+        } else {
+            let mut xs = Vec::new();
+            for (bx, _) in &batches {
+                store.insert("x", bx.clone());
+                let (kh, kl) = rng.key_pair();
+                store.insert("key", Tensor::key(kh, kl));
+                mrt.call("collect_student", &mut store)?;
+                xs.push(store.get(&format!("bound.{b}"))?.clone());
+            }
+            xs
+        };
+
+        // fresh Adam state for this block's learnables
+        let learn = m.learnable_block(b).to_vec();
+        for name in &learn {
+            let shape = store.get(name)?.shape.clone();
+            store.insert(&format!("am.{name}"), Tensor::zeros(&shape));
+            store.insert(&format!("av.{name}"), Tensor::zeros(&shape));
+        }
+
+        let sw_sched = CosineAnnealing::new(cfg.lr_sw, cfg.steps_per_block);
+        let sa_sched = CosineAnnealing::new(cfg.lr_sa, cfg.steps_per_block);
+        let beta = BetaAnneal::new(cfg.beta_start, cfg.beta_end, 0.2,
+                                   cfg.steps_per_block);
+        let entry = mrt.entry(&format!("quant_step_{b}"))?;
+        let mut last_rec = f32::NAN;
+        for t in 1..=cfg.steps_per_block {
+            let bi = rng.below(batches.len());
+            store.insert("x_in", inputs[bi].clone());
+            store.insert("y_ref", teacher_bounds[bi][b + 1].clone());
+            let (kh, kl) = rng.key_pair();
+            store.insert("key", Tensor::key(kh, kl));
+            store.insert("t", Tensor::scalar_f32(t as f32));
+            store.insert("lr_sw", Tensor::scalar_f32(sw_sched.lr(t - 1)));
+            store.insert("lr_v", Tensor::scalar_f32(cfg.lr_v));
+            store.insert("lr_sa", Tensor::scalar_f32(sa_sched.lr(t - 1)));
+            store.insert("lam", Tensor::scalar_f32(cfg.lam));
+            store.insert("beta", Tensor::scalar_f32(beta.beta(t)));
+            store.insert("drop_p", Tensor::scalar_f32(cfg.drop_p));
+            let scalars = mrt.rt.call(&entry, &mut store)?;
+            last_rec = scalars["rec"];
+            if t % cfg.log_every == 0 || t == cfg.steps_per_block {
+                metrics.log(&format!("quant/block{b}/rec"), t, scalars["rec"]);
+            }
+        }
+        println!(
+            "quantize[{} W{}A{}] block {}/{}: rec {:.5}",
+            m.model, cfg.wbits, cfg.abits, b + 1, nb, last_rec
+        );
+    }
+    let secs = metrics.stop("quantize");
+    println!(
+        "quantize[{} W{}A{}]: {} blocks x {} steps in {:.1}s",
+        m.model, cfg.wbits, cfg.abits, nb, cfg.steps_per_block, secs
+    );
+
+    // return just the q.* tensors (with optimized learnables)
+    let qnames: Vec<String> = m.qstate.iter().map(|(n, _)| n.clone()).collect();
+    Ok(subset(&store, qnames))
+}
+
+/// Pad/repeat rows so shape[0] == bs (for fixed-batch stat graphs).
+fn pad_to(x: &Tensor, bs: usize) -> Tensor {
+    let n = x.shape[0];
+    let idx: Vec<usize> = (0..bs).map(|i| i % n).collect();
+    x.gather_rows(&idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_to_repeats() {
+        let x = Tensor::from_f32(&[2, 1], vec![1.0, 2.0]);
+        let p = pad_to(&x, 5);
+        assert_eq!(p.shape, vec![5, 1]);
+        assert_eq!(p.as_f32(), &[1.0, 2.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn ablation_arms() {
+        let c = QuantCfg::default().adaround().no_drop();
+        assert_eq!(c.lr_sw, 0.0);
+        assert_eq!(c.drop_p, 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Dataset substrate: loads the procedural dataset artifact
+//! (artifacts/dataset.bin, written by python/compile/data.py) and provides
+//! shuffled training batches and fixed-size (padded) eval batches.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train_x: Tensor,
+    pub train_y: Vec<i32>,
+    pub test_x: Tensor,
+    pub test_y: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn load(artifacts: impl AsRef<Path>) -> Result<Dataset> {
+        let s = Store::load(artifacts.as_ref().join("dataset.bin"))?;
+        Ok(Dataset {
+            train_x: s.get("train_x")?.clone(),
+            train_y: s.get("train_y")?.as_i32().to_vec(),
+            test_x: s.get("test_x")?.clone(),
+            test_y: s.get("test_y")?.as_i32().to_vec(),
+        })
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// A random training batch of `bs` images: ([bs,H,W,C], labels[bs]).
+    pub fn train_batch(&self, rng: &mut Pcg32, bs: usize) -> (Tensor, Vec<i32>) {
+        let idx: Vec<usize> =
+            (0..bs).map(|_| rng.below(self.train_len())).collect();
+        let x = self.train_x.gather_rows(&idx);
+        let y = idx.iter().map(|&i| self.train_y[i]).collect();
+        (x, y)
+    }
+
+    /// A fixed calibration subset of the first `n` training images,
+    /// shuffled with `rng` (the "randomly sampled 1K images" of Table 5).
+    pub fn calibration(&self, rng: &mut Pcg32, n: usize) -> (Tensor, Vec<i32>) {
+        let mut idx: Vec<usize> = (0..self.train_len()).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(n);
+        let x = self.train_x.gather_rows(&idx);
+        let y = idx.iter().map(|&i| self.train_y[i]).collect();
+        (x, y)
+    }
+
+    /// Fixed-size eval batches over the test set; the final batch is
+    /// padded by repeating row 0 and `valid` says how many rows count.
+    pub fn eval_batches(&self, bs: usize) -> Vec<(Tensor, Vec<i32>, usize)> {
+        batches_padded(&self.test_x, &self.test_y, bs)
+    }
+}
+
+/// Split an [N,...] tensor + labels into fixed-size padded batches.
+pub fn batches_padded(
+    x: &Tensor,
+    y: &[i32],
+    bs: usize,
+) -> Vec<(Tensor, Vec<i32>, usize)> {
+    let n = y.len();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let valid = bs.min(n - start);
+        let idx: Vec<usize> =
+            (0..bs).map(|i| if i < valid { start + i } else { start }).collect();
+        let bx = x.gather_rows(&idx);
+        let by = idx.iter().map(|&i| y[i]).collect();
+        out.push((bx, by, valid));
+        start += valid;
+    }
+    out
+}
+
+/// Split unlabeled images into fixed-size padded batches.
+pub fn image_batches(x: &Tensor, bs: usize) -> Vec<(Tensor, usize)> {
+    let n = x.shape[0];
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let valid = bs.min(n - start);
+        let idx: Vec<usize> =
+            (0..bs).map(|i| if i < valid { start + i } else { start }).collect();
+        out.push((x.gather_rows(&idx), valid));
+        start += valid;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let n = 10;
+        let x = Tensor::from_f32(
+            &[n, 2, 2, 1],
+            (0..n * 4).map(|i| i as f32).collect(),
+        );
+        let y: Vec<i32> = (0..n as i32).collect();
+        Dataset {
+            train_x: x.clone(),
+            train_y: y.clone(),
+            test_x: x,
+            test_y: y,
+        }
+    }
+
+    #[test]
+    fn train_batch_shape() {
+        let d = tiny();
+        let mut rng = Pcg32::new(1);
+        let (x, y) = d.train_batch(&mut rng, 4);
+        assert_eq!(x.shape, vec![4, 2, 2, 1]);
+        assert_eq!(y.len(), 4);
+    }
+
+    #[test]
+    fn eval_batches_cover_everything_once() {
+        let d = tiny();
+        let batches = d.eval_batches(4);
+        assert_eq!(batches.len(), 3);
+        let valid: usize = batches.iter().map(|(_, _, v)| v).sum();
+        assert_eq!(valid, 10);
+        // padded rows replicate row `start`
+        let (bx, _, v) = &batches[2];
+        assert_eq!(*v, 2);
+        assert_eq!(bx.shape[0], 4);
+    }
+
+    #[test]
+    fn calibration_unique_samples() {
+        let d = tiny();
+        let mut rng = Pcg32::new(2);
+        let (x, y) = d.calibration(&mut rng, 10);
+        assert_eq!(x.shape[0], 10);
+        let mut sorted = y.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn image_batches_pad() {
+        let x = Tensor::from_f32(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let b = image_batches(&x, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[1].1, 1);
+        assert_eq!(b[1].0.as_f32(), &[20., 21., 20., 21.]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Figure harnesses (paper evaluation + appendix; index in DESIGN.md §4).
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    distill, eval_quantized, quantize, DistillCfg, DistillMode, Metrics,
+    QuantCfg, RunConfig,
+};
+use crate::runtime::Runtime;
+use crate::tensor::{checkerboard_energy, Pcg32};
+
+use super::tables::load_ctx;
+use super::{pct, ResultTable};
+
+/// Fig. 5: swing conv vs checkerboard artifacts. Direct (generator-free)
+/// distillation with and without swing; metric = fraction of image
+/// variance in the 2x2 Haar HH band (stride-2 Nyquist energy).
+pub fn fig5(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let ctx = load_ctx(&rt, cfg, cfg.model.split(',').next().unwrap())?;
+    let mut table = ResultTable::new(
+        "fig5_checkerboard",
+        &["arm", "hh_energy", "final_bns_loss"],
+    );
+    for (name, swing) in [("no_swing", false), ("swing", true)] {
+        let mut dcfg = cfg.distill.clone();
+        dcfg.mode = DistillMode::Direct;
+        dcfg.swing = swing;
+        let mut metrics = Metrics::new();
+        let out = distill(&ctx.mrt, &ctx.teacher, &dcfg, &mut metrics)?;
+        let e = checkerboard_energy(&out.images);
+        println!("[fig5] {name}: HH energy {e:.4}, BNS {:.3}", out.final_loss);
+        table.row(vec![
+            name.into(),
+            format!("{e:.5}"),
+            format!("{:.4}", out.final_loss),
+        ]);
+    }
+    // reference: real data HH energy
+    let real = ctx.dataset.train_x.take_rows(256);
+    table.row(vec![
+        "real_data".into(),
+        format!("{:.5}", checkerboard_energy(&real)),
+        "-".into(),
+    ]);
+    table.print_and_save()
+}
+
+/// Fig. 6 / Table A1 / Fig. A4: accuracy vs number of synthetic samples,
+/// for GENIE vs ZeroQ data (quantizer fixed).
+pub fn fig6(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let ctx = load_ctx(&rt, cfg, cfg.model.split(',').next().unwrap())?;
+    let mut table = ResultTable::new(
+        "fig6_sample_count",
+        &["samples", "method", "top1"],
+    );
+    let counts = [64usize, 128, 256];
+    for n in counts {
+        for (name, mode, swing) in [
+            ("ZeroQ", DistillMode::Direct, false),
+            ("GENIE", DistillMode::Genie, true),
+        ] {
+            let mut dcfg = cfg.distill.clone();
+            dcfg.mode = mode;
+            dcfg.swing = swing;
+            dcfg.samples = n;
+            let mut qcfg = cfg.quant.clone();
+            if mode == DistillMode::Direct {
+                qcfg = qcfg.adaround();
+            }
+            let mut metrics = Metrics::new();
+            let out = distill(&ctx.mrt, &ctx.teacher, &dcfg, &mut metrics)?;
+            let qstate =
+                quantize(&ctx.mrt, &ctx.teacher, &out.images, &qcfg, &mut metrics)?;
+            let acc =
+                eval_quantized(&ctx.mrt, &ctx.teacher, &qstate, &ctx.dataset)?;
+            println!("[fig6] {name} n={n}: {}", pct(acc));
+            table.row(vec![n.to_string(), name.into(), pct(acc)]);
+        }
+    }
+    table.print_and_save()
+}
+
+/// Fig. A2: initial step-size p-norm sweep — GENIE-M (learned s) vs
+/// AdaRound (frozen s) sensitivity to the Eq. A3 exponent.
+pub fn fig_a2(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let ctx = load_ctx(&rt, cfg, cfg.model.split(',').next().unwrap())?;
+    let mut rng = Pcg32::new(cfg.seed ^ 0xa2);
+    let (calib, _) = ctx.dataset.calibration(&mut rng, cfg.fsq_samples);
+    let mut table = ResultTable::new(
+        "figA2_init_pnorm",
+        &["pnorm", "method", "top1"],
+    );
+    for pnorm in [2.0f32, 2.4, 3.0, 4.0] {
+        for (name, frozen) in [("GENIE-M", false), ("AdaRound", true)] {
+            let mut q: QuantCfg = cfg.quant.clone();
+            q.pnorm = pnorm;
+            if frozen {
+                q = q.adaround();
+            }
+            let mut metrics = Metrics::new();
+            let qstate =
+                quantize(&ctx.mrt, &ctx.teacher, &calib, &q, &mut metrics)?;
+            let acc =
+                eval_quantized(&ctx.mrt, &ctx.teacher, &qstate, &ctx.dataset)?;
+            println!("[figA2] p={pnorm} {name}: {}", pct(acc));
+            table.row(vec![format!("{pnorm}"), name.into(), pct(acc)]);
+        }
+    }
+    table.print_and_save()
+}
+
+/// Fig. A5: BNS-loss convergence traces for ZeroQ (direct), GBA and GENIE.
+pub fn fig_a5(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let ctx = load_ctx(&rt, cfg, cfg.model.split(',').next().unwrap())?;
+    let mut table = ResultTable::new(
+        "figA5_bns_convergence",
+        &["step", "zeroq", "gba", "genie"],
+    );
+    let mut traces = Vec::new();
+    for (mode, swing) in [
+        (DistillMode::Direct, false),
+        (DistillMode::Gba, false),
+        (DistillMode::Genie, true),
+    ] {
+        let mut dcfg: DistillCfg = cfg.distill.clone();
+        dcfg.mode = mode;
+        dcfg.swing = swing;
+        dcfg.samples = dcfg.samples.min(64); // one batch for a clean trace
+        dcfg.log_every = (dcfg.steps / 20).max(1);
+        let mut metrics = Metrics::new();
+        let out = distill(&ctx.mrt, &ctx.teacher, &dcfg, &mut metrics)?;
+        traces.push(out.loss_trace);
+    }
+    let rows = traces[0].len();
+    for i in 0..rows {
+        table.row(vec![
+            traces[0][i].0.to_string(),
+            format!("{:.4}", traces[0][i].1),
+            format!("{:.4}", traces[1][i].1),
+            format!("{:.4}", traces[2][i].1),
+        ]);
+    }
+    table.print_and_save()
+}

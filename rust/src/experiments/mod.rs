@@ -1,0 +1,122 @@
+//! Paper table/figure harnesses (experiment index: DESIGN.md section 4).
+//!
+//! Each harness regenerates the rows/series of one table or figure of the
+//! paper on the scaled testbed (models/bits/sample counts configurable via
+//! the usual `key=value` overrides; defaults are sized for a single CPU
+//! core). Results are printed as aligned tables and written to
+//! `results/<exp>.csv`.
+
+pub mod qat;
+pub mod tables;
+pub mod figures;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::RunConfig;
+
+pub fn run(exp: &str, cfg: &RunConfig) -> Result<()> {
+    match exp {
+        "table2" => tables::table2(cfg),
+        "table3" => tables::table3(cfg),
+        "table4" => tables::table4(cfg),
+        "table5" => tables::table5(cfg),
+        "table6" => tables::table6(cfg),
+        "fig5" => figures::fig5(cfg),
+        "fig6" => figures::fig6(cfg),
+        "figA2" => figures::fig_a2(cfg),
+        "figA5" => figures::fig_a5(cfg),
+        "all" => {
+            for e in ["table2", "table3", "table4", "table5", "table6",
+                      "fig5", "fig6", "figA2", "figA5"] {
+                println!("\n################ {e} ################");
+                run(e, cfg)?;
+            }
+            Ok(())
+        }
+        "" => bail!(
+            "experiments: pass --exp <table2|table3|table4|table5|table6|fig5|fig6|figA2|figA5|all>"
+        ),
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+/// Aligned-table printer + CSV sink for experiment results.
+pub struct ResultTable {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl ResultTable {
+    pub fn new(name: &str, header: &[&str]) -> Self {
+        ResultTable {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print_and_save(&self) -> Result<()> {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("\n=== {} ===", self.name);
+        println!("{}", fmt_row(&self.header));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        std::fs::create_dir_all("results")?;
+        let mut csv = String::new();
+        csv.push_str(&self.header.join(","));
+        csv.push('\n');
+        for row in &self.rows {
+            csv.push_str(&row.join(","));
+            csv.push('\n');
+        }
+        let path = format!("results/{}.csv", self.name);
+        std::fs::write(&path, csv)?;
+        println!("(saved to {path})");
+        Ok(())
+    }
+}
+
+pub fn pct(x: f32) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_table_saves_csv() {
+        let mut t = ResultTable::new("_test_table", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print_and_save().unwrap();
+        let text = std::fs::read_to_string("results/_test_table.csv").unwrap();
+        assert!(text.contains("a,b"));
+        assert!(text.contains("1,2"));
+        std::fs::remove_file("results/_test_table.csv").unwrap();
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("nope", &RunConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! Netwise Min-Max QAT baseline driver (the GDFQ/AIT-style comparator of
+//! Table 4 / Table 6 / Table A2): student initialized from the teacher,
+//! trained with KL-to-teacher under Min-Max fake-quant, evaluated under
+//! the same quantizer.
+
+use anyhow::Result;
+
+use crate::data::{image_batches, Dataset};
+use crate::quant::BitConfig;
+use crate::runtime::ModelRt;
+use crate::store::Store;
+use crate::tensor::{accuracy, Pcg32, Tensor};
+
+use crate::coordinator::Metrics;
+
+#[derive(Debug, Clone)]
+pub struct QatCfg {
+    pub wbits: u32,
+    pub abits: u32,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for QatCfg {
+    fn default() -> Self {
+        QatCfg { wbits: 4, abits: 4, steps: 300, lr: 1e-4, seed: 41 }
+    }
+}
+
+/// Train the QAT student on `calib` images (synthetic or real); returns
+/// the student params store (prefixed `s.`).
+pub fn qat_train(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &Tensor,
+    cfg: &QatCfg,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    let m = &mrt.manifest;
+    let bs = m.batch("train");
+    let mut rng = Pcg32::new(cfg.seed);
+    let (_, wp) = BitConfig::wbounds(cfg.wbits);
+    // symmetric weight grid in the minmax baseline: wp = 2^(b-1)-1
+    let wp_sym = ((1u64 << (cfg.wbits - 1)) - 1) as f32;
+    let (_, ap) = BitConfig::abounds(cfg.abits);
+    let _ = wp;
+
+    let mut store = teacher.clone();
+    // student initialized from the teacher
+    for (name, _) in &m.params {
+        store.insert(&format!("s.{name}"), teacher.get(name)?.clone());
+        let shape = teacher.get(name)?.shape.clone();
+        store.insert(&format!("am.{name}"), Tensor::zeros(&shape));
+        store.insert(&format!("av.{name}"), Tensor::zeros(&shape));
+    }
+    store.insert("wp", Tensor::scalar_f32(wp_sym));
+    store.insert("ap", Tensor::scalar_f32(ap));
+    store.insert("lr", Tensor::scalar_f32(cfg.lr));
+
+    metrics.start("qat");
+    let entry = mrt.entry("qat_step")?;
+    let batches = image_batches(calib, bs);
+    for t in 1..=cfg.steps {
+        let bi = rng.below(batches.len());
+        store.insert("x", batches[bi].0.clone());
+        store.insert("t", Tensor::scalar_f32(t as f32));
+        let scalars = mrt.rt.call(&entry, &mut store)?;
+        if t % 100 == 0 || t == cfg.steps {
+            metrics.log("qat/kl", t, scalars["loss"]);
+        }
+    }
+    let secs = metrics.stop("qat");
+    println!(
+        "qat[{} W{}A{}]: {} steps in {:.1}s (KL {:.4})",
+        m.model,
+        cfg.wbits,
+        cfg.abits,
+        cfg.steps,
+        secs,
+        metrics.last("qat/kl").unwrap_or(f32::NAN)
+    );
+
+    let mut out = Store::new();
+    for (name, _) in &m.params {
+        let n = format!("s.{name}");
+        out.insert(&n, store.get(&n)?.clone());
+    }
+    Ok(out)
+}
+
+/// Top-1 of the QAT student under Min-Max fake-quant.
+pub fn qat_eval(
+    mrt: &ModelRt,
+    teacher: &Store,
+    student: &Store,
+    dataset: &Dataset,
+    cfg: &QatCfg,
+) -> Result<f32> {
+    let m = &mrt.manifest;
+    let bs = m.batch("eval");
+    let wp_sym = ((1u64 << (cfg.wbits - 1)) - 1) as f32;
+    let (_, ap) = BitConfig::abounds(cfg.abits);
+    let entry = mrt.entry("eval_qat")?;
+    let mut store = teacher.clone();
+    store.absorb(student);
+    store.insert("wp", Tensor::scalar_f32(wp_sym));
+    store.insert("ap", Tensor::scalar_f32(ap));
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    for (x, y, valid) in dataset.eval_batches(bs) {
+        store.insert("x", x);
+        mrt.rt.call(&entry, &mut store)?;
+        let acc = accuracy(store.get("logits")?, &y, valid);
+        correct += acc as f64 * valid as f64;
+        total += valid;
+    }
+    Ok((correct / total as f64) as f32)
+}

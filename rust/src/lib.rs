@@ -1,0 +1,22 @@
+//! GENIE: Show Me the Data for Quantization — rust coordinator (L3).
+//!
+//! This crate is the runtime half of the three-layer reproduction
+//! (DESIGN.md): python/jax/pallas author and AOT-lower every compute graph
+//! to HLO text at build time (`make artifacts`); this crate loads those
+//! artifacts through the PJRT C API (`xla` crate) and runs the entire
+//! zero-shot-quantization pipeline — pretraining the FP32 teacher,
+//! GENIE-D data distillation, GENIE-M block-wise post-training
+//! quantization, evaluation, and the full benchmark harness — with Python
+//! never on the hot path.
+
+pub mod tensor;
+pub mod store;
+pub mod runtime;
+pub mod quant;
+pub mod schedule;
+pub mod data;
+pub mod coordinator;
+pub mod experiments;
+pub mod testutil;
+
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,268 @@
+//! `genie` — CLI for the GENIE zero-shot-quantization coordinator.
+//!
+//! Subcommands:
+//!   info                               platform + artifact inventory
+//!   pretrain  --model M [k=v ...]      train + checkpoint the FP32 teacher
+//!   eval      --model M [k=v ...]      FP32 teacher accuracy
+//!   distill   --model M [k=v ...]      GENIE-D synthetic data (saved to runs/)
+//!   zsq       --model M [k=v ...]      full zero-shot pipeline
+//!   fsq       --model M [k=v ...]      few-shot (real-data) GENIE-M
+//!   experiments --exp ID [k=v ...]     paper table/figure harnesses
+//!
+//! Config overrides are `key=value` (see coordinator::config).
+
+use anyhow::{bail, Result};
+
+use genie::coordinator::{
+    self, distill, fsq, pretrain, zsq, Metrics, RunConfig,
+};
+use genie::data::Dataset;
+use genie::experiments;
+use genie::runtime::{ModelRt, Runtime};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage();
+        return Ok(());
+    };
+
+    let mut cfg = RunConfig::default();
+    let mut exp = String::new();
+    let mut overrides = Vec::new();
+    let mut it = args[1..].iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--model" => cfg.model = next(&mut it, "--model")?,
+            "--artifacts" => cfg.artifacts = next(&mut it, "--artifacts")?,
+            "--exp" => exp = next(&mut it, "--exp")?,
+            "--help" | "-h" => {
+                usage();
+                return Ok(());
+            }
+            kv if kv.contains('=') => overrides.push(kv.to_string()),
+            other => bail!("unexpected argument '{other}' (want key=value)"),
+        }
+    }
+    cfg.apply_overrides(&overrides)?;
+
+    match cmd.as_str() {
+        "info" => info(&cfg),
+        "pretrain" => cmd_pretrain(&cfg),
+        "eval" => cmd_eval(&cfg),
+        "distill" => cmd_distill(&cfg),
+        "zsq" => cmd_zsq(&cfg),
+        "fsq" => cmd_fsq(&cfg),
+        "export" => cmd_export(&cfg),
+        "report" => cmd_report(),
+        "experiments" => experiments::run(&exp, &cfg),
+        other => {
+            usage();
+            bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn next(
+    it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+    flag: &str,
+) -> Result<String> {
+    it.next()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+}
+
+fn usage() {
+    println!(
+        "genie — GENIE zero-shot quantization (rust+JAX+Pallas reproduction)\n\
+         usage: genie <info|pretrain|eval|distill|zsq|fsq|experiments>\n\
+                [--model M] [--artifacts DIR] [--exp ID] [key=value ...]\n\
+         keys: wbits abits seed pretrain.{{steps,lr}}\n\
+               distill.{{mode,swing,samples,steps,lr_g,lr_z}}\n\
+               quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}"
+    );
+}
+
+fn setup<'a>(
+    rt: &'a Runtime,
+    cfg: &RunConfig,
+) -> Result<(ModelRt<'a>, Dataset)> {
+    let mrt = ModelRt::load(rt, &cfg.artifacts, &cfg.model)?;
+    let dataset = Dataset::load(&cfg.artifacts)?;
+    Ok((mrt, dataset))
+}
+
+fn info(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let dir = std::path::Path::new(&cfg.artifacts);
+    if !dir.exists() {
+        println!("no artifacts at {dir:?} — run `make artifacts`");
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let p = entry.path();
+        if p.join("manifest.json").exists() {
+            let m = genie::runtime::Manifest::load(&p)?;
+            println!(
+                "  {}: {} blocks, {} quant layers, {} entrypoints",
+                m.model,
+                m.num_blocks,
+                m.quant_layers.len(),
+                m.entrypoints.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pretrain(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let (mrt, dataset) = setup(&rt, cfg)?;
+    let mut metrics = Metrics::with_dir(
+        std::path::Path::new(&cfg.runs_dir).join(format!("pretrain_{}", cfg.model)),
+    )?;
+    let teacher = pretrain(&mrt, &dataset, &cfg.pretrain, &mut metrics)?;
+    let runs = std::path::Path::new(&cfg.runs_dir);
+    std::fs::create_dir_all(runs)?;
+    let ckpt = runs.join(format!("teacher_{}.bin", cfg.model));
+    teacher.save(&ckpt)?;
+    let acc = coordinator::eval_fp32(&mrt, &teacher, &dataset)?;
+    println!("teacher saved to {ckpt:?}; FP32 top-1 {:.2}%", acc * 100.0);
+    metrics.flush()
+}
+
+fn teacher_store(
+    mrt: &ModelRt,
+    dataset: &Dataset,
+    cfg: &RunConfig,
+    metrics: &mut Metrics,
+) -> Result<genie::store::Store> {
+    coordinator::pretrain::teacher_or_pretrain(
+        mrt,
+        dataset,
+        &cfg.pretrain,
+        std::path::Path::new(&cfg.runs_dir),
+        metrics,
+    )
+}
+
+fn cmd_eval(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let (mrt, dataset) = setup(&rt, cfg)?;
+    let mut metrics = Metrics::new();
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
+    let acc = coordinator::eval_fp32(&mrt, &teacher, &dataset)?;
+    println!("{}: FP32 top-1 {:.2}%", cfg.model, acc * 100.0);
+    Ok(())
+}
+
+fn cmd_distill(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let (mrt, dataset) = setup(&rt, cfg)?;
+    let mut metrics = Metrics::with_dir(
+        std::path::Path::new(&cfg.runs_dir).join(format!("distill_{}", cfg.model)),
+    )?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
+    let out = distill(&mrt, &teacher, &cfg.distill, &mut metrics)?;
+    let mut s = genie::store::Store::new();
+    s.insert("images", out.images);
+    let path = std::path::Path::new(&cfg.runs_dir)
+        .join(format!("synthetic_{}.bin", cfg.model));
+    s.save(&path)?;
+    println!("synthetic images saved to {path:?}");
+    metrics.flush()
+}
+
+fn cmd_export(cfg: &RunConfig) -> Result<()> {
+    // ZSQ then harden + emit the deployable integer artifact
+    let rt = Runtime::cpu()?;
+    let (mrt, dataset) = setup(&rt, cfg)?;
+    let mut metrics = Metrics::new();
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
+    let out = genie::coordinator::distill(&mrt, &teacher, &cfg.distill, &mut metrics)?;
+    let qstate = genie::coordinator::quantize(
+        &mrt, &teacher, &out.images, &cfg.quant, &mut metrics,
+    )?;
+    let (store, fp_bytes, q_bits) =
+        genie::quant::export::export_model(&mrt.manifest, &qstate)?;
+    let runs = std::path::Path::new(&cfg.runs_dir);
+    std::fs::create_dir_all(runs)?;
+    let path = runs.join(format!(
+        "int_{}_w{}a{}.bin", cfg.model, cfg.quant.wbits, cfg.quant.abits
+    ));
+    store.save(&path)?;
+    let qpath = runs.join(format!(
+        "qstate_{}_w{}a{}.bin", cfg.model, cfg.quant.wbits, cfg.quant.abits
+    ));
+    qstate.save(&qpath)?;
+    println!(
+        "exported {path:?}: {} FP32 KiB -> {} quantized KiB ({:.1}x smaller); qstate {qpath:?}",
+        fp_bytes / 1024,
+        q_bits / 8 / 1024,
+        fp_bytes as f64 / (q_bits as f64 / 8.0)
+    );
+    Ok(())
+}
+
+fn cmd_report() -> Result<()> {
+    // aggregate results/*.csv into a single markdown report
+    let dir = std::path::Path::new("results");
+    anyhow::ensure!(dir.exists(), "no results/ directory — run experiments first");
+    let mut names: Vec<_> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "csv"))
+        .collect();
+    names.sort();
+    let mut md = String::from("# GENIE experiment report\n");
+    for path in names {
+        let text = std::fs::read_to_string(&path)?;
+        md.push_str(&format!(
+            "\n## {}\n\n",
+            path.file_stem().unwrap().to_string_lossy()
+        ));
+        for (i, line) in text.lines().enumerate() {
+            md.push_str(&format!("| {} |\n", line.replace(',', " | ")));
+            if i == 0 {
+                let cols = line.split(',').count();
+                md.push_str(&format!("|{}\n", "---|".repeat(cols)));
+            }
+        }
+    }
+    std::fs::write("results/REPORT.md", &md)?;
+    println!("wrote results/REPORT.md ({} bytes)", md.len());
+    Ok(())
+}
+
+fn cmd_zsq(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let (mrt, dataset) = setup(&rt, cfg)?;
+    let mut metrics = Metrics::with_dir(
+        std::path::Path::new(&cfg.runs_dir).join(format!(
+            "zsq_{}_w{}a{}",
+            cfg.model, cfg.quant.wbits, cfg.quant.abits
+        )),
+    )?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
+    let out = zsq(&mrt, &teacher, &dataset, &cfg.distill, &cfg.quant, &mut metrics)?;
+    out.print("zsq");
+    metrics.flush()
+}
+
+fn cmd_fsq(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let (mrt, dataset) = setup(&rt, cfg)?;
+    let mut metrics = Metrics::with_dir(
+        std::path::Path::new(&cfg.runs_dir).join(format!(
+            "fsq_{}_w{}a{}",
+            cfg.model, cfg.quant.wbits, cfg.quant.abits
+        )),
+    )?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
+    let out = fsq(&mrt, &teacher, &dataset, cfg.fsq_samples, &cfg.quant, &mut metrics)?;
+    out.print("fsq");
+    metrics.flush()
+}

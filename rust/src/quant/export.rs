@@ -1,0 +1,148 @@
+//! Quantized-model export: harden the optimized softbits (h(V) >= 0.5,
+//! eval-time rounding) and emit the *deployable* artifact — per-layer
+//! integer weight tensors (u32-packed INT grid values), per-channel step
+//! sizes and zero points, activation steps, and a size report. This is
+//! what a downstream runtime would actually load; it also lets tests
+//! verify the hard-rounding math against the `eval_quant` graph.
+
+use anyhow::Result;
+
+use crate::runtime::Manifest;
+use crate::store::Store;
+use crate::tensor::Tensor;
+
+use super::h_sigmoid;
+
+/// One exported layer: integers on the [n, p] grid + dequant params.
+#[derive(Debug)]
+pub struct ExportedLayer {
+    pub name: String,
+    pub out_ch: usize,
+    pub flat_k: usize,
+    pub bits: u32,
+    /// row-major [out_ch, flat_k] integer grid values
+    pub w_int: Vec<u32>,
+    pub s_w: Vec<f32>,
+    pub zp: Vec<f32>,
+    pub s_a: f32,
+}
+
+/// Harden one layer from the optimized quant state.
+pub fn harden_layer(
+    qs: &Store,
+    name: &str,
+    out_ch: usize,
+    flat_k: usize,
+) -> Result<ExportedLayer> {
+    let v = qs.get(&format!("q.{name}.v"))?.as_f32();
+    let b = qs.get(&format!("q.{name}.b"))?.as_f32();
+    let sw = qs.get(&format!("q.{name}.sw"))?.as_f32().to_vec();
+    let zp = qs.get(&format!("q.{name}.zp"))?.as_f32().to_vec();
+    let wn = qs.get(&format!("q.{name}.wn"))?.scalar();
+    let wp = qs.get(&format!("q.{name}.wp"))?.scalar();
+    let s_a = qs.get(&format!("q.{name}.sa"))?.scalar();
+    let bits = (wp - wn + 1.0).log2().round() as u32;
+    let mut w_int = Vec::with_capacity(v.len());
+    for i in 0..v.len() {
+        let hard = if h_sigmoid(v[i]) >= 0.5 { 1.0 } else { 0.0 };
+        w_int.push((b[i] + hard).clamp(wn, wp) as u32);
+    }
+    Ok(ExportedLayer {
+        name: name.to_string(),
+        out_ch,
+        flat_k,
+        bits,
+        w_int,
+        s_w: sw,
+        zp,
+        s_a,
+    })
+}
+
+/// Dequantize an exported layer back to FP32 rows (test / verification).
+pub fn dequantize_layer(l: &ExportedLayer) -> Vec<f32> {
+    let mut out = Vec::with_capacity(l.w_int.len());
+    for ch in 0..l.out_ch {
+        for j in 0..l.flat_k {
+            let q = l.w_int[ch * l.flat_k + j] as f32;
+            out.push(l.s_w[ch] * (q - l.zp[ch]));
+        }
+    }
+    out
+}
+
+/// Export every quantized layer of a model into a tensorstore file,
+/// returning (store, fp32_bytes, quantized_bits) for the size report.
+pub fn export_model(
+    manifest: &Manifest,
+    qstate: &Store,
+) -> Result<(Store, usize, usize)> {
+    let mut out = Store::new();
+    let mut fp_bytes = 0usize;
+    let mut q_bits = 0usize;
+    for ql in &manifest.quant_layers {
+        let l = harden_layer(qstate, &ql.name, ql.out_ch, ql.flat_k)?;
+        fp_bytes += l.w_int.len() * 4;
+        // integer payload + per-channel scale/zero-point overhead
+        q_bits += l.w_int.len() * l.bits as usize + l.out_ch * 2 * 32;
+        out.insert(
+            &format!("int.{}.w", ql.name),
+            Tensor::from_u32(&[ql.out_ch, ql.flat_k], l.w_int.clone()),
+        );
+        out.insert(&format!("int.{}.sw", ql.name),
+                   Tensor::from_f32(&[ql.out_ch], l.s_w.clone()));
+        out.insert(&format!("int.{}.zp", ql.name),
+                   Tensor::from_f32(&[ql.out_ch], l.zp.clone()));
+        out.insert(&format!("int.{}.sa", ql.name), Tensor::scalar_f32(l.s_a));
+        out.insert(&format!("int.{}.bits", ql.name),
+                   Tensor::from_u32(&[], vec![l.bits]));
+    }
+    Ok((out, fp_bytes, q_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{softbit_init, BitConfig};
+
+    fn mini_qstate() -> Store {
+        // 2 channels x 3 weights on a 4-bit grid
+        let mut qs = Store::new();
+        qs.insert("q.l.v", Tensor::from_f32(
+            &[2, 3],
+            // h(v): ~0 (round down), ~1 (round up), exactly-initialised r
+            vec![-10.0, 10.0, softbit_init(0.3),
+                 -10.0, 10.0, softbit_init(0.8)],
+        ));
+        qs.insert("q.l.b", Tensor::from_f32(&[2, 3], vec![3., 7., 15., 0., 14., 2.]));
+        qs.insert("q.l.sw", Tensor::from_f32(&[2], vec![0.1, 0.2]));
+        qs.insert("q.l.zp", Tensor::from_f32(&[2], vec![8.0, 7.0]));
+        let (wn, wp) = BitConfig::wbounds(4);
+        qs.insert("q.l.wn", Tensor::scalar_f32(wn));
+        qs.insert("q.l.wp", Tensor::scalar_f32(wp));
+        qs.insert("q.l.sa", Tensor::scalar_f32(0.05));
+        qs
+    }
+
+    #[test]
+    fn harden_rounds_softbits() {
+        let l = harden_layer(&mini_qstate(), "l", 2, 3).unwrap();
+        assert_eq!(l.bits, 4);
+        // b + {0,1}, clipped to [0,15]
+        assert_eq!(l.w_int, vec![3, 8, 15, 0, 15, 3]);
+    }
+
+    #[test]
+    fn dequant_matches_grid() {
+        let l = harden_layer(&mini_qstate(), "l", 2, 3).unwrap();
+        let deq = dequantize_layer(&l);
+        assert!((deq[0] - 0.1 * (3.0 - 8.0)).abs() < 1e-6);
+        assert!((deq[3] - 0.2 * (0.0 - 7.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ints_stay_in_bit_range() {
+        let l = harden_layer(&mini_qstate(), "l", 2, 3).unwrap();
+        assert!(l.w_int.iter().all(|&q| q <= 15));
+    }
+}

@@ -1,0 +1,315 @@
+//! Quant-state initialization — the host-side half of GENIE-M.
+//!
+//! From the FP32 checkpoint this module derives, per quantized layer:
+//!   * per-channel step size `s_w` by the Eq. 6 / Eq. A3 grid search
+//!     (p-norm reconstruction error, p configurable — Fig. A2),
+//!   * per-channel zero point `z` (asymmetric weights),
+//!   * the detached base grid `B = clip(floor(W/s) + z, n, p)` (Eq. 9),
+//!   * softbit init `V = h^-1(W/s + z - B)` (AdaRound; rectified sigmoid
+//!     inverse), so h(V) starts exactly at the FP remainder,
+//!   * LSQ activation step `s_a = 2 E|x| / sqrt(q_p)` from teacher
+//!     activation statistics,
+//! and the runtime integer bounds (first/last layer kept at 8 bits, like
+//! BRECQ/QDrop — appendix C).
+
+pub mod export;
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, QuantLayer};
+use crate::store::Store;
+use crate::tensor::Tensor;
+
+pub const ZETA: f32 = 1.1;
+pub const GAMMA: f32 = -0.1;
+
+/// Bit-width configuration for one pipeline run.
+#[derive(Debug, Clone, Copy)]
+pub struct BitConfig {
+    pub wbits: u32,
+    pub abits: u32,
+    /// bits for the first and last quantized layers (paper: 8)
+    pub first_last_bits: u32,
+}
+
+impl BitConfig {
+    pub fn new(wbits: u32, abits: u32) -> Self {
+        BitConfig { wbits, abits, first_last_bits: 8 }
+    }
+
+    /// (wn, wp) for asymmetric weight grid at `bits`.
+    pub fn wbounds(bits: u32) -> (f32, f32) {
+        (0.0, (1u64 << bits) as f32 - 1.0)
+    }
+
+    /// (an, ap) for symmetric activation grid at `bits`.
+    pub fn abounds(bits: u32) -> (f32, f32) {
+        let half = 1u64 << (bits - 1);
+        (-(half as f32), half as f32 - 1.0)
+    }
+}
+
+/// Flatten a weight tensor to out-channel-major [O][K] rows, matching
+/// python's `moveaxis(w, -1, 0).reshape(O, -1)` (conv HWIO) / `w.T` (dense).
+pub fn flatten_out_major(w: &Tensor) -> (usize, usize, Vec<f32>) {
+    let v = w.as_f32();
+    match w.shape.len() {
+        4 => {
+            let (kh, kw, ci, co) =
+                (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            let k = kh * kw * ci;
+            let mut out = vec![0.0f32; co * k];
+            for r in 0..kh * kw * ci {
+                for o in 0..co {
+                    out[o * k + r] = v[r * co + o];
+                }
+            }
+            (co, k, out)
+        }
+        2 => {
+            let (ci, co) = (w.shape[0], w.shape[1]);
+            let mut out = vec![0.0f32; co * ci];
+            for r in 0..ci {
+                for o in 0..co {
+                    out[o * ci + r] = v[r * co + o];
+                }
+            }
+            (co, ci, out)
+        }
+        other => panic!("flatten_out_major: rank {other} unsupported"),
+    }
+}
+
+/// Quantization error of one channel row for a candidate step size
+/// (asymmetric grid), under the given p-norm.
+fn row_error(row: &[f32], s: f32, p: f32, pnorm: f32) -> f64 {
+    let z = (-(row.iter().cloned().fold(f32::INFINITY, f32::min)) / s)
+        .round()
+        .clamp(0.0, p);
+    let mut err = 0.0f64;
+    for &w in row {
+        let q = ((w / s).round() + z).clamp(0.0, p);
+        let deq = s * (q - z);
+        err += ((w - deq).abs() as f64).powf(pnorm as f64);
+    }
+    err
+}
+
+/// Eq. 6 / Eq. A3: grid search the per-channel step size minimizing the
+/// p-norm reconstruction error. Returns (s, z) per channel.
+pub fn search_step_sizes(
+    rows: &[f32],
+    o: usize,
+    k: usize,
+    bits: u32,
+    pnorm: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let (_, p) = BitConfig::wbounds(bits);
+    let mut sw = Vec::with_capacity(o);
+    let mut zp = Vec::with_capacity(o);
+    for ch in 0..o {
+        let row = &rows[ch * k..(ch + 1) * k];
+        let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let span = (hi - lo).max(1e-8);
+        let s0 = span / p;
+        let mut best_s = s0;
+        let mut best_e = f64::INFINITY;
+        // candidates 0.4..1.2 x the min-max step (80-point linear search)
+        for i in 0..80 {
+            let s = s0 * (0.4 + 0.01 * i as f32);
+            let e = row_error(row, s, p, pnorm);
+            if e < best_e {
+                best_e = e;
+                best_s = s;
+            }
+        }
+        let z = (-lo / best_s).round().clamp(0.0, p);
+        sw.push(best_s);
+        zp.push(z);
+    }
+    (sw, zp)
+}
+
+/// AdaRound softbit init: V = sigmoid^-1((r - GAMMA)/(ZETA - GAMMA)) so
+/// that h(V) equals the FP remainder r = W/s + z - B exactly.
+pub fn softbit_init(r: f32) -> f32 {
+    let u = ((r.clamp(0.001, 0.999) - GAMMA) / (ZETA - GAMMA)).clamp(1e-4, 1.0 - 1e-4);
+    (u / (1.0 - u)).ln()
+}
+
+/// h(V): rectified sigmoid (mirror of the pallas kernel, used by tests
+/// and the hardening report).
+pub fn h_sigmoid(v: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-v).exp());
+    (sig * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0)
+}
+
+/// Build the full quant state for a model from its FP32 params.
+///
+/// `act_stats`: mean |x| per quant layer (from the `act_stats` entrypoint);
+/// pass `None` to start with a placeholder (refreshed later).
+pub fn init_qstate(
+    manifest: &Manifest,
+    params: &Store,
+    cfg: BitConfig,
+    pnorm: f32,
+    act_stats: Option<&[f32]>,
+) -> Result<Store> {
+    let mut qs = Store::new();
+    let layers = &manifest.quant_layers;
+    let last = layers.len() - 1;
+    for (li, ql) in layers.iter().enumerate() {
+        let first_or_last = li == 0 || li == last;
+        let wbits = if first_or_last { cfg.first_last_bits } else { cfg.wbits };
+        let abits = if first_or_last { cfg.first_last_bits } else { cfg.abits };
+        let (wn, wp) = BitConfig::wbounds(wbits);
+        let (an, ap) = BitConfig::abounds(abits);
+        let w = params.get(&format!("{}.w", ql.name))?;
+        let (o, k, rows) = flatten_out_major(w);
+        anyhow::ensure!(
+            o == ql.out_ch && k == ql.flat_k,
+            "layer {}: manifest shape mismatch",
+            ql.name
+        );
+        let (sw, zp) = search_step_sizes(&rows, o, k, wbits, pnorm);
+        let mut b = vec![0.0f32; o * k];
+        let mut v = vec![0.0f32; o * k];
+        for ch in 0..o {
+            for j in 0..k {
+                let wv = rows[ch * k + j];
+                let base = ((wv / sw[ch]).floor() + zp[ch]).clamp(wn, wp);
+                let r = (wv / sw[ch] + zp[ch] - base).clamp(0.0, 1.0);
+                b[ch * k + j] = base;
+                v[ch * k + j] = softbit_init(r);
+            }
+        }
+        let sa = match act_stats {
+            Some(st) => (2.0 * st[li] / ap.max(1.0).sqrt()).max(1e-5),
+            None => 0.1,
+        };
+        let n = &ql.name;
+        qs.insert(&format!("q.{n}.sw"), Tensor::from_f32(&[o], sw));
+        qs.insert(&format!("q.{n}.v"), Tensor::from_f32(&[o, k], v));
+        qs.insert(&format!("q.{n}.b"), Tensor::from_f32(&[o, k], b));
+        qs.insert(&format!("q.{n}.zp"), Tensor::from_f32(&[o], zp));
+        qs.insert(&format!("q.{n}.wn"), Tensor::scalar_f32(wn));
+        qs.insert(&format!("q.{n}.wp"), Tensor::scalar_f32(wp));
+        qs.insert(&format!("q.{n}.sa"), Tensor::scalar_f32(sa));
+        qs.insert(&format!("q.{n}.an"), Tensor::scalar_f32(an));
+        qs.insert(&format!("q.{n}.ap"), Tensor::scalar_f32(ap));
+    }
+    Ok(qs)
+}
+
+/// Refresh the LSQ activation steps from measured mean |x| (keeps the
+/// per-layer bounds already in `qs`).
+pub fn set_act_steps(
+    qs: &mut Store,
+    layers: &[QuantLayer],
+    stats: &[f32],
+) -> Result<()> {
+    for (li, ql) in layers.iter().enumerate() {
+        let ap = qs.get(&format!("q.{}.ap", ql.name))?.scalar();
+        let sa = (2.0 * stats[li] / ap.max(1.0).sqrt()).max(1e-5);
+        qs.insert(&format!("q.{}.sa", ql.name), Tensor::scalar_f32(sa));
+    }
+    Ok(())
+}
+
+/// Min-Max step size (Eq. 3) — the baseline initializer (used by the
+/// Fig. A2 ablation arm and tests).
+pub fn minmax_step(row: &[f32], bits: u32) -> (f32, f32) {
+    let (_, p) = BitConfig::wbounds(bits);
+    let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let s = ((hi - lo) / p).max(1e-8);
+    let z = (-lo / s).round().clamp(0.0, p);
+    (s, z)
+}
+
+/// Dequantization of one value on the asymmetric grid (test helper).
+pub fn dequant(w: f32, s: f32, z: f32, n: f32, p: f32) -> f32 {
+    let q = ((w / s).round() + z).clamp(n, p);
+    s * (q - z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_match_paper() {
+        assert_eq!(BitConfig::wbounds(4), (0.0, 15.0));
+        assert_eq!(BitConfig::wbounds(2), (0.0, 3.0));
+        assert_eq!(BitConfig::abounds(4), (-8.0, 7.0));
+        assert_eq!(BitConfig::abounds(8), (-128.0, 127.0));
+    }
+
+    #[test]
+    fn flatten_conv_matches_moveaxis() {
+        // w[kh,kw,ci,co] with co=2: row o collects w[..., o]
+        let w = Tensor::from_f32(&[1, 1, 3, 2], vec![1., 10., 2., 20., 3., 30.]);
+        let (o, k, rows) = flatten_out_major(&w);
+        assert_eq!((o, k), (2, 3));
+        assert_eq!(rows, vec![1., 2., 3., 10., 20., 30.]);
+    }
+
+    #[test]
+    fn flatten_dense_is_transpose() {
+        let w = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let (o, k, rows) = flatten_out_major(&w);
+        assert_eq!((o, k), (3, 2));
+        assert_eq!(rows, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn grid_search_beats_minmax() {
+        // heavy-tailed row: clipping outliers must win under L2
+        let mut row = vec![0.0f32; 64];
+        let mut rng = crate::tensor::Pcg32::new(9);
+        for r in row.iter_mut() {
+            *r = rng.normal() * 0.1;
+        }
+        row[0] = 2.0; // outlier
+        let (sw, zp) = search_step_sizes(&row, 1, 64, 4, 2.0);
+        let (s_mm, z_mm) = minmax_step(&row, 4);
+        let err = |s: f32, z: f32| {
+            row.iter()
+                .map(|&w| (w - dequant(w, s, z, 0.0, 15.0)).powi(2) as f64)
+                .sum::<f64>()
+        };
+        assert!(err(sw[0], zp[0]) <= err(s_mm, z_mm) + 1e-9);
+    }
+
+    #[test]
+    fn dequant_error_bounded_by_half_step() {
+        let (s, z) = (0.1f32, 7.0f32);
+        for i in -50..50 {
+            let w = i as f32 * 0.013;
+            let q = ((w / s).round() + z).clamp(0.0, 15.0);
+            if q > 0.0 && q < 15.0 {
+                assert!((w - dequant(w, s, z, 0.0, 15.0)).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn softbit_init_inverts_h() {
+        for r in [0.01f32, 0.2, 0.5, 0.77, 0.99] {
+            let v = softbit_init(r);
+            assert!((h_sigmoid(v) - r).abs() < 1e-4, "r={r}");
+        }
+    }
+
+    #[test]
+    fn minmax_covers_range() {
+        let row = [-1.0f32, 0.0, 2.0];
+        let (s, z) = minmax_step(&row, 4);
+        assert!((s - 0.2).abs() < 1e-6);
+        assert!((z - 5.0).abs() < 1e-6);
+        // extremes representable
+        assert!((dequant(-1.0, s, z, 0.0, 15.0) + 1.0).abs() < 1e-5);
+        assert!((dequant(2.0, s, z, 0.0, 15.0) - 2.0).abs() < 1e-5);
+    }
+}

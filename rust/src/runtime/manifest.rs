@@ -1,0 +1,198 @@
+//! manifest.json schema — the contract between python/compile/entries.py
+//! (which writes it) and the runtime (which wires buffers purely by these
+//! names and shapes). Parsed with the in-tree JSON parser (json.rs).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::json::Json;
+
+pub type NamedShape = (String, Vec<usize>);
+/// (name, dtype, shape)
+pub type ArgSpec = (String, String, Vec<usize>);
+
+#[derive(Debug, Clone)]
+pub struct QuantLayer {
+    pub name: String,
+    pub w_shape: Vec<usize>,
+    pub out_ch: usize,
+    pub flat_k: usize,
+    pub block: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub results: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub image: Vec<usize>,
+    pub num_classes: usize,
+    pub num_blocks: usize,
+    pub latent: usize,
+    pub batch: HashMap<String, usize>,
+    pub params: Vec<NamedShape>,
+    pub bn: Vec<NamedShape>,
+    pub qstate: Vec<NamedShape>,
+    pub gen_params: Vec<NamedShape>,
+    pub quant_layers: Vec<QuantLayer>,
+    pub learnable: HashMap<String, Vec<String>>,
+    pub bounds: Vec<Vec<usize>>,
+    pub entrypoints: HashMap<String, EntrySpec>,
+}
+
+fn named_shapes(j: &Json) -> Result<Vec<NamedShape>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let pair = e.as_arr()?;
+            Ok((pair[0].as_str()?.to_string(), pair[1].usize_vec()?))
+        })
+        .collect()
+}
+
+fn arg_specs(j: &Json) -> Result<Vec<ArgSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let t = e.as_arr()?;
+            Ok((
+                t[0].as_str()?.to_string(),
+                t[1].as_str()?.to_string(),
+                t[2].usize_vec()?,
+            ))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(model_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let p = model_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("read {p:?} (run `make artifacts`)"))?;
+        Self::from_json_text(&text).context("parse manifest.json")
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut batch = HashMap::new();
+        for (k, v) in j.get("batch")?.as_obj()? {
+            batch.insert(k.clone(), v.as_usize()?);
+        }
+        let quant_layers = j
+            .get("quant_layers")?
+            .as_arr()?
+            .iter()
+            .map(|q| {
+                Ok(QuantLayer {
+                    name: q.get("name")?.as_str()?.to_string(),
+                    w_shape: q.get("w_shape")?.usize_vec()?,
+                    out_ch: q.get("out_ch")?.as_usize()?,
+                    flat_k: q.get("flat_k")?.as_usize()?,
+                    block: q.get("block")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut learnable = HashMap::new();
+        for (k, v) in j.get("learnable")?.as_obj()? {
+            learnable.insert(k.clone(), v.str_vec()?);
+        }
+        let bounds = j
+            .get("bounds")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.usize_vec())
+            .collect::<Result<Vec<_>>>()?;
+        let mut entrypoints = HashMap::new();
+        for (name, e) in j.get("entrypoints")?.as_obj()? {
+            entrypoints.insert(
+                name.clone(),
+                EntrySpec {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    args: arg_specs(e.get("args")?)?,
+                    results: arg_specs(e.get("results")?)?,
+                },
+            );
+        }
+        Ok(Manifest {
+            model: j.get("model")?.as_str()?.to_string(),
+            image: j.get("image")?.usize_vec()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            num_blocks: j.get("num_blocks")?.as_usize()?,
+            latent: j.get("latent")?.as_usize()?,
+            batch,
+            params: named_shapes(j.get("params")?)?,
+            bn: named_shapes(j.get("bn")?)?,
+            qstate: named_shapes(j.get("qstate")?)?,
+            gen_params: named_shapes(j.get("gen_params")?)?,
+            quant_layers,
+            learnable,
+            bounds,
+            entrypoints,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest: no entrypoint '{name}'"))
+    }
+
+    pub fn batch(&self, kind: &str) -> usize {
+        self.batch[kind]
+    }
+
+    /// Learnable quant-state names of a block (sw / v / sa triplets).
+    pub fn learnable_block(&self, b: usize) -> &[String] {
+        &self.learnable[&b.to_string()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "model": "toy", "image": [16, 16, 3], "num_classes": 10,
+        "num_blocks": 2, "latent": 256,
+        "batch": {"train": 64, "distill": 64, "recon": 32, "eval": 256, "stats": 64},
+        "params": [["stem.w", [3, 3, 3, 8]]],
+        "bn": [["stembn.mean", [8]], ["stembn.var", [8]]],
+        "qstate": [["q.stem.sw", [8]]],
+        "gen_params": [["gen.fc.w", [256, 2048]]],
+        "quant_layers": [{"name": "stem", "w_shape": [3, 3, 3, 8],
+                          "out_ch": 8, "flat_k": 27, "block": 0}],
+        "learnable": {"0": ["q.stem.sw", "q.stem.v", "q.stem.sa"], "1": []},
+        "bounds": [[32, 16, 16, 3], [32, 8, 8, 16], [32, 10]],
+        "entrypoints": {
+            "eval_batch": {"file": "eval_batch.hlo.txt",
+                "args": [["stem.w", "f32", [3, 3, 3, 8]], ["x", "f32", [256, 16, 16, 3]]],
+                "results": [["logits", "f32", [256, 10]]]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.batch("recon"), 32);
+        assert_eq!(m.quant_layers[0].flat_k, 27);
+        assert_eq!(m.learnable_block(0).len(), 3);
+        let e = m.entry("eval_batch").unwrap();
+        assert_eq!(e.args.len(), 2);
+        assert_eq!(e.results[0].0, "logits");
+        assert_eq!(e.results[0].2, vec![256, 10]);
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once on the CPU
+//! client, and execute them with arguments wired by manifest names from a
+//! [`Store`]. This is the only place the `xla` crate is touched.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id protos jax >= 0.5 emits
+//! which xla_extension 0.5.1 rejects.
+
+pub mod json;
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{ArgSpec, EntrySpec, Manifest, QuantLayer};
+
+use crate::store::Store;
+use crate::tensor::{Data, DType, Tensor};
+
+/// A compiled entrypoint plus its manifest spec.
+pub struct LoadedEntry {
+    pub name: String,
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Cumulative per-entry dispatch statistics (perf accounting).
+#[derive(Debug, Default, Clone)]
+pub struct DispatchStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// PJRT CPU runtime with a compile-once executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<LoadedEntry>>>,
+    stats: RefCell<HashMap<String, DispatchStats>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an entrypoint (cached by path).
+    pub fn entry(
+        &self,
+        model_dir: impl AsRef<Path>,
+        manifest: &Manifest,
+        name: &str,
+    ) -> Result<Rc<LoadedEntry>> {
+        let spec = manifest.entry(name)?;
+        let path: PathBuf = model_dir.as_ref().join(&spec.file);
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().unwrap(),
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let entry = Rc::new(LoadedEntry {
+            name: name.to_string(),
+            spec: spec.clone(),
+            exe,
+        });
+        self.cache.borrow_mut().insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Execute an entrypoint: arguments are read from `store` by the
+    /// manifest arg names (shape/dtype validated), results are written
+    /// back by result names. Returns the scalar results by name (losses,
+    /// accuracies) for convenient logging.
+    pub fn call(
+        &self,
+        entry: &LoadedEntry,
+        store: &mut Store,
+    ) -> Result<HashMap<String, f32>> {
+        let t0 = Instant::now();
+        let mut lits = Vec::with_capacity(entry.spec.args.len());
+        for (name, dt, shape) in &entry.spec.args {
+            let t = store
+                .get(name)
+                .with_context(|| format!("args of {}", entry.name))?;
+            validate(name, t, dt, shape)?;
+            lits.push(to_literal(t)?);
+        }
+        let result = entry
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute {}", entry.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let outs = lit.to_tuple().context("untuple results")?;
+        anyhow::ensure!(
+            outs.len() == entry.spec.results.len(),
+            "{}: got {} results, manifest says {}",
+            entry.name,
+            outs.len(),
+            entry.spec.results.len()
+        );
+        let mut scalars = HashMap::new();
+        for (out, (name, dt, shape)) in
+            outs.into_iter().zip(entry.spec.results.iter())
+        {
+            let t = from_literal(&out, dt, shape)
+                .with_context(|| format!("result {name} of {}", entry.name))?;
+            if t.numel() == 1 && t.dtype() == DType::F32 {
+                scalars.insert(name.clone(), t.scalar());
+            }
+            store.insert(name, t);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(entry.name.clone()).or_default();
+        s.calls += 1;
+        s.total_secs += dt;
+        Ok(scalars)
+    }
+
+    pub fn dispatch_stats(&self) -> HashMap<String, DispatchStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}
+
+fn validate(name: &str, t: &Tensor, dt: &str, shape: &[usize]) -> Result<()> {
+    let want = DType::from_str(dt)?;
+    anyhow::ensure!(
+        t.dtype() == want,
+        "arg {name}: dtype {:?}, manifest wants {want:?}",
+        t.dtype()
+    );
+    anyhow::ensure!(
+        t.shape == shape,
+        "arg {name}: shape {:?}, manifest wants {shape:?}",
+        t.shape
+    );
+    Ok(())
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v),
+        Data::I32(v) => xla::Literal::vec1(v),
+        Data::U32(v) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(lit: &xla::Literal, dt: &str, shape: &[usize]) -> Result<Tensor> {
+    let data = match DType::from_str(dt)? {
+        DType::F32 => Data::F32(lit.to_vec::<f32>()?),
+        DType::I32 => Data::I32(lit.to_vec::<i32>()?),
+        DType::U32 => Data::U32(lit.to_vec::<u32>()?),
+    };
+    let t = Tensor { shape: shape.to_vec(), data };
+    anyhow::ensure!(
+        t.numel() == lit.element_count(),
+        "literal element count {} != manifest shape {:?}",
+        lit.element_count(),
+        shape
+    );
+    Ok(t)
+}
+
+/// Convenience: a model's artifact directory + manifest + runtime handle.
+pub struct ModelRt<'a> {
+    pub rt: &'a Runtime,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl<'a> ModelRt<'a> {
+    pub fn load(
+        rt: &'a Runtime,
+        artifacts: impl AsRef<Path>,
+        model: &str,
+    ) -> Result<Self> {
+        let dir = artifacts.as_ref().join(model);
+        let manifest = Manifest::load(&dir)?;
+        Ok(ModelRt { rt, dir, manifest })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<Rc<LoadedEntry>> {
+        self.rt.entry(&self.dir, &self.manifest, name)
+    }
+
+    pub fn call(
+        &self,
+        name: &str,
+        store: &mut Store,
+    ) -> Result<HashMap<String, f32>> {
+        let e = self.entry(name)?;
+        self.rt.call(&e, store)
+    }
+
+    /// Load init.bin (FP32 params + BN state + generator init).
+    pub fn init_store(&self) -> Result<Store> {
+        Store::load(self.dir.join("init.bin"))
+    }
+}

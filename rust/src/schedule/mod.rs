@@ -1,0 +1,181 @@
+//! Learning-rate and annealing schedules (appendix A): cosine annealing
+//! to zero (weight step sizes + activation steps during reconstruction),
+//! exponential decay (generator LR), ReduceLROnPlateau (latent vectors,
+//! "like that in ZeroQ"), and the AdaRound beta anneal.
+
+/// Cosine annealing from `base` to 0 over `total` steps (SGDR-style,
+/// single period, no restart).
+#[derive(Debug, Clone)]
+pub struct CosineAnnealing {
+    pub base: f32,
+    pub total: usize,
+}
+
+impl CosineAnnealing {
+    pub fn new(base: f32, total: usize) -> Self {
+        CosineAnnealing { base, total }
+    }
+
+    pub fn lr(&self, step: usize) -> f32 {
+        let t = (step.min(self.total)) as f32 / self.total.max(1) as f32;
+        self.base * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// Exponential decay: lr = base * gamma^(step / every).
+#[derive(Debug, Clone)]
+pub struct ExponentialDecay {
+    pub base: f32,
+    pub gamma: f32,
+    pub every: usize,
+}
+
+impl ExponentialDecay {
+    pub fn new(base: f32, gamma: f32, every: usize) -> Self {
+        ExponentialDecay { base, gamma, every }
+    }
+
+    pub fn lr(&self, step: usize) -> f32 {
+        self.base * self.gamma.powi((step / self.every.max(1)) as i32)
+    }
+}
+
+/// ReduceLROnPlateau: multiply lr by `factor` when the observed loss has
+/// not improved by `min_delta` for `patience` observations.
+#[derive(Debug, Clone)]
+pub struct ReduceLROnPlateau {
+    lr: f32,
+    pub factor: f32,
+    pub patience: usize,
+    pub min_delta: f32,
+    pub min_lr: f32,
+    best: f32,
+    wait: usize,
+}
+
+impl ReduceLROnPlateau {
+    pub fn new(base: f32, factor: f32, patience: usize) -> Self {
+        ReduceLROnPlateau {
+            lr: base,
+            factor,
+            patience,
+            min_delta: 1e-4,
+            min_lr: 1e-6,
+            best: f32::INFINITY,
+            wait: 0,
+        }
+    }
+
+    /// Observe a loss; returns the (possibly reduced) lr to use next.
+    pub fn observe(&mut self, loss: f32) -> f32 {
+        if loss < self.best - self.min_delta {
+            self.best = loss;
+            self.wait = 0;
+        } else {
+            self.wait += 1;
+            if self.wait > self.patience {
+                self.lr = (self.lr * self.factor).max(self.min_lr);
+                self.wait = 0;
+            }
+        }
+        self.lr
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// AdaRound beta anneal: hold at `start` for `warmup` fraction, then
+/// decay linearly to `end` (paper appendix B "beta is annealed").
+#[derive(Debug, Clone)]
+pub struct BetaAnneal {
+    pub start: f32,
+    pub end: f32,
+    pub warmup: f32,
+    pub total: usize,
+}
+
+impl BetaAnneal {
+    pub fn new(start: f32, end: f32, warmup: f32, total: usize) -> Self {
+        BetaAnneal { start, end, warmup, total }
+    }
+
+    pub fn beta(&self, step: usize) -> f32 {
+        let w = (self.total as f32 * self.warmup) as usize;
+        if step <= w {
+            return self.start;
+        }
+        let t = (step - w) as f32 / (self.total - w).max(1) as f32;
+        self.start + (self.end - self.start) * t.min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_endpoints_and_monotone() {
+        let s = CosineAnnealing::new(1.0, 100);
+        assert!((s.lr(0) - 1.0).abs() < 1e-6);
+        assert!(s.lr(100) < 1e-6);
+        let mut prev = f32::INFINITY;
+        for t in 0..=100 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-7, "not monotone at {t}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn cosine_clamps_past_total() {
+        let s = CosineAnnealing::new(1.0, 10);
+        assert_eq!(s.lr(50), s.lr(10));
+    }
+
+    #[test]
+    fn exponential_decays_by_gamma_every_n() {
+        let s = ExponentialDecay::new(0.01, 0.95, 100);
+        assert!((s.lr(0) - 0.01).abs() < 1e-9);
+        assert!((s.lr(99) - 0.01).abs() < 1e-9);
+        assert!((s.lr(100) - 0.0095).abs() < 1e-9);
+        assert!((s.lr(250) - 0.01 * 0.95f32.powi(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plateau_reduces_after_patience() {
+        let mut s = ReduceLROnPlateau::new(0.1, 0.5, 2);
+        assert_eq!(s.observe(1.0), 0.1); // best=1.0
+        assert_eq!(s.observe(1.0), 0.1); // wait=1
+        assert_eq!(s.observe(1.0), 0.1); // wait=2
+        assert_eq!(s.observe(1.0), 0.05); // wait=3 > patience -> reduce
+    }
+
+    #[test]
+    fn plateau_resets_on_improvement() {
+        let mut s = ReduceLROnPlateau::new(0.1, 0.5, 1);
+        s.observe(1.0);
+        s.observe(0.5); // improvement resets wait
+        s.observe(0.5);
+        assert_eq!(s.lr(), 0.1);
+    }
+
+    #[test]
+    fn plateau_respects_min_lr() {
+        let mut s = ReduceLROnPlateau::new(1e-5, 0.1, 0);
+        for _ in 0..10 {
+            s.observe(1.0);
+        }
+        assert!(s.lr() >= 1e-6);
+    }
+
+    #[test]
+    fn beta_anneal_warmup_then_linear() {
+        let b = BetaAnneal::new(20.0, 2.0, 0.2, 100);
+        assert_eq!(b.beta(0), 20.0);
+        assert_eq!(b.beta(20), 20.0);
+        assert!((b.beta(100) - 2.0).abs() < 1e-5);
+        assert!(b.beta(60) < 20.0 && b.beta(60) > 2.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! GTS1 named-tensor binary format (rust mirror of
+//! python/compile/tensorstore.py) plus the in-memory named store the
+//! coordinator threads through every entrypoint call.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{Data, DType, Tensor};
+
+const MAGIC: &[u8; 4] = b"GTS1";
+
+/// Ordered named tensors + O(1) lookup; the argument/result hub for
+/// every AOT entrypoint call (wired by manifest names).
+#[derive(Debug, Default, Clone)]
+pub struct Store {
+    names: Vec<String>,
+    map: HashMap<String, Tensor>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Store::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.map.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("store: missing tensor '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Merge all tensors of `other` into self (overwriting).
+    pub fn absorb(&mut self, other: &Store) {
+        for n in &other.names {
+            self.insert(n, other.map[n].clone());
+        }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .context("create tensorstore file")?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for name in &self.names {
+            let t = &self.map[name];
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            let (code, raw): (u8, Vec<u8>) = match &t.data {
+                Data::F32(v) => (0, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+                Data::I32(v) => (1, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+                Data::U32(v) => (2, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            };
+            f.write_all(&[code, t.shape.len() as u8])?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            f.write_all(&(raw.len() as u64).to_le_bytes())?;
+            f.write_all(&raw)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Store> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("read {:?}", path.as_ref()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Store> {
+        let mut cur = std::io::Cursor::new(bytes);
+        let mut magic = [0u8; 4];
+        cur.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad GTS1 magic");
+        }
+        let count = read_u32(&mut cur)? as usize;
+        let mut store = Store::new();
+        for _ in 0..count {
+            let nlen = read_u16(&mut cur)? as usize;
+            let mut nb = vec![0u8; nlen];
+            cur.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)?;
+            let mut hdr = [0u8; 2];
+            cur.read_exact(&mut hdr)?;
+            let (code, ndim) = (hdr[0], hdr[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut cur)? as usize);
+            }
+            let nbytes = read_u64(&mut cur)? as usize;
+            let mut raw = vec![0u8; nbytes];
+            cur.read_exact(&mut raw)?;
+            let data = match code {
+                0 => Data::F32(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()),
+                1 => Data::I32(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()),
+                2 => Data::U32(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect()),
+                other => bail!("unknown dtype code {other}"),
+            };
+            let t = Tensor { shape, data };
+            anyhow::ensure!(
+                t.numel() * 4 == nbytes,
+                "tensor {name}: shape/bytes mismatch"
+            );
+            store.insert(&name, t);
+        }
+        Ok(store)
+    }
+}
+
+fn read_u16(c: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    c.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(c: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    c.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(c: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    c.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Expected dtype helper for manifest-driven checks.
+pub fn dtype_of(code: &str) -> Result<DType> {
+    DType::from_str(code)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let dir = std::env::temp_dir().join("genie_store_test.bin");
+        let mut s = Store::new();
+        s.insert("a", Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        s.insert("b.scalar", Tensor::scalar_f32(3.5));
+        s.insert("c", Tensor::from_i32(&[3], vec![1, -2, 3]));
+        s.insert("d", Tensor::from_u32(&[2], vec![7, 8]));
+        s.save(&dir).unwrap();
+        let l = Store::load(&dir).unwrap();
+        assert_eq!(l.names(), s.names());
+        for n in s.names() {
+            assert_eq!(l.get(n).unwrap(), s.get(n).unwrap());
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(Store::from_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let s = Store::new();
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn insert_overwrites_without_duplicating_order() {
+        let mut s = Store::new();
+        s.insert("x", Tensor::scalar_f32(1.0));
+        s.insert("x", Tensor::scalar_f32(2.0));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get("x").unwrap().scalar(), 2.0);
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = Store::new();
+        a.insert("x", Tensor::scalar_f32(1.0));
+        let mut b = Store::new();
+        b.insert("y", Tensor::scalar_f32(2.0));
+        b.insert("x", Tensor::scalar_f32(9.0));
+        a.absorb(&b);
+        assert_eq!(a.get("x").unwrap().scalar(), 9.0);
+        assert_eq!(a.get("y").unwrap().scalar(), 2.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Minimal host-side tensor layer: shapes, typed storage, a PCG32 RNG and
+//! the statistics helpers the coordinator needs (argmax accuracy, image
+//! metrics). Device compute all lives in the AOT HLO graphs; this module
+//! only shuffles, slices and initializes.
+
+mod rng;
+mod stats;
+
+pub use rng::Pcg32;
+pub use stats::{accuracy, checkerboard_energy, mean, std_dev};
+
+/// Element type of a [`Tensor`]; mirrors the manifest's dtype strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "u32" => Ok(DType::U32),
+            other => anyhow::bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+/// Typed storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A named-shape host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; n]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn from_u32(shape: &[usize], data: Vec<u32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::U32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    /// Full tensor of a constant value.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![v; n]) }
+    }
+
+    /// PRNG key tensor (uint32[2]) for the jax threefry impl.
+    pub fn key(hi: u32, lo: u32) -> Self {
+        Tensor::from_u32(&[2], vec![hi, lo])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+            Data::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u32(&self) -> &[u32] {
+        match &self.data {
+            Data::U32(v) => v,
+            _ => panic!("tensor is not u32"),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "scalar() on non-scalar tensor");
+        match &self.data {
+            Data::F32(v) => v[0],
+            Data::I32(v) => v[0] as f32,
+            Data::U32(v) => v[0] as f32,
+        }
+    }
+
+    /// Gaussian init (Box–Muller over the given PCG stream).
+    pub fn randn(shape: &[usize], rng: &mut Pcg32, std: f32) -> Self {
+        let n: usize = shape.iter().product();
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(rng.normal() * std);
+        }
+        Tensor { shape: shape.to_vec(), data: Data::F32(v) }
+    }
+
+    /// Copy rows `idx` of a [N, ...] tensor into a new [idx.len(), ...] one.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        assert!(!self.shape.is_empty());
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = idx.len();
+        match &self.data {
+            Data::F32(v) => {
+                let mut out = Vec::with_capacity(idx.len() * row);
+                for &i in idx {
+                    out.extend_from_slice(&v[i * row..(i + 1) * row]);
+                }
+                Tensor { shape, data: Data::F32(out) }
+            }
+            Data::I32(v) => {
+                let mut out = Vec::with_capacity(idx.len() * row);
+                for &i in idx {
+                    out.extend_from_slice(&v[i * row..(i + 1) * row]);
+                }
+                Tensor { shape, data: Data::I32(out) }
+            }
+            Data::U32(v) => {
+                let mut out = Vec::with_capacity(idx.len() * row);
+                for &i in idx {
+                    out.extend_from_slice(&v[i * row..(i + 1) * row]);
+                }
+                Tensor { shape, data: Data::U32(out) }
+            }
+        }
+    }
+
+    /// Concatenate along axis 0. All tensors must agree on trailing dims.
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut total = 0;
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail, "concat_rows: trailing dims differ");
+            total += p.shape[0];
+        }
+        let mut shape = parts[0].shape.clone();
+        shape[0] = total;
+        let mut out = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            out.extend_from_slice(p.as_f32());
+        }
+        Tensor { shape, data: Data::F32(out) }
+    }
+
+    /// First `n` rows of a [N, ...] tensor.
+    pub fn take_rows(&self, n: usize) -> Tensor {
+        let idx: Vec<usize> = (0..n).collect();
+        self.gather_rows(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_numel() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(Tensor::scalar_f32(3.5).scalar(), 3.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scalar_on_vector_panics() {
+        Tensor::from_f32(&[2], vec![1.0, 2.0]).scalar();
+    }
+
+    #[test]
+    fn gather_rows_picks_rows() {
+        let t = Tensor::from_f32(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let g = t.gather_rows(&[2, 0]);
+        assert_eq!(g.shape, vec![2, 2]);
+        assert_eq!(g.as_f32(), &[20., 21., 0., 1.]);
+    }
+
+    #[test]
+    fn concat_rows_stacks() {
+        let a = Tensor::from_f32(&[1, 2], vec![1., 2.]);
+        let b = Tensor::from_f32(&[2, 2], vec![3., 4., 5., 6.]);
+        let c = Tensor::concat_rows(&[&a, &b]);
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.as_f32(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn randn_reproducible() {
+        let mut r1 = Pcg32::new(42);
+        let mut r2 = Pcg32::new(42);
+        let a = Tensor::randn(&[8], &mut r1, 1.0);
+        let b = Tensor::randn(&[8], &mut r2, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn key_is_u32_pair() {
+        let k = Tensor::key(1, 2);
+        assert_eq!(k.dtype(), DType::U32);
+        assert_eq!(k.as_u32(), &[1, 2]);
+    }
+}

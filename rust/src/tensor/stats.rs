@@ -1,0 +1,152 @@
+//! Statistics helpers: accuracy from logits, and the checkerboard-artifact
+//! energy metric used by the Fig. 5 reproduction.
+
+use super::Tensor;
+
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32)
+        .sqrt()
+}
+
+/// Top-1 accuracy of logits [N, C] against labels [N] over the first
+/// `n` rows (n <= N handles a padded final batch).
+pub fn accuracy(logits: &Tensor, labels: &[i32], n: usize) -> f32 {
+    let c = logits.shape[1];
+    let v = logits.as_f32();
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &v[i * c..(i + 1) * c];
+        let mut best = 0usize;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f32 / n as f32
+}
+
+/// Checkerboard-artifact energy of an image batch [N, H, W, C]:
+/// the fraction of total (per-image, per-channel) variance that lives in
+/// the 2x2 Haar HH band — i.e. energy at the stride-2 Nyquist pattern that
+/// transposed-conv backprop imprints (Odena et al.; paper section 3.1.1).
+pub fn checkerboard_energy(images: &Tensor) -> f32 {
+    let (n, h, w, c) = (
+        images.shape[0],
+        images.shape[1],
+        images.shape[2],
+        images.shape[3],
+    );
+    let v = images.as_f32();
+    let at = |i: usize, y: usize, x: usize, ch: usize| {
+        v[((i * h + y) * w + x) * c + ch]
+    };
+    let mut hh_energy = 0.0f64;
+    let mut total = 0.0f64;
+    for i in 0..n {
+        for ch in 0..c {
+            // image mean for total-variance normalization
+            let mut m = 0.0f64;
+            for y in 0..h {
+                for x in 0..w {
+                    m += at(i, y, x, ch) as f64;
+                }
+            }
+            m /= (h * w) as f64;
+            for y in 0..h {
+                for x in 0..w {
+                    let d = at(i, y, x, ch) as f64 - m;
+                    total += d * d;
+                }
+            }
+            for y in (0..h - 1).step_by(2) {
+                for x in (0..w - 1).step_by(2) {
+                    let hhv = (at(i, y, x, ch) - at(i, y, x + 1, ch)
+                        - at(i, y + 1, x, ch)
+                        + at(i, y + 1, x + 1, ch))
+                        as f64
+                        / 4.0;
+                    hh_energy += hhv * hhv * 4.0;
+                }
+            }
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        (hh_energy / total) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        let logits =
+            Tensor::from_f32(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 2.0, 3.0]);
+        let acc = accuracy(&logits, &[0, 1, 0], 3);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_partial_batch() {
+        let logits =
+            Tensor::from_f32(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 9.0, 0.0]);
+        assert_eq!(accuracy(&logits, &[0, 1], 2), 1.0);
+    }
+
+    #[test]
+    fn checkerboard_flags_alternating_pattern() {
+        // pure +1/-1 checkerboard: all variance in the HH band
+        let mut v = vec![0.0f32; 8 * 8];
+        for y in 0..8 {
+            for x in 0..8 {
+                v[y * 8 + x] = if (x + y) % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        let img = Tensor::from_f32(&[1, 8, 8, 1], v);
+        let e = checkerboard_energy(&img);
+        assert!(e > 0.9, "checkerboard energy {e}");
+    }
+
+    #[test]
+    fn checkerboard_low_for_smooth_gradient() {
+        let mut v = vec![0.0f32; 8 * 8];
+        for y in 0..8 {
+            for x in 0..8 {
+                v[y * 8 + x] = (x as f32) / 8.0 + (y as f32) / 16.0;
+            }
+        }
+        let img = Tensor::from_f32(&[1, 8, 8, 1], v);
+        let e = checkerboard_energy(&img);
+        assert!(e < 0.05, "smooth energy {e}");
+    }
+
+    #[test]
+    fn checkerboard_constant_image_is_zero() {
+        let img = Tensor::full(&[1, 4, 4, 1], 2.0);
+        assert_eq!(checkerboard_energy(&img), 0.0);
+    }
+
+    #[test]
+    fn std_dev_basic() {
+        assert!((std_dev(&[1.0, 3.0]) - 1.0).abs() < 1e-6);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+}

@@ -1,0 +1,67 @@
+//! In-tree property-testing and micro-bench helpers (the offline testbed
+//! vendors neither proptest nor criterion; see Cargo.toml note).
+
+use crate::tensor::Pcg32;
+
+/// Run `f` over `iters` independently-seeded RNG streams; panics (with the
+/// failing seed) if any case fails — a minimal proptest-style driver.
+pub fn forall(base_seed: u64, iters: u64, f: impl Fn(&mut Pcg32)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(i);
+        let mut rng = Pcg32::new(seed);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)),
+        );
+        if let Err(e) = result {
+            eprintln!("forall: case {i} (seed {seed}) failed");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Time `f` over `iters` runs after `warmup`; returns mean seconds.
+pub fn bench_secs(warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Print one bench line in a stable, grep-friendly format.
+pub fn report(name: &str, secs: f64) {
+    if secs < 1e-3 {
+        println!("bench {name:<42} {:>10.1} us/iter", secs * 1e6);
+    } else {
+        println!("bench {name:<42} {:>10.3} ms/iter", secs * 1e3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0u64;
+        let counter = std::cell::Cell::new(0u64);
+        forall(1, 25, |_| counter.set(counter.get() + 1));
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall(2, 10, |rng| assert!(rng.uniform() < 0.5));
+    }
+
+    #[test]
+    fn bench_returns_positive() {
+        let s = bench_secs(1, 3, || { std::hint::black_box(1 + 1); });
+        assert!(s >= 0.0);
+    }
+}

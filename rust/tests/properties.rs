@@ -1,0 +1,184 @@
+//! Randomized property tests (in-tree forall driver; DESIGN.md §7):
+//! quantization-grid invariants, Eq. 6 optimality, store round-trips,
+//! scheduler laws, RNG/batching coverage.
+
+use genie::data::{batches_padded, image_batches};
+use genie::quant::{
+    dequant, flatten_out_major, h_sigmoid, minmax_step, search_step_sizes,
+    softbit_init, BitConfig,
+};
+use genie::schedule::{CosineAnnealing, ReduceLROnPlateau};
+use genie::store::Store;
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::forall;
+
+#[test]
+fn prop_quantized_ints_within_bounds() {
+    forall(11, 40, |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (n, p) = BitConfig::wbounds(bits);
+        let k = 1 + rng.below(64);
+        let row: Vec<f32> = (0..k).map(|_| rng.normal() * 0.3).collect();
+        let (sw, zp) = search_step_sizes(&row, 1, k, bits, 2.0);
+        for &w in &row {
+            let q = ((w / sw[0]).round() + zp[0]).clamp(n, p);
+            assert!(q >= n && q <= p);
+            assert_eq!(q, q.round());
+        }
+    });
+}
+
+#[test]
+fn prop_dequant_error_half_step_in_range() {
+    forall(13, 40, |rng| {
+        let s = 0.01 + rng.uniform() * 0.3;
+        let z = rng.below(16) as f32;
+        let w = rng.normal();
+        let q = ((w / s).round() + z).clamp(0.0, 15.0);
+        if q > 0.0 && q < 15.0 {
+            let err = (w - dequant(w, s, z, 0.0, 15.0)).abs();
+            assert!(err <= s / 2.0 + 1e-5, "err {err} > s/2 {}", s / 2.0);
+        }
+    });
+}
+
+#[test]
+fn prop_grid_search_beats_or_matches_minmax() {
+    forall(17, 25, |rng| {
+        let k = 8 + rng.below(64);
+        let row: Vec<f32> = (0..k)
+            .map(|_| rng.normal() * (0.05 + rng.uniform()))
+            .collect();
+        let (sw, zp) = search_step_sizes(&row, 1, k, 4, 2.0);
+        let (sm, zm) = minmax_step(&row, 4);
+        let err = |s: f32, z: f32| -> f64 {
+            row.iter()
+                .map(|&w| (w - dequant(w, s, z, 0.0, 15.0)).powi(2) as f64)
+                .sum()
+        };
+        assert!(err(sw[0], zp[0]) <= err(sm, zm) + 1e-9);
+    });
+}
+
+#[test]
+fn prop_softbit_init_inverts_h() {
+    forall(19, 200, |rng| {
+        let r = rng.uniform().clamp(0.001, 0.999);
+        let v = softbit_init(r);
+        assert!((h_sigmoid(v) - r).abs() < 2e-3, "r={r}");
+    });
+}
+
+#[test]
+fn prop_flatten_out_major_is_permutation() {
+    forall(23, 30, |rng| {
+        let kh = 1 + rng.below(4);
+        let ci = 1 + rng.below(6);
+        let co = 1 + rng.below(8);
+        let w = Tensor::randn(&[kh, kh, ci, co], rng, 1.0);
+        let (o, k, rows) = flatten_out_major(&w);
+        assert_eq!(o * k, w.numel());
+        let mut a = rows.clone();
+        let mut b = w.as_f32().to_vec();
+        a.sort_by(f32::total_cmp);
+        b.sort_by(f32::total_cmp);
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_store_roundtrip_random() {
+    forall(29, 15, |rng| {
+        let dir = std::env::temp_dir()
+            .join(format!("genie_prop_{}.bin", rng.next_u32()));
+        let mut s = Store::new();
+        let n = 1 + rng.below(6);
+        for i in 0..n {
+            let ndim = rng.below(4);
+            let shape: Vec<usize> =
+                (0..ndim).map(|_| 1 + rng.below(5)).collect();
+            s.insert(&format!("t{i}"), Tensor::randn(&shape, rng, 1.0));
+        }
+        s.save(&dir).unwrap();
+        let l = Store::load(&dir).unwrap();
+        assert_eq!(l.names(), s.names());
+        for name in s.names() {
+            assert_eq!(l.get(name).unwrap(), s.get(name).unwrap());
+        }
+        std::fs::remove_file(dir).ok();
+    });
+}
+
+#[test]
+fn prop_cosine_monotone_nonincreasing() {
+    forall(31, 30, |rng| {
+        let base = 0.001 + rng.uniform();
+        let total = 2 + rng.below(500);
+        let s = CosineAnnealing::new(base, total);
+        let mut prev = f32::INFINITY;
+        for t in 0..=total {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-7);
+            assert!(lr >= 0.0 && lr <= base + 1e-7);
+            prev = lr;
+        }
+    });
+}
+
+#[test]
+fn prop_plateau_lr_never_increases() {
+    forall(37, 30, |rng| {
+        let mut s = ReduceLROnPlateau::new(0.1, 0.5, rng.below(5));
+        let mut prev = 0.1f32;
+        for _ in 0..100 {
+            let lr = s.observe(rng.uniform());
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    });
+}
+
+#[test]
+fn prop_eval_batches_cover_each_sample_exactly_once() {
+    forall(41, 30, |rng| {
+        let n = 1 + rng.below(40);
+        let bs = 1 + rng.below(9);
+        let x = Tensor::from_f32(&[n, 1], (0..n).map(|i| i as f32).collect());
+        let y: Vec<i32> = (0..n as i32).collect();
+        let mut seen = Vec::new();
+        for (bx, by, valid) in batches_padded(&x, &y, bs) {
+            assert_eq!(bx.shape[0], bs);
+            seen.extend_from_slice(&by[..valid]);
+        }
+        assert_eq!(seen, y);
+    });
+}
+
+#[test]
+fn prop_image_batches_preserve_rows() {
+    forall(43, 30, |rng| {
+        let n = 1 + rng.below(30);
+        let bs = 1 + rng.below(7);
+        let x = Tensor::randn(&[n, 2], rng, 1.0);
+        let mut total = 0;
+        for (bx, valid) in image_batches(&x, bs) {
+            assert_eq!(bx.shape, vec![bs, 2]);
+            for r in 0..valid {
+                let orig = &x.as_f32()[(total + r) * 2..(total + r) * 2 + 2];
+                assert_eq!(&bx.as_f32()[r * 2..r * 2 + 2], orig);
+            }
+            total += valid;
+        }
+        assert_eq!(total, n);
+    });
+}
+
+#[test]
+fn prop_rng_key_pairs_unique() {
+    forall(47, 10, |rng| {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            assert!(seen.insert(rng.key_pair()));
+        }
+    });
+}
