@@ -1,0 +1,170 @@
+//! Exec-pool scaling bench: distill-shard and quant-block shaped
+//! workloads at 1/2/4/8 workers (DESIGN.md §5). The synthetic sections
+//! are pure host math so they run in the offline image; the final section
+//! drives the real distill+quantize graphs and is artifact-gated like the
+//! other benches. Every section asserts that the multi-worker result is
+//! bit-identical to the serial one before reporting throughput.
+
+use genie::exec::{chain_deps, independent_deps, run_jobs, waves, Parallelism};
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::{bench_secs, report};
+
+const WORKER_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// A distill-shard-shaped job: synthesize a [64, 16, 16, 3] image batch
+/// from the shard-keyed stream, then run a few smoothing/reduction sweeps
+/// standing in for optimizer steps. Returns a checksum of the images.
+fn synth_shard(seed: u64, shard: u64) -> f64 {
+    let mut rng = Pcg32::new_stream(seed, shard);
+    let t = Tensor::randn(&[64, 16, 16, 3], &mut rng, 1.0);
+    let mut v = t.as_f32().to_vec();
+    for _ in 0..20 {
+        for i in 1..v.len() {
+            v[i] = 0.5 * v[i] + 0.5 * v[i - 1];
+        }
+    }
+    v.iter().map(|&x| x as f64).sum()
+}
+
+/// A quant-block-shaped job: per-block soft-rounding state optimized for a
+/// fixed number of steps against stream-drawn "activations".
+fn recon_block(seed: u64, block: u64) -> f64 {
+    let mut rng = Pcg32::new_stream(seed, block);
+    let mut state: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+    for _ in 0..50 {
+        let target = rng.normal();
+        for s in state.iter_mut() {
+            *s -= 0.01 * (*s - target);
+        }
+    }
+    state.iter().map(|&x| x as f64).sum()
+}
+
+fn run_shards(par: Parallelism, n: usize) -> Vec<f64> {
+    let jobs: Vec<_> = (0..n as u64)
+        .map(|b| move || Ok(synth_shard(7, b)))
+        .collect();
+    run_jobs(par, jobs).unwrap().0
+}
+
+fn run_blocks(par: Parallelism, deps: &[Vec<usize>]) -> Vec<f64> {
+    let mut out = vec![0.0; deps.len()];
+    for wave in waves(deps) {
+        let jobs: Vec<_> = wave
+            .iter()
+            .map(|&b| move || Ok(recon_block(31, b as u64)))
+            .collect();
+        let (res, _) = run_jobs(par, jobs).unwrap();
+        for (&b, r) in wave.iter().zip(res) {
+            out[b] = r;
+        }
+    }
+    out
+}
+
+fn main() {
+    // pool dispatch overhead: 64 empty jobs
+    for &w in &WORKER_SWEEP {
+        let par = Parallelism::new(w);
+        let secs = bench_secs(2, 10, || {
+            let jobs: Vec<_> = (0..64usize).map(|i| move || Ok(i)).collect();
+            let _ = run_jobs(par, jobs).unwrap();
+        });
+        report(&format!("parallel/pool_overhead_64jobs_w{w}"), secs);
+    }
+
+    // distill: 16 independent latent shards
+    let reference = run_shards(Parallelism::SERIAL, 16);
+    for &w in &WORKER_SWEEP {
+        let par = Parallelism::new(w);
+        assert_eq!(run_shards(par, 16), reference,
+                   "distill shards must be worker-count invariant");
+        let secs = bench_secs(1, 5, || {
+            std::hint::black_box(run_shards(par, 16));
+        });
+        report(&format!("parallel/distill_16shards_w{w}"), secs);
+    }
+
+    // quantize: 8 blocks, independent (one wave) vs chained (serial gate)
+    let indep = independent_deps(8);
+    let chain = chain_deps(8);
+    let ref_blocks = run_blocks(Parallelism::SERIAL, &indep);
+    for &w in &WORKER_SWEEP {
+        let par = Parallelism::new(w);
+        assert_eq!(run_blocks(par, &indep), ref_blocks,
+                   "block recon must be worker-count invariant");
+        assert_eq!(run_blocks(par, &chain), ref_blocks,
+                   "wave gating must not change results");
+        let secs = bench_secs(1, 5, || {
+            std::hint::black_box(run_blocks(par, &indep));
+        });
+        report(&format!("parallel/quant_8blocks_indep_w{w}"), secs);
+    }
+    let secs = bench_secs(1, 5, || {
+        std::hint::black_box(run_blocks(Parallelism::new(4), &chain));
+    });
+    report("parallel/quant_8blocks_chained_w4", secs);
+
+    // real graphs, artifact-gated like benches/pipeline.rs
+    if !std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        println!("bench parallel/zsq_*: skipped (run `make artifacts`)");
+        return;
+    }
+    real_pipeline_section();
+}
+
+/// Distill + quantize over the real toy artifacts at 1 vs 4 workers.
+fn real_pipeline_section() {
+    use genie::coordinator::pretrain::{teacher_or_pretrain, PretrainCfg};
+    use genie::coordinator::{distill, quantize, DistillCfg, Metrics, QuantCfg};
+    use genie::data::Dataset;
+    use genie::runtime::{ModelRt, Runtime};
+
+    let rt = Runtime::cpu().unwrap();
+    let mrt = ModelRt::load(&rt, "artifacts", "toy").unwrap();
+    let dataset = Dataset::load("artifacts").unwrap();
+    let mut metrics = Metrics::new();
+    let teacher = teacher_or_pretrain(
+        &mrt, &dataset,
+        &PretrainCfg { steps: 30, ..Default::default() },
+        std::path::Path::new("runs"), &mut metrics,
+    )
+    .unwrap();
+
+    let mut images = None;
+    for &w in &WORKER_SWEEP {
+        let dcfg = DistillCfg {
+            samples: 128,
+            steps: 30,
+            par: Parallelism::new(w),
+            ..Default::default()
+        };
+        let secs = bench_secs(0, 2, || {
+            let out = distill(&mrt, &teacher, &dcfg, &mut metrics).unwrap();
+            match images.take() {
+                None => images = Some(out.images),
+                Some(r) => {
+                    assert_eq!(out.images, r,
+                               "distill must be worker-count invariant");
+                    images = Some(r);
+                }
+            }
+        });
+        report(&format!("parallel/zsq_distill_128_w{w}"), secs);
+    }
+    let images = images.unwrap();
+
+    for &w in &WORKER_SWEEP {
+        let qcfg = QuantCfg {
+            steps_per_block: 20,
+            refresh_student: false, // independent blocks -> one wave
+            par: Parallelism::new(w),
+            ..Default::default()
+        };
+        let secs = bench_secs(0, 2, || {
+            let q = quantize(&mrt, &teacher, &images, &qcfg, &mut metrics);
+            std::hint::black_box(q.unwrap());
+        });
+        report(&format!("parallel/zsq_quantize_w{w}"), secs);
+    }
+}

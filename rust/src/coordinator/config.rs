@@ -2,10 +2,12 @@
 //! `key=value` CLI overrides (std-only; no clap in the offline testbed).
 //!
 //! Example:
-//!   genie zsq --model resnet14 wbits=2 abits=4 distill.samples=256 \
-//!       distill.mode=genie quant.drop_p=0.5
+//!   genie zsq --model resnet14 wbits=2 abits=4 workers=8 \
+//!       distill.samples=256 distill.mode=genie quant.drop_p=0.5
 
 use anyhow::{bail, Result};
+
+use crate::exec::Parallelism;
 
 use super::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
 
@@ -15,6 +17,9 @@ pub struct RunConfig {
     pub artifacts: String,
     pub runs_dir: String,
     pub seed: u64,
+    /// exec worker pool size (`workers=K`, 0 = one per hardware thread);
+    /// fanned out into the distill/quant phase configs like `seed`
+    pub par: Parallelism,
     pub pretrain: PretrainCfg,
     pub distill: DistillCfg,
     pub quant: QuantCfg,
@@ -29,6 +34,7 @@ impl Default for RunConfig {
             artifacts: "artifacts".into(),
             runs_dir: "runs".into(),
             seed: 1234,
+            par: Parallelism::default(),
             pretrain: PretrainCfg::default(),
             distill: DistillCfg::default(),
             quant: QuantCfg::default(),
@@ -57,6 +63,11 @@ impl RunConfig {
                 self.pretrain.seed = self.seed ^ 1;
                 self.distill.seed = self.seed ^ 2;
                 self.quant.seed = self.seed ^ 3;
+            }
+            "workers" | "exec.workers" => {
+                self.par = Parallelism::new(p!(usize));
+                self.distill.par = self.par;
+                self.quant.par = self.par;
             }
             "wbits" | "quant.wbits" => self.quant.wbits = p!(u32),
             "abits" | "quant.abits" => self.quant.abits = p!(u32),
@@ -112,6 +123,17 @@ mod tests {
         assert_eq!(c.distill.mode, DistillMode::Gba);
         assert_eq!(c.quant.drop_p, 0.0);
         assert!(!c.distill.swing);
+    }
+
+    #[test]
+    fn workers_fans_out() {
+        let mut c = RunConfig::default();
+        c.set("workers", "4").unwrap();
+        assert_eq!(c.par, Parallelism::new(4));
+        assert_eq!(c.distill.par.workers, 4);
+        assert_eq!(c.quant.par.workers, 4);
+        c.set("exec.workers", "0").unwrap();
+        assert_eq!(c.quant.par.workers, 0); // auto
     }
 
     #[test]

@@ -11,9 +11,15 @@
 //! exponentially (gamma 0.95 / 100 steps); latent LR follows
 //! ReduceLROnPlateau "like that in ZeroQ". Swing conv is selected by
 //! lowering variant (`*_swing` / `*_noswing` entrypoints).
+//!
+//! Because batches share nothing, they are synthesized as parallel shards
+//! on the exec pool (DESIGN.md §5): shard b draws all of its randomness
+//! from `Pcg32::new_stream(seed, b)`, so the synthetic set is bit-identical
+//! for any worker count.
 
 use anyhow::Result;
 
+use crate::exec::{run_jobs, Parallelism};
 use crate::runtime::ModelRt;
 use crate::schedule::{ExponentialDecay, ReduceLROnPlateau};
 use crate::store::Store;
@@ -51,6 +57,8 @@ pub struct DistillCfg {
     pub lr_z: f32,
     pub log_every: usize,
     pub seed: u64,
+    /// worker pool for the shard fan-out (`workers=K`; 0 = auto)
+    pub par: Parallelism,
 }
 
 impl Default for DistillCfg {
@@ -64,6 +72,7 @@ impl Default for DistillCfg {
             lr_z: 0.1,
             log_every: 50,
             seed: 23,
+            par: Parallelism::default(),
         }
     }
 }
@@ -79,6 +88,9 @@ pub struct DistillOutput {
 }
 
 /// Distill a synthetic calibration set from the teacher's BN statistics.
+/// Shards (one per distill batch) run concurrently on the exec pool;
+/// shard b's randomness comes exclusively from `new_stream(seed, b)`, so
+/// the result is identical for every `cfg.par`.
 pub fn distill(
     mrt: &ModelRt,
     teacher: &Store,
@@ -88,7 +100,6 @@ pub fn distill(
     let m = &mrt.manifest;
     let bd = m.batch("distill");
     let n_batches = cfg.samples.div_ceil(bd);
-    let mut rng = Pcg32::new(cfg.seed);
     let tag = if cfg.swing { "swing" } else { "noswing" };
     let mode_name = match cfg.mode {
         DistillMode::Genie => "genie",
@@ -97,20 +108,33 @@ pub fn distill(
     };
 
     metrics.start("distill");
+    let jobs: Vec<_> = (0..n_batches)
+        .map(|b| {
+            move || -> Result<(Tensor, Vec<f32>)> {
+                let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
+                match cfg.mode {
+                    DistillMode::Direct => {
+                        distill_direct(mrt, teacher, cfg, tag, &mut rng)
+                    }
+                    _ => distill_genie(mrt, teacher, cfg, tag, &mut rng),
+                }
+            }
+        })
+        .collect();
+    let (shards, pool) = run_jobs(cfg.par, jobs)?;
+    let secs = metrics.stop("distill");
+    metrics.record_pool("distill", &pool);
+
     let mut parts: Vec<Tensor> = Vec::new();
     let mut traces: Vec<Vec<f32>> = Vec::new();
     let mut final_losses = Vec::new();
-    for b in 0..n_batches {
-        let (imgs, trace) = match cfg.mode {
-            DistillMode::Direct => distill_direct(mrt, teacher, cfg, tag, &mut rng)?,
-            _ => distill_genie(mrt, teacher, cfg, tag, &mut rng)?,
-        };
+    for (b, (imgs, trace)) in shards.into_iter().enumerate() {
         final_losses.push(*trace.last().unwrap());
         traces.push(trace);
         parts.push(imgs);
         if b == 0 || b == n_batches - 1 {
             println!(
-                "distill[{}/{mode_name}/{tag}] batch {}/{}: loss {:.3}",
+                "distill[{}/{mode_name}/{tag}] shard {}/{}: loss {:.3}",
                 m.model,
                 b + 1,
                 n_batches,
@@ -118,7 +142,6 @@ pub fn distill(
             );
         }
     }
-    let secs = metrics.stop("distill");
 
     // average trace across batches at each logged step
     let steps_logged = traces[0].len();
@@ -134,14 +157,16 @@ pub fn distill(
     let images = Tensor::concat_rows(&refs).take_rows(cfg.samples);
     let final_loss =
         final_losses.iter().sum::<f32>() / final_losses.len() as f32;
+    let rate = metrics.throughput("distill", "images", cfg.samples, secs);
     println!(
-        "distill[{}/{mode_name}/{tag}]: {} images in {:.1}s (final BNS {:.3})",
-        m.model, cfg.samples, secs, final_loss
+        "distill[{}/{mode_name}/{tag}]: {} images in {:.1}s \
+         ({rate:.1} images/sec on {} workers, final BNS {:.3})",
+        m.model, cfg.samples, secs, pool.workers, final_loss
     );
     Ok(DistillOutput { images, loss_trace, final_loss })
 }
 
-/// One generator-based batch (GENIE / GBA). Returns (images, loss trace).
+/// One generator-based shard (GENIE / GBA). Returns (images, loss trace).
 fn distill_genie(
     mrt: &ModelRt,
     teacher: &Store,

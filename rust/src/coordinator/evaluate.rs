@@ -1,49 +1,107 @@
 //! Top-1 accuracy evaluation for the FP32 teacher (`eval_batch`) and the
 //! hard-quantized student (`eval_quant`) over padded fixed-size batches.
+//!
+//! The batch list is sharded into contiguous chunks across the exec pool
+//! (DESIGN.md §5): each worker chunk clones the parameter store once and
+//! streams its batches through it. Per-batch correct counts are reduced on
+//! the main thread in batch order, so the accuracy is bit-identical for
+//! any worker count. `eval_fp32` / `eval_quantized` keep the historical
+//! serial signature and delegate with [`Parallelism::SERIAL`].
 
 use anyhow::Result;
 
 use crate::data::Dataset;
+use crate::exec::{run_jobs, Parallelism};
 use crate::runtime::ModelRt;
 use crate::store::Store;
-use crate::tensor::accuracy;
+use crate::tensor::{accuracy, Tensor};
 
-/// FP32 teacher top-1 on the test set.
+/// FP32 teacher top-1 on the test set (serial).
 pub fn eval_fp32(mrt: &ModelRt, teacher: &Store, dataset: &Dataset) -> Result<f32> {
-    let bs = mrt.manifest.batch("eval");
-    let entry = mrt.entry("eval_batch")?;
-    let mut store = teacher.clone();
-    let mut correct = 0.0f64;
-    let mut total = 0usize;
-    for (x, y, valid) in dataset.eval_batches(bs) {
-        store.insert("x", x);
-        mrt.rt.call(&entry, &mut store)?;
-        let acc = accuracy(store.get("logits")?, &y, valid);
-        correct += acc as f64 * valid as f64;
-        total += valid;
-    }
-    Ok((correct / total as f64) as f32)
+    eval_fp32_par(mrt, teacher, dataset, Parallelism::SERIAL)
 }
 
-/// Hard-quantized student top-1 on the test set.
+/// FP32 teacher top-1 on the test set, sharded across the pool.
+pub fn eval_fp32_par(
+    mrt: &ModelRt,
+    teacher: &Store,
+    dataset: &Dataset,
+    par: Parallelism,
+) -> Result<f32> {
+    sharded_eval(mrt, teacher, None, dataset, par, "eval_batch")
+}
+
+/// Hard-quantized student top-1 on the test set (serial).
 pub fn eval_quantized(
     mrt: &ModelRt,
     teacher: &Store,
     qstate: &Store,
     dataset: &Dataset,
 ) -> Result<f32> {
+    eval_quantized_par(mrt, teacher, qstate, dataset, Parallelism::SERIAL)
+}
+
+/// Hard-quantized student top-1 on the test set, sharded across the pool.
+pub fn eval_quantized_par(
+    mrt: &ModelRt,
+    teacher: &Store,
+    qstate: &Store,
+    dataset: &Dataset,
+    par: Parallelism,
+) -> Result<f32> {
+    sharded_eval(mrt, teacher, Some(qstate), dataset, par, "eval_quant")
+}
+
+/// Shared driver: chunk the eval batches, run chunks as pool jobs, reduce
+/// per-batch (correct, valid) pairs in batch order.
+fn sharded_eval(
+    mrt: &ModelRt,
+    teacher: &Store,
+    qstate: Option<&Store>,
+    dataset: &Dataset,
+    par: Parallelism,
+    entry_name: &str,
+) -> Result<f32> {
     let bs = mrt.manifest.batch("eval");
-    let entry = mrt.entry("eval_quant")?;
-    let mut store = teacher.clone();
-    store.absorb(qstate);
+    let batches = dataset.eval_batches(bs);
+    let n_batches = batches.len();
+    let workers = par.resolve_for(n_batches);
+    let chunk_len = n_batches.div_ceil(workers.max(1));
+
+    let mut chunks: Vec<Vec<(Tensor, Vec<i32>, usize)>> = Vec::new();
+    let mut it = batches.into_iter().peekable();
+    while it.peek().is_some() {
+        chunks.push(it.by_ref().take(chunk_len).collect());
+    }
+
+    let jobs: Vec<_> = chunks
+        .into_iter()
+        .map(|chunk| {
+            move || -> Result<Vec<(f64, usize)>> {
+                let entry = mrt.entry(entry_name)?;
+                let mut store = teacher.clone();
+                if let Some(q) = qstate {
+                    store.absorb(q);
+                }
+                let mut out = Vec::with_capacity(chunk.len());
+                for (x, y, valid) in chunk {
+                    store.insert("x", x);
+                    mrt.rt.call(&entry, &mut store)?;
+                    let acc = accuracy(store.get("logits")?, &y, valid);
+                    out.push((acc as f64 * valid as f64, valid));
+                }
+                Ok(out)
+            }
+        })
+        .collect();
+    let (parts, _pool) = run_jobs(par, jobs)?;
+
     let mut correct = 0.0f64;
     let mut total = 0usize;
-    for (x, y, valid) in dataset.eval_batches(bs) {
-        store.insert("x", x);
-        mrt.rt.call(&entry, &mut store)?;
-        let acc = accuracy(store.get("logits")?, &y, valid);
-        correct += acc as f64 * valid as f64;
-        total += valid;
+    for (c, v) in parts.into_iter().flatten() {
+        correct += c;
+        total += v;
     }
+    anyhow::ensure!(total > 0, "eval: empty test set");
     Ok((correct / total as f64) as f32)
 }

@@ -1,5 +1,7 @@
 //! Metrics: named scalar series + phase wall-clock timers, flushed as CSV
-//! under a run directory. EXPERIMENTS.md tables are generated from these.
+//! under a run directory, plus per-worker pool accounting and throughput
+//! summaries for the parallel phases. EXPERIMENTS.md tables are generated
+//! from these.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -7,6 +9,8 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::Result;
+
+use crate::exec::PoolReport;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -65,6 +69,37 @@ impl Metrics {
             .sum()
     }
 
+    /// Record a pool run: per-worker busy time lands in the timers as
+    /// `<phase>/worker<i>`, and jobs/steals/utilization are logged as
+    /// series with the worker count as the step (the x-axis of a scaling
+    /// curve).
+    pub fn record_pool(&mut self, phase: &str, r: &PoolReport) {
+        for (w, secs) in r.worker_busy_secs.iter().enumerate() {
+            self.timers.push((format!("{phase}/worker{w}"), *secs));
+        }
+        self.log(&format!("{phase}/pool/jobs"), r.workers, r.jobs as f32);
+        self.log(&format!("{phase}/pool/steals"), r.workers, r.steals as f32);
+        self.log(
+            &format!("{phase}/pool/utilization"),
+            r.workers,
+            r.utilization() as f32,
+        );
+    }
+
+    /// Log a throughput sample (`<phase>/<unit>_per_sec`, step = count)
+    /// and return the rate for printing.
+    pub fn throughput(
+        &mut self,
+        phase: &str,
+        unit: &str,
+        count: usize,
+        secs: f64,
+    ) -> f64 {
+        let rate = if secs > 0.0 { count as f64 / secs } else { 0.0 };
+        self.log(&format!("{phase}/{unit}_per_sec"), count, rate as f32);
+        rate
+    }
+
     /// Flush every series to `<run_dir>/<name>.csv` (step,value rows).
     pub fn flush(&self) -> Result<()> {
         let Some(dir) = &self.run_dir else { return Ok(()) };
@@ -110,6 +145,35 @@ mod tests {
         m.stop("p");
         assert!(m.timer_total("p") >= 0.0);
         assert_eq!(m.timers.len(), 2);
+    }
+
+    #[test]
+    fn record_pool_lands_in_timers_and_series() {
+        let mut m = Metrics::new();
+        let r = PoolReport {
+            workers: 2,
+            jobs: 8,
+            wall_secs: 1.0,
+            worker_busy_secs: vec![0.6, 0.8],
+            worker_jobs: vec![3, 5],
+            steals: 2,
+        };
+        m.record_pool("distill", &r);
+        assert!(m.timer_total("distill/worker0") > 0.5);
+        assert!(m.timer_total("distill/worker1") > 0.7);
+        assert_eq!(m.last("distill/pool/jobs"), Some(8.0));
+        assert_eq!(m.last("distill/pool/steals"), Some(2.0));
+        let u = m.last("distill/pool/utilization").unwrap();
+        assert!((u - 0.7).abs() < 1e-6, "utilization {u}");
+    }
+
+    #[test]
+    fn throughput_logs_rate() {
+        let mut m = Metrics::new();
+        let rate = m.throughput("distill", "images", 128, 2.0);
+        assert!((rate - 64.0).abs() < 1e-9);
+        assert_eq!(m.last("distill/images_per_sec"), Some(64.0));
+        assert_eq!(m.throughput("x", "y", 5, 0.0), 0.0);
     }
 
     #[test]

@@ -24,7 +24,9 @@ pub mod pipeline;
 
 pub use config::RunConfig;
 pub use distill::{distill, DistillCfg, DistillMode, DistillOutput};
-pub use evaluate::{eval_fp32, eval_quantized};
+pub use evaluate::{
+    eval_fp32, eval_fp32_par, eval_quantized, eval_quantized_par,
+};
 pub use metrics::Metrics;
 pub use pipeline::{fsq, zsq, PipelineOutcome};
 pub use pretrain::{pretrain, PretrainCfg};

@@ -13,8 +13,8 @@ use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
 
 use super::{
-    distill, eval_fp32, eval_quantized, quantize, DistillCfg, Metrics,
-    QuantCfg,
+    distill, eval_fp32_par, eval_quantized_par, quantize, DistillCfg,
+    Metrics, QuantCfg,
 };
 
 #[derive(Debug, Clone)]
@@ -51,8 +51,8 @@ pub fn zsq(
 ) -> Result<PipelineOutcome> {
     let out = distill(mrt, teacher, dcfg, metrics)?;
     let qstate = quantize(mrt, teacher, &out.images, qcfg, metrics)?;
-    let fp_acc = eval_fp32(mrt, teacher, dataset)?;
-    let q_acc = eval_quantized(mrt, teacher, &qstate, dataset)?;
+    let fp_acc = eval_fp32_par(mrt, teacher, dataset, qcfg.par)?;
+    let q_acc = eval_quantized_par(mrt, teacher, &qstate, dataset, qcfg.par)?;
     Ok(PipelineOutcome {
         model: mrt.manifest.model.clone(),
         fp_acc,
@@ -75,8 +75,8 @@ pub fn fsq(
     let mut rng = Pcg32::new(qcfg.seed ^ 0x5eed);
     let (calib, _) = dataset.calibration(&mut rng, samples);
     let qstate = quantize(mrt, teacher, &calib, qcfg, metrics)?;
-    let fp_acc = eval_fp32(mrt, teacher, dataset)?;
-    let q_acc = eval_quantized(mrt, teacher, &qstate, dataset)?;
+    let fp_acc = eval_fp32_par(mrt, teacher, dataset, qcfg.par)?;
+    let q_acc = eval_quantized_par(mrt, teacher, &qstate, dataset, qcfg.par)?;
     Ok(PipelineOutcome {
         model: mrt.manifest.model.clone(),
         fp_acc,
@@ -97,5 +97,5 @@ pub fn quantize_with(
     metrics: &mut Metrics,
 ) -> Result<f32> {
     let qstate = quantize(mrt, teacher, calib, qcfg, metrics)?;
-    eval_quantized(mrt, teacher, &qstate, dataset)
+    eval_quantized_par(mrt, teacher, &qstate, dataset, qcfg.par)
 }

@@ -12,10 +12,20 @@
 //!
 //! Ablation arms are pure config: `lr_sw = 0` -> AdaRound (no joint step
 //! size, M1 vs M2 / Table 5), `drop_p = 0` -> NoDrop.
+//!
+//! Parallel structure (DESIGN.md §5): teacher boundary collection fans out
+//! one job per calibration batch, and block reconstruction runs on the
+//! exec pool gated by a topological wave schedule — a chain when
+//! `refresh_student` (block b reads the quantized prefix, BRECQ-style), a
+//! single all-blocks wave otherwise (every block is independent given the
+//! teacher's boundaries). Block b draws all randomness from
+//! `Pcg32::new_stream(seed, b)`, so the optimized quant state is
+//! bit-identical for any worker count.
 
 use anyhow::Result;
 
 use crate::data::image_batches;
+use crate::exec::{chain_deps, independent_deps, run_jobs, waves, Parallelism};
 use crate::quant::{init_qstate, set_act_steps, BitConfig};
 use crate::runtime::ModelRt;
 use crate::schedule::{BetaAnneal, CosineAnnealing};
@@ -47,6 +57,8 @@ pub struct QuantCfg {
     pub refresh_student: bool,
     pub log_every: usize,
     pub seed: u64,
+    /// worker pool for bounds collection + block waves (`workers=K`)
+    pub par: Parallelism,
 }
 
 impl Default for QuantCfg {
@@ -66,6 +78,7 @@ impl Default for QuantCfg {
             refresh_student: true,
             log_every: 50,
             seed: 31,
+            par: Parallelism::default(),
         }
     }
 }
@@ -96,7 +109,6 @@ pub fn quantize(
     let m = &mrt.manifest;
     let nb = m.num_blocks;
     let br = m.batch("recon");
-    let mut rng = Pcg32::new(cfg.seed);
     metrics.start("quantize");
 
     // 1. activation statistics for LSQ init
@@ -114,89 +126,176 @@ pub fn quantize(
     let mut qstate = init_qstate(m, teacher, bits, cfg.pnorm, Some(&stats))?;
     set_act_steps(&mut qstate, &m.quant_layers, &stats)?;
 
-    // 3. teacher block boundaries over calibration batches
+    // 3. teacher block boundaries: contiguous batch chunks, one pool job
+    // (and one teacher-store clone) per worker
     let batches = image_batches(calib, br);
-    let mut teacher_bounds: Vec<Vec<Tensor>> = Vec::new();
-    {
-        let mut store = teacher.clone();
-        for (bx, _) in &batches {
-            store.insert("x", bx.clone());
-            mrt.call("collect_teacher", &mut store)?;
-            let bounds = (0..=nb)
-                .map(|i| store.get(&format!("bound.{i}")).map(Clone::clone))
-                .collect::<Result<Vec<_>>>()?;
-            teacher_bounds.push(bounds);
+    let chunk_len =
+        batches.len().div_ceil(cfg.par.resolve_for(batches.len()).max(1));
+    let bound_jobs: Vec<_> = batches
+        .chunks(chunk_len.max(1))
+        .map(|chunk| {
+            move || -> Result<Vec<Vec<Tensor>>> {
+                let mut store = teacher.clone();
+                let mut out = Vec::with_capacity(chunk.len());
+                for (bx, _) in chunk {
+                    store.insert("x", bx.clone());
+                    mrt.call("collect_teacher", &mut store)?;
+                    out.push(
+                        (0..=nb)
+                            .map(|i| {
+                                store
+                                    .get(&format!("bound.{i}"))
+                                    .map(Clone::clone)
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                    );
+                }
+                Ok(out)
+            }
+        })
+        .collect();
+    let (bound_chunks, bounds_pool) = run_jobs(cfg.par, bound_jobs)?;
+    let teacher_bounds: Vec<Vec<Tensor>> =
+        bound_chunks.into_iter().flatten().collect();
+    metrics.record_pool("quantize/bounds", &bounds_pool);
+
+    // 4. block reconstruction in topological waves: a chain when the
+    // student prefix feeds block inputs, one all-blocks wave otherwise.
+    // The evolving quant state is read-shared within a wave and merged
+    // at the wave barrier.
+    let mut qstate_now = qstate;
+    let deps = if cfg.refresh_student {
+        chain_deps(nb)
+    } else {
+        independent_deps(nb)
+    };
+    let mut blocks_pool = crate::exec::PoolReport::default();
+    for wave in waves(&deps) {
+        let qsnap = &qstate_now;
+        let jobs: Vec<_> = wave
+            .iter()
+            .map(|&b| {
+                let batches = &batches;
+                let teacher_bounds = &teacher_bounds;
+                move || {
+                    reconstruct_block(
+                        mrt, teacher, qsnap, batches, teacher_bounds, cfg, b,
+                    )
+                }
+            })
+            .collect();
+        let (outs, pool) = run_jobs(cfg.par, jobs)?;
+        blocks_pool.merge(&pool);
+        for out in outs {
+            for (name, t) in out.learned {
+                qstate_now.insert(&name, t);
+            }
+            for (t, rec) in out.rec_trace {
+                metrics.log(&format!("quant/block{}/rec", out.block), t, rec);
+            }
+            println!(
+                "quantize[{} W{}A{}] block {}/{}: rec {:.5}",
+                m.model, cfg.wbits, cfg.abits, out.block + 1, nb, out.last_rec
+            );
         }
     }
-
-    // one store holds teacher + qstate + adam + per-step scalars
-    let mut store = teacher.clone();
-    store.absorb(&qstate);
-
-    // 4. block-sequential reconstruction
-    for b in 0..nb {
-        // block inputs through the quantized prefix
-        let inputs: Vec<Tensor> = if b == 0 || !cfg.refresh_student {
-            teacher_bounds.iter().map(|t| t[b].clone()).collect()
-        } else {
-            let mut xs = Vec::new();
-            for (bx, _) in &batches {
-                store.insert("x", bx.clone());
-                let (kh, kl) = rng.key_pair();
-                store.insert("key", Tensor::key(kh, kl));
-                mrt.call("collect_student", &mut store)?;
-                xs.push(store.get(&format!("bound.{b}"))?.clone());
-            }
-            xs
-        };
-
-        // fresh Adam state for this block's learnables
-        let learn = m.learnable_block(b).to_vec();
-        for name in &learn {
-            let shape = store.get(name)?.shape.clone();
-            store.insert(&format!("am.{name}"), Tensor::zeros(&shape));
-            store.insert(&format!("av.{name}"), Tensor::zeros(&shape));
-        }
-
-        let sw_sched = CosineAnnealing::new(cfg.lr_sw, cfg.steps_per_block);
-        let sa_sched = CosineAnnealing::new(cfg.lr_sa, cfg.steps_per_block);
-        let beta = BetaAnneal::new(cfg.beta_start, cfg.beta_end, 0.2,
-                                   cfg.steps_per_block);
-        let entry = mrt.entry(&format!("quant_step_{b}"))?;
-        let mut last_rec = f32::NAN;
-        for t in 1..=cfg.steps_per_block {
-            let bi = rng.below(batches.len());
-            store.insert("x_in", inputs[bi].clone());
-            store.insert("y_ref", teacher_bounds[bi][b + 1].clone());
-            let (kh, kl) = rng.key_pair();
-            store.insert("key", Tensor::key(kh, kl));
-            store.insert("t", Tensor::scalar_f32(t as f32));
-            store.insert("lr_sw", Tensor::scalar_f32(sw_sched.lr(t - 1)));
-            store.insert("lr_v", Tensor::scalar_f32(cfg.lr_v));
-            store.insert("lr_sa", Tensor::scalar_f32(sa_sched.lr(t - 1)));
-            store.insert("lam", Tensor::scalar_f32(cfg.lam));
-            store.insert("beta", Tensor::scalar_f32(beta.beta(t)));
-            store.insert("drop_p", Tensor::scalar_f32(cfg.drop_p));
-            let scalars = mrt.rt.call(&entry, &mut store)?;
-            last_rec = scalars["rec"];
-            if t % cfg.log_every == 0 || t == cfg.steps_per_block {
-                metrics.log(&format!("quant/block{b}/rec"), t, scalars["rec"]);
-            }
-        }
-        println!(
-            "quantize[{} W{}A{}] block {}/{}: rec {:.5}",
-            m.model, cfg.wbits, cfg.abits, b + 1, nb, last_rec
-        );
-    }
+    metrics.record_pool("quantize/blocks", &blocks_pool);
     let secs = metrics.stop("quantize");
+    let rate = metrics.throughput("quantize", "blocks", nb, secs);
     println!(
-        "quantize[{} W{}A{}]: {} blocks x {} steps in {:.1}s",
+        "quantize[{} W{}A{}]: {} blocks x {} steps in {:.1}s ({rate:.2} blocks/sec)",
         m.model, cfg.wbits, cfg.abits, nb, cfg.steps_per_block, secs
     );
 
     // return just the q.* tensors (with optimized learnables)
     let qnames: Vec<String> = m.qstate.iter().map(|(n, _)| n.clone()).collect();
-    Ok(subset(&store, qnames))
+    Ok(subset(&qstate_now, qnames))
+}
+
+/// Result of one block's reconstruction job.
+struct BlockResult {
+    block: usize,
+    /// optimized learnables (sw / v / sa of this block), to merge back
+    learned: Vec<(String, Tensor)>,
+    /// (step, rec loss) at each logged step
+    rec_trace: Vec<(usize, f32)>,
+    last_rec: f32,
+}
+
+/// Optimize one block's quant state against the teacher boundaries.
+/// Self-contained: clones the teacher, absorbs the current quant state,
+/// and draws every random choice (batch picks, QDrop/collect keys) from
+/// the block-keyed stream — never from worker identity or schedule.
+#[allow(clippy::too_many_arguments)]
+fn reconstruct_block(
+    mrt: &ModelRt,
+    teacher: &Store,
+    qstate: &Store,
+    batches: &[(Tensor, usize)],
+    teacher_bounds: &[Vec<Tensor>],
+    cfg: &QuantCfg,
+    b: usize,
+) -> Result<BlockResult> {
+    let m = &mrt.manifest;
+    let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
+    let mut store = teacher.clone();
+    store.absorb(qstate);
+
+    // block inputs through the quantized prefix
+    let inputs: Vec<Tensor> = if b == 0 || !cfg.refresh_student {
+        teacher_bounds.iter().map(|t| t[b].clone()).collect()
+    } else {
+        let mut xs = Vec::new();
+        for (bx, _) in batches {
+            store.insert("x", bx.clone());
+            let (kh, kl) = rng.key_pair();
+            store.insert("key", Tensor::key(kh, kl));
+            mrt.call("collect_student", &mut store)?;
+            xs.push(store.get(&format!("bound.{b}"))?.clone());
+        }
+        xs
+    };
+
+    // fresh Adam state for this block's learnables
+    let learn = m.learnable_block(b).to_vec();
+    for name in &learn {
+        let shape = store.get(name)?.shape.clone();
+        store.insert(&format!("am.{name}"), Tensor::zeros(&shape));
+        store.insert(&format!("av.{name}"), Tensor::zeros(&shape));
+    }
+
+    let sw_sched = CosineAnnealing::new(cfg.lr_sw, cfg.steps_per_block);
+    let sa_sched = CosineAnnealing::new(cfg.lr_sa, cfg.steps_per_block);
+    let beta = BetaAnneal::new(cfg.beta_start, cfg.beta_end, 0.2,
+                               cfg.steps_per_block);
+    let entry = mrt.entry(&format!("quant_step_{b}"))?;
+    let mut last_rec = f32::NAN;
+    let mut rec_trace = Vec::new();
+    for t in 1..=cfg.steps_per_block {
+        let bi = rng.below(batches.len());
+        store.insert("x_in", inputs[bi].clone());
+        store.insert("y_ref", teacher_bounds[bi][b + 1].clone());
+        let (kh, kl) = rng.key_pair();
+        store.insert("key", Tensor::key(kh, kl));
+        store.insert("t", Tensor::scalar_f32(t as f32));
+        store.insert("lr_sw", Tensor::scalar_f32(sw_sched.lr(t - 1)));
+        store.insert("lr_v", Tensor::scalar_f32(cfg.lr_v));
+        store.insert("lr_sa", Tensor::scalar_f32(sa_sched.lr(t - 1)));
+        store.insert("lam", Tensor::scalar_f32(cfg.lam));
+        store.insert("beta", Tensor::scalar_f32(beta.beta(t)));
+        store.insert("drop_p", Tensor::scalar_f32(cfg.drop_p));
+        let scalars = mrt.rt.call(&entry, &mut store)?;
+        last_rec = scalars["rec"];
+        if t % cfg.log_every == 0 || t == cfg.steps_per_block {
+            rec_trace.push((t, scalars["rec"]));
+        }
+    }
+
+    let learned = learn
+        .iter()
+        .map(|n| Ok((n.clone(), store.get(n)?.clone())))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(BlockResult { block: b, learned, rec_trace, last_rec })
 }
 
 /// Pad/repeat rows so shape[0] == bs (for fixed-batch stat graphs).

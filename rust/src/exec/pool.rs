@@ -1,0 +1,294 @@
+//! Work-stealing worker pool over scoped std threads (DESIGN.md §5).
+//!
+//! Jobs are enqueued round-robin into per-worker deques before any worker
+//! starts; a worker pops from the front of its own deque and, when that
+//! runs dry, steals from the back of a victim's. Nothing is enqueued after
+//! startup, so a worker that observes every deque empty can exit — the
+//! remaining in-flight jobs are already owned by other workers.
+//!
+//! Determinism: results land in a slot indexed by submission order, so the
+//! output `Vec` is independent of which worker ran which job and of any
+//! interleaving. Combined with shard-keyed RNG streams
+//! ([`Pcg32::new_stream`](crate::tensor::Pcg32::new_stream)) inside the
+//! jobs, every parallel phase is bit-identical for any worker count.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::Parallelism;
+
+/// Per-run accounting: wall clock, per-worker busy time and job counts,
+/// and the number of steals. Feeds
+/// [`Metrics::record_pool`](crate::coordinator::Metrics::record_pool).
+#[derive(Debug, Clone, Default)]
+pub struct PoolReport {
+    /// Workers actually spawned (after clamping to the job count).
+    pub workers: usize,
+    /// Jobs executed.
+    pub jobs: usize,
+    /// Wall-clock seconds for the whole fan-out.
+    pub wall_secs: f64,
+    /// Busy seconds per worker (index = worker id).
+    pub worker_busy_secs: Vec<f64>,
+    /// Jobs executed per worker (index = worker id).
+    pub worker_jobs: Vec<usize>,
+    /// Cross-deque steals (0 in serial runs).
+    pub steals: usize,
+}
+
+impl PoolReport {
+    /// Ratio of summed busy time to `workers * wall` — 1.0 means no
+    /// worker ever idled.
+    pub fn utilization(&self) -> f64 {
+        if self.workers == 0 || self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.worker_busy_secs.iter().sum::<f64>()
+            / (self.workers as f64 * self.wall_secs)
+    }
+
+    /// Fold another run into this one — used by wave-gated phases
+    /// (quantize) to report one aggregate per phase instead of one row
+    /// per wave. Wall time and jobs add; per-worker vectors add
+    /// index-wise (a singleton wave only touches worker 0).
+    pub fn merge(&mut self, other: &PoolReport) {
+        self.workers = self.workers.max(other.workers);
+        self.jobs += other.jobs;
+        self.wall_secs += other.wall_secs;
+        self.steals += other.steals;
+        if self.worker_busy_secs.len() < other.worker_busy_secs.len() {
+            self.worker_busy_secs.resize(other.worker_busy_secs.len(), 0.0);
+            self.worker_jobs.resize(other.worker_jobs.len(), 0);
+        }
+        for (w, secs) in other.worker_busy_secs.iter().enumerate() {
+            self.worker_busy_secs[w] += secs;
+        }
+        for (w, count) in other.worker_jobs.iter().enumerate() {
+            self.worker_jobs[w] += count;
+        }
+    }
+}
+
+/// Run every job, returning results in submission order plus the pool
+/// report. Jobs run on `par.resolve_for(jobs.len())` workers; a single
+/// worker short-circuits to an in-thread loop (no spawn overhead). On
+/// failure the earliest-submitted failing job's error is returned and
+/// sibling results are dropped.
+pub fn run_jobs<T, F>(par: Parallelism, jobs: Vec<F>) -> Result<(Vec<T>, PoolReport)>
+where
+    T: Send,
+    F: FnOnce() -> Result<T> + Send,
+{
+    let n = jobs.len();
+    let workers = par.resolve_for(n);
+    let t0 = Instant::now();
+
+    if workers <= 1 {
+        let mut busy = 0.0;
+        let mut out = Vec::with_capacity(n);
+        let mut first_err = None;
+        for job in jobs {
+            let tj = Instant::now();
+            let r = job();
+            busy += tj.elapsed().as_secs_f64();
+            match r {
+                Ok(v) => out.push(v),
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let report = PoolReport {
+            workers: 1,
+            jobs: n,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            worker_busy_secs: vec![busy],
+            worker_jobs: vec![out.len()],
+            steals: 0,
+        };
+        return match first_err {
+            Some(e) => Err(e),
+            None => Ok((out, report)),
+        };
+    }
+
+    // Round-robin the (index, job) pairs into per-worker deques.
+    let mut local: Vec<VecDeque<(usize, F)>> =
+        (0..workers).map(|_| VecDeque::new()).collect();
+    for (i, job) in jobs.into_iter().enumerate() {
+        local[i % workers].push_back((i, job));
+    }
+    let deques: Vec<Mutex<VecDeque<(usize, F)>>> =
+        local.into_iter().map(Mutex::new).collect();
+    let slots: Vec<Mutex<Option<Result<T>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let steals = AtomicUsize::new(0);
+
+    let mut worker_busy_secs = vec![0.0; workers];
+    let mut worker_jobs = vec![0; workers];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let deques = &deques;
+                let slots = &slots;
+                let steals = &steals;
+                s.spawn(move || {
+                    let mut busy = 0.0f64;
+                    let mut count = 0usize;
+                    loop {
+                        // own queue first (front = submission order) ...
+                        let mut job = deques[w].lock().unwrap().pop_front();
+                        // ... then steal from a victim's back
+                        if job.is_none() {
+                            for k in 1..deques.len() {
+                                let v = (w + k) % deques.len();
+                                job = deques[v].lock().unwrap().pop_back();
+                                if job.is_some() {
+                                    steals.fetch_add(1, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                        }
+                        // deques only drain after startup: all-empty is
+                        // final, so exiting here never strands a job.
+                        let Some((idx, f)) = job else { break };
+                        let tj = Instant::now();
+                        let r = f();
+                        busy += tj.elapsed().as_secs_f64();
+                        count += 1;
+                        *slots[idx].lock().unwrap() = Some(r);
+                    }
+                    (busy, count)
+                })
+            })
+            .collect();
+        for (w, h) in handles.into_iter().enumerate() {
+            let (busy, count) = h.join().expect("pool worker panicked");
+            worker_busy_secs[w] = busy;
+            worker_jobs[w] = count;
+        }
+    });
+
+    let report = PoolReport {
+        workers,
+        jobs: n,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        worker_busy_secs,
+        worker_jobs,
+        steals: steals.load(Ordering::Relaxed),
+    };
+    let mut out = Vec::with_capacity(n);
+    for slot in slots {
+        match slot.into_inner().unwrap() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => anyhow::bail!("pool: job never ran (internal error)"),
+        }
+    }
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_submission_order() {
+        for workers in [1, 2, 4, 8] {
+            let jobs: Vec<_> = (0..37usize)
+                .map(|i| move || Ok(i * i))
+                .collect();
+            let (out, report) =
+                run_jobs(Parallelism::new(workers), jobs).unwrap();
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+            assert_eq!(report.jobs, 37);
+            assert_eq!(report.workers, workers.min(37));
+            assert_eq!(report.worker_jobs.iter().sum::<usize>(), 37);
+        }
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let jobs: Vec<fn() -> Result<u8>> = Vec::new();
+        let (out, report) = run_jobs(Parallelism::new(4), jobs).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(report.jobs, 0);
+    }
+
+    #[test]
+    fn workers_clamped_to_jobs() {
+        let jobs: Vec<_> = (0..3usize).map(|i| move || Ok(i)).collect();
+        let (_, report) = run_jobs(Parallelism::new(16), jobs).unwrap();
+        assert_eq!(report.workers, 3);
+    }
+
+    #[test]
+    fn errors_propagate_first_by_submission_order() {
+        for workers in [1, 4] {
+            let jobs: Vec<_> = (0..8usize)
+                .map(|i| {
+                    move || {
+                        if i % 3 == 2 {
+                            anyhow::bail!("job {i} failed")
+                        }
+                        Ok(i)
+                    }
+                })
+                .collect();
+            let err = run_jobs::<usize, _>(Parallelism::new(workers), jobs)
+                .unwrap_err();
+            assert_eq!(format!("{err}"), "job 2 failed");
+        }
+    }
+
+    #[test]
+    fn uneven_jobs_get_stolen() {
+        // one long job pinned on worker 0's deque, many short ones behind
+        // it; with 4 workers, the short ones must not wait for the long.
+        let jobs: Vec<_> = (0..32usize)
+            .map(|i| {
+                move || {
+                    let spins = if i == 0 { 2_000_000u64 } else { 1_000 };
+                    let mut acc = 0u64;
+                    for k in 0..spins {
+                        acc = acc.wrapping_mul(6364136223846793005)
+                            .wrapping_add(k);
+                    }
+                    Ok(std::hint::black_box(acc) as usize ^ i)
+                }
+            })
+            .collect();
+        let (out, report) = run_jobs(Parallelism::new(4), jobs).unwrap();
+        assert_eq!(out.len(), 32);
+        // 32 jobs round-robin over 4 workers = 8 each; worker 0 is busy
+        // with the long job, so some of its queue must have been stolen.
+        assert!(report.steals > 0, "expected steals, got {report:?}");
+    }
+
+    #[test]
+    fn merge_accumulates_across_waves() {
+        let mut total = PoolReport::default();
+        for _ in 0..3 {
+            let jobs: Vec<_> = (0..4usize).map(|i| move || Ok(i)).collect();
+            let (_, r) = run_jobs(Parallelism::new(2), jobs).unwrap();
+            total.merge(&r);
+        }
+        assert_eq!(total.jobs, 12);
+        assert_eq!(total.workers, 2);
+        assert_eq!(total.worker_jobs.iter().sum::<usize>(), 12);
+        assert_eq!(total.worker_busy_secs.len(), 2);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let jobs: Vec<_> = (0..16usize).map(|i| move || Ok(i)).collect();
+        let (_, report) = run_jobs(Parallelism::new(4), jobs).unwrap();
+        let u = report.utilization();
+        assert!((0.0..=1.0 + 1e-9).contains(&u), "utilization {u}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Topological wave scheduler for dependent job graphs (DESIGN.md §5).
+//!
+//! GENIE-M's block reconstruction is a dependency graph: with
+//! `refresh_student` on, block b reads activations from the quantized
+//! prefix, so b depends on b-1 (a chain); with it off, every block is
+//! independent given the teacher's boundary activations. [`waves`] turns
+//! any such DAG into an ordered list of waves — within a wave, jobs are
+//! mutually independent and run concurrently on the pool; between waves
+//! there is a barrier where results merge back into shared state.
+
+/// Dependency list of a sequential chain: job i depends on job i-1.
+pub fn chain_deps(n: usize) -> Vec<Vec<usize>> {
+    (0..n).map(|i| if i == 0 { vec![] } else { vec![i - 1] }).collect()
+}
+
+/// Dependency list of n fully independent jobs.
+pub fn independent_deps(n: usize) -> Vec<Vec<usize>> {
+    vec![Vec::new(); n]
+}
+
+/// Partition jobs into topological waves. `deps[i]` lists the jobs that
+/// must complete before job i may start. Wave k holds every job whose
+/// dependencies are all in waves < k, in ascending index order (a
+/// deterministic schedule). Panics on a dependency cycle or an
+/// out-of-range dependency — both are programmer errors in the graph
+/// construction, not runtime conditions.
+pub fn waves(deps: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let n = deps.len();
+    for (i, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            assert!(d < n, "waves: job {i} depends on out-of-range {d}");
+        }
+    }
+    let mut done = vec![false; n];
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    let mut placed = 0;
+    while placed < n {
+        let wave: Vec<usize> = (0..n)
+            .filter(|&i| !done[i] && deps[i].iter().all(|&d| done[d]))
+            .collect();
+        assert!(!wave.is_empty(), "waves: dependency cycle");
+        for &i in &wave {
+            done[i] = true;
+        }
+        placed += wave.len();
+        out.push(wave);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_is_singleton_waves() {
+        let w = waves(&chain_deps(4));
+        assert_eq!(w, vec![vec![0], vec![1], vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn independent_is_one_wave() {
+        let w = waves(&independent_deps(5));
+        assert_eq!(w, vec![vec![0, 1, 2, 3, 4]]);
+    }
+
+    #[test]
+    fn diamond_gates_on_both_parents() {
+        // 0 -> {1, 2} -> 3
+        let deps = vec![vec![], vec![0], vec![0], vec![1, 2]];
+        let w = waves(&deps);
+        assert_eq!(w, vec![vec![0], vec![1, 2], vec![3]]);
+    }
+
+    #[test]
+    fn empty_graph_is_no_waves() {
+        assert!(waves(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_panics() {
+        waves(&[vec![1], vec![0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-range")]
+    fn bad_dep_panics() {
+        waves(&[vec![7]]);
+    }
+}

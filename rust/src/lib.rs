@@ -11,6 +11,7 @@
 
 pub mod tensor;
 pub mod store;
+pub mod exec;
 pub mod runtime;
 pub mod quant;
 pub mod schedule;

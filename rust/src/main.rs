@@ -9,7 +9,10 @@
 //!   fsq       --model M [k=v ...]      few-shot (real-data) GENIE-M
 //!   experiments --exp ID [k=v ...]     paper table/figure harnesses
 //!
-//! Config overrides are `key=value` (see coordinator::config).
+//! Config overrides are `key=value` (see coordinator::config); notably
+//! `workers=K` sizes the exec worker pool (0 = one per hardware thread)
+//! without changing any result bit — parallel phases are deterministic in
+//! the seed alone (DESIGN.md §5).
 
 use anyhow::{bail, Result};
 
@@ -77,9 +80,11 @@ fn usage() {
         "genie — GENIE zero-shot quantization (rust+JAX+Pallas reproduction)\n\
          usage: genie <info|pretrain|eval|distill|zsq|fsq|experiments>\n\
                 [--model M] [--artifacts DIR] [--exp ID] [key=value ...]\n\
-         keys: wbits abits seed pretrain.{{steps,lr}}\n\
+         keys: wbits abits seed workers pretrain.{{steps,lr}}\n\
                distill.{{mode,swing,samples,steps,lr_g,lr_z}}\n\
-               quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}"
+               quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}\n\
+         workers=K runs distill shards, quant blocks and eval batches on\n\
+         K pool workers (0 = auto); results are bit-identical for any K"
     );
 }
 
@@ -95,6 +100,11 @@ fn setup<'a>(
 fn info(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
     println!("platform: {}", rt.platform());
+    println!(
+        "workers: {} configured ({} hardware threads)",
+        cfg.par.resolve(),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
     let dir = std::path::Path::new(&cfg.artifacts);
     if !dir.exists() {
         println!("no artifacts at {dir:?} — run `make artifacts`");
@@ -129,7 +139,7 @@ fn cmd_pretrain(cfg: &RunConfig) -> Result<()> {
     std::fs::create_dir_all(runs)?;
     let ckpt = runs.join(format!("teacher_{}.bin", cfg.model));
     teacher.save(&ckpt)?;
-    let acc = coordinator::eval_fp32(&mrt, &teacher, &dataset)?;
+    let acc = coordinator::eval_fp32_par(&mrt, &teacher, &dataset, cfg.par)?;
     println!("teacher saved to {ckpt:?}; FP32 top-1 {:.2}%", acc * 100.0);
     metrics.flush()
 }
@@ -154,7 +164,7 @@ fn cmd_eval(cfg: &RunConfig) -> Result<()> {
     let (mrt, dataset) = setup(&rt, cfg)?;
     let mut metrics = Metrics::new();
     let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
-    let acc = coordinator::eval_fp32(&mrt, &teacher, &dataset)?;
+    let acc = coordinator::eval_fp32_par(&mrt, &teacher, &dataset, cfg.par)?;
     println!("{}: FP32 top-1 {:.2}%", cfg.model, acc * 100.0);
     Ok(())
 }

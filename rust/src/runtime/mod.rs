@@ -6,14 +6,19 @@
 //! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
 //! instruction ids, sidestepping the 64-bit-id protos jax >= 0.5 emits
 //! which xla_extension 0.5.1 rejects.
+//!
+//! `Runtime` is `Sync`: the executable cache and dispatch stats sit behind
+//! mutexes so one runtime (one PJRT client, one compile cache) can be
+//! shared by every worker of the exec pool (DESIGN.md §5). Entry handles
+//! are `Arc`s; `call` takes `&self` and only locks around cache/stat
+//! bookkeeping, never across an execute.
 
 pub mod json;
 pub mod manifest;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -37,11 +42,12 @@ pub struct DispatchStats {
     pub total_secs: f64,
 }
 
-/// PJRT CPU runtime with a compile-once executable cache.
+/// PJRT CPU runtime with a compile-once executable cache. `Sync`: safe to
+/// share across the exec pool's worker threads.
 pub struct Runtime {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<LoadedEntry>>>,
-    stats: RefCell<HashMap<String, DispatchStats>>,
+    cache: Mutex<HashMap<String, Arc<LoadedEntry>>>,
+    stats: Mutex<HashMap<String, DispatchStats>>,
 }
 
 impl Runtime {
@@ -49,8 +55,8 @@ impl Runtime {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         Ok(Runtime {
             client,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
         })
     }
 
@@ -58,17 +64,20 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    /// Load + compile an entrypoint (cached by path).
+    /// Load + compile an entrypoint (cached by path). The cache lock is
+    /// held across the compile so concurrent workers asking for the same
+    /// entry compile it exactly once and the rest wait for the `Arc`.
     pub fn entry(
         &self,
         model_dir: impl AsRef<Path>,
         manifest: &Manifest,
         name: &str,
-    ) -> Result<Rc<LoadedEntry>> {
+    ) -> Result<Arc<LoadedEntry>> {
         let spec = manifest.entry(name)?;
         let path: PathBuf = model_dir.as_ref().join(&spec.file);
         let key = path.to_string_lossy().to_string();
-        if let Some(e) = self.cache.borrow().get(&key) {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(&key) {
             return Ok(e.clone());
         }
         let proto = xla::HloModuleProto::from_text_file(
@@ -80,12 +89,12 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compile {name}"))?;
-        let entry = Rc::new(LoadedEntry {
+        let entry = Arc::new(LoadedEntry {
             name: name.to_string(),
             spec: spec.clone(),
             exe,
         });
-        self.cache.borrow_mut().insert(key, entry.clone());
+        cache.insert(key, entry.clone());
         Ok(entry)
     }
 
@@ -134,7 +143,7 @@ impl Runtime {
             store.insert(name, t);
         }
         let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         let s = stats.entry(entry.name.clone()).or_default();
         s.calls += 1;
         s.total_secs += dt;
@@ -142,11 +151,11 @@ impl Runtime {
     }
 
     pub fn dispatch_stats(&self) -> HashMap<String, DispatchStats> {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     pub fn reset_stats(&self) {
-        self.stats.borrow_mut().clear();
+        self.stats.lock().unwrap().clear();
     }
 }
 
@@ -209,7 +218,7 @@ impl<'a> ModelRt<'a> {
         Ok(ModelRt { rt, dir, manifest })
     }
 
-    pub fn entry(&self, name: &str) -> Result<Rc<LoadedEntry>> {
+    pub fn entry(&self, name: &str) -> Result<Arc<LoadedEntry>> {
         self.rt.entry(&self.dir, &self.manifest, name)
     }
 
@@ -225,5 +234,20 @@ impl<'a> ModelRt<'a> {
     /// Load init.bin (FP32 params + BN state + generator init).
     pub fn init_store(&self) -> Result<Store> {
         Store::load(self.dir.join("init.bin"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exec pool shares one Runtime across worker threads; keep the
+    /// marker bounds enforced at compile time.
+    #[test]
+    fn runtime_is_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<Runtime>();
+        check::<LoadedEntry>();
+        check::<ModelRt<'static>>();
     }
 }

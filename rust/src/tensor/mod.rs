@@ -169,22 +169,46 @@ impl Tensor {
         }
     }
 
-    /// Concatenate along axis 0. All tensors must agree on trailing dims.
+    /// Concatenate along axis 0. All tensors must agree on trailing dims
+    /// and dtype; like [`gather_rows`](Tensor::gather_rows) this is
+    /// dtype-generic rather than f32-only.
     pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
         assert!(!parts.is_empty());
         let tail = &parts[0].shape[1..];
+        let dt = parts[0].dtype();
         let mut total = 0;
         for p in parts {
             assert_eq!(&p.shape[1..], tail, "concat_rows: trailing dims differ");
+            assert_eq!(p.dtype(), dt, "concat_rows: dtypes differ");
             total += p.shape[0];
         }
         let mut shape = parts[0].shape.clone();
         shape[0] = total;
-        let mut out = Vec::with_capacity(shape.iter().product());
-        for p in parts {
-            out.extend_from_slice(p.as_f32());
-        }
-        Tensor { shape, data: Data::F32(out) }
+        let n: usize = shape.iter().product();
+        let data = match dt {
+            DType::F32 => {
+                let mut out = Vec::with_capacity(n);
+                for p in parts {
+                    out.extend_from_slice(p.as_f32());
+                }
+                Data::F32(out)
+            }
+            DType::I32 => {
+                let mut out = Vec::with_capacity(n);
+                for p in parts {
+                    out.extend_from_slice(p.as_i32());
+                }
+                Data::I32(out)
+            }
+            DType::U32 => {
+                let mut out = Vec::with_capacity(n);
+                for p in parts {
+                    out.extend_from_slice(p.as_u32());
+                }
+                Data::U32(out)
+            }
+        };
+        Tensor { shape, data }
     }
 
     /// First `n` rows of a [N, ...] tensor.
@@ -232,6 +256,30 @@ mod tests {
         let c = Tensor::concat_rows(&[&a, &b]);
         assert_eq!(c.shape, vec![3, 2]);
         assert_eq!(c.as_f32(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn concat_rows_is_dtype_generic() {
+        // regression: this used to panic via as_f32() on non-f32 inputs
+        let a = Tensor::from_i32(&[1, 2], vec![1, 2]);
+        let b = Tensor::from_i32(&[2, 2], vec![3, 4, 5, 6]);
+        let c = Tensor::concat_rows(&[&a, &b]);
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.as_i32(), &[1, 2, 3, 4, 5, 6]);
+
+        let u = Tensor::from_u32(&[1, 2], vec![7, 8]);
+        let v = Tensor::from_u32(&[1, 2], vec![9, 10]);
+        let w = Tensor::concat_rows(&[&u, &v]);
+        assert_eq!(w.dtype(), DType::U32);
+        assert_eq!(w.as_u32(), &[7, 8, 9, 10]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dtypes differ")]
+    fn concat_rows_rejects_mixed_dtypes() {
+        let a = Tensor::from_f32(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_i32(&[1, 2], vec![3, 4]);
+        Tensor::concat_rows(&[&a, &b]);
     }
 
     #[test]

@@ -19,6 +19,23 @@ impl Pcg32 {
         r
     }
 
+    /// An independent stream keyed by `(seed, shard)` — the reproducibility
+    /// primitive of the exec worker pool (DESIGN.md §5). PCG32 selects its
+    /// sequence by the (odd) increment, so hashing the shard id into both
+    /// the increment and the initial state yields streams that are
+    /// deterministic in `(seed, shard)` and independent across shards,
+    /// no matter which worker thread or execution order consumes them.
+    pub fn new_stream(seed: u64, shard: u64) -> Self {
+        let mix = splitmix64(shard.wrapping_add(0x9e3779b97f4a7c15));
+        let mut r = Pcg32 { state: 0, inc: (mix << 1) | 1 };
+        r.next_u32();
+        r.state = r
+            .state
+            .wrapping_add(0x853c49e6748fea9b ^ seed ^ splitmix64(mix ^ seed));
+        r.next_u32();
+        r
+    }
+
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old
@@ -57,6 +74,14 @@ impl Pcg32 {
     pub fn key_pair(&mut self) -> (u32, u32) {
         (self.next_u32(), self.next_u32())
     }
+}
+
+/// SplitMix64 finalizer: a cheap, well-mixed u64 -> u64 hash.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
 }
 
 #[cfg(test)]
@@ -108,6 +133,41 @@ mod tests {
             / xs.len() as f32;
         assert!(m.abs() < 0.03, "mean {m}");
         assert!((v - 1.0).abs() < 0.05, "var {v}");
+    }
+
+    #[test]
+    fn stream_deterministic_in_seed_and_shard() {
+        let mut a = Pcg32::new_stream(7, 3);
+        let mut b = Pcg32::new_stream(7, 3);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ_by_shard_and_seed() {
+        let draw = |seed, shard| {
+            let mut r = Pcg32::new_stream(seed, shard);
+            (0..16).map(|_| r.next_u32()).collect::<Vec<_>>()
+        };
+        assert_ne!(draw(7, 0), draw(7, 1));
+        assert_ne!(draw(7, 1), draw(7, 2));
+        assert_ne!(draw(7, 0), draw(8, 0));
+        // and a stream is not the plain seeded sequence shifted
+        let mut plain = Pcg32::new(7);
+        let plain16: Vec<u32> = (0..16).map(|_| plain.next_u32()).collect();
+        assert_ne!(draw(7, 0), plain16);
+    }
+
+    #[test]
+    fn stream_prefixes_do_not_collide() {
+        // 64 shards x 8 draws: all 8-draw prefixes pairwise distinct.
+        let mut seen = std::collections::HashSet::new();
+        for shard in 0..64u64 {
+            let mut r = Pcg32::new_stream(99, shard);
+            let prefix: Vec<u32> = (0..8).map(|_| r.next_u32()).collect();
+            assert!(seen.insert(prefix), "shard {shard} prefix collided");
+        }
     }
 
     #[test]

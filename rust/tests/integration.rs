@@ -7,6 +7,7 @@ use genie::coordinator::{
     distill, eval_fp32, eval_quantized, pretrain, quantize, DistillCfg,
     DistillMode, Metrics, PretrainCfg, QuantCfg,
 };
+use genie::exec::Parallelism;
 use genie::data::Dataset;
 use genie::quant::{init_qstate, BitConfig};
 use genie::runtime::{ModelRt, Runtime};
@@ -148,6 +149,78 @@ fn distill_deterministic_from_seed() {
         dcfg2.seed = 78;
         let c = distill(mrt, &teacher, &dcfg2, &mut metrics).unwrap();
         assert_ne!(a.images, c.images, "different seed must differ");
+    });
+}
+
+/// The acceptance contract of the exec engine over real artifacts: the
+/// zsq phases at workers=4 reproduce workers=1 bit-for-bit — synthetic
+/// images, optimized quant state, and quantized accuracy.
+#[test]
+fn zsq_workers_4_bit_identical_to_workers_1() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt, dataset,
+            &PretrainCfg { steps: 40, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+
+        let dcfg = |w: usize| DistillCfg {
+            samples: 64,
+            steps: 10,
+            seed: 5,
+            par: Parallelism::new(w),
+            ..Default::default()
+        };
+        let img1 = distill(mrt, &teacher, &dcfg(1), &mut metrics).unwrap();
+        let img4 = distill(mrt, &teacher, &dcfg(4), &mut metrics).unwrap();
+        assert_eq!(img1.images, img4.images, "synthetic data diverged");
+
+        let qcfg = |w: usize| QuantCfg {
+            steps_per_block: 15,
+            seed: 5,
+            par: Parallelism::new(w),
+            ..Default::default()
+        };
+        let qs1 =
+            quantize(mrt, &teacher, &img1.images, &qcfg(1), &mut metrics)
+                .unwrap();
+        let qs4 =
+            quantize(mrt, &teacher, &img4.images, &qcfg(4), &mut metrics)
+                .unwrap();
+        assert_eq!(qs1.names(), qs4.names());
+        for n in qs1.names() {
+            assert_eq!(
+                qs1.get(n).unwrap(),
+                qs4.get(n).unwrap(),
+                "quant state '{n}' diverged"
+            );
+        }
+
+        let a1 = eval_quantized(mrt, &teacher, &qs1, dataset).unwrap();
+        let a4 = genie::coordinator::eval_quantized_par(
+            mrt, &teacher, &qs4, dataset, Parallelism::new(4),
+        )
+        .unwrap();
+        assert_eq!(a1, a4, "quantized accuracy diverged");
+
+        // independent-block schedule (refresh_student=false) is also
+        // worker-count invariant
+        let qcfg_indep = |w: usize| QuantCfg {
+            steps_per_block: 15,
+            seed: 6,
+            refresh_student: false,
+            par: Parallelism::new(w),
+            ..Default::default()
+        };
+        let qi1 = quantize(mrt, &teacher, &img1.images, &qcfg_indep(1),
+                           &mut metrics).unwrap();
+        let qi4 = quantize(mrt, &teacher, &img1.images, &qcfg_indep(4),
+                           &mut metrics).unwrap();
+        for n in qi1.names() {
+            assert_eq!(qi1.get(n).unwrap(), qi4.get(n).unwrap(), "{n}");
+        }
     });
 }
 

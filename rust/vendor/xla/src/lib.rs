@@ -1,0 +1,258 @@
+//! Offline stub of the `xla` crate (xla-rs 0.1.6, PJRT via xla_extension
+//! 0.5.1) — just the surface genie's runtime touches (see rust/Cargo.toml
+//! for the swap-in-the-real-crate instructions).
+//!
+//! What is real here: [`Literal`] construction, reshape, readback and
+//! tuple decomposition — the host-side marshalling genie benches and
+//! tests exercise. What is stubbed: compilation and execution, which
+//! need the xla_extension C++ library and return [`Error::StubBackend`]
+//! in this build. Artifact-gated tests and benches detect the missing
+//! `artifacts/` directory and skip before ever reaching those calls.
+//!
+//! Every type here is plain data (`Send + Sync`), a property the exec
+//! worker pool relies on to share one `Runtime` across worker threads.
+
+use std::fmt;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Error {
+    /// Compilation/execution attempted against the offline stub.
+    StubBackend(&'static str),
+    /// Literal/shape misuse (mirrors xla-rs's error strings).
+    Invalid(String),
+    /// I/O while loading HLO text.
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::StubBackend(what) => write!(
+                f,
+                "PJRT unavailable: `{what}` needs xla_extension, but this \
+                 build links the offline xla stub (see rust/Cargo.toml)"
+            ),
+            Error::Invalid(m) => write!(f, "invalid literal op: {m}"),
+            Error::Io(m) => write!(f, "hlo io: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types the genie manifests use (public only because it appears
+/// in the `NativeType` trait signature).
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Buf {
+    fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+            Buf::U32(v) => v.len(),
+        }
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            Buf::F32(_) => "f32",
+            Buf::I32(_) => "i32",
+            Buf::U32(_) => "u32",
+        }
+    }
+}
+
+/// Conversion between rust slices and literal buffers.
+pub trait NativeType: Sized {
+    fn wrap(v: &[Self]) -> Buf;
+    fn unwrap(b: &Buf) -> Result<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn wrap(v: &[Self]) -> Buf {
+                Buf::$variant(v.to_vec())
+            }
+            fn unwrap(b: &Buf) -> Result<Vec<Self>> {
+                match b {
+                    Buf::$variant(v) => Ok(v.clone()),
+                    other => Err(Error::Invalid(format!(
+                        "to_vec::<{}> on {} literal",
+                        stringify!($t),
+                        other.type_name()
+                    ))),
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(u32, U32);
+
+/// A host-side typed, shaped value — real implementation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Buf,
+}
+
+impl Literal {
+    /// Rank-1 literal over a slice (xla-rs `Literal::vec1`).
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v) }
+    }
+
+    /// Reinterpret the shape; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Invalid(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    /// Decompose a tuple literal into its elements. The stub never
+    /// produces tuples (execution is stubbed), so a scalar/array literal
+    /// decomposes to itself — enough for marshalling round-trip tests.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Ok(vec![self])
+    }
+}
+
+/// Parsed HLO module (held as text; parsing happens in real PJRT only).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file (the genie interchange format).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+
+    pub fn module(&self) -> &HloModuleProto {
+        &self.module
+    }
+}
+
+/// PJRT client handle. Construction succeeds (so `genie info` and other
+/// host-only paths work); `compile` is where the stub stops.
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(Error::StubBackend("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::StubBackend("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::StubBackend("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn compile_is_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn types_are_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<PjRtClient>();
+        check::<PjRtLoadedExecutable>();
+        check::<PjRtBuffer>();
+        check::<Literal>();
+        check::<HloModuleProto>();
+        check::<XlaComputation>();
+    }
+}
