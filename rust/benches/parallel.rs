@@ -6,6 +6,8 @@
 //! bit-identical to the serial one before reporting throughput.
 
 use genie::exec::{chain_deps, independent_deps, run_jobs, waves, Parallelism};
+use genie::runtime::{DeviceStore, Runtime};
+use genie::store::Store;
 use genie::tensor::{Pcg32, Tensor};
 use genie::testutil::{bench_secs, report};
 
@@ -45,6 +47,18 @@ fn run_shards(par: Parallelism, n: usize) -> Vec<f64> {
         .map(|b| move || Ok(synth_shard(7, b)))
         .collect();
     run_jobs(par, jobs).unwrap().0
+}
+
+/// A device-resident shard job: alias the shared base (zero transfer),
+/// push shard-keyed learnables on top, fetch the "result" back. Returns
+/// the fetched tensor and the shard's own h2d byte count.
+fn device_shard(base: &DeviceStore<'_>, seed: u64, shard: u64) -> (Tensor, u64) {
+    let mut rng = Pcg32::new_stream(seed, shard);
+    let mut dev = base.clone();
+    dev.insert("z", &Tensor::randn(&[16, 32], &mut rng, 1.0)).unwrap();
+    dev.insert("t", &Tensor::scalar_f32(shard as f32)).unwrap();
+    let z = dev.fetch("z").unwrap();
+    (z, dev.transfer_bytes().0)
 }
 
 fn run_blocks(par: Parallelism, deps: &[Vec<usize>]) -> Vec<f64> {
@@ -104,6 +118,44 @@ fn main() {
         std::hint::black_box(run_blocks(Parallelism::new(4), &chain));
     });
     report("parallel/quant_8blocks_chained_w4", secs);
+
+    // device-store sharding (DESIGN.md §8): one uploaded base store is
+    // Arc-shared across pool workers; each shard's inserts copy-on-write
+    // onto its clone. The roundtrip arm re-uploads the base per shard —
+    // the old per-shard teacher clone — for the transfer comparison.
+    let rt = Runtime::cpu().unwrap();
+    let mut base = Store::new();
+    let mut rng = Pcg32::new(3);
+    for i in 0..16 {
+        base.insert(&format!("p{i}"), Tensor::randn(&[64, 64], &mut rng, 1.0));
+    }
+    let base_dev = rt.upload_store(&base).unwrap();
+    let base_bytes = base_dev.transfer_bytes().0;
+    let run_dev = |workers: usize| -> (Vec<Tensor>, u64) {
+        let dev = &base_dev;
+        let jobs: Vec<_> = (0..16u64)
+            .map(|b| move || Ok(device_shard(dev, 11, b)))
+            .collect();
+        let (out, _) = run_jobs(Parallelism::new(workers), jobs).unwrap();
+        let h2d: u64 = out.iter().map(|(_, x)| *x).sum();
+        (out.into_iter().map(|(t, _)| t).collect(), h2d)
+    };
+    let (reference, shard_h2d) = run_dev(1);
+    println!(
+        "parallel/device_shards transfer: {} B shared upload + {} B \
+         shard-local vs {} B if each of 16 shards re-uploaded the base",
+        base_bytes,
+        shard_h2d,
+        base_bytes * 16 + shard_h2d
+    );
+    for &w in &WORKER_SWEEP {
+        assert_eq!(run_dev(w).0, reference,
+                   "device shards must be worker-count invariant");
+        let secs = bench_secs(1, 5, || {
+            std::hint::black_box(run_dev(w));
+        });
+        report(&format!("parallel/device_16shards_w{w}"), secs);
+    }
 
     // real graphs, artifact-gated like benches/pipeline.rs
     if !std::path::Path::new("artifacts/toy/manifest.json").exists() {

@@ -16,16 +16,22 @@
 //! on the exec pool (DESIGN.md §5): shard b draws all of its randomness
 //! from `Pcg32::new_stream(seed, b)`, so the synthetic set is bit-identical
 //! for any worker count.
+//!
+//! Device residency (DESIGN.md §8): the teacher is uploaded once and its
+//! buffers are `Arc`-shared by every shard; each shard's step loop runs on
+//! a [`DeviceStore`], so per-step traffic is the schedule scalars up and
+//! the loss down — the synthetic images come back to the host exactly
+//! once, at the `gen_images` phase boundary.
 
 use anyhow::Result;
 
 use crate::exec::{run_jobs, Parallelism};
-use crate::runtime::ModelRt;
+use crate::runtime::{DeviceStore, ModelRt};
 use crate::schedule::{ExponentialDecay, ReduceLROnPlateau};
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
 
-use super::{insert_zeros, Metrics};
+use super::Metrics;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DistillMode {
@@ -108,15 +114,19 @@ pub fn distill(
     };
 
     metrics.start("distill");
+    // one teacher upload, Arc-shared by every shard (no per-shard clone
+    // of the teacher tensors, host- or device-side)
+    let teacher_dev = mrt.upload_store(teacher)?;
+    let tdev = &teacher_dev;
     let jobs: Vec<_> = (0..n_batches)
         .map(|b| {
-            move || -> Result<(Tensor, Vec<f32>)> {
+            move || -> Result<(Tensor, Vec<f32>, (u64, u64))> {
                 let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
                 match cfg.mode {
                     DistillMode::Direct => {
-                        distill_direct(mrt, teacher, cfg, tag, &mut rng)
+                        distill_direct(mrt, tdev, cfg, tag, &mut rng)
                     }
-                    _ => distill_genie(mrt, teacher, cfg, tag, &mut rng),
+                    _ => distill_genie(mrt, tdev, cfg, tag, &mut rng),
                 }
             }
         })
@@ -128,10 +138,13 @@ pub fn distill(
     let mut parts: Vec<Tensor> = Vec::new();
     let mut traces: Vec<Vec<f32>> = Vec::new();
     let mut final_losses = Vec::new();
-    for (b, (imgs, trace)) in shards.into_iter().enumerate() {
+    let (mut h2d, mut d2h) = teacher_dev.transfer_bytes();
+    for (b, (imgs, trace, xfer)) in shards.into_iter().enumerate() {
         final_losses.push(*trace.last().unwrap());
         traces.push(trace);
         parts.push(imgs);
+        h2d += xfer.0;
+        d2h += xfer.1;
         if b == 0 || b == n_batches - 1 {
             println!(
                 "distill[{}/{mode_name}/{tag}] shard {}/{}: loss {:.3}",
@@ -142,19 +155,23 @@ pub fn distill(
             );
         }
     }
+    metrics.record_transfers("distill", cfg.steps, h2d, d2h);
 
-    // average trace across batches at each logged step
+    // average trace across batches at each logged step; the final entry
+    // lands at t == steps, which is not a multiple of log_every when
+    // log_every does not divide steps — clamp the label to the real step
     let steps_logged = traces[0].len();
     let mut loss_trace = Vec::with_capacity(steps_logged);
     for i in 0..steps_logged {
         let avg = traces.iter().map(|t| t[i]).sum::<f32>() / traces.len() as f32;
-        let step = (i + 1) * cfg.log_every.min(cfg.steps);
+        let step = ((i + 1) * cfg.log_every).min(cfg.steps);
         metrics.log(&format!("distill/{mode_name}/bns_loss"), step, avg);
         loss_trace.push((step, avg));
     }
 
     let refs: Vec<&Tensor> = parts.iter().collect();
-    let images = Tensor::concat_rows(&refs).take_rows(cfg.samples);
+    let mut images = Tensor::concat_rows(&refs);
+    images.truncate_rows(cfg.samples);
     let final_loss =
         final_losses.iter().sum::<f32>() / final_losses.len() as f32;
     let rate = metrics.throughput("distill", "images", cfg.samples, secs);
@@ -166,30 +183,36 @@ pub fn distill(
     Ok(DistillOutput { images, loss_trace, final_loss })
 }
 
-/// One generator-based shard (GENIE / GBA). Returns (images, loss trace).
+/// One generator-based shard (GENIE / GBA). Returns (images, loss trace,
+/// shard transfer bytes). The whole optimization state — generator
+/// params, Adam moments, latents — stays device-resident across steps;
+/// only `key`/`t`/`lr_*` go up and the loss comes down per step.
 fn distill_genie(
     mrt: &ModelRt,
-    teacher: &Store,
+    teacher_dev: &DeviceStore<'_>,
     cfg: &DistillCfg,
     tag: &str,
     rng: &mut Pcg32,
-) -> Result<(Tensor, Vec<f32>)> {
+) -> Result<(Tensor, Vec<f32>, (u64, u64))> {
     let m = &mrt.manifest;
     let bd = m.batch("distill");
-    let mut store = teacher.clone();
+    // shard-local view: teacher buffers shared, own learnables on top
+    let mut dev = teacher_dev.clone();
 
     // fresh generator per batch (appendix A)
     let (kh, kl) = rng.key_pair();
-    store.insert("key", Tensor::key(kh, kl));
-    mrt.call("gen_init", &mut store)?;
-    insert_zeros(&mut store, &m.gen_params, "am.");
-    insert_zeros(&mut store, &m.gen_params, "av.");
+    dev.insert("key", &Tensor::key(kh, kl))?;
+    mrt.call_device("gen_init", &mut dev)?;
+    for (name, shape) in &m.gen_params {
+        dev.insert(&format!("am.{name}"), &Tensor::zeros(shape))?;
+        dev.insert(&format!("av.{name}"), &Tensor::zeros(shape))?;
+    }
 
     // latents z ~ N(0, I), learnable (the GLO insight, section 3.1)
     let zshape = [bd, m.latent];
-    store.insert("z", Tensor::randn(&zshape, rng, 1.0));
-    store.insert("zm", Tensor::zeros(&zshape));
-    store.insert("zv", Tensor::zeros(&zshape));
+    dev.insert("z", &Tensor::randn(&zshape, rng, 1.0))?;
+    dev.insert("zm", &Tensor::zeros(&zshape))?;
+    dev.insert("zv", &Tensor::zeros(&zshape))?;
 
     let gen_sched = ExponentialDecay::new(cfg.lr_g, 0.95, 100);
     let mut z_sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
@@ -200,11 +223,11 @@ fn distill_genie(
     let mut lr_z = if lr_z_active { cfg.lr_z } else { 0.0 };
     for t in 1..=cfg.steps {
         let (kh, kl) = rng.key_pair();
-        store.insert("key", Tensor::key(kh, kl));
-        store.insert("t", Tensor::scalar_f32(t as f32));
-        store.insert("lr_g", Tensor::scalar_f32(gen_sched.lr(t - 1)));
-        store.insert("lr_z", Tensor::scalar_f32(lr_z));
-        let scalars = mrt.rt.call(&entry, &mut store)?;
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr_g", &Tensor::scalar_f32(gen_sched.lr(t - 1)))?;
+        dev.insert("lr_z", &Tensor::scalar_f32(lr_z))?;
+        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
         let loss = scalars["loss"];
         if lr_z_active {
             lr_z = z_sched.observe(loss);
@@ -213,26 +236,29 @@ fn distill_genie(
             trace.push(loss);
         }
     }
-    mrt.call("gen_images", &mut store)?;
-    Ok((store.get("images")?.clone(), trace))
+    // phase boundary: the only full-tensor download of the shard
+    mrt.call_device("gen_images", &mut dev)?;
+    let images = dev.fetch("images")?;
+    Ok((images, trace, dev.transfer_bytes()))
 }
 
-/// One direct (ZeroQ/DBA) batch: images themselves are the parameters.
+/// One direct (ZeroQ/DBA) batch: images themselves are the parameters,
+/// living on device until the final fetch.
 fn distill_direct(
     mrt: &ModelRt,
-    teacher: &Store,
+    teacher_dev: &DeviceStore<'_>,
     cfg: &DistillCfg,
     tag: &str,
     rng: &mut Pcg32,
-) -> Result<(Tensor, Vec<f32>)> {
+) -> Result<(Tensor, Vec<f32>, (u64, u64))> {
     let m = &mrt.manifest;
     let bd = m.batch("distill");
     let img = &m.image;
     let xshape = [bd, img[0], img[1], img[2]];
-    let mut store = teacher.clone();
-    store.insert("x", Tensor::randn(&xshape, rng, 1.0));
-    store.insert("xm", Tensor::zeros(&xshape));
-    store.insert("xv", Tensor::zeros(&xshape));
+    let mut dev = teacher_dev.clone();
+    dev.insert("x", &Tensor::randn(&xshape, rng, 1.0))?;
+    dev.insert("xm", &Tensor::zeros(&xshape))?;
+    dev.insert("xv", &Tensor::zeros(&xshape))?;
 
     let mut sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
     let entry = mrt.entry(&format!("distill_direct_{tag}"))?;
@@ -240,15 +266,16 @@ fn distill_direct(
     let mut lr = cfg.lr_z;
     for t in 1..=cfg.steps {
         let (kh, kl) = rng.key_pair();
-        store.insert("key", Tensor::key(kh, kl));
-        store.insert("t", Tensor::scalar_f32(t as f32));
-        store.insert("lr", Tensor::scalar_f32(lr));
-        let scalars = mrt.rt.call(&entry, &mut store)?;
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr", &Tensor::scalar_f32(lr))?;
+        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
         let loss = scalars["loss"];
         lr = sched.observe(loss);
         if t % cfg.log_every == 0 || t == cfg.steps {
             trace.push(loss);
         }
     }
-    Ok((store.get("x")?.clone(), trace))
+    let images = dev.fetch("x")?;
+    Ok((images, trace, dev.transfer_bytes()))
 }

@@ -2,11 +2,13 @@
 //! hard-quantized student (`eval_quant`) over padded fixed-size batches.
 //!
 //! The batch list is sharded into contiguous chunks across the exec pool
-//! (DESIGN.md §5): each worker chunk clones the parameter store once and
-//! streams its batches through it. Per-batch correct counts are reduced on
-//! the main thread in batch order, so the accuracy is bit-identical for
-//! any worker count. `eval_fp32` / `eval_quantized` keep the historical
-//! serial signature and delegate with [`Parallelism::SERIAL`].
+//! (DESIGN.md §5): params (+ quant state) are uploaded once and the
+//! resident buffers are shared by every worker chunk; per batch only the
+//! images go up and the logits come down (DESIGN.md §8). Per-batch
+//! correct counts are reduced on the main thread in batch order, so the
+//! accuracy is bit-identical for any worker count. `eval_fp32` /
+//! `eval_quantized` keep the historical serial signature and delegate
+//! with [`Parallelism::SERIAL`].
 
 use anyhow::Result;
 
@@ -28,7 +30,19 @@ pub fn eval_fp32_par(
     dataset: &Dataset,
     par: Parallelism,
 ) -> Result<f32> {
-    sharded_eval(mrt, teacher, None, dataset, par, "eval_batch")
+    sharded_eval(mrt, teacher, None, dataset, par, "eval_batch", None)
+}
+
+/// [`eval_fp32_par`] that also records the phase's transfer-volume
+/// series (`eval/transfer/*`) into `metrics`.
+pub fn eval_fp32_metered(
+    mrt: &ModelRt,
+    teacher: &Store,
+    dataset: &Dataset,
+    par: Parallelism,
+    metrics: &mut crate::coordinator::Metrics,
+) -> Result<f32> {
+    sharded_eval(mrt, teacher, None, dataset, par, "eval_batch", Some(metrics))
 }
 
 /// Hard-quantized student top-1 on the test set (serial).
@@ -49,11 +63,29 @@ pub fn eval_quantized_par(
     dataset: &Dataset,
     par: Parallelism,
 ) -> Result<f32> {
-    sharded_eval(mrt, teacher, Some(qstate), dataset, par, "eval_quant")
+    sharded_eval(mrt, teacher, Some(qstate), dataset, par, "eval_quant", None)
+}
+
+/// [`eval_quantized_par`] that also records the phase's transfer-volume
+/// series (`eval/transfer/*`) into `metrics`.
+pub fn eval_quantized_metered(
+    mrt: &ModelRt,
+    teacher: &Store,
+    qstate: &Store,
+    dataset: &Dataset,
+    par: Parallelism,
+    metrics: &mut crate::coordinator::Metrics,
+) -> Result<f32> {
+    sharded_eval(
+        mrt, teacher, Some(qstate), dataset, par, "eval_quant", Some(metrics),
+    )
 }
 
 /// Shared driver: chunk the eval batches, run chunks as pool jobs, reduce
-/// per-batch (correct, valid) pairs in batch order.
+/// per-batch (correct, valid) pairs in batch order. With `metrics`, the
+/// base upload plus every chunk's transfer bytes land in the
+/// `eval/transfer/*` series.
+#[allow(clippy::too_many_arguments)]
 fn sharded_eval(
     mrt: &ModelRt,
     teacher: &Store,
@@ -61,6 +93,7 @@ fn sharded_eval(
     dataset: &Dataset,
     par: Parallelism,
     entry_name: &str,
+    metrics: Option<&mut crate::coordinator::Metrics>,
 ) -> Result<f32> {
     let bs = mrt.manifest.batch("eval");
     let batches = dataset.eval_batches(bs);
@@ -74,33 +107,46 @@ fn sharded_eval(
         chunks.push(it.by_ref().take(chunk_len).collect());
     }
 
+    // one upload of params (+ quant state), shared by every chunk
+    let mut base = mrt.upload_store(teacher)?;
+    if let Some(q) = qstate {
+        base.absorb(q)?;
+    }
+    let base = &base;
+
     let jobs: Vec<_> = chunks
         .into_iter()
         .map(|chunk| {
-            move || -> Result<Vec<(f64, usize)>> {
+            move || -> Result<(Vec<(f64, usize)>, (u64, u64))> {
                 let entry = mrt.entry(entry_name)?;
-                let mut store = teacher.clone();
-                if let Some(q) = qstate {
-                    store.absorb(q);
-                }
+                let mut dev = base.clone();
                 let mut out = Vec::with_capacity(chunk.len());
                 for (x, y, valid) in chunk {
-                    store.insert("x", x);
-                    mrt.rt.call(&entry, &mut store)?;
-                    let acc = accuracy(store.get("logits")?, &y, valid);
+                    dev.insert("x", &x)?;
+                    mrt.rt.call_device(&entry, &mut dev)?;
+                    let logits = dev.fetch("logits")?;
+                    let acc = accuracy(&logits, &y, valid);
                     out.push((acc as f64 * valid as f64, valid));
                 }
-                Ok(out)
+                Ok((out, dev.transfer_bytes()))
             }
         })
         .collect();
     let (parts, _pool) = run_jobs(par, jobs)?;
 
+    let (mut h2d, mut d2h) = base.transfer_bytes();
     let mut correct = 0.0f64;
     let mut total = 0usize;
-    for (c, v) in parts.into_iter().flatten() {
-        correct += c;
-        total += v;
+    for (chunk, xfer) in parts {
+        h2d += xfer.0;
+        d2h += xfer.1;
+        for (c, v) in chunk {
+            correct += c;
+            total += v;
+        }
+    }
+    if let Some(metrics) = metrics {
+        metrics.record_transfers("eval", n_batches, h2d, d2h);
     }
     anyhow::ensure!(total > 0, "eval: empty test set");
     Ok((correct / total as f64) as f32)

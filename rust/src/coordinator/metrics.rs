@@ -86,6 +86,23 @@ impl Metrics {
         );
     }
 
+    /// Log a host↔device transfer-volume sample for a phase
+    /// (`<phase>/transfer/{h2d,d2h}_bytes`, step = the step/sample count
+    /// the bytes were accumulated over). Fed by the `DeviceStore`
+    /// counters (DESIGN.md §8); note the series values are f32 like every
+    /// metric, so totals above 2^24 bytes round — the exact u64 counters
+    /// live on `DeviceStore`/`DispatchStats`, not here.
+    pub fn record_transfers(
+        &mut self,
+        phase: &str,
+        step: usize,
+        h2d: u64,
+        d2h: u64,
+    ) {
+        self.log(&format!("{phase}/transfer/h2d_bytes"), step, h2d as f32);
+        self.log(&format!("{phase}/transfer/d2h_bytes"), step, d2h as f32);
+    }
+
     /// Log a throughput sample (`<phase>/<unit>_per_sec`, step = count)
     /// and return the rate for printing.
     pub fn throughput(
@@ -165,6 +182,18 @@ mod tests {
         assert_eq!(m.last("distill/pool/steals"), Some(2.0));
         let u = m.last("distill/pool/utilization").unwrap();
         assert!((u - 0.7).abs() < 1e-6, "utilization {u}");
+    }
+
+    #[test]
+    fn record_transfers_logs_both_directions() {
+        let mut m = Metrics::new();
+        m.record_transfers("distill", 200, 4096, 800);
+        assert_eq!(m.last("distill/transfer/h2d_bytes"), Some(4096.0));
+        assert_eq!(m.last("distill/transfer/d2h_bytes"), Some(800.0));
+        assert_eq!(
+            m.series("distill/transfer/h2d_bytes").unwrap()[0].0,
+            200
+        );
     }
 
     #[test]

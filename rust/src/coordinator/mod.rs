@@ -25,7 +25,8 @@ pub mod pipeline;
 pub use config::RunConfig;
 pub use distill::{distill, DistillCfg, DistillMode, DistillOutput};
 pub use evaluate::{
-    eval_fp32, eval_fp32_par, eval_quantized, eval_quantized_par,
+    eval_fp32, eval_fp32_metered, eval_fp32_par, eval_quantized,
+    eval_quantized_metered, eval_quantized_par,
 };
 pub use metrics::Metrics;
 pub use pipeline::{fsq, zsq, PipelineOutcome};
@@ -44,11 +45,11 @@ pub fn insert_zeros(store: &mut Store, specs: &[NamedShape], prefix: &str) {
     }
 }
 
-/// Subset of a store by exact names.
+/// Subset of a store by exact names (shares the tensors, copies nothing).
 pub fn subset(store: &Store, names: impl IntoIterator<Item = String>) -> Store {
     let mut out = Store::new();
     for n in names {
-        out.insert(&n, store.get(&n).unwrap().clone());
+        out.insert_shared(&n, store.get_shared(&n).unwrap());
     }
     out
 }

@@ -13,8 +13,8 @@ use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
 
 use super::{
-    distill, eval_fp32_par, eval_quantized_par, quantize, DistillCfg,
-    Metrics, QuantCfg,
+    distill, eval_fp32_metered, eval_quantized_metered, eval_quantized_par,
+    quantize, DistillCfg, Metrics, QuantCfg,
 };
 
 #[derive(Debug, Clone)]
@@ -51,8 +51,10 @@ pub fn zsq(
 ) -> Result<PipelineOutcome> {
     let out = distill(mrt, teacher, dcfg, metrics)?;
     let qstate = quantize(mrt, teacher, &out.images, qcfg, metrics)?;
-    let fp_acc = eval_fp32_par(mrt, teacher, dataset, qcfg.par)?;
-    let q_acc = eval_quantized_par(mrt, teacher, &qstate, dataset, qcfg.par)?;
+    let fp_acc = eval_fp32_metered(mrt, teacher, dataset, qcfg.par, metrics)?;
+    let q_acc = eval_quantized_metered(
+        mrt, teacher, &qstate, dataset, qcfg.par, metrics,
+    )?;
     Ok(PipelineOutcome {
         model: mrt.manifest.model.clone(),
         fp_acc,
@@ -75,8 +77,10 @@ pub fn fsq(
     let mut rng = Pcg32::new(qcfg.seed ^ 0x5eed);
     let (calib, _) = dataset.calibration(&mut rng, samples);
     let qstate = quantize(mrt, teacher, &calib, qcfg, metrics)?;
-    let fp_acc = eval_fp32_par(mrt, teacher, dataset, qcfg.par)?;
-    let q_acc = eval_quantized_par(mrt, teacher, &qstate, dataset, qcfg.par)?;
+    let fp_acc = eval_fp32_metered(mrt, teacher, dataset, qcfg.par, metrics)?;
+    let q_acc = eval_quantized_metered(
+        mrt, teacher, &qstate, dataset, qcfg.par, metrics,
+    )?;
     Ok(PipelineOutcome {
         model: mrt.manifest.model.clone(),
         fp_acc,

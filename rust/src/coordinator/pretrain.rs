@@ -3,6 +3,12 @@
 //! graph (Adam + BN running-stat updates baked in) with shuffled batches
 //! from the procedural dataset; cosine-annealed LR; checkpoints the
 //! params+BN store.
+//!
+//! The step loop is device-resident (DESIGN.md §8): params, BN state and
+//! Adam moments are uploaded once and carried as live buffers across
+//! `train_step` calls; per step only the fresh data batch and schedule
+//! scalars go up and the loss/accuracy scalars come down. The trained
+//! teacher is materialized on the host once, at the end of the phase.
 
 use anyhow::Result;
 
@@ -12,7 +18,7 @@ use crate::schedule::CosineAnnealing;
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
 
-use super::{insert_zeros, subset, teacher_names, Metrics};
+use super::{insert_zeros, teacher_names, Metrics};
 
 #[derive(Debug, Clone)]
 pub struct PretrainCfg {
@@ -41,24 +47,34 @@ pub fn pretrain(
     let mut rng = Pcg32::new(cfg.seed);
     let sched = CosineAnnealing::new(cfg.lr, cfg.steps);
 
-    let mut store = mrt.init_store()?;
-    insert_zeros(&mut store, &m.params, "am.");
-    insert_zeros(&mut store, &m.params, "av.");
+    let mut init = mrt.init_store()?;
+    insert_zeros(&mut init, &m.params, "am.");
+    insert_zeros(&mut init, &m.params, "av.");
 
     metrics.start("pretrain");
     let entry = mrt.entry("train_step")?;
+    // one bulk upload; params/BN/moments then live on device
+    let mut dev = mrt.upload_store(&init)?;
     for t in 1..=cfg.steps {
         let (x, y) = dataset.train_batch(&mut rng, bs);
-        store.insert("x", x);
-        store.insert("y", Tensor::from_i32(&[bs], y));
-        store.insert("t", Tensor::scalar_f32(t as f32));
-        store.insert("lr", Tensor::scalar_f32(sched.lr(t - 1)));
-        let scalars = mrt.rt.call(&entry, &mut store)?;
+        dev.insert("x", &x)?;
+        dev.insert("y", &Tensor::from_i32(&[bs], y))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr", &Tensor::scalar_f32(sched.lr(t - 1)))?;
+        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
         if t % cfg.log_every == 0 || t == cfg.steps {
             metrics.log("pretrain/loss", t, scalars["loss"]);
             metrics.log("pretrain/acc", t, scalars["acc"]);
         }
     }
+    // phase boundary: fetch exactly the teacher tensors, once
+    let mut teacher = Store::new();
+    for n in teacher_names(m) {
+        let t = dev.fetch(&n)?;
+        teacher.insert(&n, t);
+    }
+    let (h2d, d2h) = dev.transfer_bytes();
+    metrics.record_transfers("pretrain", cfg.steps, h2d, d2h);
     let secs = metrics.stop("pretrain");
     println!(
         "pretrain[{}]: {} steps in {:.1}s  loss={:.3} acc={:.3}",
@@ -68,7 +84,7 @@ pub fn pretrain(
         metrics.last("pretrain/loss").unwrap_or(f32::NAN),
         metrics.last("pretrain/acc").unwrap_or(f32::NAN)
     );
-    Ok(subset(&store, teacher_names(m)))
+    Ok(teacher)
 }
 
 /// Load a cached checkpoint if present, otherwise pretrain and cache it.

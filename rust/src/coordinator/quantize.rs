@@ -21,13 +21,20 @@
 //! teacher's boundaries). Block b draws all randomness from
 //! `Pcg32::new_stream(seed, b)`, so the optimized quant state is
 //! bit-identical for any worker count.
+//!
+//! Device residency (DESIGN.md §8): the teacher is uploaded once and
+//! shared by every collection chunk and block job. A block stages its
+//! reconstruction inputs (`x_in.{i}` / `y_ref.{i}`) on device up front,
+//! so the thousands-step Adam loop moves only schedule scalars up and
+//! the `rec` loss down — each step's batch pick is a zero-byte buffer
+//! alias, and only the block's optimized learnables return to the host.
 
 use anyhow::Result;
 
 use crate::data::image_batches;
 use crate::exec::{chain_deps, independent_deps, run_jobs, waves, Parallelism};
 use crate::quant::{init_qstate, set_act_steps, BitConfig};
-use crate::runtime::ModelRt;
+use crate::runtime::{DeviceStore, ModelRt};
 use crate::schedule::{BetaAnneal, CosineAnnealing};
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
@@ -126,37 +133,43 @@ pub fn quantize(
     let mut qstate = init_qstate(m, teacher, bits, cfg.pnorm, Some(&stats))?;
     set_act_steps(&mut qstate, &m.quant_layers, &stats)?;
 
+    // one teacher upload for the whole phase, Arc-shared by collection
+    // chunks and block jobs alike
+    let teacher_dev = mrt.upload_store(teacher)?;
+    let tdev = &teacher_dev;
+    let (mut h2d_total, mut d2h_total) = teacher_dev.transfer_bytes();
+
     // 3. teacher block boundaries: contiguous batch chunks, one pool job
-    // (and one teacher-store clone) per worker
+    // (sharing the resident teacher) per worker
     let batches = image_batches(calib, br);
     let chunk_len =
         batches.len().div_ceil(cfg.par.resolve_for(batches.len()).max(1));
     let bound_jobs: Vec<_> = batches
         .chunks(chunk_len.max(1))
         .map(|chunk| {
-            move || -> Result<Vec<Vec<Tensor>>> {
-                let mut store = teacher.clone();
+            move || -> Result<(Vec<Vec<Tensor>>, (u64, u64))> {
+                let mut dev = tdev.clone();
                 let mut out = Vec::with_capacity(chunk.len());
                 for (bx, _) in chunk {
-                    store.insert("x", bx.clone());
-                    mrt.call("collect_teacher", &mut store)?;
+                    dev.insert("x", bx)?;
+                    mrt.call_device("collect_teacher", &mut dev)?;
                     out.push(
                         (0..=nb)
-                            .map(|i| {
-                                store
-                                    .get(&format!("bound.{i}"))
-                                    .map(Clone::clone)
-                            })
+                            .map(|i| dev.fetch(&format!("bound.{i}")))
                             .collect::<Result<Vec<_>>>()?,
                     );
                 }
-                Ok(out)
+                Ok((out, dev.transfer_bytes()))
             }
         })
         .collect();
     let (bound_chunks, bounds_pool) = run_jobs(cfg.par, bound_jobs)?;
-    let teacher_bounds: Vec<Vec<Tensor>> =
-        bound_chunks.into_iter().flatten().collect();
+    let mut teacher_bounds: Vec<Vec<Tensor>> = Vec::new();
+    for (chunk, xfer) in bound_chunks {
+        teacher_bounds.extend(chunk);
+        h2d_total += xfer.0;
+        d2h_total += xfer.1;
+    }
     metrics.record_pool("quantize/bounds", &bounds_pool);
 
     // 4. block reconstruction in topological waves: a chain when the
@@ -179,7 +192,7 @@ pub fn quantize(
                 let teacher_bounds = &teacher_bounds;
                 move || {
                     reconstruct_block(
-                        mrt, teacher, qsnap, batches, teacher_bounds, cfg, b,
+                        mrt, tdev, qsnap, batches, teacher_bounds, cfg, b,
                     )
                 }
             })
@@ -193,6 +206,8 @@ pub fn quantize(
             for (t, rec) in out.rec_trace {
                 metrics.log(&format!("quant/block{}/rec", out.block), t, rec);
             }
+            h2d_total += out.transfer.0;
+            d2h_total += out.transfer.1;
             println!(
                 "quantize[{} W{}A{}] block {}/{}: rec {:.5}",
                 m.model, cfg.wbits, cfg.abits, out.block + 1, nb, out.last_rec
@@ -200,6 +215,12 @@ pub fn quantize(
         }
     }
     metrics.record_pool("quantize/blocks", &blocks_pool);
+    metrics.record_transfers(
+        "quantize",
+        nb * cfg.steps_per_block,
+        h2d_total,
+        d2h_total,
+    );
     let secs = metrics.stop("quantize");
     let rate = metrics.throughput("quantize", "blocks", nb, secs);
     println!(
@@ -220,16 +241,19 @@ struct BlockResult {
     /// (step, rec loss) at each logged step
     rec_trace: Vec<(usize, f32)>,
     last_rec: f32,
+    /// (h2d, d2h) bytes this block's job moved
+    transfer: (u64, u64),
 }
 
 /// Optimize one block's quant state against the teacher boundaries.
-/// Self-contained: clones the teacher, absorbs the current quant state,
-/// and draws every random choice (batch picks, QDrop/collect keys) from
-/// the block-keyed stream — never from worker identity or schedule.
+/// Self-contained: aliases the resident teacher, uploads the current
+/// quant state, stages its inputs on device, and draws every random
+/// choice (batch picks, QDrop/collect keys) from the block-keyed stream
+/// — never from worker identity or schedule.
 #[allow(clippy::too_many_arguments)]
 fn reconstruct_block(
     mrt: &ModelRt,
-    teacher: &Store,
+    teacher_dev: &DeviceStore<'_>,
     qstate: &Store,
     batches: &[(Tensor, usize)],
     teacher_bounds: &[Vec<Tensor>],
@@ -238,30 +262,37 @@ fn reconstruct_block(
 ) -> Result<BlockResult> {
     let m = &mrt.manifest;
     let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
-    let mut store = teacher.clone();
-    store.absorb(qstate);
+    let mut dev = teacher_dev.clone();
+    dev.absorb(qstate)?;
 
-    // block inputs through the quantized prefix
-    let inputs: Vec<Tensor> = if b == 0 || !cfg.refresh_student {
-        teacher_bounds.iter().map(|t| t[b].clone()).collect()
-    } else {
-        let mut xs = Vec::new();
-        for (bx, _) in batches {
-            store.insert("x", bx.clone());
-            let (kh, kl) = rng.key_pair();
-            store.insert("key", Tensor::key(kh, kl));
-            mrt.call("collect_student", &mut store)?;
-            xs.push(store.get(&format!("bound.{b}"))?.clone());
+    // Block inputs through the quantized prefix, staged on device as
+    // x_in.{i}: the step loop's batch pick is then a zero-byte alias
+    // instead of a per-step host upload.
+    if b == 0 || !cfg.refresh_student {
+        for (i, bounds) in teacher_bounds.iter().enumerate() {
+            dev.insert(&format!("x_in.{i}"), &bounds[b])?;
         }
-        xs
-    };
+    } else {
+        for (i, (bx, _)) in batches.iter().enumerate() {
+            dev.insert("x", bx)?;
+            let (kh, kl) = rng.key_pair();
+            dev.insert("key", &Tensor::key(kh, kl))?;
+            mrt.call_device("collect_student", &mut dev)?;
+            // pin the freshly produced boundary buffer (device-side copy
+            // of nothing: the alias shares the Arc handle)
+            dev.alias(&format!("x_in.{i}"), &format!("bound.{b}"))?;
+        }
+    }
+    for (i, bounds) in teacher_bounds.iter().enumerate() {
+        dev.insert(&format!("y_ref.{i}"), &bounds[b + 1])?;
+    }
 
     // fresh Adam state for this block's learnables
     let learn = m.learnable_block(b).to_vec();
     for name in &learn {
-        let shape = store.get(name)?.shape.clone();
-        store.insert(&format!("am.{name}"), Tensor::zeros(&shape));
-        store.insert(&format!("av.{name}"), Tensor::zeros(&shape));
+        let shape = dev.get(name)?.shape().to_vec();
+        dev.insert(&format!("am.{name}"), &Tensor::zeros(&shape))?;
+        dev.insert(&format!("av.{name}"), &Tensor::zeros(&shape))?;
     }
 
     let sw_sched = CosineAnnealing::new(cfg.lr_sw, cfg.steps_per_block);
@@ -273,29 +304,36 @@ fn reconstruct_block(
     let mut rec_trace = Vec::new();
     for t in 1..=cfg.steps_per_block {
         let bi = rng.below(batches.len());
-        store.insert("x_in", inputs[bi].clone());
-        store.insert("y_ref", teacher_bounds[bi][b + 1].clone());
+        dev.alias("x_in", &format!("x_in.{bi}"))?;
+        dev.alias("y_ref", &format!("y_ref.{bi}"))?;
         let (kh, kl) = rng.key_pair();
-        store.insert("key", Tensor::key(kh, kl));
-        store.insert("t", Tensor::scalar_f32(t as f32));
-        store.insert("lr_sw", Tensor::scalar_f32(sw_sched.lr(t - 1)));
-        store.insert("lr_v", Tensor::scalar_f32(cfg.lr_v));
-        store.insert("lr_sa", Tensor::scalar_f32(sa_sched.lr(t - 1)));
-        store.insert("lam", Tensor::scalar_f32(cfg.lam));
-        store.insert("beta", Tensor::scalar_f32(beta.beta(t)));
-        store.insert("drop_p", Tensor::scalar_f32(cfg.drop_p));
-        let scalars = mrt.rt.call(&entry, &mut store)?;
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr_sw", &Tensor::scalar_f32(sw_sched.lr(t - 1)))?;
+        dev.insert("lr_v", &Tensor::scalar_f32(cfg.lr_v))?;
+        dev.insert("lr_sa", &Tensor::scalar_f32(sa_sched.lr(t - 1)))?;
+        dev.insert("lam", &Tensor::scalar_f32(cfg.lam))?;
+        dev.insert("beta", &Tensor::scalar_f32(beta.beta(t)))?;
+        dev.insert("drop_p", &Tensor::scalar_f32(cfg.drop_p))?;
+        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
         last_rec = scalars["rec"];
         if t % cfg.log_every == 0 || t == cfg.steps_per_block {
             rec_trace.push((t, scalars["rec"]));
         }
     }
 
+    // phase boundary: only the block's optimized learnables come home
     let learned = learn
         .iter()
-        .map(|n| Ok((n.clone(), store.get(n)?.clone())))
+        .map(|n| Ok((n.clone(), dev.fetch(n)?)))
         .collect::<Result<Vec<_>>>()?;
-    Ok(BlockResult { block: b, learned, rec_trace, last_rec })
+    Ok(BlockResult {
+        block: b,
+        learned,
+        rec_trace,
+        last_rec,
+        transfer: dev.transfer_bytes(),
+    })
 }
 
 /// Pad/repeat rows so shape[0] == bs (for fixed-batch stat graphs).

@@ -47,9 +47,9 @@ pub fn qat_train(
     let _ = wp;
 
     let mut store = teacher.clone();
-    // student initialized from the teacher
+    // student initialized from the teacher (Arc-shared, not copied)
     for (name, _) in &m.params {
-        store.insert(&format!("s.{name}"), teacher.get(name)?.clone());
+        store.insert_shared(&format!("s.{name}"), teacher.get_shared(name)?);
         let shape = teacher.get(name)?.shape.clone();
         store.insert(&format!("am.{name}"), Tensor::zeros(&shape));
         store.insert(&format!("av.{name}"), Tensor::zeros(&shape));
@@ -61,15 +61,23 @@ pub fn qat_train(
     metrics.start("qat");
     let entry = mrt.entry("qat_step")?;
     let batches = image_batches(calib, bs);
+    // teacher + student + moments stay resident across the whole run;
+    // batches are staged once and re-picked per step by zero-byte alias
+    let mut dev = mrt.upload_store(&store)?;
+    for (i, (bx, _)) in batches.iter().enumerate() {
+        dev.insert(&format!("x.{i}"), bx)?;
+    }
     for t in 1..=cfg.steps {
         let bi = rng.below(batches.len());
-        store.insert("x", batches[bi].0.clone());
-        store.insert("t", Tensor::scalar_f32(t as f32));
-        let scalars = mrt.rt.call(&entry, &mut store)?;
+        dev.alias("x", &format!("x.{bi}"))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
         if t % 100 == 0 || t == cfg.steps {
             metrics.log("qat/kl", t, scalars["loss"]);
         }
     }
+    let (h2d, d2h) = dev.transfer_bytes();
+    metrics.record_transfers("qat", cfg.steps, h2d, d2h);
     let secs = metrics.stop("qat");
     println!(
         "qat[{} W{}A{}]: {} steps in {:.1}s (KL {:.4})",
@@ -81,10 +89,12 @@ pub fn qat_train(
         metrics.last("qat/kl").unwrap_or(f32::NAN)
     );
 
+    // phase boundary: only the student params come home
     let mut out = Store::new();
     for (name, _) in &m.params {
         let n = format!("s.{name}");
-        out.insert(&n, store.get(&n)?.clone());
+        let t = dev.fetch(&n)?;
+        out.insert(&n, t);
     }
     Ok(out)
 }
@@ -106,12 +116,14 @@ pub fn qat_eval(
     store.absorb(student);
     store.insert("wp", Tensor::scalar_f32(wp_sym));
     store.insert("ap", Tensor::scalar_f32(ap));
+    let mut dev = mrt.upload_store(&store)?;
     let mut correct = 0.0f64;
     let mut total = 0usize;
     for (x, y, valid) in dataset.eval_batches(bs) {
-        store.insert("x", x);
-        mrt.rt.call(&entry, &mut store)?;
-        let acc = accuracy(store.get("logits")?, &y, valid);
+        dev.insert("x", &x)?;
+        mrt.rt.call_device(&entry, &mut dev)?;
+        let logits = dev.fetch("logits")?;
+        let acc = accuracy(&logits, &y, valid);
         correct += acc as f64 * valid as f64;
         total += valid;
     }

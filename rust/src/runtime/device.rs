@@ -1,0 +1,306 @@
+//! Device-resident named buffer store (DESIGN.md §8): the step-loop
+//! counterpart of [`Store`](crate::store::Store). Tensors live as PJRT
+//! device buffers across calls, so a GLO-style optimization loop uploads
+//! only the scalars that change each step (`t`, `lr_*`, `key`) and
+//! downloads only the loss — full host materialization happens once, at
+//! phase boundaries (`fetch` / `sync_to_store`).
+//!
+//! Buffers are held behind `Arc` and PJRT buffers are immutable, so a
+//! `clone` shares the whole working set (one teacher upload serves every
+//! distill shard / eval chunk / quant block on the exec pool) while
+//! every `insert`/result-carry replaces only the clone's own handle —
+//! the same copy-on-write discipline as the host store. `alias` goes one
+//! step further and rebinds a name to an already-resident buffer for
+//! zero transfer (quantize stages its per-batch block inputs this way).
+//!
+//! Transfer accounting is byte-exact: `bytes_h2d`/`bytes_d2h` count every
+//! literal that crosses the host↔device boundary through this store, and
+//! feed the `Metrics` transfer series plus `benches/runtime.rs`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::store::Store;
+use crate::tensor::{DType, Tensor};
+
+use super::{from_literal, to_literal, Runtime};
+
+/// A live device buffer plus the host-side metadata (dtype, shape) the
+/// runtime validates manifest wiring against without touching the data.
+#[derive(Debug, Clone)]
+pub struct DeviceTensor {
+    buf: Arc<xla::PjRtBuffer>,
+    dtype: DType,
+    shape: Vec<usize>,
+}
+
+impl DeviceTensor {
+    pub(super) fn from_parts(
+        buf: Arc<xla::PjRtBuffer>,
+        dtype: DType,
+        shape: Vec<usize>,
+    ) -> Self {
+        DeviceTensor { buf, dtype, shape }
+    }
+
+    pub(super) fn buffer(&self) -> Arc<xla::PjRtBuffer> {
+        self.buf.clone()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// Ordered named device buffers bound to one [`Runtime`]'s PJRT client.
+/// The argument/result hub of [`Runtime::call_device`], wired by manifest
+/// names exactly like the host store is for [`Runtime::call`].
+pub struct DeviceStore<'rt> {
+    rt: &'rt Runtime,
+    names: Vec<String>,
+    map: HashMap<String, DeviceTensor>,
+    bytes_h2d: u64,
+    bytes_d2h: u64,
+}
+
+impl<'rt> Clone for DeviceStore<'rt> {
+    /// Alias every buffer (`Arc` clone, no device traffic). Transfer
+    /// counters restart at zero: a clone accounts only the traffic it
+    /// causes itself, never the shared upload it aliases.
+    fn clone(&self) -> Self {
+        DeviceStore {
+            rt: self.rt,
+            names: self.names.clone(),
+            map: self.map.clone(),
+            bytes_h2d: 0,
+            bytes_d2h: 0,
+        }
+    }
+}
+
+impl<'rt> DeviceStore<'rt> {
+    pub(super) fn new(rt: &'rt Runtime) -> Self {
+        DeviceStore {
+            rt,
+            names: Vec::new(),
+            map: HashMap::new(),
+            bytes_h2d: 0,
+            bytes_d2h: 0,
+        }
+    }
+
+    /// Upload a host tensor (H2D transfer, counted). Replaces any
+    /// previous buffer under this name in this store only.
+    pub fn insert(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        let lit = to_literal(t)?;
+        let buf = self
+            .rt
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .with_context(|| format!("upload '{name}'"))?;
+        self.bytes_h2d += t.byte_len() as u64;
+        self.insert_device(
+            name,
+            DeviceTensor::from_parts(Arc::new(buf), t.dtype(), t.shape.clone()),
+        );
+        Ok(())
+    }
+
+    /// Wire an already-resident buffer in under `name` (zero transfer).
+    pub(super) fn insert_device(&mut self, name: &str, dt: DeviceTensor) {
+        if !self.map.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.map.insert(name.to_string(), dt);
+    }
+
+    /// Upload every tensor of a host store (bulk phase-boundary H2D).
+    pub fn absorb(&mut self, store: &Store) -> Result<()> {
+        for n in store.names() {
+            self.insert(n, store.get(n)?)?;
+        }
+        Ok(())
+    }
+
+    /// Rebind `dst` to the buffer currently named `src` — zero bytes
+    /// moved. A later replacement of `src` (e.g. by a result carry) does
+    /// not retarget `dst`: the alias pins the buffer as it is now.
+    pub fn alias(&mut self, dst: &str, src: &str) -> Result<()> {
+        let d = self.get(src)?.clone();
+        self.insert_device(dst, d);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&DeviceTensor> {
+        self.map.get(name).ok_or_else(|| {
+            anyhow::anyhow!("device store: missing tensor '{name}'")
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Download one tensor to the host (D2H transfer, counted).
+    pub fn fetch(&mut self, name: &str) -> Result<Tensor> {
+        let d = self.get(name)?.clone();
+        let lit = d
+            .buf
+            .to_literal_sync()
+            .with_context(|| format!("download '{name}'"))?;
+        let t = from_literal(&lit, d.dtype, &d.shape)
+            .with_context(|| format!("download '{name}'"))?;
+        self.bytes_d2h += t.byte_len() as u64;
+        Ok(t)
+    }
+
+    /// Materialize every buffer into a host store — the once-per-phase
+    /// full sync (checkpointing, export, image harvest).
+    pub fn sync_to_store(&mut self, store: &mut Store) -> Result<()> {
+        let names = self.names.clone();
+        for n in &names {
+            let t = self.fetch(n)?;
+            store.insert(n, t);
+        }
+        Ok(())
+    }
+
+    /// `sync_to_store` into a fresh host store.
+    pub fn to_store(&mut self) -> Result<Store> {
+        let mut s = Store::new();
+        self.sync_to_store(&mut s)?;
+        Ok(s)
+    }
+
+    /// Cumulative `(host→device, device→host)` bytes moved through this
+    /// store (uploads/downloads here plus scalar fetches in
+    /// [`Runtime::call_device`]).
+    pub fn transfer_bytes(&self) -> (u64, u64) {
+        (self.bytes_h2d, self.bytes_d2h)
+    }
+
+    pub fn reset_transfer_bytes(&mut self) {
+        self.bytes_h2d = 0;
+        self.bytes_d2h = 0;
+    }
+
+    pub(super) fn add_d2h(&mut self, bytes: u64) {
+        self.bytes_d2h += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Runtime {
+        Runtime::cpu().unwrap()
+    }
+
+    #[test]
+    fn upload_fetch_roundtrip_every_dtype() {
+        let rt = rt();
+        let mut dev = rt.device_store();
+        let tensors = [
+            ("f", Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.])),
+            ("i", Tensor::from_i32(&[3], vec![-1, 0, 1])),
+            ("u", Tensor::key(5, 6)),
+            ("s", Tensor::scalar_f32(2.5)),
+        ];
+        for (n, t) in &tensors {
+            dev.insert(n, t).unwrap();
+        }
+        assert_eq!(dev.len(), 4);
+        for (n, t) in &tensors {
+            assert!(dev.contains(n));
+            assert_eq!(dev.get(n).unwrap().dtype(), t.dtype());
+            assert_eq!(dev.get(n).unwrap().shape(), &t.shape[..]);
+            assert_eq!(&dev.fetch(n).unwrap(), t, "'{n}' diverged");
+        }
+        assert!(dev.get("nope").is_err());
+        assert!(dev.fetch("nope").is_err());
+    }
+
+    #[test]
+    fn transfer_accounting_is_byte_exact() {
+        let rt = rt();
+        let mut dev = rt.device_store();
+        dev.insert("a", &Tensor::zeros(&[8, 4])).unwrap(); // 128 B
+        dev.insert("t", &Tensor::scalar_f32(1.0)).unwrap(); // 4 B
+        assert_eq!(dev.transfer_bytes(), (132, 0));
+        dev.fetch("t").unwrap(); // 4 B down
+        assert_eq!(dev.transfer_bytes(), (132, 4));
+        // overwrite re-uploads (counted), alias moves nothing
+        dev.insert("t", &Tensor::scalar_f32(2.0)).unwrap();
+        dev.alias("b", "a").unwrap();
+        assert_eq!(dev.transfer_bytes(), (136, 4));
+        dev.reset_transfer_bytes();
+        assert_eq!(dev.transfer_bytes(), (0, 0));
+    }
+
+    #[test]
+    fn clone_is_copy_on_write() {
+        let rt = rt();
+        let mut base = rt.device_store();
+        base.insert("w", &Tensor::from_f32(&[2], vec![1.0, 2.0])).unwrap();
+        let mut shard = base.clone();
+        assert_eq!(shard.transfer_bytes(), (0, 0), "clone moves no bytes");
+        shard.insert("w", &Tensor::from_f32(&[2], vec![9.0, 9.0])).unwrap();
+        shard.insert("z", &Tensor::scalar_f32(3.0)).unwrap();
+        // the shard sees its own state; the base is untouched
+        assert_eq!(shard.fetch("w").unwrap().as_f32(), &[9.0, 9.0]);
+        assert_eq!(base.fetch("w").unwrap().as_f32(), &[1.0, 2.0]);
+        assert!(!base.contains("z"));
+    }
+
+    #[test]
+    fn alias_pins_the_buffer_not_the_name() {
+        let rt = rt();
+        let mut dev = rt.device_store();
+        dev.insert("src", &Tensor::scalar_f32(7.0)).unwrap();
+        dev.alias("dst", "src").unwrap();
+        // replacing src later must not retarget the alias
+        dev.insert("src", &Tensor::scalar_f32(8.0)).unwrap();
+        assert_eq!(dev.fetch("dst").unwrap().scalar(), 7.0);
+        assert_eq!(dev.fetch("src").unwrap().scalar(), 8.0);
+        assert!(dev.alias("x", "nope").is_err());
+    }
+
+    #[test]
+    fn sync_to_store_materializes_everything_in_order() {
+        let rt = rt();
+        let mut dev = rt.device_store();
+        dev.insert("a", &Tensor::scalar_f32(1.0)).unwrap();
+        dev.insert("b", &Tensor::from_i32(&[2], vec![3, 4])).unwrap();
+        let host = dev.to_store().unwrap();
+        assert_eq!(host.names(), dev.names());
+        assert_eq!(host.get("a").unwrap().scalar(), 1.0);
+        assert_eq!(host.get("b").unwrap().as_i32(), &[3, 4]);
+    }
+}

@@ -12,7 +12,18 @@
 //! shared by every worker of the exec pool (DESIGN.md §5). Entry handles
 //! are `Arc`s; `call` takes `&self` and only locks around cache/stat
 //! bookkeeping, never across an execute.
+//!
+//! Two execution paths (DESIGN.md §8):
+//!   * [`Runtime::call`] — host round-trip: every argument is marshalled
+//!     from the [`Store`] into a fresh literal and every result is
+//!     downloaded back, once per call. O(model) transfer per step.
+//!   * [`Runtime::call_device`] — device-resident: arguments are live
+//!     PJRT buffers in a [`DeviceStore`]; results are wired straight back
+//!     in by manifest name (arg name == result name ⇒ carried state), and
+//!     only scalar f32 results (losses) are downloaded. O(scalars)
+//!     transfer per step — the step-loop hot path.
 
+pub mod device;
 pub mod json;
 pub mod manifest;
 
@@ -23,6 +34,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+pub use device::{DeviceStore, DeviceTensor};
 pub use manifest::{ArgSpec, EntrySpec, Manifest, QuantLayer};
 
 use crate::store::Store;
@@ -35,11 +47,71 @@ pub struct LoadedEntry {
     exe: xla::PjRtLoadedExecutable,
 }
 
-/// Cumulative per-entry dispatch statistics (perf accounting).
+/// Cumulative per-entry dispatch statistics (perf accounting), including
+/// host↔device transfer volume: `call` moves the full argument/result
+/// sets every step, `call_device` only the fetched scalars.
 #[derive(Debug, Default, Clone)]
 pub struct DispatchStats {
     pub calls: u64,
     pub total_secs: f64,
+    /// Host→device bytes uploaded by the call itself (argument literals
+    /// in the round-trip path; 0 in the device-resident path, whose
+    /// uploads happen through [`DeviceStore::insert`]).
+    pub bytes_h2d: u64,
+    /// Device→host bytes downloaded by the call (all results in the
+    /// round-trip path; scalar results only in the device path).
+    pub bytes_d2h: u64,
+}
+
+/// Scalar results of one entrypoint call, keyed by manifest result name.
+/// A small vec-backed map: entry counts are tiny (a loss, maybe an
+/// accuracy), so a linear scan beats hashing and the fixed two-slot
+/// capacity avoids a per-call `HashMap` allocation on the step-loop hot
+/// path. Indexing by `&str` panics on a missing name, mirroring the
+/// `HashMap` it replaced.
+#[derive(Debug, Default, Clone)]
+pub struct Scalars(Vec<(String, f32)>);
+
+impl Scalars {
+    pub fn new() -> Self {
+        Scalars(Vec::with_capacity(2))
+    }
+
+    pub fn insert(&mut self, name: &str, v: f32) {
+        if let Some(e) = self.0.iter_mut().find(|(n, _)| n == name) {
+            e.1 = v;
+        } else {
+            self.0.push((name.to_string(), v));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<f32> {
+        self.0.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f32)> {
+        self.0.iter().map(|(n, v)| (n.as_str(), *v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+impl std::ops::Index<&str> for Scalars {
+    type Output = f32;
+
+    fn index(&self, name: &str) -> &f32 {
+        self.0
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+            .unwrap_or_else(|| panic!("no scalar result '{name}'"))
+    }
 }
 
 /// PJRT CPU runtime with a compile-once executable cache. `Sync`: safe to
@@ -102,18 +174,24 @@ impl Runtime {
     /// manifest arg names (shape/dtype validated), results are written
     /// back by result names. Returns the scalar results by name (losses,
     /// accuracies) for convenient logging.
+    ///
+    /// This is the host round-trip path: the full argument set is
+    /// uploaded and the full result set downloaded on every call. Step
+    /// loops should prefer [`call_device`](Self::call_device).
     pub fn call(
         &self,
         entry: &LoadedEntry,
         store: &mut Store,
-    ) -> Result<HashMap<String, f32>> {
+    ) -> Result<Scalars> {
         let t0 = Instant::now();
         let mut lits = Vec::with_capacity(entry.spec.args.len());
+        let mut h2d = 0u64;
         for (name, dt, shape) in &entry.spec.args {
             let t = store
                 .get(name)
                 .with_context(|| format!("args of {}", entry.name))?;
-            validate(name, t, dt, shape)?;
+            validate_meta(name, t.dtype(), &t.shape, dt, shape)?;
+            h2d += t.byte_len() as u64;
             lits.push(to_literal(t)?);
         }
         let result = entry
@@ -131,23 +209,128 @@ impl Runtime {
             outs.len(),
             entry.spec.results.len()
         );
-        let mut scalars = HashMap::new();
+        let mut scalars = Scalars::new();
+        let mut d2h = 0u64;
         for (out, (name, dt, shape)) in
             outs.into_iter().zip(entry.spec.results.iter())
         {
-            let t = from_literal(&out, dt, shape)
+            let t = from_literal(&out, DType::from_str(dt)?, shape)
                 .with_context(|| format!("result {name} of {}", entry.name))?;
+            d2h += t.byte_len() as u64;
             if t.numel() == 1 && t.dtype() == DType::F32 {
-                scalars.insert(name.clone(), t.scalar());
+                scalars.insert(name, t.scalar());
             }
             store.insert(name, t);
         }
-        let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.lock().unwrap();
-        let s = stats.entry(entry.name.clone()).or_default();
-        s.calls += 1;
-        s.total_secs += dt;
+        self.record_dispatch(&entry.name, t0.elapsed().as_secs_f64(), h2d, d2h);
         Ok(scalars)
+    }
+
+    /// Execute an entrypoint over device-resident buffers. Arguments are
+    /// taken from `dev` by manifest name (metadata validated, zero host
+    /// traffic); every result buffer is wired back into `dev` under its
+    /// result name — so a result named like an argument *is* that state
+    /// tensor's next iteration, carried on device (DESIGN.md §8). The
+    /// only downloads are scalar f32 results (losses/accuracies), which
+    /// host-side schedules need every step.
+    pub fn call_device(
+        &self,
+        entry: &LoadedEntry,
+        dev: &mut DeviceStore,
+    ) -> Result<Scalars> {
+        let t0 = Instant::now();
+        let mut args = Vec::with_capacity(entry.spec.args.len());
+        for (name, dt, shape) in &entry.spec.args {
+            let d = dev
+                .get(name)
+                .with_context(|| format!("args of {}", entry.name))?;
+            validate_meta(name, d.dtype(), d.shape(), dt, shape)?;
+            args.push(d.buffer());
+        }
+        let arg_refs: Vec<&xla::PjRtBuffer> =
+            args.iter().map(|a| a.as_ref()).collect();
+        // Contract with the xla layer: result[0] holds one buffer per
+        // manifest result (outputs untupled on device; the real xla-rs
+        // swap-in needs untuple_result set — see vendor/xla).
+        let mut result = entry
+            .exe
+            .execute_b(&arg_refs)
+            .with_context(|| format!("execute {}", entry.name))?;
+        anyhow::ensure!(
+            !result.is_empty(),
+            "{}: execute_b returned no device results",
+            entry.name
+        );
+        let outs = result.remove(0);
+        anyhow::ensure!(
+            outs.len() == entry.spec.results.len(),
+            "{}: got {} results, manifest says {}",
+            entry.name,
+            outs.len(),
+            entry.spec.results.len()
+        );
+        let mut scalars = Scalars::new();
+        let mut d2h = 0u64;
+        for (out, (name, dt, shape)) in
+            outs.into_iter().zip(entry.spec.results.iter())
+        {
+            let dtype = DType::from_str(dt)?;
+            let numel: usize = shape.iter().product();
+            if numel == 1 && dtype == DType::F32 {
+                let lit = out.to_literal_sync().with_context(|| {
+                    format!("fetch scalar {name} of {}", entry.name)
+                })?;
+                let t = from_literal(&lit, dtype, shape).with_context(|| {
+                    format!("result {name} of {}", entry.name)
+                })?;
+                scalars.insert(name, t.scalar());
+                d2h += t.byte_len() as u64;
+            }
+            dev.insert_device(
+                name,
+                DeviceTensor::from_parts(Arc::new(out), dtype, shape.clone()),
+            );
+        }
+        dev.add_d2h(d2h);
+        self.record_dispatch(&entry.name, t0.elapsed().as_secs_f64(), 0, d2h);
+        Ok(scalars)
+    }
+
+    /// An empty device store bound to this runtime's PJRT client.
+    pub fn device_store(&self) -> DeviceStore<'_> {
+        DeviceStore::new(self)
+    }
+
+    /// Upload every tensor of a host store as device buffers — the
+    /// phase-boundary bulk transfer that replaces per-step re-uploads.
+    pub fn upload_store(&self, store: &Store) -> Result<DeviceStore<'_>> {
+        let mut dev = self.device_store();
+        dev.absorb(store)?;
+        Ok(dev)
+    }
+
+    /// Fold one dispatch into the per-entry stats. All counters land in a
+    /// single short lock section (and the common re-dispatch case avoids
+    /// allocating the key), so pool workers hammering the same entry
+    /// contend for one brief mutex acquisition per call, nothing more.
+    fn record_dispatch(&self, name: &str, secs: f64, h2d: u64, d2h: u64) {
+        let mut stats = self.stats.lock().unwrap();
+        if let Some(s) = stats.get_mut(name) {
+            s.calls += 1;
+            s.total_secs += secs;
+            s.bytes_h2d += h2d;
+            s.bytes_d2h += d2h;
+        } else {
+            stats.insert(
+                name.to_string(),
+                DispatchStats {
+                    calls: 1,
+                    total_secs: secs,
+                    bytes_h2d: h2d,
+                    bytes_d2h: d2h,
+                },
+            );
+        }
     }
 
     pub fn dispatch_stats(&self) -> HashMap<String, DispatchStats> {
@@ -159,22 +342,28 @@ impl Runtime {
     }
 }
 
-fn validate(name: &str, t: &Tensor, dt: &str, shape: &[usize]) -> Result<()> {
+/// Shared arg/result validation against the manifest's (dtype, shape).
+fn validate_meta(
+    name: &str,
+    got_dt: DType,
+    got_shape: &[usize],
+    dt: &str,
+    shape: &[usize],
+) -> Result<()> {
     let want = DType::from_str(dt)?;
     anyhow::ensure!(
-        t.dtype() == want,
-        "arg {name}: dtype {:?}, manifest wants {want:?}",
-        t.dtype()
+        got_dt == want,
+        "arg {name}: dtype {got_dt:?}, manifest wants {want:?}"
     );
     anyhow::ensure!(
-        t.shape == shape,
-        "arg {name}: shape {:?}, manifest wants {shape:?}",
-        t.shape
+        got_shape == shape,
+        "arg {name}: shape {got_shape:?}, manifest wants {shape:?}"
     );
     Ok(())
 }
 
-fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+/// Marshal a host tensor into an XLA literal (the H2D staging format).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
     let lit = match &t.data {
         Data::F32(v) => xla::Literal::vec1(v),
@@ -184,8 +373,14 @@ fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     Ok(lit.reshape(&dims)?)
 }
 
-fn from_literal(lit: &xla::Literal, dt: &str, shape: &[usize]) -> Result<Tensor> {
-    let data = match DType::from_str(dt)? {
+/// Materialize a downloaded literal as a host tensor with the manifest's
+/// dtype and shape; errors if the element counts disagree.
+pub fn from_literal(
+    lit: &xla::Literal,
+    dt: DType,
+    shape: &[usize],
+) -> Result<Tensor> {
+    let data = match dt {
         DType::F32 => Data::F32(lit.to_vec::<f32>()?),
         DType::I32 => Data::I32(lit.to_vec::<i32>()?),
         DType::U32 => Data::U32(lit.to_vec::<u32>()?),
@@ -222,13 +417,25 @@ impl<'a> ModelRt<'a> {
         self.rt.entry(&self.dir, &self.manifest, name)
     }
 
-    pub fn call(
-        &self,
-        name: &str,
-        store: &mut Store,
-    ) -> Result<HashMap<String, f32>> {
+    pub fn call(&self, name: &str, store: &mut Store) -> Result<Scalars> {
         let e = self.entry(name)?;
         self.rt.call(&e, store)
+    }
+
+    /// Device-resident dispatch by entry name (see [`Runtime::call_device`]).
+    pub fn call_device(
+        &self,
+        name: &str,
+        dev: &mut DeviceStore,
+    ) -> Result<Scalars> {
+        let e = self.entry(name)?;
+        self.rt.call_device(&e, dev)
+    }
+
+    /// Upload a host store to this model's runtime (phase-boundary bulk
+    /// transfer); the returned store lives as long as the runtime borrow.
+    pub fn upload_store(&self, store: &Store) -> Result<DeviceStore<'a>> {
+        self.rt.upload_store(store)
     }
 
     /// Load init.bin (FP32 params + BN state + generator init).
@@ -242,12 +449,73 @@ mod tests {
     use super::*;
 
     /// The exec pool shares one Runtime across worker threads; keep the
-    /// marker bounds enforced at compile time.
+    /// marker bounds enforced at compile time. `DeviceStore` is shared by
+    /// reference across distill/eval shard jobs, so it must be `Sync` too.
     #[test]
     fn runtime_is_send_and_sync() {
         fn check<T: Send + Sync>() {}
         check::<Runtime>();
         check::<LoadedEntry>();
         check::<ModelRt<'static>>();
+        check::<DeviceStore<'static>>();
+        check::<Scalars>();
+    }
+
+    #[test]
+    fn scalars_index_get_overwrite() {
+        let mut s = Scalars::new();
+        assert!(s.is_empty());
+        s.insert("loss", 2.0);
+        s.insert("acc", 0.5);
+        s.insert("loss", 1.5); // overwrite keeps one entry
+        assert_eq!(s.len(), 2);
+        assert_eq!(s["loss"], 1.5);
+        assert_eq!(s.get("acc"), Some(0.5));
+        assert_eq!(s.get("nope"), None);
+        let names: Vec<&str> = s.iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["loss", "acc"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no scalar result")]
+    fn scalars_index_missing_panics() {
+        let _ = Scalars::new()["loss"];
+    }
+
+    #[test]
+    fn literal_roundtrip_every_dtype() {
+        for t in [
+            Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            Tensor::from_i32(&[4], vec![1, -2, 3, -4]),
+            Tensor::from_u32(&[2, 2], vec![1, 2, 3, 4]),
+            Tensor::scalar_f32(3.25),
+            Tensor::key(7, 9),
+        ] {
+            let lit = to_literal(&t).unwrap();
+            assert_eq!(lit.element_count(), t.numel());
+            let back = from_literal(&lit, t.dtype(), &t.shape).unwrap();
+            assert_eq!(back, t, "round-trip must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn from_literal_rejects_element_count_mismatch() {
+        let lit = to_literal(&Tensor::from_f32(&[4], vec![1., 2., 3., 4.]))
+            .unwrap();
+        for bad_shape in [&[3][..], &[2, 3][..], &[][..]] {
+            let err = from_literal(&lit, DType::F32, bad_shape).unwrap_err();
+            assert!(
+                format!("{err}").contains("element count"),
+                "shape {bad_shape:?}: {err}"
+            );
+        }
+        // dtype mismatch surfaces as the stub's literal-op error
+        assert!(from_literal(&lit, DType::I32, &[4]).is_err());
+    }
+
+    #[test]
+    fn dispatch_stats_default_has_no_traffic() {
+        let s = DispatchStats::default();
+        assert_eq!((s.calls, s.bytes_h2d, s.bytes_d2h), (0, 0, 0));
     }
 }

@@ -1,10 +1,18 @@
 //! GTS1 named-tensor binary format (rust mirror of
 //! python/compile/tensorstore.py) plus the in-memory named store the
 //! coordinator threads through every entrypoint call.
+//!
+//! Tensors are held behind `Arc`, so cloning a store (one per distill
+//! shard / eval chunk / quant block) shares the immutable teacher state
+//! instead of deep-copying it. Mutation only ever happens by `insert`ing
+//! a replacement tensor, which swaps this store's `Arc` and leaves every
+//! other clone untouched — copy-on-write at tensor granularity
+//! (DESIGN.md §8).
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -13,11 +21,12 @@ use crate::tensor::{Data, DType, Tensor};
 const MAGIC: &[u8; 4] = b"GTS1";
 
 /// Ordered named tensors + O(1) lookup; the argument/result hub for
-/// every AOT entrypoint call (wired by manifest names).
+/// every AOT entrypoint call (wired by manifest names). `Clone` is cheap:
+/// it copies names and `Arc` handles, never tensor data.
 #[derive(Debug, Default, Clone)]
 pub struct Store {
     names: Vec<String>,
-    map: HashMap<String, Tensor>,
+    map: HashMap<String, Arc<Tensor>>,
 }
 
 impl Store {
@@ -26,6 +35,13 @@ impl Store {
     }
 
     pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.insert_shared(name, Arc::new(t));
+    }
+
+    /// Insert an already-shared tensor without copying its data. The
+    /// handle may be aliased by other stores; replacing a name in one
+    /// store never mutates through the `Arc`, so sharing is safe.
+    pub fn insert_shared(&mut self, name: &str, t: Arc<Tensor>) {
         if !self.map.contains_key(name) {
             self.names.push(name.to_string());
         }
@@ -35,6 +51,16 @@ impl Store {
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.map
             .get(name)
+            .map(|a| a.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("store: missing tensor '{name}'"))
+    }
+
+    /// The shared handle for a tensor — lets callers propagate a tensor
+    /// into another store (or keep it alive) without a deep copy.
+    pub fn get_shared(&self, name: &str) -> Result<Arc<Tensor>> {
+        self.map
+            .get(name)
+            .cloned()
             .ok_or_else(|| anyhow::anyhow!("store: missing tensor '{name}'"))
     }
 
@@ -54,10 +80,11 @@ impl Store {
         self.names.is_empty()
     }
 
-    /// Merge all tensors of `other` into self (overwriting).
+    /// Merge all tensors of `other` into self (overwriting). Shares the
+    /// `Arc` handles — no tensor data is copied.
     pub fn absorb(&mut self, other: &Store) {
         for n in &other.names {
-            self.insert(n, other.map[n].clone());
+            self.insert_shared(n, other.map[n].clone());
         }
     }
 
@@ -194,6 +221,39 @@ mod tests {
         s.insert("x", Tensor::scalar_f32(2.0));
         assert_eq!(s.len(), 1);
         assert_eq!(s.get("x").unwrap().scalar(), 2.0);
+    }
+
+    #[test]
+    fn clone_shares_tensors_until_insert() {
+        let mut a = Store::new();
+        a.insert("w", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        a.insert("frozen", Tensor::from_f32(&[1], vec![5.0]));
+        let mut b = a.clone();
+        // a clone aliases the same Arc handles (no deep copy) ...
+        assert!(Arc::ptr_eq(
+            &a.get_shared("w").unwrap(),
+            &b.get_shared("w").unwrap()
+        ));
+        // ... and replacing a tensor in the clone never leaks back
+        b.insert("w", Tensor::from_f32(&[2], vec![9.0, 9.0]));
+        assert_eq!(a.get("w").unwrap().as_f32(), &[1.0, 2.0]);
+        assert_eq!(b.get("w").unwrap().as_f32(), &[9.0, 9.0]);
+        assert!(Arc::ptr_eq(
+            &a.get_shared("frozen").unwrap(),
+            &b.get_shared("frozen").unwrap()
+        ));
+    }
+
+    #[test]
+    fn absorb_shares_not_copies() {
+        let mut a = Store::new();
+        let mut b = Store::new();
+        b.insert("x", Tensor::scalar_f32(2.0));
+        a.absorb(&b);
+        assert!(Arc::ptr_eq(
+            &a.get_shared("x").unwrap(),
+            &b.get_shared("x").unwrap()
+        ));
     }
 
     #[test]

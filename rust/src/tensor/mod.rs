@@ -83,6 +83,12 @@ impl Tensor {
         self.shape.iter().product()
     }
 
+    /// Size of the raw element storage (every dtype is 4 bytes wide) —
+    /// the unit of the runtime's host↔device transfer accounting.
+    pub fn byte_len(&self) -> usize {
+        self.numel() * 4
+    }
+
     pub fn dtype(&self) -> DType {
         match self.data {
             Data::F32(_) => DType::F32,
@@ -211,10 +217,44 @@ impl Tensor {
         Tensor { shape, data }
     }
 
-    /// First `n` rows of a [N, ...] tensor.
+    /// First `n` rows of a [N, ...] tensor — a single prefix slice copy
+    /// (no index vector, no per-row gather).
     pub fn take_rows(&self, n: usize) -> Tensor {
-        let idx: Vec<usize> = (0..n).collect();
-        self.gather_rows(&idx)
+        assert!(!self.shape.is_empty(), "take_rows on rank-0 tensor");
+        assert!(
+            n <= self.shape[0],
+            "take_rows: {n} rows from a [{}, ...] tensor",
+            self.shape[0]
+        );
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        let data = match &self.data {
+            Data::F32(v) => Data::F32(v[..n * row].to_vec()),
+            Data::I32(v) => Data::I32(v[..n * row].to_vec()),
+            Data::U32(v) => Data::U32(v[..n * row].to_vec()),
+        };
+        Tensor { shape, data }
+    }
+
+    /// Drop every row past `n` in place: no copy at all, the backing vec
+    /// just shrinks. The in-place sibling of [`take_rows`](Self::take_rows)
+    /// for freshly-built tensors (e.g. trimming a concat to the requested
+    /// sample count).
+    pub fn truncate_rows(&mut self, n: usize) {
+        assert!(!self.shape.is_empty(), "truncate_rows on rank-0 tensor");
+        assert!(
+            n <= self.shape[0],
+            "truncate_rows: {n} rows from a [{}, ...] tensor",
+            self.shape[0]
+        );
+        let row: usize = self.shape[1..].iter().product();
+        match &mut self.data {
+            Data::F32(v) => v.truncate(n * row),
+            Data::I32(v) => v.truncate(n * row),
+            Data::U32(v) => v.truncate(n * row),
+        }
+        self.shape[0] = n;
     }
 }
 
@@ -280,6 +320,45 @@ mod tests {
         let a = Tensor::from_f32(&[1, 2], vec![1.0, 2.0]);
         let b = Tensor::from_i32(&[1, 2], vec![3, 4]);
         Tensor::concat_rows(&[&a, &b]);
+    }
+
+    #[test]
+    fn take_rows_is_a_prefix_copy() {
+        let t = Tensor::from_f32(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let p = t.take_rows(2);
+        assert_eq!(p.shape, vec![2, 2]);
+        assert_eq!(p.as_f32(), &[0., 1., 10., 11.]);
+        // full take and empty take are both well-defined
+        assert_eq!(t.take_rows(3), t);
+        assert_eq!(t.take_rows(0).numel(), 0);
+        // dtype-generic
+        let i = Tensor::from_i32(&[2, 2], vec![1, 2, 3, 4]);
+        assert_eq!(i.take_rows(1).as_i32(), &[1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "take_rows")]
+    fn take_rows_rejects_overrun() {
+        Tensor::from_f32(&[2, 1], vec![1.0, 2.0]).take_rows(3);
+    }
+
+    #[test]
+    fn truncate_rows_shrinks_in_place() {
+        let mut t = Tensor::from_u32(&[3, 2], vec![1, 2, 3, 4, 5, 6]);
+        t.truncate_rows(2);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(t.as_u32(), &[1, 2, 3, 4]);
+        let mut f = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let copy = f.take_rows(1);
+        f.truncate_rows(1);
+        assert_eq!(f, copy, "truncate_rows must agree with take_rows");
+    }
+
+    #[test]
+    fn byte_len_counts_four_bytes_per_element() {
+        assert_eq!(Tensor::zeros(&[2, 3]).byte_len(), 24);
+        assert_eq!(Tensor::key(1, 2).byte_len(), 8);
+        assert_eq!(Tensor::scalar_f32(0.0).byte_len(), 4);
     }
 
     #[test]

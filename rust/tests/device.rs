@@ -1,0 +1,186 @@
+//! Device-residency tests that run entirely offline (DESIGN.md §8):
+//! literal marshalling fidelity, DeviceStore↔Store sync equivalence under
+//! the exec pool at workers=1 and workers=4, and copy-on-write teacher
+//! sharing. Execution-dependent equivalence (call vs call_device over
+//! real graphs) lives in tests/integration.rs, artifact-gated.
+
+use genie::exec::{run_jobs, Parallelism};
+use genie::runtime::{from_literal, to_literal, Runtime};
+use genie::store::Store;
+use genie::tensor::{DType, Pcg32, Tensor};
+
+fn sample_tensors() -> Vec<(&'static str, Tensor)> {
+    vec![
+        ("f2d", Tensor::from_f32(&[2, 3], vec![1., -2., 3.5, 0., 5., 6.])),
+        ("i1d", Tensor::from_i32(&[4], vec![i32::MIN, -1, 0, i32::MAX])),
+        ("u1d", Tensor::from_u32(&[3], vec![0, 7, u32::MAX])),
+        ("key", Tensor::key(0xdead, 0xbeef)),
+        ("scalar", Tensor::scalar_f32(f32::MIN_POSITIVE)),
+    ]
+}
+
+#[test]
+fn literal_roundtrip_preserves_bits_for_every_dtype() {
+    for (name, t) in sample_tensors() {
+        let lit = to_literal(&t).unwrap();
+        assert_eq!(lit.element_count(), t.numel(), "{name}");
+        let back = from_literal(&lit, t.dtype(), &t.shape).unwrap();
+        assert_eq!(back, t, "{name} diverged through the literal layer");
+    }
+}
+
+#[test]
+fn from_literal_element_count_mismatch_is_an_error() {
+    let lit = to_literal(&Tensor::from_f32(&[6], vec![0.; 6])).unwrap();
+    assert!(from_literal(&lit, DType::F32, &[5]).is_err());
+    assert!(from_literal(&lit, DType::F32, &[7]).is_err());
+    assert!(from_literal(&lit, DType::F32, &[2, 2]).is_err());
+    assert!(from_literal(&lit, DType::F32, &[2, 3]).is_ok());
+}
+
+#[test]
+fn device_store_roundtrips_host_store() {
+    let rt = Runtime::cpu().unwrap();
+    let mut host = Store::new();
+    for (n, t) in sample_tensors() {
+        host.insert(n, t);
+    }
+    let mut dev = rt.upload_store(&host).unwrap();
+    let back = dev.to_store().unwrap();
+    assert_eq!(back.names(), host.names(), "order must survive the trip");
+    for n in host.names() {
+        assert_eq!(back.get(n).unwrap(), host.get(n).unwrap(), "{n}");
+    }
+    // accounting: everything went up exactly once and came down exactly
+    // once, 4 bytes per element
+    let bytes: u64 = host
+        .names()
+        .iter()
+        .map(|n| host.get(n).unwrap().byte_len() as u64)
+        .sum();
+    assert_eq!(dev.transfer_bytes(), (bytes, bytes));
+}
+
+/// One shard of a simulated step loop. The host arm mutates a `Store`
+/// per step; the device arm mirrors every mutation through a
+/// `DeviceStore` and materializes once at the end — the two must be
+/// bit-identical, which is exactly the state-carry sync contract the
+/// coordinator phases rely on at their phase boundaries.
+fn host_arm(seed: u64, shard: u64, steps: usize) -> Store {
+    let mut rng = Pcg32::new_stream(seed, shard);
+    let mut store = Store::new();
+    store.insert("state", Tensor::randn(&[4, 8], &mut rng, 1.0));
+    store.insert("count", Tensor::from_i32(&[1], vec![0]));
+    for t in 1..=steps {
+        store.insert("t", Tensor::scalar_f32(t as f32));
+        store.insert("state", Tensor::randn(&[4, 8], &mut rng, 1.0));
+        store.insert("count", Tensor::from_i32(&[1], vec![t as i32]));
+    }
+    store
+}
+
+fn device_arm(rt: &Runtime, seed: u64, shard: u64, steps: usize) -> Store {
+    let mut rng = Pcg32::new_stream(seed, shard);
+    let mut dev = rt.device_store();
+    dev.insert("state", &Tensor::randn(&[4, 8], &mut rng, 1.0)).unwrap();
+    dev.insert("count", &Tensor::from_i32(&[1], vec![0])).unwrap();
+    for t in 1..=steps {
+        dev.insert("t", &Tensor::scalar_f32(t as f32)).unwrap();
+        dev.insert("state", &Tensor::randn(&[4, 8], &mut rng, 1.0)).unwrap();
+        dev.insert("count", &Tensor::from_i32(&[1], vec![t as i32])).unwrap();
+    }
+    dev.to_store().unwrap()
+}
+
+fn assert_stores_equal(a: &Store, b: &Store, what: &str) {
+    assert_eq!(a.names(), b.names(), "{what}: name sets differ");
+    for n in a.names() {
+        assert_eq!(a.get(n).unwrap(), b.get(n).unwrap(), "{what}: '{n}'");
+    }
+}
+
+#[test]
+fn device_loop_host_sync_equivalence_on_the_pool() {
+    let rt = Runtime::cpu().unwrap();
+    let run = |workers: usize, device: bool| -> Vec<Store> {
+        let rt = &rt;
+        let jobs: Vec<_> = (0..8u64)
+            .map(|b| {
+                move || -> anyhow::Result<Store> {
+                    Ok(if device {
+                        device_arm(rt, 42, b, 12)
+                    } else {
+                        host_arm(42, b, 12)
+                    })
+                }
+            })
+            .collect();
+        run_jobs(Parallelism::new(workers), jobs).unwrap().0
+    };
+    let host_ref = run(1, false);
+    for workers in [1, 4] {
+        for device in [false, true] {
+            let got = run(workers, device);
+            for (b, s) in got.iter().enumerate() {
+                assert_stores_equal(
+                    s,
+                    &host_ref[b],
+                    &format!("workers={workers} device={device} shard={b}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_teacher_buffers_do_not_leak_shard_mutations() {
+    let rt = Runtime::cpu().unwrap();
+    let mut teacher = Store::new();
+    teacher.insert("w", Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]));
+    teacher.insert("bn.mean", Tensor::from_f32(&[2], vec![0.1, 0.2]));
+    let base = rt.upload_store(&teacher).unwrap();
+
+    // shards run concurrently on the pool, each overwriting "w" and
+    // adding its own learnables on the shared base
+    let base_ref = &base;
+    let jobs: Vec<_> = (0..6u64)
+        .map(|b| {
+            move || -> anyhow::Result<(Tensor, Tensor)> {
+                let mut dev = base_ref.clone();
+                dev.insert("w", &Tensor::full(&[2, 2], b as f32)).unwrap();
+                dev.insert("z", &Tensor::scalar_f32(b as f32 + 0.5)).unwrap();
+                Ok((dev.fetch("w")?, dev.fetch("bn.mean")?))
+            }
+        })
+        .collect();
+    let (outs, _) = run_jobs(Parallelism::new(4), jobs).unwrap();
+    for (b, (w, mean)) in outs.into_iter().enumerate() {
+        assert_eq!(w.as_f32(), &[b as f32; 4], "shard {b} lost its write");
+        assert_eq!(mean.as_f32(), &[0.1, 0.2], "shard {b} saw a torn teacher");
+    }
+    // the base itself never changed
+    let mut base = base;
+    assert_eq!(base.fetch("w").unwrap(), *teacher.get("w").unwrap());
+    assert!(!base.contains("z"));
+}
+
+#[test]
+fn host_store_clone_is_copy_on_write_across_pool_jobs() {
+    let mut teacher = Store::new();
+    teacher.insert("w", Tensor::from_f32(&[3], vec![1., 2., 3.]));
+    let teacher_ref = &teacher;
+    let jobs: Vec<_> = (0..6usize)
+        .map(|b| {
+            move || -> anyhow::Result<Store> {
+                let mut shard = teacher_ref.clone();
+                shard.insert("w", Tensor::full(&[3], b as f32));
+                Ok(shard)
+            }
+        })
+        .collect();
+    let (outs, _) = run_jobs(Parallelism::new(4), jobs).unwrap();
+    for (b, s) in outs.iter().enumerate() {
+        assert_eq!(s.get("w").unwrap().as_f32(), &[b as f32; 3]);
+    }
+    assert_eq!(teacher.get("w").unwrap().as_f32(), &[1., 2., 3.]);
+}

@@ -4,15 +4,15 @@
 use std::path::Path;
 
 use genie::coordinator::{
-    distill, eval_fp32, eval_quantized, pretrain, quantize, DistillCfg,
-    DistillMode, Metrics, PretrainCfg, QuantCfg,
+    distill, eval_fp32, eval_quantized, insert_zeros, pretrain, quantize,
+    DistillCfg, DistillMode, Metrics, PretrainCfg, QuantCfg,
 };
 use genie::exec::Parallelism;
 use genie::data::Dataset;
 use genie::quant::{init_qstate, BitConfig};
 use genie::runtime::{ModelRt, Runtime};
 use genie::store::Store;
-use genie::tensor::Tensor;
+use genie::tensor::{Pcg32, Tensor};
 
 fn artifacts() -> &'static Path {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
@@ -221,6 +221,90 @@ fn zsq_workers_4_bit_identical_to_workers_1() {
         for n in qi1.names() {
             assert_eq!(qi1.get(n).unwrap(), qi4.get(n).unwrap(), "{n}");
         }
+    });
+}
+
+/// The device-residency contract over a real graph (DESIGN.md §8): a
+/// step loop carried as live buffers through `call_device` must be
+/// bit-identical to the same loop round-tripping the host store through
+/// `call` — same per-step losses, same final parameters — while moving
+/// orders of magnitude fewer bytes.
+#[test]
+fn device_resident_loop_matches_roundtrip() {
+    with_ctx(|rt, mrt, dataset| {
+        let m = &mrt.manifest;
+        let bs = m.batch("train");
+        let entry = mrt.entry("train_step").unwrap();
+        let steps = 12;
+
+        let mut init = mrt.init_store().unwrap();
+        insert_zeros(&mut init, &m.params, "am.");
+        insert_zeros(&mut init, &m.params, "av.");
+
+        // host round-trip arm
+        rt.reset_stats();
+        let mut host = init.clone();
+        let mut rng = Pcg32::new(99);
+        let mut host_losses = Vec::new();
+        for t in 1..=steps {
+            let (x, y) = dataset.train_batch(&mut rng, bs);
+            host.insert("x", x);
+            host.insert("y", Tensor::from_i32(&[bs], y));
+            host.insert("t", Tensor::scalar_f32(t as f32));
+            host.insert("lr", Tensor::scalar_f32(1e-3));
+            host_losses.push(rt.call(&entry, &mut host).unwrap()["loss"]);
+        }
+        let round = rt.dispatch_stats()["train_step"].clone();
+
+        // device-resident arm, same stream
+        rt.reset_stats();
+        let mut rng = Pcg32::new(99);
+        let mut dev = rt.upload_store(&init).unwrap();
+        dev.reset_transfer_bytes();
+        let mut dev_losses = Vec::new();
+        for t in 1..=steps {
+            let (x, y) = dataset.train_batch(&mut rng, bs);
+            dev.insert("x", &x).unwrap();
+            dev.insert("y", &Tensor::from_i32(&[bs], y)).unwrap();
+            dev.insert("t", &Tensor::scalar_f32(t as f32)).unwrap();
+            dev.insert("lr", &Tensor::scalar_f32(1e-3)).unwrap();
+            dev_losses.push(rt.call_device(&entry, &mut dev).unwrap()["loss"]);
+        }
+
+        assert_eq!(host_losses, dev_losses, "per-step losses diverged");
+        for (name, _) in m.params.iter().chain(m.bn.iter()) {
+            assert_eq!(
+                host.get(name).unwrap(),
+                &dev.fetch(name).unwrap(),
+                "state tensor '{name}' diverged"
+            );
+        }
+
+        // transfer contract: the round-trip arm re-uploads the model
+        // every step; the resident arm moves only batches + scalars up
+        // and losses down
+        let (dev_h2d, _) = dev.transfer_bytes();
+        assert!(
+            dev_h2d * 4 < round.bytes_h2d,
+            "device path should move far fewer bytes \
+             ({dev_h2d} vs {})",
+            round.bytes_h2d
+        );
+        let resident = rt.dispatch_stats()["train_step"].clone();
+        assert_eq!(resident.bytes_h2d, 0, "call_device must upload nothing");
+        let n_scalars = entry
+            .spec
+            .results
+            .iter()
+            .filter(|(_, dt, shape)| {
+                dt == "f32" && shape.iter().product::<usize>() == 1
+            })
+            .count() as u64;
+        assert_eq!(
+            resident.bytes_d2h,
+            4 * n_scalars * steps as u64,
+            "call_device downloads exactly the scalar results per step"
+        );
     });
 }
 

@@ -176,8 +176,19 @@ impl XlaComputation {
     }
 }
 
+/// Device handle. The stub exposes a single host "device"; real PJRT
+/// enumerates them via `PjRtClient::devices` (not needed by genie, which
+/// always passes `None` = default device).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PjRtDevice;
+
 /// PJRT client handle. Construction succeeds (so `genie info` and other
-/// host-only paths work); `compile` is where the stub stops.
+/// host-only paths work); `compile` is where the stub stops. Host↔device
+/// buffer transfers ([`buffer_from_host_literal`](Self::buffer_from_host_literal),
+/// [`PjRtBuffer::to_literal_sync`]) are real: a stub "device" buffer is a
+/// host-retained literal, which is exactly what PJRT's CPU client does
+/// minus the C++ indirection — enough for the `DeviceStore` residency
+/// layer (rust/src/runtime/device.rs) to be tested offline.
 #[derive(Debug, Default)]
 pub struct PjRtClient;
 
@@ -196,6 +207,16 @@ impl PjRtClient {
     ) -> Result<PjRtLoadedExecutable> {
         Err(Error::StubBackend("PjRtClient::compile"))
     }
+
+    /// Upload a host literal as a device buffer (`None` = default device).
+    /// Real in the stub: the buffer owns a copy of the literal.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: literal.clone() })
+    }
 }
 
 /// Compiled executable handle (never constructed by the stub).
@@ -209,15 +230,35 @@ impl PjRtLoadedExecutable {
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(Error::StubBackend("PjRtLoadedExecutable::execute"))
     }
+
+    /// Execute over device-resident buffers (the `DeviceStore` hot path).
+    /// Contract assumed by genie's runtime: `result[0]` holds one buffer
+    /// per tuple element of the computation's result (i.e. outputs arrive
+    /// untupled, staying on device). When swapping in real xla-rs, set
+    /// `untuple_result` in the execute options to match.
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::StubBackend("PjRtLoadedExecutable::execute_b"))
+    }
 }
 
-/// Device buffer handle (never constructed by the stub).
-#[derive(Debug)]
-pub struct PjRtBuffer;
+/// Device buffer handle. In the stub this is a host-retained literal, so
+/// upload/download round-trips (and their byte accounting) are real even
+/// though execution is not.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Err(Error::StubBackend("PjRtBuffer::to_literal_sync"))
+        Ok(self.lit.clone())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.lit.element_count()
     }
 }
 
@@ -246,11 +287,32 @@ mod tests {
     }
 
     #[test]
+    fn buffer_upload_download_roundtrip() {
+        let client = PjRtClient::cpu().unwrap();
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        let buf = client.buffer_from_host_literal(None, &lit).unwrap();
+        assert_eq!(buf.element_count(), 3);
+        let back = buf.to_literal_sync().unwrap();
+        assert_eq!(back.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn execute_b_is_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        let lit = Literal::vec1(&[7i32]);
+        let buf = client.buffer_from_host_literal(None, &lit).unwrap();
+        let exe = PjRtLoadedExecutable;
+        let err = exe.execute_b(&[&buf]).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
     fn types_are_send_sync() {
         fn check<T: Send + Sync>() {}
         check::<PjRtClient>();
         check::<PjRtLoadedExecutable>();
         check::<PjRtBuffer>();
+        check::<PjRtDevice>();
         check::<Literal>();
         check::<HloModuleProto>();
         check::<XlaComputation>();
