@@ -4,9 +4,10 @@
 //!   make artifacts && cargo run --release --example quickstart
 
 use anyhow::Result;
+use genie::artifacts::ArtifactCache;
 use genie::coordinator::{
-    eval_fp32, pretrain::teacher_or_pretrain, zsq, DistillCfg, Metrics,
-    PretrainCfg, QuantCfg,
+    eval_fp32, teacher_cached, zsq, DistillCfg, Metrics, PretrainCfg,
+    QuantCfg,
 };
 use genie::data::Dataset;
 use genie::runtime::{ModelRt, Runtime};
@@ -16,19 +17,22 @@ fn main() -> Result<()> {
     let mrt = ModelRt::load(&rt, "artifacts", "toy")?;
     let dataset = Dataset::load("artifacts")?;
     let mut metrics = Metrics::new();
+    // every stage is a content-addressed artifact under cache/ — a
+    // second identical run loads them instead of recomputing
+    let mut cache = ArtifactCache::open("cache", true, false)?;
 
-    // FP32 teacher (cached under runs/)
+    // FP32 teacher (cached by config content)
     let pcfg = PretrainCfg { steps: 200, ..Default::default() };
-    let teacher = teacher_or_pretrain(
-        &mrt, &dataset, &pcfg, std::path::Path::new("runs"), &mut metrics,
-    )?;
+    let teacher = teacher_cached(&mrt, &dataset, &pcfg, &mut cache, &mut metrics)?;
     println!("teacher FP32 top-1: {:.2}%",
              eval_fp32(&mrt, &teacher, &dataset)? * 100.0);
 
     // zero-shot quantization: GENIE-D data + GENIE-M W4A4
     let dcfg = DistillCfg { samples: 64, steps: 80, ..Default::default() };
     let qcfg = QuantCfg { steps_per_block: 80, ..Default::default() };
-    let out = zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut metrics)?;
+    let out = zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut cache, &mut metrics)?;
     out.print("quickstart");
+    let s = cache.stats();
+    println!("cache: {} hits, {} misses (re-run to see the hits)", s.hits, s.misses);
     Ok(())
 }

@@ -7,6 +7,7 @@
 //!   cargo run --release --example zsq_resnet [model] [distill_steps] [quant_steps]
 
 use anyhow::Result;
+use genie::artifacts::ArtifactCache;
 use genie::coordinator::{
     eval_fp32, pretrain::teacher_or_pretrain, zsq, DistillCfg, Metrics,
     PretrainCfg, QuantCfg,
@@ -39,12 +40,13 @@ fn main() -> Result<()> {
         }
     }
 
+    let mut cache = ArtifactCache::open("cache", true, false)?;
     for (w, a) in [(4u32, 4u32), (2, 4)] {
         let dcfg = DistillCfg { samples: 128, steps: dsteps, ..Default::default() };
         let qcfg = QuantCfg {
             wbits: w, abits: a, steps_per_block: qsteps, ..Default::default()
         };
-        let out = zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut metrics)?;
+        let out = zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut cache, &mut metrics)?;
         out.print(&format!("zsq W{w}A{a}"));
     }
     metrics.flush()?;

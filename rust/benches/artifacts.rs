@@ -1,0 +1,161 @@
+//! Artifact-cache + checkpoint benchmarks (DESIGN.md §9). In-tree
+//! harness (no criterion in the offline image); harness = false.
+//!
+//! Always writes `BENCH_artifacts.json`: checkpoint write/read cost (the
+//! engine's mid-phase durability overhead), cache store/load cost, and
+//! key-computation cost. With artifacts present it additionally measures
+//! cold vs warm `zsq` — the cache hit skips distill + quantize entirely —
+//! and records both wall clocks.
+
+use genie::artifacts::{distill_key, ArtifactCache, KeyBuilder};
+use genie::coordinator::{
+    teacher_cached, zsq, DistillCfg, Metrics, PretrainCfg, QuantCfg,
+};
+use genie::data::Dataset;
+use genie::phase::checkpoint;
+use genie::runtime::{Manifest, ModelRt, Runtime, Scalars};
+use genie::store::Store;
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::{bench_secs, report};
+
+fn main() {
+    let mut rng = Pcg32::new(13);
+    let rt = Runtime::cpu().unwrap();
+
+    // ---- checkpoint write/read: a distill-shaped carried set ---------
+    // (generator params + Adam moments + latents, ~1.2 MiB) through the
+    // atomic GTS1 path. This is what the engine pays every
+    // `checkpoint_every` steps.
+    let mut dev = rt.device_store();
+    let mut carried = Vec::new();
+    for i in 0..24 {
+        for prefix in ["g", "am.g", "av.g"] {
+            let name = format!("{prefix}{i}");
+            dev.insert(&name, &Tensor::randn(&[64, 64], &mut rng, 1.0))
+                .unwrap();
+            carried.push(name);
+        }
+    }
+    dev.insert("z", &Tensor::randn(&[64, 256], &mut rng, 1.0)).unwrap();
+    carried.push("z".to_string());
+    let mut host = Store::new();
+    host.insert("rng", checkpoint::rng_tensor(&rng));
+    let mut sc = Scalars::new();
+    sc.insert("loss", 1.0);
+    let trace = vec![(50usize, sc.clone()), (100usize, sc)];
+
+    let dir = std::env::temp_dir().join("genie_bench_artifacts");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_path = dir.join("shard0.ckpt");
+    let mut ckpt_bytes = 0u64;
+    let ckpt_secs = bench_secs(3, 50, || {
+        ckpt_bytes = checkpoint::write(
+            &ckpt_path, 100, &carried, &host, &trace, &mut dev,
+        )
+        .unwrap();
+    });
+    report("artifacts/checkpoint_write", ckpt_secs);
+    let ckpt_read_secs = bench_secs(3, 50, || {
+        std::hint::black_box(checkpoint::read(&ckpt_path).unwrap());
+    });
+    report("artifacts/checkpoint_read", ckpt_read_secs);
+    // amortized per step at the default cadence
+    println!(
+        "checkpoint overhead: {ckpt_bytes} B/write, \
+         {:.1} us/step at checkpoint_every=50",
+        ckpt_secs * 1e6 / 50.0
+    );
+
+    // ---- cache store/load of a synthetic-calibration artifact --------
+    let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+    let key = KeyBuilder::new("bench").field("x", 1).finish();
+    let mut art = Store::new();
+    art.insert("images", Tensor::randn(&[128, 16, 16, 3], &mut rng, 1.0));
+    let store_secs = bench_secs(3, 50, || {
+        cache.store("bench", key, &art).unwrap();
+    });
+    report("artifacts/cache_store_384KiB", store_secs);
+    let load_secs = bench_secs(3, 50, || {
+        std::hint::black_box(cache.load("bench", key).unwrap());
+    });
+    report("artifacts/cache_load_384KiB", load_secs);
+
+    // ---- key computation (FNV over config + teacher content) ---------
+    let m = Manifest::from_json_text(
+        r#"{
+            "model": "bench", "image": [16, 16, 3], "num_classes": 10,
+            "num_blocks": 2, "latent": 256,
+            "batch": {"train": 64},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [], "learnable": {"0": []},
+            "bounds": [], "entrypoints": {}
+        }"#,
+    )
+    .unwrap();
+    let mut teacher = Store::new();
+    for i in 0..32 {
+        teacher
+            .insert(&format!("w{i}"), Tensor::randn(&[32, 32], &mut rng, 1.0));
+    }
+    let dcfg = DistillCfg::default();
+    let key_secs = bench_secs(3, 200, || {
+        // including the teacher content hash — the dominant cost, paid
+        // once per pipeline run and shared across its stage keys
+        std::hint::black_box(distill_key(&m, &dcfg, teacher.content_hash()));
+    });
+    report("artifacts/distill_key_128KiB_teacher", key_secs);
+
+    // ---- cold vs warm zsq (needs artifacts + real PJRT) --------------
+    let mut cold_secs = -1.0f64;
+    let mut warm_secs = -1.0f64;
+    if std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        let mrt = ModelRt::load(&rt, "artifacts", "toy").unwrap();
+        let dataset = Dataset::load("artifacts").unwrap();
+        let mut metrics = Metrics::new();
+        let mut zcache =
+            ArtifactCache::open(dir.join("zsq_cache"), true, false).unwrap();
+        let pcfg = PretrainCfg { steps: 60, ..Default::default() };
+        let dcfg = DistillCfg { samples: 64, steps: 40, ..Default::default() };
+        let qcfg = QuantCfg { steps_per_block: 40, ..Default::default() };
+        let teacher =
+            teacher_cached(&mrt, &dataset, &pcfg, &mut zcache, &mut metrics)
+                .unwrap();
+        let t0 = std::time::Instant::now();
+        zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut zcache, &mut metrics)
+            .unwrap();
+        cold_secs = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut zcache, &mut metrics)
+            .unwrap();
+        warm_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "zsq: cold {cold_secs:.2}s -> warm {warm_secs:.2}s \
+             ({:.0}x, cache hit skips distill+quantize)",
+            cold_secs / warm_secs.max(1e-9)
+        );
+        assert!(
+            warm_secs < cold_secs,
+            "a full cache hit must beat the cold run"
+        );
+    } else {
+        println!("bench artifacts/zsq_cold_warm: skipped (run `make artifacts`)");
+    }
+
+    // negative sentinel (-1.0) = artifact-gated section did not run
+    let json = format!(
+        "{{\n  \"checkpoint_write_secs\": {ckpt_secs:.6},\n  \
+         \"checkpoint_read_secs\": {ckpt_read_secs:.6},\n  \
+         \"checkpoint_bytes\": {ckpt_bytes},\n  \
+         \"checkpoint_secs_per_step_every50\": {:.8},\n  \
+         \"cache_store_secs\": {store_secs:.6},\n  \
+         \"cache_load_secs\": {load_secs:.6},\n  \
+         \"distill_key_secs\": {key_secs:.6},\n  \
+         \"cold_zsq_secs\": {cold_secs:.4},\n  \
+         \"warm_zsq_secs\": {warm_secs:.4}\n}}\n",
+        ckpt_secs / 50.0,
+    );
+    std::fs::write("BENCH_artifacts.json", json).unwrap();
+    println!("wrote BENCH_artifacts.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

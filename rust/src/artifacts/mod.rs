@@ -1,0 +1,434 @@
+//! Content-addressed artifact cache (DESIGN.md §9): pipeline stages —
+//! teacher pretraining, GENIE-D synthesis, GENIE-M qstate — persist
+//! their products as GTS1 files keyed by a stable hash of everything
+//! that determines them: the phase config fields, the manifest identity,
+//! and the content hashes of upstream artifacts. `pipeline::zsq`/`fsq`
+//! then become DAG lookups — a completed stage loads in milliseconds
+//! instead of re-running — and an in-progress stage's per-shard
+//! checkpoints live in a `wip_*` work dir that the cache clears once the
+//! stage's artifact lands.
+//!
+//! Keys deliberately exclude `workers` (parallel phases are bit-identical
+//! for any worker count, DESIGN.md §5) and include `seed` (a different
+//! seed is a different artifact). Hashing is FNV-1a 64 over a canonical
+//! `name=value;` rendering plus raw tensor bytes — never std's SipHash,
+//! whose keys are process-random.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
+use crate::phase::checkpoint::atomic_save;
+use crate::phase::StageCkpt;
+use crate::runtime::Manifest;
+use crate::store::{fnv1a, Store, FNV_OFFSET};
+use crate::tensor::{Data, Tensor};
+
+/// A 64-bit content-addressed cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey(pub u64);
+
+impl CacheKey {
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Builds a [`CacheKey`] from named fields. Every field moves the key;
+/// field order is part of the recipe (documented in DESIGN.md §9).
+#[derive(Debug, Clone)]
+pub struct KeyBuilder {
+    h: u64,
+}
+
+impl KeyBuilder {
+    pub fn new(kind: &str) -> Self {
+        KeyBuilder { h: FNV_OFFSET }.field("kind", kind)
+    }
+
+    pub fn field(mut self, name: &str, value: impl std::fmt::Display) -> Self {
+        self.h = fnv1a(self.h, name.as_bytes());
+        self.h = fnv1a(self.h, b"=");
+        self.h = fnv1a(self.h, value.to_string().as_bytes());
+        self.h = fnv1a(self.h, b";");
+        self
+    }
+
+    /// Fold an upstream artifact's key in (a DAG edge).
+    pub fn upstream(self, name: &str, key: CacheKey) -> Self {
+        self.field(name, key.hex())
+    }
+
+    /// Fold a store's content address in (teacher checkpoints).
+    pub fn store(self, name: &str, s: &Store) -> Self {
+        self.field(name, format!("{:016x}", s.content_hash()))
+    }
+
+    /// Fold one tensor's dtype/shape/bytes in (calibration sets).
+    pub fn tensor(mut self, name: &str, t: &Tensor) -> Self {
+        self.h = fnv1a(self.h, name.as_bytes());
+        self.h = fnv1a(self.h, b"=");
+        self.h = fnv1a(
+            self.h,
+            format!("{:?}{:?}", t.dtype(), t.shape).as_bytes(),
+        );
+        match &t.data {
+            Data::F32(v) => {
+                for x in v {
+                    self.h = fnv1a(self.h, &x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    self.h = fnv1a(self.h, &x.to_le_bytes());
+                }
+            }
+            Data::U32(v) => {
+                for x in v {
+                    self.h = fnv1a(self.h, &x.to_le_bytes());
+                }
+            }
+        }
+        self.h = fnv1a(self.h, b";");
+        self
+    }
+
+    pub fn finish(self) -> CacheKey {
+        CacheKey(self.h)
+    }
+}
+
+/// Manifest identity folded into every stage key: the model name plus
+/// the structural facts its graphs were lowered with.
+fn manifest_fields(b: KeyBuilder, m: &Manifest) -> KeyBuilder {
+    b.field("model", &m.model)
+        .field("image", format!("{:?}", m.image))
+        .field("classes", m.num_classes)
+        .field("blocks", m.num_blocks)
+        .field("latent", m.latent)
+}
+
+fn mode_str(m: DistillMode) -> &'static str {
+    match m {
+        DistillMode::Genie => "genie",
+        DistillMode::Gba => "gba",
+        DistillMode::Direct => "direct",
+    }
+}
+
+/// Key of the pretrained-teacher artifact.
+pub fn pretrain_key(m: &Manifest, cfg: &PretrainCfg) -> CacheKey {
+    manifest_fields(KeyBuilder::new("teacher"), m)
+        .field("steps", cfg.steps)
+        .field("lr", cfg.lr)
+        .field("log_every", cfg.log_every)
+        .field("seed", cfg.seed)
+        .finish()
+}
+
+/// Key of the synthetic-calibration artifact: the distill config plus
+/// the teacher it was distilled from (by content hash, so a retrained
+/// teacher invalidates downstream artifacts automatically — the caller
+/// computes `Store::content_hash` once and shares it across the stage
+/// keys of one run). `par` is excluded — shard fan-out never changes
+/// the images.
+pub fn distill_key(
+    m: &Manifest,
+    cfg: &DistillCfg,
+    teacher_hash: u64,
+) -> CacheKey {
+    manifest_fields(KeyBuilder::new("distill"), m)
+        .field("mode", mode_str(cfg.mode))
+        .field("swing", cfg.swing)
+        .field("samples", cfg.samples)
+        .field("steps", cfg.steps)
+        .field("lr_g", cfg.lr_g)
+        .field("lr_z", cfg.lr_z)
+        .field("log_every", cfg.log_every)
+        .field("seed", cfg.seed)
+        .field("teacher", format!("{teacher_hash:016x}"))
+        .finish()
+}
+
+/// Key of the optimized-qstate artifact: the quant config plus the
+/// teacher (by precomputed content hash) and the calibration images
+/// (synthetic or real) by content.
+pub fn quantize_key(
+    m: &Manifest,
+    cfg: &QuantCfg,
+    teacher_hash: u64,
+    calib: &Tensor,
+) -> CacheKey {
+    manifest_fields(KeyBuilder::new("qstate"), m)
+        .field("wbits", cfg.wbits)
+        .field("abits", cfg.abits)
+        .field("steps", cfg.steps_per_block)
+        .field("lr_sw", cfg.lr_sw)
+        .field("lr_v", cfg.lr_v)
+        .field("lr_sa", cfg.lr_sa)
+        .field("lam", cfg.lam)
+        .field("beta_start", cfg.beta_start)
+        .field("beta_end", cfg.beta_end)
+        .field("drop_p", cfg.drop_p)
+        .field("pnorm", cfg.pnorm)
+        .field("refresh", cfg.refresh_student)
+        .field("log_every", cfg.log_every)
+        .field("seed", cfg.seed)
+        .field("teacher", format!("{teacher_hash:016x}"))
+        .tensor("calib", calib)
+        .finish()
+}
+
+/// Cache traffic counters, mirrored into `Metrics` by the pipeline.
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub stores: u64,
+}
+
+/// The on-disk cache: completed artifacts as `<kind>_<key>.gts`, stage
+/// work dirs as `wip_<kind>_<key>/`.
+#[derive(Debug)]
+pub struct ArtifactCache {
+    dir: PathBuf,
+    enabled: bool,
+    resume: bool,
+    checkpoint_every: usize,
+    stats: CacheStats,
+}
+
+impl ArtifactCache {
+    /// Open (creating) a cache dir. `enabled = false` turns every lookup
+    /// into a miss and every store into a no-op (`--no-cache`); `resume`
+    /// lets interrupted stages continue from their wip checkpoints
+    /// (`--resume`).
+    pub fn open(
+        dir: impl AsRef<Path>,
+        enabled: bool,
+        resume: bool,
+    ) -> Result<Self> {
+        if enabled {
+            std::fs::create_dir_all(dir.as_ref())
+                .with_context(|| format!("create cache dir {:?}", dir.as_ref()))?;
+        }
+        Ok(ArtifactCache {
+            dir: dir.as_ref().to_path_buf(),
+            enabled,
+            resume,
+            checkpoint_every: 50,
+            stats: CacheStats::default(),
+        })
+    }
+
+    /// A cache that never hits nor persists — for call sites that opt
+    /// out of caching entirely.
+    pub fn disabled() -> Self {
+        ArtifactCache {
+            dir: PathBuf::from("cache"),
+            enabled: false,
+            resume: false,
+            checkpoint_every: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Steps between mid-phase checkpoint writes (0 = shard-boundary
+    /// durability only).
+    pub fn set_checkpoint_every(&mut self, every: usize) {
+        self.checkpoint_every = every;
+    }
+
+    pub fn path(&self, kind: &str, key: CacheKey) -> PathBuf {
+        self.dir.join(format!("{kind}_{}.gts", key.hex()))
+    }
+
+    /// Look a completed artifact up, counting the hit/miss. A missing or
+    /// unparseable file is a miss (the stage re-runs and rewrites it).
+    pub fn load(&mut self, kind: &str, key: CacheKey) -> Option<Store> {
+        if !self.enabled {
+            self.stats.misses += 1;
+            return None;
+        }
+        match Store::load(self.path(kind, key)) {
+            Ok(s) => {
+                self.stats.hits += 1;
+                Some(s)
+            }
+            Err(_) => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a completed artifact (atomic write) and clear the stage's
+    /// work dir. No-op when disabled.
+    pub fn store(
+        &mut self,
+        kind: &str,
+        key: CacheKey,
+        s: &Store,
+    ) -> Result<Option<PathBuf>> {
+        if !self.enabled {
+            return Ok(None);
+        }
+        let p = self.path(kind, key);
+        atomic_save(s, &p)?;
+        self.stats.stores += 1;
+        self.clear_wip(kind, key);
+        Ok(Some(p))
+    }
+
+    /// The in-progress work dir for one stage.
+    pub fn wip_dir(&self, kind: &str, key: CacheKey) -> PathBuf {
+        self.dir.join(format!("wip_{kind}_{}", key.hex()))
+    }
+
+    /// Per-shard checkpoint policy for one stage; `None` when disabled.
+    pub fn stage_ckpt(&self, kind: &str, key: CacheKey) -> Option<StageCkpt> {
+        if !self.enabled {
+            return None;
+        }
+        Some(StageCkpt::new(
+            self.wip_dir(kind, key),
+            self.checkpoint_every,
+            self.resume,
+        ))
+    }
+
+    pub fn clear_wip(&self, kind: &str, key: CacheKey) {
+        std::fs::remove_dir_all(self.wip_dir(kind, key)).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::from_json_text(
+            r#"{
+                "model": "toy", "image": [16, 16, 3], "num_classes": 10,
+                "num_blocks": 2, "latent": 256,
+                "batch": {"train": 64},
+                "params": [], "bn": [], "qstate": [], "gen_params": [],
+                "quant_layers": [], "learnable": {"0": []},
+                "bounds": [], "entrypoints": {}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn keys_stable_and_config_sensitive() {
+        let m = toy_manifest();
+        let mut teacher = Store::new();
+        teacher.insert("w", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        let th = teacher.content_hash();
+
+        let d = DistillCfg::default();
+        let k1 = distill_key(&m, &d, th);
+        let k2 = distill_key(&m, &d, th);
+        assert_eq!(k1, k2, "same inputs must key identically");
+
+        // any config field moves the key; `par` does not
+        let mut d2 = d.clone();
+        d2.steps += 1;
+        assert_ne!(distill_key(&m, &d2, th), k1);
+        let mut d3 = d.clone();
+        d3.par = crate::exec::Parallelism::new(7);
+        assert_eq!(distill_key(&m, &d3, th), k1);
+
+        // upstream content moves the key
+        let mut teacher2 = Store::new();
+        teacher2.insert("w", Tensor::from_f32(&[2], vec![1.0, 2.5]));
+        assert_ne!(distill_key(&m, &d, teacher2.content_hash()), k1);
+
+        // different stage kinds never collide on the same fields
+        let p = PretrainCfg::default();
+        assert_ne!(pretrain_key(&m, &p).0, k1.0);
+    }
+
+    #[test]
+    fn quantize_key_tracks_calib_content() {
+        let m = toy_manifest();
+        let th = Store::new().content_hash();
+        let q = QuantCfg::default();
+        let a = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 5.0]);
+        let ka = quantize_key(&m, &q, th, &a);
+        assert_eq!(ka, quantize_key(&m, &q, th, &a));
+        assert_ne!(ka, quantize_key(&m, &q, th, &b));
+        let kq = {
+            let mut q2 = q.clone();
+            q2.wbits = 2;
+            quantize_key(&m, &q2, th, &a)
+        };
+        assert_ne!(ka, kq);
+    }
+
+    #[test]
+    fn cache_store_load_counts_and_clears_wip() {
+        let dir = std::env::temp_dir().join("genie_artifact_cache_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").field("x", 1).finish();
+
+        assert!(cache.load("stage", key).is_none());
+        assert_eq!(cache.stats().misses, 1);
+
+        // a wip dir with a shard checkpoint, cleared by the store
+        let stage = cache.stage_ckpt("stage", key).unwrap();
+        let mut shard = Store::new();
+        shard.insert("part", Tensor::scalar_f32(1.0));
+        stage.write_done("shard0", &shard).unwrap();
+        assert!(cache.wip_dir("stage", key).exists());
+
+        let mut art = Store::new();
+        art.insert("images", Tensor::zeros(&[2, 3]));
+        let p = cache.store("stage", key, &art).unwrap().unwrap();
+        assert!(p.exists());
+        assert!(!cache.wip_dir("stage", key).exists(), "wip must clear");
+
+        let back = cache.load("stage", key).unwrap();
+        assert_eq!(back.get("images").unwrap().shape, vec![2, 3]);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().stores, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut cache = ArtifactCache::disabled();
+        let key = KeyBuilder::new("test").finish();
+        assert!(!cache.is_enabled());
+        assert!(cache.load("stage", key).is_none());
+        let art = Store::new();
+        assert!(cache.store("stage", key, &art).unwrap().is_none());
+        assert!(cache.stage_ckpt("stage", key).is_none());
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().stores, 0);
+    }
+
+    #[test]
+    fn corrupt_artifact_is_a_miss() {
+        let dir = std::env::temp_dir().join("genie_artifact_corrupt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").finish();
+        std::fs::write(cache.path("stage", key), b"NOPE").unwrap();
+        assert!(cache.load("stage", key).is_none());
+        assert_eq!(cache.stats().misses, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -25,6 +25,15 @@ pub struct RunConfig {
     pub quant: QuantCfg,
     /// few-shot calibration sample count (fsq)
     pub fsq_samples: usize,
+    /// artifact-cache directory (`--cache-dir`, DESIGN.md §9)
+    pub cache_dir: String,
+    /// content-addressed artifact caching on/off (`--no-cache` clears it)
+    pub cache: bool,
+    /// resume interrupted stages from their wip checkpoints (`--resume`)
+    pub resume: bool,
+    /// steps between mid-phase checkpoint writes (0 = shard-boundary
+    /// durability only)
+    pub checkpoint_every: usize,
 }
 
 impl Default for RunConfig {
@@ -39,6 +48,10 @@ impl Default for RunConfig {
             distill: DistillCfg::default(),
             quant: QuantCfg::default(),
             fsq_samples: 128,
+            cache_dir: "cache".into(),
+            cache: true,
+            resume: false,
+            checkpoint_every: 50,
         }
     }
 }
@@ -68,6 +81,12 @@ impl RunConfig {
                 self.par = Parallelism::new(p!(usize));
                 self.distill.par = self.par;
                 self.quant.par = self.par;
+            }
+            "cache_dir" => self.cache_dir = value.to_string(),
+            "cache" => self.cache = p!(bool),
+            "resume" => self.resume = p!(bool),
+            "checkpoint_every" | "ckpt.every" => {
+                self.checkpoint_every = p!(usize)
             }
             "wbits" | "quant.wbits" => self.quant.wbits = p!(u32),
             "abits" | "quant.abits" => self.quant.abits = p!(u32),
@@ -142,6 +161,23 @@ mod tests {
         c.set("seed", "99").unwrap();
         assert_ne!(c.pretrain.seed, c.distill.seed);
         assert_ne!(c.distill.seed, c.quant.seed);
+    }
+
+    #[test]
+    fn cache_keys_apply() {
+        let mut c = RunConfig::default();
+        assert!(c.cache && !c.resume);
+        c.apply_overrides(&[
+            "cache=false".into(),
+            "resume=true".into(),
+            "cache_dir=/tmp/x".into(),
+            "ckpt.every=25".into(),
+        ])
+        .unwrap();
+        assert!(!c.cache);
+        assert!(c.resume);
+        assert_eq!(c.cache_dir, "/tmp/x");
+        assert_eq!(c.checkpoint_every, 25);
     }
 
     #[test]

@@ -17,16 +17,18 @@
 //! from `Pcg32::new_stream(seed, b)`, so the synthetic set is bit-identical
 //! for any worker count.
 //!
-//! Device residency (DESIGN.md §8): the teacher is uploaded once and its
-//! buffers are `Arc`-shared by every shard; each shard's step loop runs on
-//! a [`DeviceStore`], so per-step traffic is the schedule scalars up and
-//! the loss down — the synthetic images come back to the host exactly
-//! once, at the `gen_images` phase boundary.
+//! Each shard's step loop runs on the shared phase engine (DESIGN.md §9):
+//! [`GenieShard`] / [`DirectShard`] supply the per-step scalars and the
+//! carried state names; [`StepLoop`] owns residency and — with a stage
+//! checkpoint attached — periodic GTS1 checkpoints plus `shard{b}.done`
+//! results, so an interrupted synthesis resumes per shard, mid-loop,
+//! bit-identically (RNG + plateau scheduler travel in the snapshot).
 
 use anyhow::Result;
 
 use crate::exec::{run_jobs, Parallelism};
-use crate::runtime::{DeviceStore, ModelRt};
+use crate::phase::{checkpoint, Phase, StageCkpt, StepLoop};
+use crate::runtime::{DeviceStore, ModelRt, Scalars};
 use crate::schedule::{ExponentialDecay, ReduceLROnPlateau};
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
@@ -93,6 +95,287 @@ pub struct DistillOutput {
     pub final_loss: f32,
 }
 
+/// One generator-based shard (GENIE / GBA) as a [`Phase`]: generator
+/// params, Adam moments and latents stay device-resident across steps;
+/// only `key`/`t`/`lr_*` go up and the loss comes down per step.
+struct GenieShard<'a, 'rt> {
+    mrt: &'a ModelRt<'rt>,
+    tag: &'a str,
+    rng: Pcg32,
+    gen_sched: ExponentialDecay,
+    z_sched: ReduceLROnPlateau,
+    lr_z: f32,
+    lr_z_active: bool,
+}
+
+impl<'a, 'rt> GenieShard<'a, 'rt> {
+    fn new(
+        mrt: &'a ModelRt<'rt>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Self {
+        let lr_z_active = cfg.mode == DistillMode::Genie;
+        GenieShard {
+            mrt,
+            tag,
+            rng,
+            gen_sched: ExponentialDecay::new(cfg.lr_g, 0.95, 100),
+            z_sched: ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30),
+            lr_z: if lr_z_active { cfg.lr_z } else { 0.0 },
+            lr_z_active,
+        }
+    }
+}
+
+impl Phase for GenieShard<'_, '_> {
+    fn name(&self) -> String {
+        "distill".into()
+    }
+
+    fn entry(&self) -> String {
+        format!("distill_genie_{}", self.tag)
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        let m = &self.mrt.manifest;
+        let bd = m.batch("distill");
+        // fresh generator per batch (appendix A)
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        self.mrt.call_device("gen_init", dev)?;
+        for (name, shape) in &m.gen_params {
+            dev.insert(&format!("am.{name}"), &Tensor::zeros(shape))?;
+            dev.insert(&format!("av.{name}"), &Tensor::zeros(shape))?;
+        }
+        // latents z ~ N(0, I), learnable (the GLO insight, section 3.1)
+        let zshape = [bd, m.latent];
+        dev.insert("z", &Tensor::randn(&zshape, &mut self.rng, 1.0))?;
+        dev.insert("zm", &Tensor::zeros(&zshape))?;
+        dev.insert("zv", &Tensor::zeros(&zshape))?;
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr_g", &Tensor::scalar_f32(self.gen_sched.lr(t - 1)))?;
+        dev.insert("lr_z", &Tensor::scalar_f32(self.lr_z))?;
+        Ok(())
+    }
+
+    fn after_step(
+        &mut self,
+        _t: usize,
+        scalars: &Scalars,
+        _dev: &mut DeviceStore,
+    ) -> Result<()> {
+        if self.lr_z_active {
+            self.lr_z = self.z_sched.observe(scalars["loss"]);
+        }
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        let m = &self.mrt.manifest;
+        let mut v = Vec::new();
+        for (n, _) in &m.gen_params {
+            v.push(n.clone());
+            v.push(format!("am.{n}"));
+            v.push(format!("av.{n}"));
+        }
+        v.extend(["z".to_string(), "zm".to_string(), "zv".to_string()]);
+        v
+    }
+
+    fn snapshot(&self) -> Store {
+        let mut s = Store::new();
+        s.insert("rng", checkpoint::rng_tensor(&self.rng));
+        s.insert("z_sched", checkpoint::plateau_tensor(&self.z_sched));
+        s.insert("lr_z", Tensor::scalar_f32(self.lr_z));
+        s
+    }
+
+    fn restore(&mut self, snap: &Store) -> Result<()> {
+        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
+        checkpoint::plateau_restore(&mut self.z_sched, snap.get("z_sched")?)?;
+        self.lr_z = snap.get("lr_z")?.scalar();
+        Ok(())
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        // phase boundary: the only full-tensor download of the shard
+        self.mrt.call_device("gen_images", dev)?;
+        let mut out = Store::new();
+        out.insert("images", dev.fetch("images")?);
+        Ok(out)
+    }
+}
+
+/// One direct (ZeroQ/DBA) shard as a [`Phase`]: the images themselves
+/// are the parameters, living on device until the final fetch.
+struct DirectShard<'a, 'rt> {
+    mrt: &'a ModelRt<'rt>,
+    tag: &'a str,
+    rng: Pcg32,
+    sched: ReduceLROnPlateau,
+    lr: f32,
+}
+
+impl<'a, 'rt> DirectShard<'a, 'rt> {
+    fn new(
+        mrt: &'a ModelRt<'rt>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Self {
+        DirectShard {
+            mrt,
+            tag,
+            rng,
+            sched: ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30),
+            lr: cfg.lr_z,
+        }
+    }
+}
+
+impl Phase for DirectShard<'_, '_> {
+    fn name(&self) -> String {
+        "distill".into()
+    }
+
+    fn entry(&self) -> String {
+        format!("distill_direct_{}", self.tag)
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        let m = &self.mrt.manifest;
+        let bd = m.batch("distill");
+        let img = &m.image;
+        let xshape = [bd, img[0], img[1], img[2]];
+        dev.insert("x", &Tensor::randn(&xshape, &mut self.rng, 1.0))?;
+        dev.insert("xm", &Tensor::zeros(&xshape))?;
+        dev.insert("xv", &Tensor::zeros(&xshape))?;
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr", &Tensor::scalar_f32(self.lr))?;
+        Ok(())
+    }
+
+    fn after_step(
+        &mut self,
+        _t: usize,
+        scalars: &Scalars,
+        _dev: &mut DeviceStore,
+    ) -> Result<()> {
+        self.lr = self.sched.observe(scalars["loss"]);
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        vec!["x".into(), "xm".into(), "xv".into()]
+    }
+
+    fn snapshot(&self) -> Store {
+        let mut s = Store::new();
+        s.insert("rng", checkpoint::rng_tensor(&self.rng));
+        s.insert("sched", checkpoint::plateau_tensor(&self.sched));
+        s.insert("lr", Tensor::scalar_f32(self.lr));
+        s
+    }
+
+    fn restore(&mut self, snap: &Store) -> Result<()> {
+        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
+        checkpoint::plateau_restore(&mut self.sched, snap.get("sched")?)?;
+        self.lr = snap.get("lr")?.scalar();
+        Ok(())
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        let mut out = Store::new();
+        out.insert("images", dev.fetch("x")?);
+        Ok(out)
+    }
+}
+
+/// What one shard job hands back to the aggregation loop.
+struct ShardResult {
+    images: Tensor,
+    /// (step, BNS loss) at each engine-logged step — real labels, so the
+    /// aggregation never has to re-derive them from `log_every`
+    trace: Vec<(usize, f32)>,
+    transfer: (u64, u64),
+    ckpt_writes: usize,
+    ckpt_bytes: u64,
+}
+
+/// One distill shard through the engine: load a `done` result when
+/// resuming, otherwise run (possibly from a mid-loop checkpoint) and
+/// persist the result for future resumes.
+fn distill_shard(
+    mrt: &ModelRt,
+    teacher_dev: &DeviceStore<'_>,
+    cfg: &DistillCfg,
+    tag: &str,
+    b: usize,
+    ck: Option<&StageCkpt>,
+) -> Result<ShardResult> {
+    let shard_name = format!("shard{b}");
+    if let Some(ck) = ck {
+        if let Some(done) = ck.load_done(&shard_name) {
+            return Ok(ShardResult {
+                images: done.get("images")?.clone(),
+                trace: checkpoint::trace_from_store(&done, "trace")?,
+                transfer: (0, 0),
+                ckpt_writes: 0,
+                ckpt_bytes: 0,
+            });
+        }
+    }
+    // shard-local view: teacher buffers shared, own learnables on top
+    let mut dev = teacher_dev.clone();
+    let steploop = StepLoop::new(cfg.steps, cfg.log_every.max(1))
+        .with_checkpoint(ck.map(|c| c.shard(&shard_name)));
+    let rng = Pcg32::new_stream(cfg.seed, b as u64);
+    let out = match cfg.mode {
+        DistillMode::Direct => {
+            let mut phase = DirectShard::new(mrt, cfg, tag, rng);
+            steploop.run(mrt, &mut phase, &mut dev)?
+        }
+        _ => {
+            let mut phase = GenieShard::new(mrt, cfg, tag, rng);
+            steploop.run(mrt, &mut phase, &mut dev)?
+        }
+    };
+    anyhow::ensure!(
+        out.completed,
+        "distill shard {b}: interrupted by step budget (checkpoint \
+         written; re-run with resume to continue)"
+    );
+    let images = out.result.get("images")?.clone();
+    let trace: Vec<(usize, f32)> =
+        out.trace.iter().map(|(t, s)| (*t, s["loss"])).collect();
+    if let Some(ck) = ck {
+        let mut done = Store::new();
+        done.insert("images", images.clone());
+        checkpoint::trace_to_store(&mut done, "trace", &trace);
+        ck.write_done(&shard_name, &done)?;
+    }
+    Ok(ShardResult {
+        images,
+        trace,
+        transfer: dev.transfer_bytes(),
+        ckpt_writes: out.checkpoints_written,
+        ckpt_bytes: out.checkpoint_bytes,
+    })
+}
+
 /// Distill a synthetic calibration set from the teacher's BN statistics.
 /// Shards (one per distill batch) run concurrently on the exec pool;
 /// shard b's randomness comes exclusively from `new_stream(seed, b)`, so
@@ -101,6 +384,18 @@ pub fn distill(
     mrt: &ModelRt,
     teacher: &Store,
     cfg: &DistillCfg,
+    metrics: &mut Metrics,
+) -> Result<DistillOutput> {
+    distill_ck(mrt, teacher, cfg, None, metrics)
+}
+
+/// [`distill`] with an optional stage checkpoint (per-shard engine
+/// checkpoints + completed-shard results in the stage's work dir).
+pub fn distill_ck(
+    mrt: &ModelRt,
+    teacher: &Store,
+    cfg: &DistillCfg,
+    ck: Option<&StageCkpt>,
     metrics: &mut Metrics,
 ) -> Result<DistillOutput> {
     let m = &mrt.manifest;
@@ -119,32 +414,26 @@ pub fn distill(
     let teacher_dev = mrt.upload_store(teacher)?;
     let tdev = &teacher_dev;
     let jobs: Vec<_> = (0..n_batches)
-        .map(|b| {
-            move || -> Result<(Tensor, Vec<f32>, (u64, u64))> {
-                let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
-                match cfg.mode {
-                    DistillMode::Direct => {
-                        distill_direct(mrt, tdev, cfg, tag, &mut rng)
-                    }
-                    _ => distill_genie(mrt, tdev, cfg, tag, &mut rng),
-                }
-            }
-        })
+        .map(|b| move || distill_shard(mrt, tdev, cfg, tag, b, ck))
         .collect();
     let (shards, pool) = run_jobs(cfg.par, jobs)?;
     let secs = metrics.stop("distill");
     metrics.record_pool("distill", &pool);
 
     let mut parts: Vec<Tensor> = Vec::new();
-    let mut traces: Vec<Vec<f32>> = Vec::new();
+    let mut traces: Vec<Vec<(usize, f32)>> = Vec::new();
     let mut final_losses = Vec::new();
     let (mut h2d, mut d2h) = teacher_dev.transfer_bytes();
-    for (b, (imgs, trace, xfer)) in shards.into_iter().enumerate() {
-        final_losses.push(*trace.last().unwrap());
-        traces.push(trace);
-        parts.push(imgs);
-        h2d += xfer.0;
-        d2h += xfer.1;
+    let mut ckpt_writes = 0usize;
+    let mut ckpt_bytes = 0u64;
+    for (b, shard) in shards.into_iter().enumerate() {
+        final_losses.push(shard.trace.last().map(|&(_, v)| v).unwrap());
+        traces.push(shard.trace);
+        parts.push(shard.images);
+        h2d += shard.transfer.0;
+        d2h += shard.transfer.1;
+        ckpt_writes += shard.ckpt_writes;
+        ckpt_bytes += shard.ckpt_bytes;
         if b == 0 || b == n_batches - 1 {
             println!(
                 "distill[{}/{mode_name}/{tag}] shard {}/{}: loss {:.3}",
@@ -156,15 +445,19 @@ pub fn distill(
         }
     }
     metrics.record_transfers("distill", cfg.steps, h2d, d2h);
+    if ckpt_writes > 0 {
+        metrics.record_checkpoint("distill", ckpt_writes, ckpt_bytes);
+    }
 
-    // average trace across batches at each logged step; the final entry
-    // lands at t == steps, which is not a multiple of log_every when
-    // log_every does not divide steps — clamp the label to the real step
+    // average trace across batches at each logged step; every shard logs
+    // the same engine-labeled steps (log_every cadence plus the real
+    // final step), so shard 0's labels are the series' labels
     let steps_logged = traces[0].len();
     let mut loss_trace = Vec::with_capacity(steps_logged);
     for i in 0..steps_logged {
-        let avg = traces.iter().map(|t| t[i]).sum::<f32>() / traces.len() as f32;
-        let step = ((i + 1) * cfg.log_every).min(cfg.steps);
+        let avg =
+            traces.iter().map(|t| t[i].1).sum::<f32>() / traces.len() as f32;
+        let step = traces[0][i].0;
         metrics.log(&format!("distill/{mode_name}/bns_loss"), step, avg);
         loss_trace.push((step, avg));
     }
@@ -181,101 +474,4 @@ pub fn distill(
         m.model, cfg.samples, secs, pool.workers, final_loss
     );
     Ok(DistillOutput { images, loss_trace, final_loss })
-}
-
-/// One generator-based shard (GENIE / GBA). Returns (images, loss trace,
-/// shard transfer bytes). The whole optimization state — generator
-/// params, Adam moments, latents — stays device-resident across steps;
-/// only `key`/`t`/`lr_*` go up and the loss comes down per step.
-fn distill_genie(
-    mrt: &ModelRt,
-    teacher_dev: &DeviceStore<'_>,
-    cfg: &DistillCfg,
-    tag: &str,
-    rng: &mut Pcg32,
-) -> Result<(Tensor, Vec<f32>, (u64, u64))> {
-    let m = &mrt.manifest;
-    let bd = m.batch("distill");
-    // shard-local view: teacher buffers shared, own learnables on top
-    let mut dev = teacher_dev.clone();
-
-    // fresh generator per batch (appendix A)
-    let (kh, kl) = rng.key_pair();
-    dev.insert("key", &Tensor::key(kh, kl))?;
-    mrt.call_device("gen_init", &mut dev)?;
-    for (name, shape) in &m.gen_params {
-        dev.insert(&format!("am.{name}"), &Tensor::zeros(shape))?;
-        dev.insert(&format!("av.{name}"), &Tensor::zeros(shape))?;
-    }
-
-    // latents z ~ N(0, I), learnable (the GLO insight, section 3.1)
-    let zshape = [bd, m.latent];
-    dev.insert("z", &Tensor::randn(&zshape, rng, 1.0))?;
-    dev.insert("zm", &Tensor::zeros(&zshape))?;
-    dev.insert("zv", &Tensor::zeros(&zshape))?;
-
-    let gen_sched = ExponentialDecay::new(cfg.lr_g, 0.95, 100);
-    let mut z_sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
-    let lr_z_active = cfg.mode == DistillMode::Genie;
-
-    let entry = mrt.entry(&format!("distill_genie_{tag}"))?;
-    let mut trace = Vec::new();
-    let mut lr_z = if lr_z_active { cfg.lr_z } else { 0.0 };
-    for t in 1..=cfg.steps {
-        let (kh, kl) = rng.key_pair();
-        dev.insert("key", &Tensor::key(kh, kl))?;
-        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
-        dev.insert("lr_g", &Tensor::scalar_f32(gen_sched.lr(t - 1)))?;
-        dev.insert("lr_z", &Tensor::scalar_f32(lr_z))?;
-        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
-        let loss = scalars["loss"];
-        if lr_z_active {
-            lr_z = z_sched.observe(loss);
-        }
-        if t % cfg.log_every == 0 || t == cfg.steps {
-            trace.push(loss);
-        }
-    }
-    // phase boundary: the only full-tensor download of the shard
-    mrt.call_device("gen_images", &mut dev)?;
-    let images = dev.fetch("images")?;
-    Ok((images, trace, dev.transfer_bytes()))
-}
-
-/// One direct (ZeroQ/DBA) batch: images themselves are the parameters,
-/// living on device until the final fetch.
-fn distill_direct(
-    mrt: &ModelRt,
-    teacher_dev: &DeviceStore<'_>,
-    cfg: &DistillCfg,
-    tag: &str,
-    rng: &mut Pcg32,
-) -> Result<(Tensor, Vec<f32>, (u64, u64))> {
-    let m = &mrt.manifest;
-    let bd = m.batch("distill");
-    let img = &m.image;
-    let xshape = [bd, img[0], img[1], img[2]];
-    let mut dev = teacher_dev.clone();
-    dev.insert("x", &Tensor::randn(&xshape, rng, 1.0))?;
-    dev.insert("xm", &Tensor::zeros(&xshape))?;
-    dev.insert("xv", &Tensor::zeros(&xshape))?;
-
-    let mut sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
-    let entry = mrt.entry(&format!("distill_direct_{tag}"))?;
-    let mut trace = Vec::new();
-    let mut lr = cfg.lr_z;
-    for t in 1..=cfg.steps {
-        let (kh, kl) = rng.key_pair();
-        dev.insert("key", &Tensor::key(kh, kl))?;
-        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
-        dev.insert("lr", &Tensor::scalar_f32(lr))?;
-        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
-        let loss = scalars["loss"];
-        lr = sched.observe(loss);
-        if t % cfg.log_every == 0 || t == cfg.steps {
-            trace.push(loss);
-        }
-    }
-    let images = dev.fetch("x")?;
-    Ok((images, trace, dev.transfer_bytes()))
 }

@@ -3,18 +3,20 @@
 //!
 //! The batch list is sharded into contiguous chunks across the exec pool
 //! (DESIGN.md §5): params (+ quant state) are uploaded once and the
-//! resident buffers are shared by every worker chunk; per batch only the
-//! images go up and the logits come down (DESIGN.md §8). Per-batch
-//! correct counts are reduced on the main thread in batch order, so the
-//! accuracy is bit-identical for any worker count. `eval_fp32` /
-//! `eval_quantized` keep the historical serial signature and delegate
-//! with [`Parallelism::SERIAL`].
+//! resident buffers are shared by every worker chunk; each chunk's
+//! per-batch loop runs on the shared phase engine ([`EvalChunk`],
+//! DESIGN.md §9) — only the images go up and the logits come down.
+//! Per-batch correct counts are reduced on the main thread in batch
+//! order, so the accuracy is bit-identical for any worker count.
+//! `eval_fp32` / `eval_quantized` keep the historical serial signature
+//! and delegate with [`Parallelism::SERIAL`].
 
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::exec::{run_jobs, Parallelism};
-use crate::runtime::ModelRt;
+use crate::phase::{Phase, StepLoop};
+use crate::runtime::{DeviceStore, ModelRt, Scalars};
 use crate::store::Store;
 use crate::tensor::{accuracy, Tensor};
 
@@ -81,10 +83,60 @@ pub fn eval_quantized_metered(
     )
 }
 
-/// Shared driver: chunk the eval batches, run chunks as pool jobs, reduce
-/// per-batch (correct, valid) pairs in batch order. With `metrics`, the
-/// base upload plus every chunk's transfer bytes land in the
-/// `eval/transfer/*` series.
+/// One chunk's per-batch eval loop as a [`Phase`]: step t uploads batch
+/// t-1, the logits come back down in `after_step`, and the weighted
+/// (correct, valid) pairs accumulate in batch order. `pub(crate)` so the
+/// QAT baseline's eval (`experiments::qat`) drives the same phase with
+/// its `eval_qat` entry instead of duplicating the loop.
+pub(crate) struct EvalChunk<'a> {
+    pub(crate) entry_name: &'a str,
+    pub(crate) chunk: &'a [(Tensor, Vec<i32>, usize)],
+    pub(crate) out: Vec<(f64, usize)>,
+}
+
+impl Phase for EvalChunk<'_> {
+    fn name(&self) -> String {
+        "eval".into()
+    }
+
+    fn entry(&self) -> String {
+        self.entry_name.to_string()
+    }
+
+    fn init(&mut self, _dev: &mut DeviceStore) -> Result<()> {
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        dev.insert("x", &self.chunk[t - 1].0)
+    }
+
+    fn after_step(
+        &mut self,
+        t: usize,
+        _scalars: &Scalars,
+        dev: &mut DeviceStore,
+    ) -> Result<()> {
+        let (_, y, valid) = &self.chunk[t - 1];
+        let logits = dev.fetch("logits")?;
+        let acc = accuracy(&logits, y, *valid);
+        self.out.push((acc as f64 * *valid as f64, *valid));
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn finish(&mut self, _dev: &mut DeviceStore) -> Result<Store> {
+        Ok(Store::new())
+    }
+}
+
+/// Shared driver: chunk the eval batches, run chunks as engine-driven
+/// pool jobs, reduce per-batch (correct, valid) pairs in batch order.
+/// With `metrics`, the base upload plus every chunk's transfer bytes
+/// land in the `eval/transfer/*` series.
 #[allow(clippy::too_many_arguments)]
 fn sharded_eval(
     mrt: &ModelRt,
@@ -115,20 +167,18 @@ fn sharded_eval(
     let base = &base;
 
     let jobs: Vec<_> = chunks
-        .into_iter()
+        .iter()
         .map(|chunk| {
             move || -> Result<(Vec<(f64, usize)>, (u64, u64))> {
-                let entry = mrt.entry(entry_name)?;
                 let mut dev = base.clone();
-                let mut out = Vec::with_capacity(chunk.len());
-                for (x, y, valid) in chunk {
-                    dev.insert("x", &x)?;
-                    mrt.rt.call_device(&entry, &mut dev)?;
-                    let logits = dev.fetch("logits")?;
-                    let acc = accuracy(&logits, &y, valid);
-                    out.push((acc as f64 * valid as f64, valid));
-                }
-                Ok((out, dev.transfer_bytes()))
+                let mut phase = EvalChunk {
+                    entry_name,
+                    chunk,
+                    out: Vec::with_capacity(chunk.len()),
+                };
+                StepLoop::new(chunk.len(), 0)
+                    .run(mrt, &mut phase, &mut dev)?;
+                Ok((phase.out, dev.transfer_bytes()))
             }
         })
         .collect();

@@ -103,6 +103,25 @@ impl Metrics {
         self.log(&format!("{phase}/transfer/d2h_bytes"), step, d2h as f32);
     }
 
+    /// Record an artifact-cache lookup for a stage: bumps the
+    /// `cache/<stage>/{hit|miss}` series (step = running count of that
+    /// outcome) — the DAG-lookup counterpart of the dispatch stats.
+    pub fn record_cache(&mut self, stage: &str, hit: bool) {
+        let name = format!(
+            "cache/{stage}/{}",
+            if hit { "hit" } else { "miss" }
+        );
+        let n = self.series(&name).map_or(0, |s| s.len());
+        self.log(&name, n + 1, 1.0);
+    }
+
+    /// Record a phase's checkpoint writes: `<phase>/checkpoint/bytes`
+    /// with the write count as the step. Like every metric the value is
+    /// f32; the byte-exact counters come from the engine's `LoopOutcome`.
+    pub fn record_checkpoint(&mut self, phase: &str, writes: usize, bytes: u64) {
+        self.log(&format!("{phase}/checkpoint/bytes"), writes, bytes as f32);
+    }
+
     /// Log a throughput sample (`<phase>/<unit>_per_sec`, step = count)
     /// and return the rate for printing.
     pub fn throughput(
@@ -194,6 +213,26 @@ mod tests {
             m.series("distill/transfer/h2d_bytes").unwrap()[0].0,
             200
         );
+    }
+
+    #[test]
+    fn record_cache_counts_hits_and_misses() {
+        let mut m = Metrics::new();
+        m.record_cache("distill", false);
+        m.record_cache("distill", false);
+        m.record_cache("distill", true);
+        assert_eq!(m.series("cache/distill/miss").unwrap().len(), 2);
+        assert_eq!(m.series("cache/distill/miss").unwrap()[1].0, 2);
+        assert_eq!(m.series("cache/distill/hit").unwrap().len(), 1);
+        assert!(m.series("cache/quantize/hit").is_none());
+    }
+
+    #[test]
+    fn record_checkpoint_logs_bytes_by_writes() {
+        let mut m = Metrics::new();
+        m.record_checkpoint("quantize", 3, 4096);
+        assert_eq!(m.last("quantize/checkpoint/bytes"), Some(4096.0));
+        assert_eq!(m.series("quantize/checkpoint/bytes").unwrap()[0].0, 3);
     }
 
     #[test]

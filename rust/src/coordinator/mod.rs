@@ -23,15 +23,19 @@ pub mod evaluate;
 pub mod pipeline;
 
 pub use config::RunConfig;
-pub use distill::{distill, DistillCfg, DistillMode, DistillOutput};
+pub use distill::{distill, distill_ck, DistillCfg, DistillMode, DistillOutput};
 pub use evaluate::{
     eval_fp32, eval_fp32_metered, eval_fp32_par, eval_quantized,
     eval_quantized_metered, eval_quantized_par,
 };
 pub use metrics::Metrics;
-pub use pipeline::{fsq, zsq, PipelineOutcome};
-pub use pretrain::{pretrain, PretrainCfg};
-pub use quantize::{quantize, QuantCfg};
+pub use pipeline::{
+    distill_cached, fsq, quantize_cached, zsq, PipelineOutcome,
+};
+pub use pretrain::{pretrain, pretrain_ck, teacher_cached, PretrainCfg};
+pub use quantize::{quantize, quantize_ck, QuantCfg};
+
+use anyhow::{Context, Result};
 
 use crate::runtime::manifest::NamedShape;
 use crate::store::Store;
@@ -46,12 +50,20 @@ pub fn insert_zeros(store: &mut Store, specs: &[NamedShape], prefix: &str) {
 }
 
 /// Subset of a store by exact names (shares the tensors, copies nothing).
-pub fn subset(store: &Store, names: impl IntoIterator<Item = String>) -> Store {
+/// Errors name the missing tensor instead of panicking, so a manifest /
+/// store mismatch surfaces as a diagnosable failure at the call site.
+pub fn subset(
+    store: &Store,
+    names: impl IntoIterator<Item = String>,
+) -> Result<Store> {
     let mut out = Store::new();
     for n in names {
-        out.insert_shared(&n, store.get_shared(&n).unwrap());
+        let t = store
+            .get_shared(&n)
+            .with_context(|| format!("subset: missing tensor '{n}'"))?;
+        out.insert_shared(&n, t);
     }
-    out
+    Ok(out)
 }
 
 /// Names of the FP32 teacher tensors (params + BN state) in a manifest.
@@ -79,8 +91,18 @@ mod tests {
         let mut s = Store::new();
         s.insert("a", Tensor::scalar_f32(1.0));
         s.insert("b", Tensor::scalar_f32(2.0));
-        let sub = subset(&s, ["b".to_string()]);
+        let sub = subset(&s, ["b".to_string()]).unwrap();
         assert_eq!(sub.len(), 1);
         assert!(sub.contains("b"));
+    }
+
+    #[test]
+    fn subset_names_the_missing_tensor() {
+        let s = Store::new();
+        let err = subset(&s, ["q.gone.sw".to_string()]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("q.gone.sw"),
+            "error must carry the name: {err:#}"
+        );
     }
 }

@@ -1,20 +1,29 @@
-//! End-to-end pipelines:
+//! End-to-end pipelines, structured as artifact-DAG lookups
+//! (DESIGN.md §9):
 //!
 //!   * [`zsq`] — zero-shot: teacher -> GENIE-D synthetic calibration ->
 //!     GENIE-M -> eval (the paper's headline setting).
 //!   * [`fsq`] — few-shot: teacher -> real calibration samples ->
 //!     GENIE-M -> eval (Table 5).
+//!
+//! Each stage first consults the [`ArtifactCache`] under its
+//! content-addressed key (config fields + upstream content hashes); a hit
+//! loads the GTS1 artifact instead of re-running the stage, a miss runs
+//! the stage — resumably, through the phase engine's checkpoints — and
+//! stores the artifact. Pass [`ArtifactCache::disabled`] to opt out.
 
 use anyhow::Result;
 
+use crate::artifacts::{self, ArtifactCache};
 use crate::data::Dataset;
+use crate::phase::checkpoint;
 use crate::runtime::ModelRt;
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
 
 use super::{
-    distill, eval_fp32_metered, eval_quantized_metered, eval_quantized_par,
-    quantize, DistillCfg, Metrics, QuantCfg,
+    distill_ck, eval_fp32_metered, eval_quantized_metered, eval_quantized_par,
+    quantize, quantize_ck, DistillCfg, DistillOutput, Metrics, QuantCfg,
 };
 
 #[derive(Debug, Clone)]
@@ -22,35 +31,160 @@ pub struct PipelineOutcome {
     pub model: String,
     pub fp_acc: f32,
     pub q_acc: f32,
-    pub distill_secs: f64,
+    /// Wall-clock of the synthesis stage; `None` when no synthesis ran
+    /// (fsq quantizes real samples).
+    pub distill_secs: Option<f64>,
     pub quant_secs: f64,
-    pub final_bns_loss: f32,
+    /// Final BNS loss of the synthesis; `None` when no synthesis ran.
+    pub final_bns_loss: Option<f32>,
 }
 
 impl PipelineOutcome {
+    /// Seconds cell for tables/prints; "—" when the stage didn't run.
+    pub fn distill_secs_cell(&self) -> String {
+        self.distill_secs
+            .map(|s| format!("{s:.0}"))
+            .unwrap_or_else(|| "—".into())
+    }
+
+    /// BNS-loss cell for tables/prints; "—" when no synthesis ran.
+    pub fn bns_cell(&self) -> String {
+        self.final_bns_loss
+            .map(|l| format!("{l:.3}"))
+            .unwrap_or_else(|| "—".into())
+    }
+
     pub fn print(&self, label: &str) {
         println!(
-            "== {label} [{}]: FP32 {:.2}%  quant {:.2}%  (distill {:.0}s, quant {:.0}s)",
+            "== {label} [{}]: FP32 {:.2}%  quant {:.2}%  \
+             (distill {}s, quant {:.0}s, BNS {})",
             self.model,
             self.fp_acc * 100.0,
             self.q_acc * 100.0,
-            self.distill_secs,
-            self.quant_secs
+            self.distill_secs_cell(),
+            self.quant_secs,
+            self.bns_cell(),
         );
     }
 }
 
-/// Zero-shot quantization: synthesize calibration data, then quantize.
+/// Cache-aware GENIE-D: load the synthetic-calibration artifact keyed by
+/// (manifest, distill config, teacher content), or synthesize — resumably
+/// — and store it (images + loss trace + final loss).
+pub fn distill_cached(
+    mrt: &ModelRt,
+    teacher: &Store,
+    dcfg: &DistillCfg,
+    cache: &mut ArtifactCache,
+    metrics: &mut Metrics,
+) -> Result<DistillOutput> {
+    distill_cached_keyed(mrt, teacher, teacher.content_hash(), dcfg, cache, metrics)
+}
+
+/// [`distill_cached`] with the teacher's content hash precomputed — the
+/// pipelines hash the teacher once and share the hash across every stage
+/// key of the run.
+pub fn distill_cached_keyed(
+    mrt: &ModelRt,
+    teacher: &Store,
+    teacher_hash: u64,
+    dcfg: &DistillCfg,
+    cache: &mut ArtifactCache,
+    metrics: &mut Metrics,
+) -> Result<DistillOutput> {
+    let key = artifacts::distill_key(&mrt.manifest, dcfg, teacher_hash);
+    if let Some(art) = cache.load("distill", key) {
+        metrics.record_cache("distill", true);
+        println!(
+            "distill[{}]: cache hit ({})",
+            mrt.manifest.model,
+            key.hex()
+        );
+        return Ok(DistillOutput {
+            images: art.get("images")?.clone(),
+            loss_trace: checkpoint::trace_from_store(&art, "trace")?,
+            final_loss: art.get("final_loss")?.scalar(),
+        });
+    }
+    metrics.record_cache("distill", false);
+    let ck = cache.stage_ckpt("distill", key);
+    let out = distill_ck(mrt, teacher, dcfg, ck.as_ref(), metrics)?;
+    let mut art = Store::new();
+    art.insert("images", out.images.clone());
+    art.insert("final_loss", Tensor::scalar_f32(out.final_loss));
+    checkpoint::trace_to_store(&mut art, "trace", &out.loss_trace);
+    cache.store("distill", key, &art)?;
+    Ok(out)
+}
+
+/// Cache-aware GENIE-M: load the qstate artifact keyed by (manifest,
+/// quant config, teacher content, calibration content), or reconstruct —
+/// resumably — and store it.
+pub fn quantize_cached(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &Tensor,
+    qcfg: &QuantCfg,
+    cache: &mut ArtifactCache,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    quantize_cached_keyed(
+        mrt,
+        teacher,
+        teacher.content_hash(),
+        calib,
+        qcfg,
+        cache,
+        metrics,
+    )
+}
+
+/// [`quantize_cached`] with the teacher's content hash precomputed.
+pub fn quantize_cached_keyed(
+    mrt: &ModelRt,
+    teacher: &Store,
+    teacher_hash: u64,
+    calib: &Tensor,
+    qcfg: &QuantCfg,
+    cache: &mut ArtifactCache,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    let key =
+        artifacts::quantize_key(&mrt.manifest, qcfg, teacher_hash, calib);
+    if let Some(qstate) = cache.load("qstate", key) {
+        metrics.record_cache("qstate", true);
+        println!(
+            "quantize[{}]: cache hit ({})",
+            mrt.manifest.model,
+            key.hex()
+        );
+        return Ok(qstate);
+    }
+    metrics.record_cache("qstate", false);
+    let ck = cache.stage_ckpt("qstate", key);
+    let qstate = quantize_ck(mrt, teacher, calib, qcfg, ck.as_ref(), metrics)?;
+    cache.store("qstate", key, &qstate)?;
+    Ok(qstate)
+}
+
+/// Zero-shot quantization: synthesize calibration data, then quantize —
+/// each stage a cache lookup first.
 pub fn zsq(
     mrt: &ModelRt,
     teacher: &Store,
     dataset: &Dataset,
     dcfg: &DistillCfg,
     qcfg: &QuantCfg,
+    cache: &mut ArtifactCache,
     metrics: &mut Metrics,
 ) -> Result<PipelineOutcome> {
-    let out = distill(mrt, teacher, dcfg, metrics)?;
-    let qstate = quantize(mrt, teacher, &out.images, qcfg, metrics)?;
+    // one content hash serves both stage keys of the run
+    let teacher_hash = teacher.content_hash();
+    let out =
+        distill_cached_keyed(mrt, teacher, teacher_hash, dcfg, cache, metrics)?;
+    let qstate = quantize_cached_keyed(
+        mrt, teacher, teacher_hash, &out.images, qcfg, cache, metrics,
+    )?;
     let fp_acc = eval_fp32_metered(mrt, teacher, dataset, qcfg.par, metrics)?;
     let q_acc = eval_quantized_metered(
         mrt, teacher, &qstate, dataset, qcfg.par, metrics,
@@ -59,24 +193,26 @@ pub fn zsq(
         model: mrt.manifest.model.clone(),
         fp_acc,
         q_acc,
-        distill_secs: metrics.timer_total("distill"),
+        distill_secs: Some(metrics.timer_total("distill")),
         quant_secs: metrics.timer_total("quantize"),
-        final_bns_loss: out.final_loss,
+        final_bns_loss: Some(out.final_loss),
     })
 }
 
 /// Few-shot quantization on real calibration samples (Table 5 setting).
+/// No synthesis runs, so the distill fields of the outcome are `None`.
 pub fn fsq(
     mrt: &ModelRt,
     teacher: &Store,
     dataset: &Dataset,
     samples: usize,
     qcfg: &QuantCfg,
+    cache: &mut ArtifactCache,
     metrics: &mut Metrics,
 ) -> Result<PipelineOutcome> {
     let mut rng = Pcg32::new(qcfg.seed ^ 0x5eed);
     let (calib, _) = dataset.calibration(&mut rng, samples);
-    let qstate = quantize(mrt, teacher, &calib, qcfg, metrics)?;
+    let qstate = quantize_cached(mrt, teacher, &calib, qcfg, cache, metrics)?;
     let fp_acc = eval_fp32_metered(mrt, teacher, dataset, qcfg.par, metrics)?;
     let q_acc = eval_quantized_metered(
         mrt, teacher, &qstate, dataset, qcfg.par, metrics,
@@ -85,9 +221,9 @@ pub fn fsq(
         model: mrt.manifest.model.clone(),
         fp_acc,
         q_acc,
-        distill_secs: 0.0,
+        distill_secs: None,
         quant_secs: metrics.timer_total("quantize"),
-        final_bns_loss: f32::NAN,
+        final_bns_loss: None,
     })
 }
 
@@ -102,4 +238,30 @@ pub fn quantize_with(
 ) -> Result<f32> {
     let qstate = quantize(mrt, teacher, calib, qcfg, metrics)?;
     eval_quantized_par(mrt, teacher, &qstate, dataset, qcfg.par)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_renders_dashes_for_missing_stages() {
+        let out = PipelineOutcome {
+            model: "toy".into(),
+            fp_acc: 0.9,
+            q_acc: 0.8,
+            distill_secs: None,
+            quant_secs: 3.0,
+            final_bns_loss: None,
+        };
+        assert_eq!(out.distill_secs_cell(), "—");
+        assert_eq!(out.bns_cell(), "—");
+        let full = PipelineOutcome {
+            distill_secs: Some(12.4),
+            final_bns_loss: Some(0.1234),
+            ..out
+        };
+        assert_eq!(full.distill_secs_cell(), "12");
+        assert_eq!(full.bns_cell(), "0.123");
+    }
 }

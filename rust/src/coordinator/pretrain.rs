@@ -4,16 +4,19 @@
 //! from the procedural dataset; cosine-annealed LR; checkpoints the
 //! params+BN store.
 //!
-//! The step loop is device-resident (DESIGN.md §8): params, BN state and
-//! Adam moments are uploaded once and carried as live buffers across
-//! `train_step` calls; per step only the fresh data batch and schedule
-//! scalars go up and the loss/accuracy scalars come down. The trained
-//! teacher is materialized on the host once, at the end of the phase.
+//! The step loop runs on the shared phase engine (DESIGN.md §9):
+//! [`PretrainPhase`] supplies the per-step batch + schedule scalars and
+//! the carried state names (params, BN, Adam moments); [`StepLoop`] owns
+//! device residency, the loss/acc trace, and — when a stage checkpoint is
+//! attached — periodic GTS1 checkpoints that a `--resume` run continues
+//! from bit-identically (the batch RNG is part of the snapshot).
 
 use anyhow::Result;
 
+use crate::artifacts::ArtifactCache;
 use crate::data::Dataset;
-use crate::runtime::ModelRt;
+use crate::phase::{checkpoint, Phase, StageCkpt, StepLoop};
+use crate::runtime::{DeviceStore, ModelRt};
 use crate::schedule::CosineAnnealing;
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
@@ -34,6 +37,73 @@ impl Default for PretrainCfg {
     }
 }
 
+/// The teacher-training step loop as a [`Phase`].
+struct PretrainPhase<'a, 'rt> {
+    mrt: &'a ModelRt<'rt>,
+    dataset: &'a Dataset,
+    bs: usize,
+    rng: Pcg32,
+    sched: CosineAnnealing,
+}
+
+impl Phase for PretrainPhase<'_, '_> {
+    fn name(&self) -> String {
+        "pretrain".into()
+    }
+
+    fn entry(&self) -> String {
+        "train_step".into()
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        // one bulk upload; params/BN/moments then live on device
+        let mut init = self.mrt.init_store()?;
+        insert_zeros(&mut init, &self.mrt.manifest.params, "am.");
+        insert_zeros(&mut init, &self.mrt.manifest.params, "av.");
+        dev.absorb(&init)
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        let (x, y) = self.dataset.train_batch(&mut self.rng, self.bs);
+        dev.insert("x", &x)?;
+        dev.insert("y", &Tensor::from_i32(&[self.bs], y))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr", &Tensor::scalar_f32(self.sched.lr(t - 1)))?;
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        let m = &self.mrt.manifest;
+        let mut v = teacher_names(m);
+        for (n, _) in &m.params {
+            v.push(format!("am.{n}"));
+            v.push(format!("av.{n}"));
+        }
+        v
+    }
+
+    fn snapshot(&self) -> Store {
+        let mut s = Store::new();
+        s.insert("rng", checkpoint::rng_tensor(&self.rng));
+        s
+    }
+
+    fn restore(&mut self, snap: &Store) -> Result<()> {
+        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
+        Ok(())
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        // phase boundary: fetch exactly the teacher tensors, once
+        let mut teacher = Store::new();
+        for n in teacher_names(&self.mrt.manifest) {
+            let t = dev.fetch(&n)?;
+            teacher.insert(&n, t);
+        }
+        Ok(teacher)
+    }
+}
+
 /// Train the FP32 teacher; returns the params+BN store (the "pre-trained
 /// model" every later phase consumes).
 pub fn pretrain(
@@ -42,37 +112,50 @@ pub fn pretrain(
     cfg: &PretrainCfg,
     metrics: &mut Metrics,
 ) -> Result<Store> {
+    pretrain_ck(mrt, dataset, cfg, None, metrics)
+}
+
+/// [`pretrain`] with an optional stage checkpoint: periodic engine
+/// checkpoints to `ck`'s work dir, resumed (bit-identically) when `ck`
+/// says so.
+pub fn pretrain_ck(
+    mrt: &ModelRt,
+    dataset: &Dataset,
+    cfg: &PretrainCfg,
+    ck: Option<&StageCkpt>,
+    metrics: &mut Metrics,
+) -> Result<Store> {
     let m = &mrt.manifest;
-    let bs = m.batch("train");
-    let mut rng = Pcg32::new(cfg.seed);
-    let sched = CosineAnnealing::new(cfg.lr, cfg.steps);
-
-    let mut init = mrt.init_store()?;
-    insert_zeros(&mut init, &m.params, "am.");
-    insert_zeros(&mut init, &m.params, "av.");
-
     metrics.start("pretrain");
-    let entry = mrt.entry("train_step")?;
-    // one bulk upload; params/BN/moments then live on device
-    let mut dev = mrt.upload_store(&init)?;
-    for t in 1..=cfg.steps {
-        let (x, y) = dataset.train_batch(&mut rng, bs);
-        dev.insert("x", &x)?;
-        dev.insert("y", &Tensor::from_i32(&[bs], y))?;
-        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
-        dev.insert("lr", &Tensor::scalar_f32(sched.lr(t - 1)))?;
-        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
-        if t % cfg.log_every == 0 || t == cfg.steps {
-            metrics.log("pretrain/loss", t, scalars["loss"]);
-            metrics.log("pretrain/acc", t, scalars["acc"]);
-        }
+    let mut phase = PretrainPhase {
+        mrt,
+        dataset,
+        bs: m.batch("train"),
+        rng: Pcg32::new(cfg.seed),
+        sched: CosineAnnealing::new(cfg.lr, cfg.steps),
+    };
+    let mut dev = mrt.rt.device_store();
+    let out = StepLoop::new(cfg.steps, cfg.log_every.max(1))
+        .with_checkpoint(ck.map(|c| c.shard("pretrain")))
+        .run(mrt, &mut phase, &mut dev)?;
+    anyhow::ensure!(
+        out.completed,
+        "pretrain: interrupted by step budget at step {} (checkpoint \
+         written; re-run with resume to continue)",
+        out.resumed_from + out.ran_steps
+    );
+    for (t, sc) in &out.trace {
+        metrics.log("pretrain/loss", *t, sc["loss"]);
+        metrics.log("pretrain/acc", *t, sc["acc"]);
     }
-    // phase boundary: fetch exactly the teacher tensors, once
-    let mut teacher = Store::new();
-    for n in teacher_names(m) {
-        let t = dev.fetch(&n)?;
-        teacher.insert(&n, t);
+    if out.checkpoints_written > 0 {
+        metrics.record_checkpoint(
+            "pretrain",
+            out.checkpoints_written,
+            out.checkpoint_bytes,
+        );
     }
+    let teacher = out.result;
     let (h2d, d2h) = dev.transfer_bytes();
     metrics.record_transfers("pretrain", cfg.steps, h2d, d2h);
     let secs = metrics.stop("pretrain");
@@ -87,7 +170,36 @@ pub fn pretrain(
     Ok(teacher)
 }
 
+/// Content-addressed teacher (DESIGN.md §9): load the `teacher` artifact
+/// keyed by (manifest, pretrain config), or pretrain — resumably, when
+/// the cache allows — and store it.
+pub fn teacher_cached(
+    mrt: &ModelRt,
+    dataset: &Dataset,
+    cfg: &PretrainCfg,
+    cache: &mut ArtifactCache,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    let key = crate::artifacts::pretrain_key(&mrt.manifest, cfg);
+    if let Some(s) = cache.load("teacher", key) {
+        metrics.record_cache("teacher", true);
+        println!(
+            "teacher[{}]: cache hit ({})",
+            mrt.manifest.model,
+            key.hex()
+        );
+        return Ok(s);
+    }
+    metrics.record_cache("teacher", false);
+    let ck = cache.stage_ckpt("teacher", key);
+    let teacher = pretrain_ck(mrt, dataset, cfg, ck.as_ref(), metrics)?;
+    cache.store("teacher", key, &teacher)?;
+    Ok(teacher)
+}
+
 /// Load a cached checkpoint if present, otherwise pretrain and cache it.
+/// (Path-keyed legacy cache; prefer [`teacher_cached`], which keys by
+/// config content and survives config changes.)
 pub fn teacher_or_pretrain(
     mrt: &ModelRt,
     dataset: &Dataset,

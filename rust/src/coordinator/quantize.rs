@@ -14,27 +14,29 @@
 //! size, M1 vs M2 / Table 5), `drop_p = 0` -> NoDrop.
 //!
 //! Parallel structure (DESIGN.md §5): teacher boundary collection fans out
-//! one job per calibration batch, and block reconstruction runs on the
+//! one job per calibration chunk, and block reconstruction runs on the
 //! exec pool gated by a topological wave schedule — a chain when
 //! `refresh_student` (block b reads the quantized prefix, BRECQ-style), a
-//! single all-blocks wave otherwise (every block is independent given the
-//! teacher's boundaries). Block b draws all randomness from
+//! single all-blocks wave otherwise. Block b draws all randomness from
 //! `Pcg32::new_stream(seed, b)`, so the optimized quant state is
 //! bit-identical for any worker count.
 //!
-//! Device residency (DESIGN.md §8): the teacher is uploaded once and
-//! shared by every collection chunk and block job. A block stages its
-//! reconstruction inputs (`x_in.{i}` / `y_ref.{i}`) on device up front,
-//! so the thousands-step Adam loop moves only schedule scalars up and
-//! the `rec` loss down — each step's batch pick is a zero-byte buffer
-//! alias, and only the block's optimized learnables return to the host.
+//! Both per-batch collection and the per-block Adam loop run on the
+//! shared phase engine (DESIGN.md §9): [`CollectChunk`] and
+//! [`BlockPhase`] supply the per-step staging/scalars and carried names;
+//! [`StepLoop`] owns residency and — with a stage checkpoint attached —
+//! periodic mid-block GTS1 checkpoints plus `block{b}.done` results, so
+//! a run killed mid-quantize resumes bit-identically: completed blocks
+//! load, the interrupted block continues from its checkpointed step (RNG
+//! stream included), and untouched blocks run fresh.
 
 use anyhow::Result;
 
 use crate::data::image_batches;
 use crate::exec::{chain_deps, independent_deps, run_jobs, waves, Parallelism};
+use crate::phase::{checkpoint, Phase, StageCkpt, StepLoop};
 use crate::quant::{init_qstate, set_act_steps, BitConfig};
-use crate::runtime::{DeviceStore, ModelRt};
+use crate::runtime::{DeviceStore, ModelRt, Scalars};
 use crate::schedule::{BetaAnneal, CosineAnnealing};
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
@@ -105,12 +107,353 @@ impl QuantCfg {
     }
 }
 
+/// Teacher block-boundary collection over one chunk of calibration
+/// batches, as a [`Phase`]: per "step" one batch goes up and the
+/// `bound.{i}` tensors come back down.
+struct CollectChunk<'a> {
+    chunk: &'a [(Tensor, usize)],
+    nb: usize,
+    out: Vec<Vec<Tensor>>,
+}
+
+impl Phase for CollectChunk<'_> {
+    fn name(&self) -> String {
+        "quantize/bounds".into()
+    }
+
+    fn entry(&self) -> String {
+        "collect_teacher".into()
+    }
+
+    fn init(&mut self, _dev: &mut DeviceStore) -> Result<()> {
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        dev.insert("x", &self.chunk[t - 1].0)
+    }
+
+    fn after_step(
+        &mut self,
+        _t: usize,
+        _scalars: &Scalars,
+        dev: &mut DeviceStore,
+    ) -> Result<()> {
+        self.out.push(
+            (0..=self.nb)
+                .map(|i| dev.fetch(&format!("bound.{i}")))
+                .collect::<Result<Vec<_>>>()?,
+        );
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn finish(&mut self, _dev: &mut DeviceStore) -> Result<Store> {
+        Ok(Store::new())
+    }
+}
+
+/// Student-prefix staging for one block, as a nested [`Phase`] run from
+/// [`BlockPhase::init`]: per step one calibration batch goes through the
+/// quantized prefix (`collect_student`) and the produced boundary buffer
+/// is pinned as `x_in.{i}` by zero-byte alias. Draws its keys from the
+/// block's own stream, so the staging is part of the block's replayable
+/// schedule.
+struct StageInputs<'a> {
+    batches: &'a [(Tensor, usize)],
+    b: usize,
+    rng: &'a mut Pcg32,
+}
+
+impl Phase for StageInputs<'_> {
+    fn name(&self) -> String {
+        format!("quantize/block{}/stage", self.b)
+    }
+
+    fn entry(&self) -> String {
+        "collect_student".into()
+    }
+
+    fn init(&mut self, _dev: &mut DeviceStore) -> Result<()> {
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        dev.insert("x", &self.batches[t - 1].0)?;
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        Ok(())
+    }
+
+    fn after_step(
+        &mut self,
+        t: usize,
+        _scalars: &Scalars,
+        dev: &mut DeviceStore,
+    ) -> Result<()> {
+        // pin the freshly produced boundary buffer (device-side copy of
+        // nothing: the alias shares the Arc handle)
+        dev.alias(&format!("x_in.{}", t - 1), &format!("bound.{}", self.b))
+    }
+
+    fn carried(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn finish(&mut self, _dev: &mut DeviceStore) -> Result<Store> {
+        Ok(Store::new())
+    }
+}
+
+/// One block's reconstruction loop as a [`Phase`]. Self-contained:
+/// aliases the resident teacher, uploads the current quant state, stages
+/// its inputs on device, and draws every random choice (batch picks,
+/// QDrop/collect keys) from the block-keyed stream — never from worker
+/// identity or schedule.
+struct BlockPhase<'a, 'rt> {
+    mrt: &'a ModelRt<'rt>,
+    cfg: &'a QuantCfg,
+    b: usize,
+    batches: &'a [(Tensor, usize)],
+    teacher_bounds: &'a [Vec<Tensor>],
+    qstate: &'a Store,
+    learn: Vec<String>,
+    rng: Pcg32,
+    sw_sched: CosineAnnealing,
+    sa_sched: CosineAnnealing,
+    beta: BetaAnneal,
+}
+
+impl Phase for BlockPhase<'_, '_> {
+    fn name(&self) -> String {
+        format!("quantize/block{}", self.b)
+    }
+
+    fn entry(&self) -> String {
+        format!("quant_step_{}", self.b)
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        let b = self.b;
+        dev.absorb(self.qstate)?;
+
+        // Block inputs through the quantized prefix, staged on device as
+        // x_in.{i}: the step loop's batch pick is then a zero-byte alias
+        // instead of a per-step host upload.
+        if b == 0 || !self.cfg.refresh_student {
+            for (i, bounds) in self.teacher_bounds.iter().enumerate() {
+                dev.insert(&format!("x_in.{i}"), &bounds[b])?;
+            }
+        } else {
+            // nested engine run: the staging loop is a phase of its own
+            let mut staging = StageInputs {
+                batches: self.batches,
+                b,
+                rng: &mut self.rng,
+            };
+            StepLoop::new(self.batches.len(), 0)
+                .run(self.mrt, &mut staging, dev)?;
+        }
+        for (i, bounds) in self.teacher_bounds.iter().enumerate() {
+            dev.insert(&format!("y_ref.{i}"), &bounds[b + 1])?;
+        }
+
+        // fresh Adam state for this block's learnables
+        for name in &self.learn {
+            let shape = dev.get(name)?.shape().to_vec();
+            dev.insert(&format!("am.{name}"), &Tensor::zeros(&shape))?;
+            dev.insert(&format!("av.{name}"), &Tensor::zeros(&shape))?;
+        }
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        let cfg = self.cfg;
+        let bi = self.rng.below(self.batches.len());
+        dev.alias("x_in", &format!("x_in.{bi}"))?;
+        dev.alias("y_ref", &format!("y_ref.{bi}"))?;
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr_sw", &Tensor::scalar_f32(self.sw_sched.lr(t - 1)))?;
+        dev.insert("lr_v", &Tensor::scalar_f32(cfg.lr_v))?;
+        dev.insert("lr_sa", &Tensor::scalar_f32(self.sa_sched.lr(t - 1)))?;
+        dev.insert("lam", &Tensor::scalar_f32(cfg.lam))?;
+        dev.insert("beta", &Tensor::scalar_f32(self.beta.beta(t)))?;
+        dev.insert("drop_p", &Tensor::scalar_f32(cfg.drop_p))?;
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        // the full quant state (this block's learnables evolve on device,
+        // the rest sits as absorbed), the Adam moments, and the staged
+        // block inputs — everything a resumed loop needs resident again
+        let m = &self.mrt.manifest;
+        let mut v: Vec<String> =
+            m.qstate.iter().map(|(n, _)| n.clone()).collect();
+        for n in &self.learn {
+            v.push(format!("am.{n}"));
+            v.push(format!("av.{n}"));
+        }
+        for i in 0..self.teacher_bounds.len() {
+            v.push(format!("x_in.{i}"));
+            v.push(format!("y_ref.{i}"));
+        }
+        v
+    }
+
+    fn snapshot(&self) -> Store {
+        let mut s = Store::new();
+        s.insert("rng", checkpoint::rng_tensor(&self.rng));
+        s
+    }
+
+    fn restore(&mut self, snap: &Store) -> Result<()> {
+        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
+        Ok(())
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        // phase boundary: only the block's optimized learnables come home
+        let mut out = Store::new();
+        for n in &self.learn {
+            out.insert(n, dev.fetch(n)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Result of one block's reconstruction job.
+struct BlockResult {
+    block: usize,
+    /// optimized learnables (sw / v / sa of this block), to merge back
+    learned: Vec<(String, Tensor)>,
+    /// (step, rec loss) at each logged step
+    rec_trace: Vec<(usize, f32)>,
+    last_rec: f32,
+    /// (h2d, d2h) bytes this block's job moved
+    transfer: (u64, u64),
+    ckpt_writes: usize,
+    ckpt_bytes: u64,
+}
+
+/// Optimize one block's quant state against the teacher boundaries,
+/// through the engine: a `block{b}.done` result from an interrupted run
+/// is loaded outright, a mid-block checkpoint resumes the loop, and a
+/// fresh block runs end to end (persisting its `done` for future
+/// resumes).
+#[allow(clippy::too_many_arguments)]
+fn reconstruct_block(
+    mrt: &ModelRt,
+    teacher_dev: &DeviceStore<'_>,
+    qstate: &Store,
+    batches: &[(Tensor, usize)],
+    teacher_bounds: &[Vec<Tensor>],
+    cfg: &QuantCfg,
+    b: usize,
+    ck: Option<&StageCkpt>,
+) -> Result<BlockResult> {
+    let block_name = format!("block{b}");
+    if let Some(ck) = ck {
+        if let Some(done) = ck.load_done(&block_name) {
+            let rec_trace = checkpoint::trace_from_store(&done, "rec")?;
+            let learned = done
+                .names()
+                .iter()
+                .filter(|n| !n.starts_with("rec."))
+                .map(|n| Ok((n.clone(), done.get(n)?.clone())))
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(BlockResult {
+                block: b,
+                learned,
+                last_rec: rec_trace
+                    .last()
+                    .map(|&(_, v)| v)
+                    .unwrap_or(f32::NAN),
+                rec_trace,
+                transfer: (0, 0),
+                ckpt_writes: 0,
+                ckpt_bytes: 0,
+            });
+        }
+    }
+    let m = &mrt.manifest;
+    let mut dev = teacher_dev.clone();
+    let mut phase = BlockPhase {
+        mrt,
+        cfg,
+        b,
+        batches,
+        teacher_bounds,
+        qstate,
+        learn: m.learnable_block(b).to_vec(),
+        rng: Pcg32::new_stream(cfg.seed, b as u64),
+        sw_sched: CosineAnnealing::new(cfg.lr_sw, cfg.steps_per_block),
+        sa_sched: CosineAnnealing::new(cfg.lr_sa, cfg.steps_per_block),
+        beta: BetaAnneal::new(
+            cfg.beta_start,
+            cfg.beta_end,
+            0.2,
+            cfg.steps_per_block,
+        ),
+    };
+    let out = StepLoop::new(cfg.steps_per_block, cfg.log_every.max(1))
+        .with_checkpoint(ck.map(|c| c.shard(&block_name)))
+        .run(mrt, &mut phase, &mut dev)?;
+    anyhow::ensure!(
+        out.completed,
+        "quantize block {b}: interrupted by step budget (checkpoint \
+         written; re-run with resume to continue)"
+    );
+    let rec_trace: Vec<(usize, f32)> =
+        out.trace.iter().map(|(t, s)| (*t, s["rec"])).collect();
+    let last_rec = rec_trace.last().map(|&(_, v)| v).unwrap_or(f32::NAN);
+    let learned = phase
+        .learn
+        .iter()
+        .map(|n| Ok((n.clone(), out.result.get(n)?.clone())))
+        .collect::<Result<Vec<_>>>()?;
+    if let Some(ck) = ck {
+        let mut done = Store::new();
+        for (n, t) in &learned {
+            done.insert(n, t.clone());
+        }
+        checkpoint::trace_to_store(&mut done, "rec", &rec_trace);
+        ck.write_done(&block_name, &done)?;
+    }
+    Ok(BlockResult {
+        block: b,
+        learned,
+        rec_trace,
+        last_rec,
+        transfer: dev.transfer_bytes(),
+        ckpt_writes: out.checkpoints_written,
+        ckpt_bytes: out.checkpoint_bytes,
+    })
+}
+
 /// Run GENIE-M over a calibration set; returns the optimized quant state.
 pub fn quantize(
     mrt: &ModelRt,
     teacher: &Store,
     calib: &Tensor,
     cfg: &QuantCfg,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    quantize_ck(mrt, teacher, calib, cfg, None, metrics)
+}
+
+/// [`quantize`] with an optional stage checkpoint (mid-block engine
+/// checkpoints + completed-block results in the stage's work dir).
+pub fn quantize_ck(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &Tensor,
+    cfg: &QuantCfg,
+    ck: Option<&StageCkpt>,
     metrics: &mut Metrics,
 ) -> Result<Store> {
     let m = &mrt.manifest;
@@ -139,8 +482,8 @@ pub fn quantize(
     let tdev = &teacher_dev;
     let (mut h2d_total, mut d2h_total) = teacher_dev.transfer_bytes();
 
-    // 3. teacher block boundaries: contiguous batch chunks, one pool job
-    // (sharing the resident teacher) per worker
+    // 3. teacher block boundaries: contiguous batch chunks, one engine-
+    // driven pool job (sharing the resident teacher) per worker
     let batches = image_batches(calib, br);
     let chunk_len =
         batches.len().div_ceil(cfg.par.resolve_for(batches.len()).max(1));
@@ -149,17 +492,14 @@ pub fn quantize(
         .map(|chunk| {
             move || -> Result<(Vec<Vec<Tensor>>, (u64, u64))> {
                 let mut dev = tdev.clone();
-                let mut out = Vec::with_capacity(chunk.len());
-                for (bx, _) in chunk {
-                    dev.insert("x", bx)?;
-                    mrt.call_device("collect_teacher", &mut dev)?;
-                    out.push(
-                        (0..=nb)
-                            .map(|i| dev.fetch(&format!("bound.{i}")))
-                            .collect::<Result<Vec<_>>>()?,
-                    );
-                }
-                Ok((out, dev.transfer_bytes()))
+                let mut phase = CollectChunk {
+                    chunk,
+                    nb,
+                    out: Vec::with_capacity(chunk.len()),
+                };
+                StepLoop::new(chunk.len(), 0)
+                    .run(mrt, &mut phase, &mut dev)?;
+                Ok((phase.out, dev.transfer_bytes()))
             }
         })
         .collect();
@@ -183,6 +523,8 @@ pub fn quantize(
         independent_deps(nb)
     };
     let mut blocks_pool = crate::exec::PoolReport::default();
+    let mut ckpt_writes = 0usize;
+    let mut ckpt_bytes = 0u64;
     for wave in waves(&deps) {
         let qsnap = &qstate_now;
         let jobs: Vec<_> = wave
@@ -192,7 +534,7 @@ pub fn quantize(
                 let teacher_bounds = &teacher_bounds;
                 move || {
                     reconstruct_block(
-                        mrt, tdev, qsnap, batches, teacher_bounds, cfg, b,
+                        mrt, tdev, qsnap, batches, teacher_bounds, cfg, b, ck,
                     )
                 }
             })
@@ -208,6 +550,8 @@ pub fn quantize(
             }
             h2d_total += out.transfer.0;
             d2h_total += out.transfer.1;
+            ckpt_writes += out.ckpt_writes;
+            ckpt_bytes += out.ckpt_bytes;
             println!(
                 "quantize[{} W{}A{}] block {}/{}: rec {:.5}",
                 m.model, cfg.wbits, cfg.abits, out.block + 1, nb, out.last_rec
@@ -221,6 +565,9 @@ pub fn quantize(
         h2d_total,
         d2h_total,
     );
+    if ckpt_writes > 0 {
+        metrics.record_checkpoint("quantize", ckpt_writes, ckpt_bytes);
+    }
     let secs = metrics.stop("quantize");
     let rate = metrics.throughput("quantize", "blocks", nb, secs);
     println!(
@@ -230,110 +577,7 @@ pub fn quantize(
 
     // return just the q.* tensors (with optimized learnables)
     let qnames: Vec<String> = m.qstate.iter().map(|(n, _)| n.clone()).collect();
-    Ok(subset(&qstate_now, qnames))
-}
-
-/// Result of one block's reconstruction job.
-struct BlockResult {
-    block: usize,
-    /// optimized learnables (sw / v / sa of this block), to merge back
-    learned: Vec<(String, Tensor)>,
-    /// (step, rec loss) at each logged step
-    rec_trace: Vec<(usize, f32)>,
-    last_rec: f32,
-    /// (h2d, d2h) bytes this block's job moved
-    transfer: (u64, u64),
-}
-
-/// Optimize one block's quant state against the teacher boundaries.
-/// Self-contained: aliases the resident teacher, uploads the current
-/// quant state, stages its inputs on device, and draws every random
-/// choice (batch picks, QDrop/collect keys) from the block-keyed stream
-/// — never from worker identity or schedule.
-#[allow(clippy::too_many_arguments)]
-fn reconstruct_block(
-    mrt: &ModelRt,
-    teacher_dev: &DeviceStore<'_>,
-    qstate: &Store,
-    batches: &[(Tensor, usize)],
-    teacher_bounds: &[Vec<Tensor>],
-    cfg: &QuantCfg,
-    b: usize,
-) -> Result<BlockResult> {
-    let m = &mrt.manifest;
-    let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
-    let mut dev = teacher_dev.clone();
-    dev.absorb(qstate)?;
-
-    // Block inputs through the quantized prefix, staged on device as
-    // x_in.{i}: the step loop's batch pick is then a zero-byte alias
-    // instead of a per-step host upload.
-    if b == 0 || !cfg.refresh_student {
-        for (i, bounds) in teacher_bounds.iter().enumerate() {
-            dev.insert(&format!("x_in.{i}"), &bounds[b])?;
-        }
-    } else {
-        for (i, (bx, _)) in batches.iter().enumerate() {
-            dev.insert("x", bx)?;
-            let (kh, kl) = rng.key_pair();
-            dev.insert("key", &Tensor::key(kh, kl))?;
-            mrt.call_device("collect_student", &mut dev)?;
-            // pin the freshly produced boundary buffer (device-side copy
-            // of nothing: the alias shares the Arc handle)
-            dev.alias(&format!("x_in.{i}"), &format!("bound.{b}"))?;
-        }
-    }
-    for (i, bounds) in teacher_bounds.iter().enumerate() {
-        dev.insert(&format!("y_ref.{i}"), &bounds[b + 1])?;
-    }
-
-    // fresh Adam state for this block's learnables
-    let learn = m.learnable_block(b).to_vec();
-    for name in &learn {
-        let shape = dev.get(name)?.shape().to_vec();
-        dev.insert(&format!("am.{name}"), &Tensor::zeros(&shape))?;
-        dev.insert(&format!("av.{name}"), &Tensor::zeros(&shape))?;
-    }
-
-    let sw_sched = CosineAnnealing::new(cfg.lr_sw, cfg.steps_per_block);
-    let sa_sched = CosineAnnealing::new(cfg.lr_sa, cfg.steps_per_block);
-    let beta = BetaAnneal::new(cfg.beta_start, cfg.beta_end, 0.2,
-                               cfg.steps_per_block);
-    let entry = mrt.entry(&format!("quant_step_{b}"))?;
-    let mut last_rec = f32::NAN;
-    let mut rec_trace = Vec::new();
-    for t in 1..=cfg.steps_per_block {
-        let bi = rng.below(batches.len());
-        dev.alias("x_in", &format!("x_in.{bi}"))?;
-        dev.alias("y_ref", &format!("y_ref.{bi}"))?;
-        let (kh, kl) = rng.key_pair();
-        dev.insert("key", &Tensor::key(kh, kl))?;
-        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
-        dev.insert("lr_sw", &Tensor::scalar_f32(sw_sched.lr(t - 1)))?;
-        dev.insert("lr_v", &Tensor::scalar_f32(cfg.lr_v))?;
-        dev.insert("lr_sa", &Tensor::scalar_f32(sa_sched.lr(t - 1)))?;
-        dev.insert("lam", &Tensor::scalar_f32(cfg.lam))?;
-        dev.insert("beta", &Tensor::scalar_f32(beta.beta(t)))?;
-        dev.insert("drop_p", &Tensor::scalar_f32(cfg.drop_p))?;
-        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
-        last_rec = scalars["rec"];
-        if t % cfg.log_every == 0 || t == cfg.steps_per_block {
-            rec_trace.push((t, scalars["rec"]));
-        }
-    }
-
-    // phase boundary: only the block's optimized learnables come home
-    let learned = learn
-        .iter()
-        .map(|n| Ok((n.clone(), dev.fetch(n)?)))
-        .collect::<Result<Vec<_>>>()?;
-    Ok(BlockResult {
-        block: b,
-        learned,
-        rec_trace,
-        last_rec,
-        transfer: dev.transfer_bytes(),
-    })
+    subset(&qstate_now, qnames)
 }
 
 /// Pad/repeat rows so shape[0] == bs (for fixed-batch stat graphs).

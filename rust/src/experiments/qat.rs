@@ -1,17 +1,21 @@
 //! Netwise Min-Max QAT baseline driver (the GDFQ/AIT-style comparator of
 //! Table 4 / Table 6 / Table A2): student initialized from the teacher,
 //! trained with KL-to-teacher under Min-Max fake-quant, evaluated under
-//! the same quantizer.
+//! the same quantizer. The training loop runs on the shared phase engine
+//! ([`QatPhase`], DESIGN.md §9): teacher + student + moments stay
+//! resident, batches are staged once and re-picked per step by zero-byte
+//! alias.
 
 use anyhow::Result;
 
-use crate::data::{image_batches, Dataset};
-use crate::quant::BitConfig;
-use crate::runtime::ModelRt;
-use crate::store::Store;
-use crate::tensor::{accuracy, Pcg32, Tensor};
-
+use crate::coordinator::evaluate::EvalChunk;
 use crate::coordinator::Metrics;
+use crate::data::{image_batches, Dataset};
+use crate::phase::{Phase, StepLoop};
+use crate::quant::BitConfig;
+use crate::runtime::{DeviceStore, ModelRt};
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
 
 #[derive(Debug, Clone)]
 pub struct QatCfg {
@@ -28,6 +32,62 @@ impl Default for QatCfg {
     }
 }
 
+/// The QAT step loop as a [`Phase`]: init stages the student/moments and
+/// every candidate batch; each step aliases one batch in and dispatches.
+struct QatPhase<'a, 'rt> {
+    mrt: &'a ModelRt<'rt>,
+    init_store: &'a Store,
+    batches: &'a [(Tensor, usize)],
+    rng: Pcg32,
+}
+
+impl Phase for QatPhase<'_, '_> {
+    fn name(&self) -> String {
+        "qat".into()
+    }
+
+    fn entry(&self) -> String {
+        "qat_step".into()
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        dev.absorb(self.init_store)?;
+        for (i, (bx, _)) in self.batches.iter().enumerate() {
+            dev.insert(&format!("x.{i}"), bx)?;
+        }
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        let bi = self.rng.below(self.batches.len());
+        dev.alias("x", &format!("x.{bi}"))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        let m = &self.mrt.manifest;
+        let mut v = Vec::new();
+        for (name, _) in &m.params {
+            v.push(format!("s.{name}"));
+            v.push(format!("am.{name}"));
+            v.push(format!("av.{name}"));
+        }
+        v
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        // phase boundary: only the student params come home
+        let mut out = Store::new();
+        for (name, _) in &self.mrt.manifest.params {
+            let n = format!("s.{name}");
+            let t = dev.fetch(&n)?;
+            out.insert(&n, t);
+        }
+        Ok(out)
+    }
+}
+
 /// Train the QAT student on `calib` images (synthetic or real); returns
 /// the student params store (prefixed `s.`).
 pub fn qat_train(
@@ -39,7 +99,6 @@ pub fn qat_train(
 ) -> Result<Store> {
     let m = &mrt.manifest;
     let bs = m.batch("train");
-    let mut rng = Pcg32::new(cfg.seed);
     let (_, wp) = BitConfig::wbounds(cfg.wbits);
     // symmetric weight grid in the minmax baseline: wp = 2^(b-1)-1
     let wp_sym = ((1u64 << (cfg.wbits - 1)) - 1) as f32;
@@ -59,22 +118,18 @@ pub fn qat_train(
     store.insert("lr", Tensor::scalar_f32(cfg.lr));
 
     metrics.start("qat");
-    let entry = mrt.entry("qat_step")?;
     let batches = image_batches(calib, bs);
-    // teacher + student + moments stay resident across the whole run;
-    // batches are staged once and re-picked per step by zero-byte alias
-    let mut dev = mrt.upload_store(&store)?;
-    for (i, (bx, _)) in batches.iter().enumerate() {
-        dev.insert(&format!("x.{i}"), bx)?;
-    }
-    for t in 1..=cfg.steps {
-        let bi = rng.below(batches.len());
-        dev.alias("x", &format!("x.{bi}"))?;
-        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
-        let scalars = mrt.rt.call_device(&entry, &mut dev)?;
-        if t % 100 == 0 || t == cfg.steps {
-            metrics.log("qat/kl", t, scalars["loss"]);
-        }
+    let mut phase = QatPhase {
+        mrt,
+        init_store: &store,
+        batches: &batches,
+        rng: Pcg32::new(cfg.seed),
+    };
+    let mut dev = mrt.rt.device_store();
+    let out = StepLoop::new(cfg.steps, 100)
+        .run(mrt, &mut phase, &mut dev)?;
+    for (t, sc) in &out.trace {
+        metrics.log("qat/kl", *t, sc["loss"]);
     }
     let (h2d, d2h) = dev.transfer_bytes();
     metrics.record_transfers("qat", cfg.steps, h2d, d2h);
@@ -88,18 +143,11 @@ pub fn qat_train(
         secs,
         metrics.last("qat/kl").unwrap_or(f32::NAN)
     );
-
-    // phase boundary: only the student params come home
-    let mut out = Store::new();
-    for (name, _) in &m.params {
-        let n = format!("s.{name}");
-        let t = dev.fetch(&n)?;
-        out.insert(&n, t);
-    }
-    Ok(out)
+    Ok(out.result)
 }
 
-/// Top-1 of the QAT student under Min-Max fake-quant.
+/// Top-1 of the QAT student under Min-Max fake-quant — the coordinator's
+/// [`EvalChunk`] phase driven with the `eval_qat` entry.
 pub fn qat_eval(
     mrt: &ModelRt,
     teacher: &Store,
@@ -111,21 +159,24 @@ pub fn qat_eval(
     let bs = m.batch("eval");
     let wp_sym = ((1u64 << (cfg.wbits - 1)) - 1) as f32;
     let (_, ap) = BitConfig::abounds(cfg.abits);
-    let entry = mrt.entry("eval_qat")?;
     let mut store = teacher.clone();
     store.absorb(student);
     store.insert("wp", Tensor::scalar_f32(wp_sym));
     store.insert("ap", Tensor::scalar_f32(ap));
     let mut dev = mrt.upload_store(&store)?;
+    let batches = dataset.eval_batches(bs);
+    let mut phase = EvalChunk {
+        entry_name: "eval_qat",
+        chunk: &batches,
+        out: Vec::with_capacity(batches.len()),
+    };
+    StepLoop::new(batches.len(), 0).run(mrt, &mut phase, &mut dev)?;
     let mut correct = 0.0f64;
     let mut total = 0usize;
-    for (x, y, valid) in dataset.eval_batches(bs) {
-        dev.insert("x", &x)?;
-        mrt.rt.call_device(&entry, &mut dev)?;
-        let logits = dev.fetch("logits")?;
-        let acc = accuracy(&logits, &y, valid);
-        correct += acc as f64 * valid as f64;
-        total += valid;
+    for (c, v) in phase.out {
+        correct += c;
+        total += v;
     }
+    anyhow::ensure!(total > 0, "qat eval: empty test set");
     Ok((correct / total as f64) as f32)
 }

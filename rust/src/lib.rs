@@ -13,6 +13,8 @@ pub mod tensor;
 pub mod store;
 pub mod exec;
 pub mod runtime;
+pub mod phase;
+pub mod artifacts;
 pub mod quant;
 pub mod schedule;
 pub mod data;

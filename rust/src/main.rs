@@ -13,11 +13,18 @@
 //! `workers=K` sizes the exec worker pool (0 = one per hardware thread)
 //! without changing any result bit — parallel phases are deterministic in
 //! the seed alone (DESIGN.md §5).
+//!
+//! Caching & resume (DESIGN.md §9): pipeline stages are content-addressed
+//! artifacts under `--cache-dir` (default `cache/`); a re-run with the
+//! same config loads them instead of recomputing, `--resume` continues an
+//! interrupted stage from its checkpoints, and `--no-cache` turns the
+//! whole mechanism off.
 
 use anyhow::{bail, Result};
 
+use genie::artifacts::ArtifactCache;
 use genie::coordinator::{
-    self, distill, fsq, pretrain, zsq, Metrics, RunConfig,
+    self, fsq, zsq, Metrics, RunConfig,
 };
 use genie::data::Dataset;
 use genie::experiments;
@@ -38,6 +45,9 @@ fn main() -> Result<()> {
         match a.as_str() {
             "--model" => cfg.model = next(&mut it, "--model")?,
             "--artifacts" => cfg.artifacts = next(&mut it, "--artifacts")?,
+            "--cache-dir" => cfg.cache_dir = next(&mut it, "--cache-dir")?,
+            "--no-cache" => cfg.cache = false,
+            "--resume" => cfg.resume = true,
             "--exp" => exp = next(&mut it, "--exp")?,
             "--help" | "-h" => {
                 usage();
@@ -79,12 +89,17 @@ fn usage() {
     println!(
         "genie — GENIE zero-shot quantization (rust+JAX+Pallas reproduction)\n\
          usage: genie <info|pretrain|eval|distill|zsq|fsq|experiments>\n\
-                [--model M] [--artifacts DIR] [--exp ID] [key=value ...]\n\
-         keys: wbits abits seed workers pretrain.{{steps,lr}}\n\
+                [--model M] [--artifacts DIR] [--exp ID]\n\
+                [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
+         keys: wbits abits seed workers checkpoint_every\n\
+               pretrain.{{steps,lr}}\n\
                distill.{{mode,swing,samples,steps,lr_g,lr_z}}\n\
                quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}\n\
          workers=K runs distill shards, quant blocks and eval batches on\n\
-         K pool workers (0 = auto); results are bit-identical for any K"
+         K pool workers (0 = auto); results are bit-identical for any K.\n\
+         Stages cache as content-addressed artifacts under --cache-dir;\n\
+         identical configs re-load instead of re-running, --resume picks\n\
+         an interrupted stage up from its last checkpoint."
     );
 }
 
@@ -97,6 +112,22 @@ fn setup<'a>(
     Ok((mrt, dataset))
 }
 
+fn open_cache(cfg: &RunConfig) -> Result<ArtifactCache> {
+    let mut cache = ArtifactCache::open(&cfg.cache_dir, cfg.cache, cfg.resume)?;
+    cache.set_checkpoint_every(cfg.checkpoint_every);
+    Ok(cache)
+}
+
+fn print_cache_stats(cache: &ArtifactCache) {
+    let s = cache.stats();
+    if cache.is_enabled() {
+        println!(
+            "cache: {} hits, {} misses, {} artifacts stored",
+            s.hits, s.misses, s.stores
+        );
+    }
+}
+
 fn info(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
     println!("platform: {}", rt.platform());
@@ -104,6 +135,12 @@ fn info(cfg: &RunConfig) -> Result<()> {
         "workers: {} configured ({} hardware threads)",
         cfg.par.resolve(),
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    println!(
+        "cache: {} at {:?} (resume {})",
+        if cfg.cache { "enabled" } else { "disabled" },
+        cfg.cache_dir,
+        if cfg.resume { "on" } else { "off" }
     );
     let dir = std::path::Path::new(&cfg.artifacts);
     if !dir.exists() {
@@ -134,13 +171,17 @@ fn cmd_pretrain(cfg: &RunConfig) -> Result<()> {
     let mut metrics = Metrics::with_dir(
         std::path::Path::new(&cfg.runs_dir).join(format!("pretrain_{}", cfg.model)),
     )?;
-    let teacher = pretrain(&mrt, &dataset, &cfg.pretrain, &mut metrics)?;
+    let mut cache = open_cache(cfg)?;
+    let teacher = coordinator::teacher_cached(
+        &mrt, &dataset, &cfg.pretrain, &mut cache, &mut metrics,
+    )?;
     let runs = std::path::Path::new(&cfg.runs_dir);
     std::fs::create_dir_all(runs)?;
     let ckpt = runs.join(format!("teacher_{}.bin", cfg.model));
     teacher.save(&ckpt)?;
     let acc = coordinator::eval_fp32_par(&mrt, &teacher, &dataset, cfg.par)?;
     println!("teacher saved to {ckpt:?}; FP32 top-1 {:.2}%", acc * 100.0);
+    print_cache_stats(&cache);
     metrics.flush()
 }
 
@@ -148,22 +189,18 @@ fn teacher_store(
     mrt: &ModelRt,
     dataset: &Dataset,
     cfg: &RunConfig,
+    cache: &mut ArtifactCache,
     metrics: &mut Metrics,
 ) -> Result<genie::store::Store> {
-    coordinator::pretrain::teacher_or_pretrain(
-        mrt,
-        dataset,
-        &cfg.pretrain,
-        std::path::Path::new(&cfg.runs_dir),
-        metrics,
-    )
+    coordinator::teacher_cached(mrt, dataset, &cfg.pretrain, cache, metrics)
 }
 
 fn cmd_eval(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
     let (mrt, dataset) = setup(&rt, cfg)?;
     let mut metrics = Metrics::new();
-    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
+    let mut cache = open_cache(cfg)?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut cache, &mut metrics)?;
     let acc = coordinator::eval_fp32_par(&mrt, &teacher, &dataset, cfg.par)?;
     println!("{}: FP32 top-1 {:.2}%", cfg.model, acc * 100.0);
     Ok(())
@@ -175,14 +212,18 @@ fn cmd_distill(cfg: &RunConfig) -> Result<()> {
     let mut metrics = Metrics::with_dir(
         std::path::Path::new(&cfg.runs_dir).join(format!("distill_{}", cfg.model)),
     )?;
-    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
-    let out = distill(&mrt, &teacher, &cfg.distill, &mut metrics)?;
+    let mut cache = open_cache(cfg)?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut cache, &mut metrics)?;
+    let out = coordinator::distill_cached(
+        &mrt, &teacher, &cfg.distill, &mut cache, &mut metrics,
+    )?;
     let mut s = genie::store::Store::new();
     s.insert("images", out.images);
     let path = std::path::Path::new(&cfg.runs_dir)
         .join(format!("synthetic_{}.bin", cfg.model));
     s.save(&path)?;
     println!("synthetic images saved to {path:?}");
+    print_cache_stats(&cache);
     metrics.flush()
 }
 
@@ -191,10 +232,13 @@ fn cmd_export(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
     let (mrt, dataset) = setup(&rt, cfg)?;
     let mut metrics = Metrics::new();
-    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
-    let out = genie::coordinator::distill(&mrt, &teacher, &cfg.distill, &mut metrics)?;
-    let qstate = genie::coordinator::quantize(
-        &mrt, &teacher, &out.images, &cfg.quant, &mut metrics,
+    let mut cache = open_cache(cfg)?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut cache, &mut metrics)?;
+    let out = coordinator::distill_cached(
+        &mrt, &teacher, &cfg.distill, &mut cache, &mut metrics,
+    )?;
+    let qstate = coordinator::quantize_cached(
+        &mrt, &teacher, &out.images, &cfg.quant, &mut cache, &mut metrics,
     )?;
     let (store, fp_bytes, q_bits) =
         genie::quant::export::export_model(&mrt.manifest, &qstate)?;
@@ -214,6 +258,7 @@ fn cmd_export(cfg: &RunConfig) -> Result<()> {
         q_bits / 8 / 1024,
         fp_bytes as f64 / (q_bits as f64 / 8.0)
     );
+    print_cache_stats(&cache);
     Ok(())
 }
 
@@ -256,9 +301,14 @@ fn cmd_zsq(cfg: &RunConfig) -> Result<()> {
             cfg.model, cfg.quant.wbits, cfg.quant.abits
         )),
     )?;
-    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
-    let out = zsq(&mrt, &teacher, &dataset, &cfg.distill, &cfg.quant, &mut metrics)?;
+    let mut cache = open_cache(cfg)?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut cache, &mut metrics)?;
+    let out = zsq(
+        &mrt, &teacher, &dataset, &cfg.distill, &cfg.quant, &mut cache,
+        &mut metrics,
+    )?;
     out.print("zsq");
+    print_cache_stats(&cache);
     metrics.flush()
 }
 
@@ -271,8 +321,13 @@ fn cmd_fsq(cfg: &RunConfig) -> Result<()> {
             cfg.model, cfg.quant.wbits, cfg.quant.abits
         )),
     )?;
-    let teacher = teacher_store(&mrt, &dataset, cfg, &mut metrics)?;
-    let out = fsq(&mrt, &teacher, &dataset, cfg.fsq_samples, &cfg.quant, &mut metrics)?;
+    let mut cache = open_cache(cfg)?;
+    let teacher = teacher_store(&mrt, &dataset, cfg, &mut cache, &mut metrics)?;
+    let out = fsq(
+        &mrt, &teacher, &dataset, cfg.fsq_samples, &cfg.quant, &mut cache,
+        &mut metrics,
+    )?;
     out.print("fsq");
+    print_cache_stats(&cache);
     metrics.flush()
 }

@@ -1,0 +1,376 @@
+//! Durable phase checkpoints (DESIGN.md §9): one GTS1 file holding the
+//! carried device tensors, the phase's host-side mutable state (RNG
+//! streams, plateau schedulers), the engine's scalar trace so far, and
+//! the step counter — everything an interrupted step loop needs to
+//! resume bit-identically.
+//!
+//! Checkpoint writes are atomic (serialize to `<path>.tmp`, then rename),
+//! so a process killed mid-write leaves the previous checkpoint intact,
+//! never a truncated file. Completed shards of a sharded stage persist
+//! their results as `<shard>.done.gts` next to the in-progress `.ckpt`
+//! files; both live in the stage's work dir ([`StageCkpt`]), which the
+//! artifact cache clears once the whole stage's artifact is stored.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{DeviceStore, Scalars};
+use crate::schedule::ReduceLROnPlateau;
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+const STEP_NAME: &str = "ckpt.step";
+const DEV_PREFIX: &str = "dev.";
+const HOST_PREFIX: &str = "host.";
+const TRACE_PREFIX: &str = "ckpt.trace.";
+
+/// Engine-side checkpoint policy for one step loop.
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    /// Checkpoint file, written atomically (tmp + rename).
+    pub path: PathBuf,
+    /// Steps between periodic writes (0 = only on budget exhaustion).
+    pub every: usize,
+    /// Load `path` (if present) before stepping, instead of phase init.
+    pub resume: bool,
+    /// Execute at most this many steps this invocation, then checkpoint
+    /// and return with `completed = false` — graceful preemption, and
+    /// the test harness's stand-in for a killed process.
+    pub budget: Option<usize>,
+}
+
+/// Where one pipeline stage keeps its in-progress state: a work dir of
+/// per-shard engine checkpoints (`<shard>.ckpt`) and completed-shard
+/// results (`<shard>.done.gts`).
+#[derive(Debug, Clone)]
+pub struct StageCkpt {
+    pub dir: PathBuf,
+    pub every: usize,
+    pub resume: bool,
+    pub budget: Option<usize>,
+}
+
+impl StageCkpt {
+    pub fn new(dir: impl Into<PathBuf>, every: usize, resume: bool) -> Self {
+        StageCkpt { dir: dir.into(), every, resume, budget: None }
+    }
+
+    /// The engine checkpoint config for one shard of this stage.
+    pub fn shard(&self, name: &str) -> CheckpointCfg {
+        CheckpointCfg {
+            path: self.dir.join(format!("{name}.ckpt")),
+            every: self.every,
+            resume: self.resume,
+            budget: self.budget,
+        }
+    }
+
+    /// Load a completed shard's result, if resuming and present. A file
+    /// that fails to parse is treated as absent (the shard re-runs).
+    pub fn load_done(&self, name: &str) -> Option<Store> {
+        if !self.resume {
+            return None;
+        }
+        let p = self.dir.join(format!("{name}.done.gts"));
+        if !p.exists() {
+            return None;
+        }
+        Store::load(&p).ok()
+    }
+
+    /// Persist a completed shard's result (atomic write).
+    pub fn write_done(&self, name: &str, s: &Store) -> Result<u64> {
+        std::fs::create_dir_all(&self.dir)?;
+        atomic_save(s, &self.dir.join(format!("{name}.done.gts")))
+    }
+}
+
+/// Write a store atomically: serialize to `<path>.tmp`, then rename.
+/// Returns the byte size written.
+pub fn atomic_save(s: &Store, path: &Path) -> Result<u64> {
+    let tmp = path.with_extension("tmp");
+    let bytes = s.to_bytes()?;
+    std::fs::write(&tmp, &bytes).with_context(|| format!("write {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    Ok(bytes.len() as u64)
+}
+
+/// A parsed checkpoint: the last completed step, the phase's host-side
+/// snapshot, the carried device tensors, and the scalar trace so far.
+#[derive(Debug)]
+pub struct Snapshot {
+    pub step: usize,
+    pub host: Store,
+    pub carried: Vec<(String, Tensor)>,
+    pub trace: Vec<(usize, Scalars)>,
+}
+
+/// Write a checkpoint at `step`: the carried device tensors (fetched
+/// through `dev`, so the D2H bytes are counted), the phase snapshot, and
+/// the engine trace. Returns the file size in bytes.
+pub fn write(
+    path: &Path,
+    step: usize,
+    carried: &[String],
+    host: &Store,
+    trace: &[(usize, Scalars)],
+    dev: &mut DeviceStore,
+) -> Result<u64> {
+    let mut s = Store::new();
+    s.insert(STEP_NAME, u64_tensor(step as u64));
+    // trace series: one (steps, vals) pair per scalar name, in
+    // first-appearance order
+    let mut names: Vec<&str> = Vec::new();
+    for (_, sc) in trace {
+        for (n, _) in sc.iter() {
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+    }
+    for name in names {
+        let series: Vec<(usize, f32)> = trace
+            .iter()
+            .filter_map(|(t, sc)| sc.get(name).map(|v| (*t, v)))
+            .collect();
+        trace_to_store(&mut s, &format!("{TRACE_PREFIX}{name}"), &series);
+    }
+    for n in host.names() {
+        s.insert_shared(&format!("{HOST_PREFIX}{n}"), host.get_shared(n)?);
+    }
+    for n in carried {
+        s.insert(&format!("{DEV_PREFIX}{n}"), dev.fetch(n)?);
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    atomic_save(&s, path)
+}
+
+/// Parse a checkpoint file back into its parts.
+pub fn read(path: &Path) -> Result<Snapshot> {
+    let s =
+        Store::load(path).with_context(|| format!("checkpoint {path:?}"))?;
+    let step = u64_from(s.get(STEP_NAME).context("checkpoint missing step")?)?
+        as usize;
+    let mut host = Store::new();
+    let mut carried = Vec::new();
+    let mut series: Vec<(String, Vec<(usize, f32)>)> = Vec::new();
+    for n in s.names() {
+        if let Some(rest) = n.strip_prefix(HOST_PREFIX) {
+            host.insert_shared(rest, s.get_shared(n)?);
+        } else if let Some(rest) = n.strip_prefix(DEV_PREFIX) {
+            carried.push((rest.to_string(), s.get(n)?.clone()));
+        } else if let Some(rest) = n.strip_prefix(TRACE_PREFIX) {
+            if let Some(name) = rest.strip_suffix(".steps") {
+                let rows =
+                    trace_from_store(&s, &format!("{TRACE_PREFIX}{name}"))?;
+                series.push((name.to_string(), rows));
+            }
+        }
+    }
+    // every scalar is logged at every logged step, so all series share
+    // one step spine; rebuild the (step, Scalars) rows from it
+    let mut trace = Vec::new();
+    if let Some((_, spine)) = series.first() {
+        for (i, &(t, _)) in spine.iter().enumerate() {
+            let mut sc = Scalars::new();
+            for (name, rows) in &series {
+                sc.insert(name, rows[i].1);
+            }
+            trace.push((t, sc));
+        }
+    }
+    Ok(Snapshot { step, host, carried, trace })
+}
+
+/// Encode a `(step, value)` series as `<name>.steps` (u32) +
+/// `<name>.vals` (f32) tensors — the one trace wire format shared by
+/// engine checkpoints, done-shard files and cache artifacts.
+pub fn trace_to_store(s: &mut Store, name: &str, trace: &[(usize, f32)]) {
+    s.insert(
+        &format!("{name}.steps"),
+        Tensor::from_u32(
+            &[trace.len()],
+            trace.iter().map(|&(t, _)| t as u32).collect(),
+        ),
+    );
+    s.insert(
+        &format!("{name}.vals"),
+        Tensor::from_f32(
+            &[trace.len()],
+            trace.iter().map(|&(_, v)| v).collect(),
+        ),
+    );
+}
+
+/// Decode a series written by [`trace_to_store`].
+pub fn trace_from_store(s: &Store, name: &str) -> Result<Vec<(usize, f32)>> {
+    let steps = s.get(&format!("{name}.steps"))?.as_u32();
+    let vals = s.get(&format!("{name}.vals"))?.as_f32();
+    anyhow::ensure!(
+        steps.len() == vals.len(),
+        "trace '{name}': {} steps vs {} vals",
+        steps.len(),
+        vals.len()
+    );
+    Ok(steps
+        .iter()
+        .zip(vals.iter())
+        .map(|(&t, &v)| (t as usize, v))
+        .collect())
+}
+
+/// A u64 as a `[lo, hi]` u32 tensor (GTS1 dtypes are all 32-bit).
+pub fn u64_tensor(v: u64) -> Tensor {
+    Tensor::from_u32(&[2], vec![v as u32, (v >> 32) as u32])
+}
+
+pub fn u64_from(t: &Tensor) -> Result<u64> {
+    let d = t.as_u32();
+    anyhow::ensure!(d.len() == 2, "u64 tensor wants 2 lanes, got {}", d.len());
+    Ok(d[0] as u64 | (d[1] as u64) << 32)
+}
+
+/// A PCG32 stream as a `[state_lo, state_hi, inc_lo, inc_hi]` tensor.
+pub fn rng_tensor(rng: &Pcg32) -> Tensor {
+    let (state, inc) = rng.raw();
+    Tensor::from_u32(
+        &[4],
+        vec![state as u32, (state >> 32) as u32, inc as u32, (inc >> 32) as u32],
+    )
+}
+
+pub fn rng_from_tensor(t: &Tensor) -> Result<Pcg32> {
+    let d = t.as_u32();
+    anyhow::ensure!(d.len() == 4, "rng tensor wants 4 lanes, got {}", d.len());
+    Ok(Pcg32::from_raw(
+        d[0] as u64 | (d[1] as u64) << 32,
+        d[2] as u64 | (d[3] as u64) << 32,
+    ))
+}
+
+/// A plateau scheduler's mutable state as a `[lr, best, wait]` tensor
+/// (the wait count is small, so an f32 lane holds it exactly).
+pub fn plateau_tensor(s: &ReduceLROnPlateau) -> Tensor {
+    let (lr, best, wait) = s.raw();
+    Tensor::from_f32(&[3], vec![lr, best, wait as f32])
+}
+
+pub fn plateau_restore(s: &mut ReduceLROnPlateau, t: &Tensor) -> Result<()> {
+    let d = t.as_f32();
+    anyhow::ensure!(
+        d.len() == 3,
+        "plateau tensor wants 3 lanes, got {}",
+        d.len()
+    );
+    s.restore_raw(d[0], d[1], d[2] as usize);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn u64_and_rng_tensors_roundtrip() {
+        for v in [0u64, 1, u32::MAX as u64, u64::MAX, 0x1234_5678_9abc_def0] {
+            assert_eq!(u64_from(&u64_tensor(v)).unwrap(), v);
+        }
+        let mut rng = Pcg32::new_stream(7, 3);
+        for _ in 0..9 {
+            rng.next_u32();
+        }
+        let mut back = rng_from_tensor(&rng_tensor(&rng)).unwrap();
+        for _ in 0..20 {
+            assert_eq!(rng.next_u32(), back.next_u32());
+        }
+        assert!(u64_from(&Tensor::from_u32(&[1], vec![0])).is_err());
+        assert!(rng_from_tensor(&Tensor::from_u32(&[2], vec![0, 0])).is_err());
+    }
+
+    #[test]
+    fn trace_store_roundtrip() {
+        let mut s = Store::new();
+        let trace = vec![(5usize, 2.5f32), (10, 1.25), (12, 1.0)];
+        trace_to_store(&mut s, "rec", &trace);
+        assert_eq!(trace_from_store(&s, "rec").unwrap(), trace);
+        // empty series round-trips too
+        trace_to_store(&mut s, "empty", &[]);
+        assert!(trace_from_store(&s, "empty").unwrap().is_empty());
+        assert!(trace_from_store(&s, "missing").is_err());
+    }
+
+    #[test]
+    fn plateau_tensor_roundtrips_mid_decay() {
+        let mut a = ReduceLROnPlateau::new(0.1, 0.5, 1);
+        a.observe(1.0);
+        a.observe(1.0);
+        let snap = plateau_tensor(&a);
+        let mut b = ReduceLROnPlateau::new(0.1, 0.5, 1);
+        plateau_restore(&mut b, &snap).unwrap();
+        for loss in [1.0, 1.0, 0.3, 0.3, 0.3] {
+            assert_eq!(a.observe(loss), b.observe(loss));
+        }
+    }
+
+    #[test]
+    fn checkpoint_write_read_roundtrip() {
+        let rt = Runtime::cpu().unwrap();
+        let mut dev = rt.device_store();
+        dev.insert("w", &Tensor::from_f32(&[2], vec![1.5, -2.0])).unwrap();
+        dev.insert("am.w", &Tensor::zeros(&[2])).unwrap();
+        dev.insert("junk", &Tensor::scalar_f32(9.0)).unwrap();
+
+        let mut host = Store::new();
+        host.insert("rng", rng_tensor(&Pcg32::new(5)));
+
+        let mut sc1 = Scalars::new();
+        sc1.insert("loss", 2.0);
+        sc1.insert("acc", 0.25);
+        let mut sc2 = Scalars::new();
+        sc2.insert("loss", 1.0);
+        sc2.insert("acc", 0.5);
+        let trace = vec![(10usize, sc1), (20usize, sc2)];
+
+        let dir = std::env::temp_dir().join("genie_ckpt_test");
+        let path = dir.join("shard0.ckpt");
+        let carried = vec!["w".to_string(), "am.w".to_string()];
+        let bytes =
+            write(&path, 20, &carried, &host, &trace, &mut dev).unwrap();
+        assert!(bytes > 0);
+        assert!(!path.with_extension("tmp").exists(), "tmp must be renamed");
+
+        let snap = read(&path).unwrap();
+        assert_eq!(snap.step, 20);
+        assert_eq!(snap.carried.len(), 2);
+        assert_eq!(snap.carried[0].0, "w");
+        assert_eq!(snap.carried[0].1.as_f32(), &[1.5, -2.0]);
+        assert!(snap.host.contains("rng"));
+        assert_eq!(snap.trace.len(), 2);
+        assert_eq!(snap.trace[0].0, 10);
+        assert_eq!(snap.trace[1].1["loss"], 1.0);
+        assert_eq!(snap.trace[1].1["acc"], 0.5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stage_ckpt_done_roundtrip_respects_resume() {
+        let dir = std::env::temp_dir().join("genie_stage_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let stage = StageCkpt::new(&dir, 10, true);
+        assert!(stage.load_done("shard0").is_none());
+        let mut s = Store::new();
+        s.insert("images", Tensor::zeros(&[2, 2]));
+        stage.write_done("shard0", &s).unwrap();
+        let back = stage.load_done("shard0").unwrap();
+        assert_eq!(back.get("images").unwrap().numel(), 4);
+        // resume=false never reads done shards
+        let fresh = StageCkpt::new(&dir, 10, false);
+        assert!(fresh.load_done("shard0").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

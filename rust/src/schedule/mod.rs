@@ -84,6 +84,21 @@ impl ReduceLROnPlateau {
     pub fn lr(&self) -> f32 {
         self.lr
     }
+
+    /// Raw mutable state `(lr, best, wait)` — serialized into phase
+    /// checkpoints so a resumed run observes losses exactly where the
+    /// interrupted one stopped (DESIGN.md §9).
+    pub fn raw(&self) -> (f32, f32, usize) {
+        (self.lr, self.best, self.wait)
+    }
+
+    /// Restore checkpointed raw state; `observe` then behaves
+    /// bit-identically to the saved scheduler.
+    pub fn restore_raw(&mut self, lr: f32, best: f32, wait: usize) {
+        self.lr = lr;
+        self.best = best;
+        self.wait = wait;
+    }
 }
 
 /// AdaRound beta anneal: hold at `start` for `warmup` fraction, then
@@ -168,6 +183,19 @@ mod tests {
             s.observe(1.0);
         }
         assert!(s.lr() >= 1e-6);
+    }
+
+    #[test]
+    fn plateau_raw_roundtrip() {
+        let mut a = ReduceLROnPlateau::new(0.1, 0.5, 1);
+        a.observe(1.0);
+        a.observe(1.0);
+        let (lr, best, wait) = a.raw();
+        let mut b = ReduceLROnPlateau::new(0.1, 0.5, 1);
+        b.restore_raw(lr, best, wait);
+        for loss in [1.0, 0.9, 0.9, 0.9, 0.8] {
+            assert_eq!(a.observe(loss), b.observe(loss));
+        }
     }
 
     #[test]

@@ -91,6 +91,30 @@ impl Store {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::fs::File::create(path.as_ref())
             .context("create tensorstore file")?;
+        self.write_to(&mut f)
+    }
+
+    /// Serialize to the GTS1 byte stream (the exact bytes `save` writes).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.write_to(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Stable content address: FNV-1a 64 over the GTS1 byte stream, so
+    /// two stores hash equal iff they serialize identically (same names
+    /// in the same order, same dtypes/shapes/bytes). Never std's SipHash,
+    /// whose keys are process-random — cache keys must survive restarts.
+    pub fn content_hash(&self) -> u64 {
+        let mut w = FnvWriter::default();
+        self.write_to(&mut w).expect("hashing writer cannot fail");
+        w.hash
+    }
+
+    /// Write the GTS1 stream (magic, count, then per-tensor name/dtype/
+    /// shape/bytes records) — shared by `save`, `to_bytes` and
+    /// `content_hash`.
+    pub fn write_to(&self, f: &mut impl Write) -> Result<()> {
         f.write_all(MAGIC)?;
         f.write_all(&(self.names.len() as u32).to_le_bytes())?;
         for name in &self.names {
@@ -160,6 +184,45 @@ impl Store {
     }
 }
 
+/// FNV-1a 64 offset basis — the seed for [`fnv1a`] chains.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// One FNV-1a 64 absorption step: fold `bytes` into a running hash `h`
+/// (start chains from [`FNV_OFFSET`]). Deterministic across processes and
+/// platforms — the primitive under every artifact cache key.
+pub fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A `Write` sink that FNV-hashes everything written through it — lets
+/// `content_hash` reuse the exact `save` serialization without buffering.
+#[derive(Debug)]
+struct FnvWriter {
+    hash: u64,
+}
+
+impl Default for FnvWriter {
+    fn default() -> Self {
+        FnvWriter { hash: FNV_OFFSET }
+    }
+}
+
+impl Write for FnvWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.hash = fnv1a(self.hash, buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
 fn read_u16(c: &mut impl Read) -> Result<u16> {
     let mut b = [0u8; 2];
     c.read_exact(&mut b)?;
@@ -206,6 +269,43 @@ mod tests {
     #[test]
     fn bad_magic_rejected() {
         assert!(Store::from_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn to_bytes_matches_save_and_roundtrips() {
+        let mut s = Store::new();
+        s.insert("a", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        s.insert("empty", Tensor::zeros(&[0]));
+        let bytes = s.to_bytes().unwrap();
+        let path = std::env::temp_dir().join("genie_store_bytes_test.bin");
+        s.save(&path).unwrap();
+        assert_eq!(bytes, std::fs::read(&path).unwrap());
+        let l = Store::from_bytes(&bytes).unwrap();
+        assert_eq!(l.names(), s.names());
+        assert_eq!(l.get("empty").unwrap().numel(), 0);
+    }
+
+    #[test]
+    fn content_hash_stable_and_sensitive() {
+        let mut a = Store::new();
+        a.insert("x", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        a.insert("y", Tensor::scalar_f32(3.0));
+        let mut b = Store::new();
+        b.insert("x", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        b.insert("y", Tensor::scalar_f32(3.0));
+        // equal content hashes equal; hash == hash of the byte stream
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(
+            a.content_hash(),
+            fnv1a(FNV_OFFSET, &a.to_bytes().unwrap())
+        );
+        // value, shape and name-order changes all move the hash
+        b.insert("y", Tensor::scalar_f32(4.0));
+        assert_ne!(a.content_hash(), b.content_hash());
+        let mut c = Store::new();
+        c.insert("y", Tensor::scalar_f32(3.0));
+        c.insert("x", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        assert_ne!(a.content_hash(), c.content_hash());
     }
 
     #[test]

@@ -74,6 +74,19 @@ impl Pcg32 {
     pub fn key_pair(&mut self) -> (u32, u32) {
         (self.next_u32(), self.next_u32())
     }
+
+    /// Raw `(state, inc)` — the complete generator state, serialized into
+    /// phase checkpoints so a resumed run continues the exact stream
+    /// (DESIGN.md §9).
+    pub fn raw(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from checkpointed raw state; the next draw is
+    /// bit-identical to what the saved generator would have produced.
+    pub fn from_raw(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
 }
 
 /// SplitMix64 finalizer: a cheap, well-mixed u64 -> u64 hash.
@@ -167,6 +180,19 @@ mod tests {
             let mut r = Pcg32::new_stream(99, shard);
             let prefix: Vec<u32> = (0..8).map(|_| r.next_u32()).collect();
             assert!(seen.insert(prefix), "shard {shard} prefix collided");
+        }
+    }
+
+    #[test]
+    fn raw_roundtrip_continues_stream() {
+        let mut a = Pcg32::new_stream(9, 4);
+        for _ in 0..17 {
+            a.next_u32();
+        }
+        let (state, inc) = a.raw();
+        let mut b = Pcg32::from_raw(state, inc);
+        for _ in 0..50 {
+            assert_eq!(a.next_u32(), b.next_u32());
         }
     }
 

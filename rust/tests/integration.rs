@@ -3,14 +3,20 @@
 
 use std::path::Path;
 
+use genie::artifacts::ArtifactCache;
 use genie::coordinator::{
     distill, eval_fp32, eval_quantized, insert_zeros, pretrain, quantize,
-    DistillCfg, DistillMode, Metrics, PretrainCfg, QuantCfg,
+    quantize_ck, teacher_cached, zsq, DistillCfg, DistillMode, Metrics,
+    PretrainCfg, QuantCfg,
 };
+use genie::data::{image_batches, Dataset};
 use genie::exec::Parallelism;
-use genie::data::Dataset;
-use genie::quant::{init_qstate, BitConfig};
+use genie::phase::StageCkpt;
+use genie::quant::{init_qstate, set_act_steps, BitConfig};
 use genie::runtime::{ModelRt, Runtime};
+use genie::schedule::{
+    BetaAnneal, CosineAnnealing, ExponentialDecay, ReduceLROnPlateau,
+};
 use genie::store::Store;
 use genie::tensor::{Pcg32, Tensor};
 
@@ -305,6 +311,321 @@ fn device_resident_loop_matches_roundtrip() {
             4 * n_scalars * steps as u64,
             "call_device downloads exactly the scalar results per step"
         );
+    });
+}
+
+/// The engine refactor contract (DESIGN.md §9): an engine-driven distill
+/// is bit-identical to the pre-refactor inline loop — re-implemented
+/// here, verbatim, as the reference — at workers=1 and workers=4.
+#[test]
+fn engine_distill_matches_reference_loop() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt, dataset,
+            &PretrainCfg { steps: 40, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        let cfg = DistillCfg {
+            samples: 64, steps: 12, seed: 91, log_every: 5,
+            ..Default::default()
+        };
+
+        // reference: the pre-engine per-shard loop, inline
+        let m = &mrt.manifest;
+        let bd = m.batch("distill");
+        let n_batches = cfg.samples.div_ceil(bd);
+        let teacher_dev = mrt.upload_store(&teacher).unwrap();
+        let mut parts = Vec::new();
+        for b in 0..n_batches {
+            let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
+            let mut dev = teacher_dev.clone();
+            let (kh, kl) = rng.key_pair();
+            dev.insert("key", &Tensor::key(kh, kl)).unwrap();
+            mrt.call_device("gen_init", &mut dev).unwrap();
+            for (name, shape) in &m.gen_params {
+                dev.insert(&format!("am.{name}"), &Tensor::zeros(shape))
+                    .unwrap();
+                dev.insert(&format!("av.{name}"), &Tensor::zeros(shape))
+                    .unwrap();
+            }
+            let zshape = [bd, m.latent];
+            dev.insert("z", &Tensor::randn(&zshape, &mut rng, 1.0)).unwrap();
+            dev.insert("zm", &Tensor::zeros(&zshape)).unwrap();
+            dev.insert("zv", &Tensor::zeros(&zshape)).unwrap();
+            let gen_sched = ExponentialDecay::new(cfg.lr_g, 0.95, 100);
+            let mut z_sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
+            let entry = mrt.entry("distill_genie_swing").unwrap();
+            let mut lr_z = cfg.lr_z;
+            for t in 1..=cfg.steps {
+                let (kh, kl) = rng.key_pair();
+                dev.insert("key", &Tensor::key(kh, kl)).unwrap();
+                dev.insert("t", &Tensor::scalar_f32(t as f32)).unwrap();
+                dev.insert("lr_g", &Tensor::scalar_f32(gen_sched.lr(t - 1)))
+                    .unwrap();
+                dev.insert("lr_z", &Tensor::scalar_f32(lr_z)).unwrap();
+                let scalars = mrt.rt.call_device(&entry, &mut dev).unwrap();
+                lr_z = z_sched.observe(scalars["loss"]);
+            }
+            mrt.call_device("gen_images", &mut dev).unwrap();
+            parts.push(dev.fetch("images").unwrap());
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let mut want = Tensor::concat_rows(&refs);
+        want.truncate_rows(cfg.samples);
+
+        for workers in [1usize, 4] {
+            let mut c = cfg.clone();
+            c.par = Parallelism::new(workers);
+            let got = distill(mrt, &teacher, &c, &mut metrics).unwrap();
+            assert_eq!(
+                got.images, want,
+                "workers={workers} diverged from the reference loop"
+            );
+        }
+    });
+}
+
+/// Same contract for quantize: block 0's optimized learnables from the
+/// engine-driven run must equal the pre-refactor inline loop (later
+/// blocks never overwrite another block's learnables, so they survive
+/// into the final qstate), at workers=1 and 4.
+#[test]
+fn engine_quantize_block0_matches_reference_loop() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt, dataset,
+            &PretrainCfg { steps: 40, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        let dcfg = DistillCfg {
+            samples: 64, steps: 8, seed: 3, ..Default::default()
+        };
+        let images = distill(mrt, &teacher, &dcfg, &mut metrics)
+            .unwrap()
+            .images;
+        let cfg = QuantCfg {
+            steps_per_block: 10, seed: 7, log_every: 4, ..Default::default()
+        };
+
+        // reference: stats + qstate init + serial bounds + the
+        // pre-engine block-0 loop, inline
+        let m = &mrt.manifest;
+        let pad = |x: &Tensor, bs: usize| {
+            let n = x.shape[0];
+            let idx: Vec<usize> = (0..bs).map(|i| i % n).collect();
+            x.gather_rows(&idx)
+        };
+        let stats = {
+            let mut store = teacher.clone();
+            store.insert("x", pad(&images, m.batch("stats")));
+            mrt.call("act_stats", &mut store).unwrap();
+            store.get("act_stats").unwrap().as_f32().to_vec()
+        };
+        let bits = BitConfig::new(cfg.wbits, cfg.abits);
+        let mut qstate =
+            init_qstate(m, &teacher, bits, cfg.pnorm, Some(&stats)).unwrap();
+        set_act_steps(&mut qstate, &m.quant_layers, &stats).unwrap();
+        let teacher_dev = mrt.upload_store(&teacher).unwrap();
+        let batches = image_batches(&images, m.batch("recon"));
+        let mut teacher_bounds: Vec<Vec<Tensor>> = Vec::new();
+        {
+            let mut dev = teacher_dev.clone();
+            for (bx, _) in &batches {
+                dev.insert("x", bx).unwrap();
+                mrt.call_device("collect_teacher", &mut dev).unwrap();
+                teacher_bounds.push(
+                    (0..=m.num_blocks)
+                        .map(|i| dev.fetch(&format!("bound.{i}")).unwrap())
+                        .collect(),
+                );
+            }
+        }
+        let b = 0usize;
+        let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
+        let mut dev = teacher_dev.clone();
+        dev.absorb(&qstate).unwrap();
+        for (i, bounds) in teacher_bounds.iter().enumerate() {
+            dev.insert(&format!("x_in.{i}"), &bounds[b]).unwrap();
+        }
+        for (i, bounds) in teacher_bounds.iter().enumerate() {
+            dev.insert(&format!("y_ref.{i}"), &bounds[b + 1]).unwrap();
+        }
+        let learn = m.learnable_block(b).to_vec();
+        for name in &learn {
+            let shape = dev.get(name).unwrap().shape().to_vec();
+            dev.insert(&format!("am.{name}"), &Tensor::zeros(&shape)).unwrap();
+            dev.insert(&format!("av.{name}"), &Tensor::zeros(&shape)).unwrap();
+        }
+        let sw_sched = CosineAnnealing::new(cfg.lr_sw, cfg.steps_per_block);
+        let sa_sched = CosineAnnealing::new(cfg.lr_sa, cfg.steps_per_block);
+        let beta = BetaAnneal::new(
+            cfg.beta_start, cfg.beta_end, 0.2, cfg.steps_per_block,
+        );
+        let entry = mrt.entry("quant_step_0").unwrap();
+        for t in 1..=cfg.steps_per_block {
+            let bi = rng.below(batches.len());
+            dev.alias("x_in", &format!("x_in.{bi}")).unwrap();
+            dev.alias("y_ref", &format!("y_ref.{bi}")).unwrap();
+            let (kh, kl) = rng.key_pair();
+            dev.insert("key", &Tensor::key(kh, kl)).unwrap();
+            dev.insert("t", &Tensor::scalar_f32(t as f32)).unwrap();
+            dev.insert("lr_sw", &Tensor::scalar_f32(sw_sched.lr(t - 1)))
+                .unwrap();
+            dev.insert("lr_v", &Tensor::scalar_f32(cfg.lr_v)).unwrap();
+            dev.insert("lr_sa", &Tensor::scalar_f32(sa_sched.lr(t - 1)))
+                .unwrap();
+            dev.insert("lam", &Tensor::scalar_f32(cfg.lam)).unwrap();
+            dev.insert("beta", &Tensor::scalar_f32(beta.beta(t))).unwrap();
+            dev.insert("drop_p", &Tensor::scalar_f32(cfg.drop_p)).unwrap();
+            mrt.rt.call_device(&entry, &mut dev).unwrap();
+        }
+        let want: Vec<(String, Tensor)> = learn
+            .iter()
+            .map(|n| (n.clone(), dev.fetch(n).unwrap()))
+            .collect();
+
+        for workers in [1usize, 4] {
+            let mut c = cfg.clone();
+            c.par = Parallelism::new(workers);
+            let qs = quantize(mrt, &teacher, &images, &c, &mut metrics)
+                .unwrap();
+            for (n, t) in &want {
+                assert_eq!(
+                    qs.get(n).unwrap(), t,
+                    "workers={workers}: block-0 learnable '{n}' diverged"
+                );
+            }
+        }
+    });
+}
+
+/// The cache acceptance contract: a second `zsq` with an identical
+/// config performs zero pretrain/distill/quantize dispatches — every
+/// stage is a DAG lookup (asserted via `DispatchStats`).
+#[test]
+fn second_zsq_with_same_config_is_pure_cache_lookup() {
+    with_ctx(|rt, mrt, dataset| {
+        let dir = std::env::temp_dir().join("genie_it_cache_zsq");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut metrics = Metrics::new();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let pcfg = PretrainCfg { steps: 30, ..Default::default() };
+        let dcfg = DistillCfg { samples: 64, steps: 8, ..Default::default() };
+        let qcfg = QuantCfg { steps_per_block: 8, ..Default::default() };
+        let teacher =
+            teacher_cached(mrt, dataset, &pcfg, &mut cache, &mut metrics)
+                .unwrap();
+        let out1 =
+            zsq(mrt, &teacher, dataset, &dcfg, &qcfg, &mut cache, &mut metrics)
+                .unwrap();
+
+        // run 2 against fresh runtime stats: teacher, distill and
+        // quantize must all load from the cache, dispatching nothing
+        rt.reset_stats();
+        let teacher2 =
+            teacher_cached(mrt, dataset, &pcfg, &mut cache, &mut metrics)
+                .unwrap();
+        let out2 = zsq(
+            mrt, &teacher2, dataset, &dcfg, &qcfg, &mut cache, &mut metrics,
+        )
+        .unwrap();
+        let stats = rt.dispatch_stats();
+        for banned in [
+            "train_step", "gen_init", "gen_images", "act_stats",
+            "collect_teacher", "collect_student",
+        ] {
+            assert!(
+                !stats.contains_key(banned),
+                "{banned} dispatched on a full cache hit"
+            );
+        }
+        assert!(
+            !stats.keys().any(|k| {
+                k.starts_with("distill_") || k.starts_with("quant_step_")
+            }),
+            "stage graphs dispatched on a full cache hit: {:?}",
+            stats.keys().collect::<Vec<_>>()
+        );
+        assert_eq!(out1.q_acc, out2.q_acc);
+        assert_eq!(out1.fp_acc, out2.fp_acc);
+        assert!(
+            cache.stats().hits >= 3,
+            "teacher+distill+qstate should all hit: {:?}",
+            cache.stats()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// The resume acceptance contract: a quantize run killed mid-flight
+/// (simulated by a per-block step budget that checkpoints and errors —
+/// on-disk state is exactly what a killed process leaves) and then
+/// crash-looped to completion produces a final qstate bit-identical to
+/// an uninterrupted run. Exercises both `block{b}.done` loading and
+/// mid-block engine-checkpoint resume, repeatedly.
+#[test]
+fn quantize_killed_mid_run_resumes_bit_identical() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt, dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        let dcfg = DistillCfg {
+            samples: 64, steps: 6, seed: 11, ..Default::default()
+        };
+        let images = distill(mrt, &teacher, &dcfg, &mut metrics)
+            .unwrap()
+            .images;
+        let qcfg = QuantCfg {
+            steps_per_block: 12, log_every: 4, ..Default::default()
+        };
+
+        // the uninterrupted reference
+        let want = quantize(mrt, &teacher, &images, &qcfg, &mut metrics)
+            .unwrap();
+
+        // crash-loop: every attempt dies after 7 steps of whichever
+        // block it reaches, then the next attempt resumes
+        let dir = std::env::temp_dir().join("genie_it_resume_quant");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ck = StageCkpt::new(&dir, 3, true);
+        ck.budget = Some(7);
+        let mut got = None;
+        for attempt in 0..20 {
+            match quantize_ck(
+                mrt, &teacher, &images, &qcfg, Some(&ck), &mut metrics,
+            ) {
+                Ok(qs) => {
+                    assert!(
+                        attempt > 0,
+                        "the budget must interrupt at least once"
+                    );
+                    got = Some(qs);
+                    break;
+                }
+                Err(e) => assert!(
+                    format!("{e}").contains("interrupted"),
+                    "attempt {attempt}: unexpected error {e}"
+                ),
+            }
+        }
+        let got = got.expect("crash-looped quantize never finished");
+        assert_eq!(got.names(), want.names());
+        for n in want.names() {
+            assert_eq!(
+                got.get(n).unwrap(),
+                want.get(n).unwrap(),
+                "qstate '{n}' diverged after interrupted resume"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
     });
 }
 

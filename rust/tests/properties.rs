@@ -110,6 +110,67 @@ fn prop_store_roundtrip_random() {
 }
 
 #[test]
+fn prop_store_roundtrip_multidtype_with_empty_tensors() {
+    forall(53, 20, |rng| {
+        let mut s = Store::new();
+        let n = 1 + rng.below(8);
+        for i in 0..n {
+            let ndim = rng.below(4);
+            // ~1 in 6 axes is zero-length: 0-element tensors must survive
+            let shape: Vec<usize> = (0..ndim)
+                .map(|_| if rng.below(6) == 0 { 0 } else { 1 + rng.below(5) })
+                .collect();
+            let numel: usize = shape.iter().product();
+            let t = match rng.below(3) {
+                0 => Tensor::from_f32(
+                    &shape,
+                    (0..numel).map(|_| rng.normal()).collect(),
+                ),
+                1 => Tensor::from_i32(
+                    &shape,
+                    (0..numel).map(|_| rng.next_u32() as i32).collect(),
+                ),
+                _ => Tensor::from_u32(
+                    &shape,
+                    (0..numel).map(|_| rng.next_u32()).collect(),
+                ),
+            };
+            s.insert(&format!("t{i}"), t);
+        }
+        let bytes = s.to_bytes().unwrap();
+        let l = Store::from_bytes(&bytes).unwrap();
+        // name ordering is part of the format, not incidental
+        assert_eq!(l.names(), s.names());
+        for name in s.names() {
+            assert_eq!(l.get(name).unwrap(), s.get(name).unwrap());
+        }
+        // and the byte stream re-serializes identically (stable format)
+        assert_eq!(l.to_bytes().unwrap(), bytes);
+    });
+}
+
+#[test]
+fn prop_store_rejects_corrupt_magic_and_truncation() {
+    forall(59, 20, |rng| {
+        let mut s = Store::new();
+        s.insert("a", Tensor::randn(&[3, 2], rng, 1.0));
+        s.insert("b", Tensor::from_i32(&[2], vec![1, -1]));
+        let bytes = s.to_bytes().unwrap();
+        // corrupt magic: any flipped byte in the header must reject
+        let mut bad = bytes.clone();
+        bad[rng.below(4)] ^= 0xff;
+        assert!(Store::from_bytes(&bad).is_err(), "corrupt magic accepted");
+        // truncation anywhere short of the full stream must reject
+        let cut = rng.below(bytes.len());
+        assert!(
+            Store::from_bytes(&bytes[..cut]).is_err(),
+            "truncated stream of {cut}/{} bytes accepted",
+            bytes.len()
+        );
+    });
+}
+
+#[test]
 fn prop_cosine_monotone_nonincreasing() {
     forall(31, 30, |rng| {
         let base = 0.001 + rng.uniform();
