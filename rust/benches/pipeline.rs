@@ -69,9 +69,13 @@ fn main() {
 
     // quant block step via the full quantize path's graphs
     {
-        use genie::quant::{init_qstate, BitConfig};
-        let qs = init_qstate(m, &teacher, BitConfig::new(4, 4), 2.4, None)
+        use genie::precision::{Granularity, PrecisionPlan};
+        use genie::quant::init_qstate;
+        let plan = PrecisionPlan::uniform(m, 4, 4, Granularity::PerChannel)
+            .unwrap()
+            .with_first_last(8)
             .unwrap();
+        let qs = init_qstate(m, &teacher, &plan, 2.4, None).unwrap();
         let mut s = teacher.clone();
         s.absorb(&qs);
         let br = m.batch("recon");

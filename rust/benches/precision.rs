@@ -1,0 +1,188 @@
+//! Precision-plan benchmarks (DESIGN.md §10). In-tree harness (no
+//! criterion in the offline image); harness = false.
+//!
+//! Always writes `BENCH_precision.json`: the host-side costs of the
+//! Pareto machinery — greedy bit allocation over a wide synthetic
+//! sensitivity table, one fake-quant sensitivity probe, plan
+//! fingerprint/key computation, and the plan GTS1 round-trip. With
+//! artifacts present it additionally measures the real sensitivity
+//! sweep on the toy model and uniform-vs-pareto end-to-end `zsq` wall
+//! clocks.
+
+use genie::artifacts::{quantize_key, ArtifactCache};
+use genie::coordinator::{
+    pretrain, zsq, DistillCfg, Metrics, PretrainCfg, QuantCfg,
+};
+use genie::data::Dataset;
+use genie::precision::sensitivity::{allocate_bits, measure_sensitivity};
+use genie::precision::{Granularity, Policy, PrecisionPlan};
+use genie::quant::fake_quant_weights;
+use genie::runtime::{Manifest, ModelRt, Runtime};
+use genie::store::Store;
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::{bench_secs, report};
+
+/// A synthetic `L`-quant-layer manifest for host-side plan costs.
+fn wide_manifest(l: usize) -> Manifest {
+    let layers: Vec<String> = (0..l)
+        .map(|i| {
+            format!(
+                r#"{{"name": "conv{i}", "w_shape": [3, 3, 64, 64],
+                    "out_ch": 64, "flat_k": 576, "block": 0}}"#
+            )
+        })
+        .collect();
+    Manifest::from_json_text(&format!(
+        r#"{{
+            "model": "wide", "image": [32, 32, 3], "num_classes": 10,
+            "num_blocks": 4, "latent": 64,
+            "batch": {{"train": 32, "eval": 32}},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [{}], "learnable": {{"0": []}},
+            "bounds": [], "entrypoints": {{}}
+        }}"#,
+        layers.join(",")
+    ))
+    .unwrap()
+}
+
+fn main() {
+    let mut rng = Pcg32::new(17);
+
+    // ---- greedy allocation over a 64-layer x 6-candidate table -------
+    let l = 64usize;
+    let candidates = vec![2u32, 3, 4, 5, 6, 8];
+    let kl: Vec<Vec<f32>> = (0..l)
+        .map(|_| {
+            let base = 0.1 + rng.uniform() * 5.0;
+            candidates
+                .iter()
+                .map(|&b| base / (b as f32 * b as f32))
+                .collect()
+        })
+        .collect();
+    let numel = vec![64 * 576usize; l];
+    let pinned: Vec<Option<u32>> = (0..l)
+        .map(|i| if i == 0 || i == l - 1 { Some(8) } else { None })
+        .collect();
+    let budget = (l * 64 * 576) * 4; // the average-4-bit budget
+    let alloc_secs = bench_secs(3, 200, || {
+        std::hint::black_box(
+            allocate_bits(&kl, &candidates, &numel, &pinned, budget)
+                .unwrap(),
+        );
+    });
+    report("precision/allocate_64x6", alloc_secs);
+
+    // ---- one sensitivity probe's host half: fake-quant a conv layer --
+    let w = Tensor::randn(&[3, 3, 64, 64], &mut rng, 0.2);
+    let probe_secs = bench_secs(1, 10, || {
+        std::hint::black_box(
+            fake_quant_weights(&w, 4, 2.4, Granularity::PerChannel).unwrap(),
+        );
+    });
+    report("precision/fake_quant_3x3x64x64", probe_secs);
+
+    // ---- plan fingerprint + qstate key over a wide manifest ----------
+    let m = wide_manifest(l);
+    let plan = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+        .unwrap()
+        .with_first_last(8)
+        .unwrap();
+    let qcfg = QuantCfg::default();
+    let calib = Tensor::randn(&[8, 32, 32, 3], &mut rng, 1.0);
+    let key_secs = bench_secs(3, 200, || {
+        std::hint::black_box(quantize_key(&m, &qcfg, 0x5eed, &calib, &plan));
+    });
+    report("precision/quantize_key_64_layer_plan", key_secs);
+
+    // ---- plan GTS1 round-trip (the plan-artifact cache payload) ------
+    let dir = std::env::temp_dir().join("genie_bench_precision");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.gts");
+    let roundtrip_secs = bench_secs(3, 100, || {
+        plan.to_store().save(&path).unwrap();
+        std::hint::black_box(
+            PrecisionPlan::from_store(&m, &Store::load(&path).unwrap())
+                .unwrap(),
+        );
+    });
+    report("precision/plan_gts1_roundtrip_64_layers", roundtrip_secs);
+
+    // ---- real sensitivity sweep + uniform-vs-pareto zsq (gated) ------
+    let mut sens_secs = -1.0f64;
+    let mut zsq_uniform_secs = -1.0f64;
+    let mut zsq_pareto_secs = -1.0f64;
+    if std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let mrt = ModelRt::load(&rt, "artifacts", "toy").unwrap();
+        let dataset = Dataset::load("artifacts").unwrap();
+        let mut metrics = Metrics::new();
+        let pcfg = PretrainCfg { steps: 60, ..Default::default() };
+        let teacher = pretrain(&mrt, &dataset, &pcfg, &mut metrics).unwrap();
+        let dcfg = DistillCfg { samples: 64, steps: 30, ..Default::default() };
+        let qcfg = QuantCfg { steps_per_block: 30, ..Default::default() };
+
+        // sensitivity-sweep cost: every (layer, candidate) probe
+        let mut rng2 = Pcg32::new(3);
+        let (calib, _) = dataset.calibration(&mut rng2, 64);
+        let t0 = std::time::Instant::now();
+        let (sens, _) = measure_sensitivity(
+            &mrt,
+            &teacher,
+            &calib,
+            &qcfg.precision,
+            qcfg.pnorm,
+            qcfg.par,
+        )
+        .unwrap();
+        sens_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "sensitivity sweep: {} layers x {} candidates in {sens_secs:.2}s",
+            sens.layers.len(),
+            sens.candidates.len()
+        );
+
+        // end-to-end: uniform vs pareto (uncached, real wall clocks)
+        let mut cache = ArtifactCache::disabled();
+        let t0 = std::time::Instant::now();
+        zsq(&mrt, &teacher, &dataset, &dcfg, &qcfg, &mut cache, &mut metrics)
+            .unwrap();
+        zsq_uniform_secs = t0.elapsed().as_secs_f64();
+        let mut pareto = qcfg.clone();
+        pareto.precision.policy = Policy::Pareto;
+        pareto.precision.target_size = 0.25;
+        let t0 = std::time::Instant::now();
+        zsq(
+            &mrt, &teacher, &dataset, &dcfg, &pareto, &mut cache,
+            &mut metrics,
+        )
+        .unwrap();
+        zsq_pareto_secs = t0.elapsed().as_secs_f64();
+        println!(
+            "zsq: uniform {zsq_uniform_secs:.2}s vs pareto \
+             {zsq_pareto_secs:.2}s (plan overhead \
+             {:.2}s)",
+            zsq_pareto_secs - zsq_uniform_secs
+        );
+    } else {
+        println!(
+            "bench precision/sensitivity_sweep: skipped (run `make artifacts`)"
+        );
+    }
+
+    // negative sentinel (-1.0) = artifact-gated section did not run
+    let json = format!(
+        "{{\n  \"allocate_64x6_secs\": {alloc_secs:.6},\n  \
+         \"fake_quant_probe_secs\": {probe_secs:.6},\n  \
+         \"quantize_key_secs\": {key_secs:.6},\n  \
+         \"plan_roundtrip_secs\": {roundtrip_secs:.6},\n  \
+         \"sensitivity_sweep_secs\": {sens_secs:.4},\n  \
+         \"zsq_uniform_secs\": {zsq_uniform_secs:.4},\n  \
+         \"zsq_pareto_secs\": {zsq_pareto_secs:.4}\n}}\n"
+    );
+    std::fs::write("BENCH_precision.json", json).unwrap();
+    println!("wrote BENCH_precision.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -21,6 +21,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
 use crate::phase::checkpoint::atomic_save;
 use crate::phase::StageCkpt;
+use crate::precision::PrecisionPlan;
 use crate::runtime::Manifest;
 use crate::store::{fnv1a, Store, FNV_OFFSET};
 use crate::tensor::{Data, Tensor};
@@ -151,18 +152,46 @@ pub fn distill_key(
         .finish()
 }
 
-/// Key of the optimized-qstate artifact: the quant config plus the
-/// teacher (by precomputed content hash) and the calibration images
-/// (synthetic or real) by content.
-pub fn quantize_key(
+/// Key of the resolved-precision-plan artifact (Pareto runs): every
+/// plan-shaping config knob plus the teacher and calibration content
+/// the sensitivity pass reads. Uniform plans are derived, not cached.
+pub fn plan_key(
     m: &Manifest,
     cfg: &QuantCfg,
     teacher_hash: u64,
     calib: &Tensor,
 ) -> CacheKey {
-    manifest_fields(KeyBuilder::new("qstate"), m)
-        .field("wbits", cfg.wbits)
+    // `cfg.wbits` is deliberately absent: a Pareto plan's weight bits
+    // come from `candidates`, so the uniform base width cannot change
+    // the resolved plan and must not invalidate it
+    let p = &cfg.precision;
+    manifest_fields(KeyBuilder::new("plan"), m)
+        .field("policy", p.policy.as_str())
         .field("abits", cfg.abits)
+        .field("first_last", p.first_last_bits)
+        .field("target_size", p.target_size)
+        .field("granularity", p.granularity.as_str())
+        .field("sens_batches", p.sens_batches)
+        .field("candidates", format!("{:?}", p.candidates))
+        .field("pnorm", cfg.pnorm)
+        .field("teacher", format!("{teacher_hash:016x}"))
+        .tensor("calib", calib)
+        .finish()
+}
+
+/// Key of the optimized-qstate artifact: the quant config plus the
+/// resolved precision plan (per-layer bits/granularity — a different
+/// plan is a different artifact), the teacher (by precomputed content
+/// hash) and the calibration images (synthetic or real) by content.
+pub fn quantize_key(
+    m: &Manifest,
+    cfg: &QuantCfg,
+    teacher_hash: u64,
+    calib: &Tensor,
+    plan: &PrecisionPlan,
+) -> CacheKey {
+    manifest_fields(KeyBuilder::new("qstate"), m)
+        .field("plan", plan.fingerprint())
         .field("steps", cfg.steps_per_block)
         .field("lr_sw", cfg.lr_sw)
         .field("lr_v", cfg.lr_v)
@@ -360,21 +389,73 @@ mod tests {
     }
 
     #[test]
-    fn quantize_key_tracks_calib_content() {
+    fn quantize_key_tracks_calib_content_and_plan() {
+        use crate::precision::{Granularity, LayerPlan, PrecisionPlan};
         let m = toy_manifest();
         let th = Store::new().content_hash();
         let q = QuantCfg::default();
         let a = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let b = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 5.0]);
-        let ka = quantize_key(&m, &q, th, &a);
-        assert_eq!(ka, quantize_key(&m, &q, th, &a));
-        assert_ne!(ka, quantize_key(&m, &q, th, &b));
+        let plan = PrecisionPlan {
+            layers: vec![LayerPlan {
+                name: "stem".into(),
+                wbits: 4,
+                abits: 4,
+                granularity: Granularity::PerChannel,
+            }],
+        };
+        let ka = quantize_key(&m, &q, th, &a, &plan);
+        assert_eq!(ka, quantize_key(&m, &q, th, &a, &plan));
+        assert_ne!(ka, quantize_key(&m, &q, th, &b, &plan));
+
+        // only the plan changes -> the qstate artifact must miss
+        let mut p2 = plan.clone();
+        p2.layers[0].wbits = 2;
+        assert_ne!(ka, quantize_key(&m, &q, th, &a, &p2));
+        let mut p3 = plan.clone();
+        p3.layers[0].granularity = Granularity::PerTensor;
+        assert_ne!(ka, quantize_key(&m, &q, th, &a, &p3));
+
+        // non-plan quant config fields still move the key
         let kq = {
             let mut q2 = q.clone();
-            q2.wbits = 2;
-            quantize_key(&m, &q2, th, &a)
+            q2.steps_per_block += 1;
+            quantize_key(&m, &q2, th, &a, &plan)
         };
         assert_ne!(ka, kq);
+    }
+
+    #[test]
+    fn plan_key_tracks_policy_knobs() {
+        use crate::precision::{Policy, PrecisionCfg};
+        let m = toy_manifest();
+        let th = Store::new().content_hash();
+        let a = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let q = QuantCfg {
+            precision: PrecisionCfg {
+                policy: Policy::Pareto,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let k1 = plan_key(&m, &q, th, &a);
+        assert_eq!(k1, plan_key(&m, &q, th, &a));
+        // the uniform base width never shapes a Pareto plan, so it must
+        // not invalidate the plan artifact
+        let mut qw = q.clone();
+        qw.wbits = 5;
+        assert_eq!(k1, plan_key(&m, &qw, th, &a));
+        let mut q2 = q.clone();
+        q2.precision.target_size = 0.5;
+        assert_ne!(k1, plan_key(&m, &q2, th, &a));
+        let mut q3 = q.clone();
+        q3.precision.candidates = vec![2, 8];
+        assert_ne!(k1, plan_key(&m, &q3, th, &a));
+        // a plan key never collides with a qstate key on the same fields
+        assert_ne!(
+            k1,
+            quantize_key(&m, &q, th, &a, &crate::precision::PrecisionPlan::default())
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use anyhow::{bail, Result};
 
 use crate::exec::Parallelism;
+use crate::precision::{validate_bits, Granularity, Policy};
 
 use super::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
 
@@ -88,8 +89,51 @@ impl RunConfig {
             "checkpoint_every" | "ckpt.every" => {
                 self.checkpoint_every = p!(usize)
             }
-            "wbits" | "quant.wbits" => self.quant.wbits = p!(u32),
-            "abits" | "quant.abits" => self.quant.abits = p!(u32),
+            "wbits" | "quant.wbits" => {
+                self.quant.wbits = validate_bits("wbits", p!(u32))?
+            }
+            "abits" | "quant.abits" => {
+                self.quant.abits = validate_bits("abits", p!(u32))?
+            }
+            "precision" | "quant.precision" => {
+                self.quant.precision.policy = Policy::parse(value)?
+            }
+            "target_size" | "quant.target_size" => {
+                let v = p!(f32);
+                anyhow::ensure!(
+                    v > 0.0 && v <= 1.0,
+                    "target_size must be in (0, 1], got {v}"
+                );
+                self.quant.precision.target_size = v;
+            }
+            "first_last_bits" | "quant.first_last_bits" => {
+                let v = p!(u32);
+                if v != 0 {
+                    validate_bits("first_last_bits", v)?;
+                }
+                self.quant.precision.first_last_bits = v;
+            }
+            "granularity" | "quant.granularity" => {
+                self.quant.precision.granularity = Granularity::parse(value)?
+            }
+            "sens_batches" | "quant.sens_batches" => {
+                let v = p!(usize);
+                anyhow::ensure!(v >= 1, "sens_batches must be >= 1");
+                self.quant.precision.sens_batches = v;
+            }
+            "candidates" | "quant.candidates" => {
+                let mut cs = Vec::new();
+                for part in value.split(',') {
+                    let b = part.trim().parse::<u32>().map_err(|e| {
+                        anyhow::anyhow!("bad candidate '{part}': {e}")
+                    })?;
+                    cs.push(validate_bits("candidates", b)?);
+                }
+                cs.sort_unstable();
+                cs.dedup();
+                anyhow::ensure!(!cs.is_empty(), "candidates must be non-empty");
+                self.quant.precision.candidates = cs;
+            }
             "fsq_samples" => self.fsq_samples = p!(usize),
             "pretrain.steps" => self.pretrain.steps = p!(usize),
             "pretrain.lr" => self.pretrain.lr = p!(f32),
@@ -191,5 +235,47 @@ mod tests {
     fn bad_value_rejected() {
         let mut c = RunConfig::default();
         assert!(c.set("wbits", "two").is_err());
+    }
+
+    #[test]
+    fn degenerate_bit_widths_rejected_at_parse() {
+        let mut c = RunConfig::default();
+        // 0 would underflow abounds' shift; >8 overflows the export grid
+        assert!(c.set("wbits", "0").is_err());
+        assert!(c.set("abits", "0").is_err());
+        assert!(c.set("wbits", "9").is_err());
+        assert!(c.set("abits", "16").is_err());
+        c.set("wbits", "2").unwrap();
+        c.set("abits", "8").unwrap();
+        assert_eq!((c.quant.wbits, c.quant.abits), (2, 8));
+        // the first/last pin validates too, but 0 (= disabled) is legal
+        assert!(c.set("first_last_bits", "12").is_err());
+        c.set("first_last_bits", "0").unwrap();
+        assert_eq!(c.quant.precision.first_last_bits, 0);
+    }
+
+    #[test]
+    fn precision_keys_apply() {
+        use crate::precision::{Granularity, Policy};
+        let mut c = RunConfig::default();
+        assert_eq!(c.quant.precision.policy, Policy::Uniform);
+        c.apply_overrides(&[
+            "precision=pareto".into(),
+            "target_size=0.3".into(),
+            "granularity=per_tensor".into(),
+            "sens_batches=4".into(),
+            "candidates=8,2,4,2".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.quant.precision.policy, Policy::Pareto);
+        assert_eq!(c.quant.precision.target_size, 0.3);
+        assert_eq!(c.quant.precision.granularity, Granularity::PerTensor);
+        assert_eq!(c.quant.precision.sens_batches, 4);
+        assert_eq!(c.quant.precision.candidates, vec![2, 4, 8]);
+        assert!(c.set("precision", "nope").is_err());
+        assert!(c.set("target_size", "0").is_err());
+        assert!(c.set("target_size", "1.5").is_err());
+        assert!(c.set("sens_batches", "0").is_err());
+        assert!(c.set("candidates", "0,4").is_err());
     }
 }

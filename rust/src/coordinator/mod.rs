@@ -30,10 +30,12 @@ pub use evaluate::{
 };
 pub use metrics::Metrics;
 pub use pipeline::{
-    distill_cached, fsq, quantize_cached, zsq, PipelineOutcome,
+    distill_cached, fsq, plan_cached, quantize_cached, zsq, PipelineOutcome,
 };
 pub use pretrain::{pretrain, pretrain_ck, teacher_cached, PretrainCfg};
-pub use quantize::{quantize, quantize_ck, QuantCfg};
+pub use quantize::{
+    quantize, quantize_ck, quantize_planned, resolve_plan, QuantCfg,
+};
 
 use anyhow::{Context, Result};
 

@@ -17,13 +17,15 @@ use anyhow::Result;
 use crate::artifacts::{self, ArtifactCache};
 use crate::data::Dataset;
 use crate::phase::checkpoint;
+use crate::precision::{Policy, PrecisionPlan};
 use crate::runtime::ModelRt;
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
 
 use super::{
     distill_ck, eval_fp32_metered, eval_quantized_metered, eval_quantized_par,
-    quantize, quantize_ck, DistillCfg, DistillOutput, Metrics, QuantCfg,
+    quantize, quantize_planned, resolve_plan, DistillCfg, DistillOutput,
+    Metrics, QuantCfg,
 };
 
 #[derive(Debug, Clone)]
@@ -139,7 +141,45 @@ pub fn quantize_cached(
     )
 }
 
+/// Cache-aware precision-plan resolution (DESIGN.md §10). Uniform plans
+/// are derived config — dispatch-free — so they never touch the cache;
+/// a Pareto plan (one sensitivity sweep over the calibration set) is a
+/// proper DAG node keyed by every plan-shaping knob plus the teacher and
+/// calibration content, stored via the plan's GTS1 round-trip.
+pub fn plan_cached(
+    mrt: &ModelRt,
+    teacher: &Store,
+    teacher_hash: u64,
+    calib: &Tensor,
+    qcfg: &QuantCfg,
+    cache: &mut ArtifactCache,
+    metrics: &mut Metrics,
+) -> Result<PrecisionPlan> {
+    if qcfg.precision.policy == Policy::Uniform {
+        return resolve_plan(mrt, teacher, calib, qcfg, metrics);
+    }
+    let key = artifacts::plan_key(&mrt.manifest, qcfg, teacher_hash, calib);
+    if let Some(s) = cache.load("plan", key) {
+        if let Ok(plan) = PrecisionPlan::from_store(&mrt.manifest, &s) {
+            metrics.record_cache("plan", true);
+            println!(
+                "plan[{}]: cache hit ({})",
+                mrt.manifest.model,
+                key.hex()
+            );
+            return Ok(plan);
+        }
+    }
+    metrics.record_cache("plan", false);
+    let plan = resolve_plan(mrt, teacher, calib, qcfg, metrics)?;
+    cache.store("plan", key, &plan.to_store())?;
+    Ok(plan)
+}
+
 /// [`quantize_cached`] with the teacher's content hash precomputed.
+/// Resolves the precision plan first (a cache lookup for Pareto runs);
+/// the qstate key then folds the resolved plan in, so a changed plan is
+/// a changed artifact.
 pub fn quantize_cached_keyed(
     mrt: &ModelRt,
     teacher: &Store,
@@ -149,8 +189,15 @@ pub fn quantize_cached_keyed(
     cache: &mut ArtifactCache,
     metrics: &mut Metrics,
 ) -> Result<Store> {
-    let key =
-        artifacts::quantize_key(&mrt.manifest, qcfg, teacher_hash, calib);
+    let plan =
+        plan_cached(mrt, teacher, teacher_hash, calib, qcfg, cache, metrics)?;
+    let key = artifacts::quantize_key(
+        &mrt.manifest,
+        qcfg,
+        teacher_hash,
+        calib,
+        &plan,
+    );
     if let Some(qstate) = cache.load("qstate", key) {
         metrics.record_cache("qstate", true);
         println!(
@@ -162,7 +209,9 @@ pub fn quantize_cached_keyed(
     }
     metrics.record_cache("qstate", false);
     let ck = cache.stage_ckpt("qstate", key);
-    let qstate = quantize_ck(mrt, teacher, calib, qcfg, ck.as_ref(), metrics)?;
+    let qstate = quantize_planned(
+        mrt, teacher, calib, qcfg, &plan, ck.as_ref(), metrics,
+    )?;
     cache.store("qstate", key, &qstate)?;
     Ok(qstate)
 }

@@ -35,7 +35,11 @@ use anyhow::Result;
 use crate::data::image_batches;
 use crate::exec::{chain_deps, independent_deps, run_jobs, waves, Parallelism};
 use crate::phase::{checkpoint, Phase, StageCkpt, StepLoop};
-use crate::quant::{init_qstate, set_act_steps, BitConfig};
+use crate::precision::sensitivity::{
+    first_last_pins, measure_sensitivity, pareto_plan,
+};
+use crate::precision::{Policy, PrecisionCfg, PrecisionPlan};
+use crate::quant::{init_qstate, set_act_steps};
 use crate::runtime::{DeviceStore, ModelRt, Scalars};
 use crate::schedule::{BetaAnneal, CosineAnnealing};
 use crate::store::Store;
@@ -68,6 +72,9 @@ pub struct QuantCfg {
     pub seed: u64,
     /// worker pool for bounds collection + block waves (`workers=K`)
     pub par: Parallelism,
+    /// precision-plan policy (DESIGN.md §10): uniform / FirstLast8 pin /
+    /// Pareto mixed precision under `target_size`
+    pub precision: PrecisionCfg,
 }
 
 impl Default for QuantCfg {
@@ -88,6 +95,7 @@ impl Default for QuantCfg {
             log_every: 50,
             seed: 31,
             par: Parallelism::default(),
+            precision: PrecisionCfg::default(),
         }
     }
 }
@@ -435,6 +443,63 @@ fn reconstruct_block(
     })
 }
 
+/// Resolve the precision plan for one quantize run (DESIGN.md §10):
+/// Uniform composes the base bits with the FirstLast8 pin; Pareto
+/// measures per-layer sensitivity on the calibration set (sharded on
+/// the exec pool), greedily allocates bits under the `target_size`
+/// budget, and prints the per-layer table.
+pub fn resolve_plan(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &Tensor,
+    cfg: &QuantCfg,
+    metrics: &mut Metrics,
+) -> Result<PrecisionPlan> {
+    let m = &mrt.manifest;
+    let p = &cfg.precision;
+    match p.policy {
+        Policy::Uniform => {
+            PrecisionPlan::uniform(m, cfg.wbits, cfg.abits, p.granularity)?
+                .with_first_last(p.first_last_bits)
+        }
+        Policy::Pareto => {
+            metrics.start("plan");
+            let (sens, pool) =
+                measure_sensitivity(mrt, teacher, calib, p, cfg.pnorm, cfg.par)?;
+            metrics.record_pool("plan/sensitivity", &pool);
+            // pinned layers were never probed — their zero rows are
+            // placeholders, not measurements, so don't log them
+            let pins = first_last_pins(m, p.first_last_bits);
+            let mut probed = 0usize;
+            for (li, name) in sens.layers.iter().enumerate() {
+                if pins[li].is_some() {
+                    continue;
+                }
+                probed += sens.candidates.len();
+                for (ci, &b) in sens.candidates.iter().enumerate() {
+                    metrics.log(
+                        &format!("plan/sens/{name}"),
+                        b as usize,
+                        sens.kl[li][ci],
+                    );
+                }
+            }
+            let plan = pareto_plan(m, &sens, cfg.abits, p)?;
+            let secs = metrics.stop("plan");
+            println!(
+                "plan[{}]: pareto target {:.2} -> {:.1}% of FP32 \
+                 ({probed} probes in {secs:.1}s)",
+                m.model,
+                p.target_size,
+                100.0 * plan.payload_bits(m) as f64
+                    / PrecisionPlan::fp32_bits(m).max(1) as f64,
+            );
+            print!("{}", plan.render(m));
+            Ok(plan)
+        }
+    }
+}
+
 /// Run GENIE-M over a calibration set; returns the optimized quant state.
 pub fn quantize(
     mrt: &ModelRt,
@@ -448,11 +513,29 @@ pub fn quantize(
 
 /// [`quantize`] with an optional stage checkpoint (mid-block engine
 /// checkpoints + completed-block results in the stage's work dir).
+/// Resolves the precision plan itself; the cached pipeline resolves the
+/// plan first (through the plan artifact) and calls
+/// [`quantize_planned`] directly.
 pub fn quantize_ck(
     mrt: &ModelRt,
     teacher: &Store,
     calib: &Tensor,
     cfg: &QuantCfg,
+    ck: Option<&StageCkpt>,
+    metrics: &mut Metrics,
+) -> Result<Store> {
+    let plan = resolve_plan(mrt, teacher, calib, cfg, metrics)?;
+    quantize_planned(mrt, teacher, calib, cfg, &plan, ck, metrics)
+}
+
+/// GENIE-M block reconstruction under an already-resolved
+/// [`PrecisionPlan`].
+pub fn quantize_planned(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &Tensor,
+    cfg: &QuantCfg,
+    plan: &PrecisionPlan,
     ck: Option<&StageCkpt>,
     metrics: &mut Metrics,
 ) -> Result<Store> {
@@ -471,10 +554,15 @@ pub fn quantize_ck(
         store.get("act_stats")?.as_f32().to_vec()
     };
 
-    // 2. host-side quant-state init (Eq. 6 grid search + AdaRound)
-    let bits = BitConfig::new(cfg.wbits, cfg.abits);
-    let mut qstate = init_qstate(m, teacher, bits, cfg.pnorm, Some(&stats))?;
+    // 2. host-side quant-state init (Eq. 6 grid search + AdaRound),
+    // per-layer bits/granularity from the plan
+    let mut qstate = init_qstate(m, teacher, plan, cfg.pnorm, Some(&stats))?;
     set_act_steps(&mut qstate, &m.quant_layers, &stats)?;
+    let label = plan.label();
+    for (li, lp) in plan.layers.iter().enumerate() {
+        metrics.log("plan/wbits", li, lp.wbits as f32);
+        metrics.log("plan/abits", li, lp.abits as f32);
+    }
 
     // one teacher upload for the whole phase, Arc-shared by collection
     // chunks and block jobs alike
@@ -553,8 +641,8 @@ pub fn quantize_ck(
             ckpt_writes += out.ckpt_writes;
             ckpt_bytes += out.ckpt_bytes;
             println!(
-                "quantize[{} W{}A{}] block {}/{}: rec {:.5}",
-                m.model, cfg.wbits, cfg.abits, out.block + 1, nb, out.last_rec
+                "quantize[{} {label}] block {}/{}: rec {:.5}",
+                m.model, out.block + 1, nb, out.last_rec
             );
         }
     }
@@ -571,8 +659,8 @@ pub fn quantize_ck(
     let secs = metrics.stop("quantize");
     let rate = metrics.throughput("quantize", "blocks", nb, secs);
     println!(
-        "quantize[{} W{}A{}]: {} blocks x {} steps in {:.1}s ({rate:.2} blocks/sec)",
-        m.model, cfg.wbits, cfg.abits, nb, cfg.steps_per_block, secs
+        "quantize[{} {label}]: {} blocks x {} steps in {:.1}s ({rate:.2} blocks/sec)",
+        m.model, nb, cfg.steps_per_block, secs
     );
 
     // return just the q.* tensors (with optimized learnables)

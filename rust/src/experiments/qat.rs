@@ -12,7 +12,7 @@ use crate::coordinator::evaluate::EvalChunk;
 use crate::coordinator::Metrics;
 use crate::data::{image_batches, Dataset};
 use crate::phase::{Phase, StepLoop};
-use crate::quant::BitConfig;
+use crate::precision::abounds;
 use crate::runtime::{DeviceStore, ModelRt};
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
@@ -99,11 +99,9 @@ pub fn qat_train(
 ) -> Result<Store> {
     let m = &mrt.manifest;
     let bs = m.batch("train");
-    let (_, wp) = BitConfig::wbounds(cfg.wbits);
     // symmetric weight grid in the minmax baseline: wp = 2^(b-1)-1
     let wp_sym = ((1u64 << (cfg.wbits - 1)) - 1) as f32;
-    let (_, ap) = BitConfig::abounds(cfg.abits);
-    let _ = wp;
+    let (_, ap) = abounds(cfg.abits);
 
     let mut store = teacher.clone();
     // student initialized from the teacher (Arc-shared, not copied)
@@ -158,7 +156,7 @@ pub fn qat_eval(
     let m = &mrt.manifest;
     let bs = m.batch("eval");
     let wp_sym = ((1u64 << (cfg.wbits - 1)) - 1) as f32;
-    let (_, ap) = BitConfig::abounds(cfg.abits);
+    let (_, ap) = abounds(cfg.abits);
     let mut store = teacher.clone();
     store.absorb(student);
     store.insert("wp", Tensor::scalar_f32(wp_sym));

@@ -12,6 +12,8 @@ use crate::coordinator::{
     quantize, zsq, DistillCfg, DistillMode, Metrics, QuantCfg, RunConfig,
 };
 use crate::data::Dataset;
+use crate::precision::sensitivity::{budget_bits, measure_sensitivity, pareto_plan};
+use crate::precision::PrecisionPlan;
 use crate::runtime::{ModelRt, Runtime};
 use crate::store::Store;
 use crate::tensor::Pcg32;
@@ -284,6 +286,80 @@ pub fn table4(cfg: &RunConfig) -> Result<()> {
                 ]);
             }
         }
+    }
+    table.print_and_save()
+}
+
+/// Per-layer precision-plan report (DESIGN.md §10): measure ZeroQ-style
+/// sensitivity on GENIE-D synthetic data, resolve the uniform and
+/// Pareto plans side by side, and tabulate per-layer bits, sensitivity
+/// and payload — plus a budget line per model.
+pub fn plan_report(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let mut table = ResultTable::new(
+        "plan_report",
+        &[
+            "model", "layer", "numel", "kl_at_min", "uniform_w", "pareto_w",
+            "abits", "pareto_kbits",
+        ],
+    );
+    for model in models_of(cfg) {
+        let ctx = load_ctx(&rt, cfg, &model)?;
+        let m = &ctx.mrt.manifest;
+        let p = &cfg.quant.precision;
+        let mut metrics = Metrics::new();
+        let mut dcfg = cfg.distill.clone();
+        dcfg.mode = DistillMode::Genie;
+        dcfg.swing = true;
+        let images =
+            distill(&ctx.mrt, &ctx.teacher, &dcfg, &mut metrics)?.images;
+
+        let uniform =
+            PrecisionPlan::uniform(m, cfg.quant.wbits, cfg.quant.abits,
+                                   p.granularity)?
+                .with_first_last(p.first_last_bits)?;
+        // probe every layer (pins included) so the report has a KL
+        // column for all of them; the allocation below uses the real
+        // pin set
+        let probe_cfg = crate::precision::PrecisionCfg {
+            first_last_bits: 0,
+            ..p.clone()
+        };
+        let (sens, _pool) = measure_sensitivity(
+            &ctx.mrt,
+            &ctx.teacher,
+            &images,
+            &probe_cfg,
+            cfg.quant.pnorm,
+            cfg.quant.par,
+        )?;
+        let pareto = pareto_plan(m, &sens, cfg.quant.abits, p)?;
+
+        for (li, ql) in m.quant_layers.iter().enumerate() {
+            let numel = ql.out_ch * ql.flat_k;
+            table.row(vec![
+                model.clone(),
+                ql.name.clone(),
+                numel.to_string(),
+                format!("{:.4}", sens.kl[li][0]),
+                uniform.layers[li].wbits.to_string(),
+                pareto.layers[li].wbits.to_string(),
+                pareto.layers[li].abits.to_string(),
+                format!(
+                    "{:.1}",
+                    numel as f64 * pareto.layers[li].wbits as f64 / 1000.0
+                ),
+            ]);
+        }
+        let fp = PrecisionPlan::fp32_bits(m).max(1);
+        println!(
+            "[plan] {model}: pareto {:.1}% of FP32 payload \
+             (budget {:.1}%), uniform {:.1}%",
+            100.0 * pareto.payload_bits(m) as f64 / fp as f64,
+            100.0 * budget_bits(m, p.target_size) as f64 / fp as f64,
+            100.0 * uniform.payload_bits(m) as f64 / fp as f64,
+        );
+        print!("{}", pareto.render(m));
     }
     table.print_and_save()
 }

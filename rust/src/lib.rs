@@ -14,6 +14,7 @@ pub mod store;
 pub mod exec;
 pub mod runtime;
 pub mod phase;
+pub mod precision;
 pub mod artifacts;
 pub mod quant;
 pub mod schedule;

@@ -48,6 +48,14 @@ fn main() -> Result<()> {
             "--cache-dir" => cfg.cache_dir = next(&mut it, "--cache-dir")?,
             "--no-cache" => cfg.cache = false,
             "--resume" => cfg.resume = true,
+            "--precision" => {
+                let v = next(&mut it, "--precision")?;
+                cfg.set("precision", &v)?;
+            }
+            "--target-size" => {
+                let v = next(&mut it, "--target-size")?;
+                cfg.set("target_size", &v)?;
+            }
             "--exp" => exp = next(&mut it, "--exp")?,
             "--help" | "-h" => {
                 usage();
@@ -90,13 +98,20 @@ fn usage() {
         "genie — GENIE zero-shot quantization (rust+JAX+Pallas reproduction)\n\
          usage: genie <info|pretrain|eval|distill|zsq|fsq|experiments>\n\
                 [--model M] [--artifacts DIR] [--exp ID]\n\
+                [--precision uniform|pareto] [--target-size F]\n\
                 [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
          keys: wbits abits seed workers checkpoint_every\n\
+               precision target_size first_last_bits granularity\n\
+               sens_batches candidates\n\
                pretrain.{{steps,lr}}\n\
                distill.{{mode,swing,samples,steps,lr_g,lr_z}}\n\
                quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}\n\
          workers=K runs distill shards, quant blocks and eval batches on\n\
          K pool workers (0 = auto); results are bit-identical for any K.\n\
+         --precision pareto measures per-layer sensitivity on the\n\
+         calibration set and allocates mixed weight bits to meet\n\
+         --target-size (fraction of the FP32 weight payload, e.g. 0.25);\n\
+         first_last_bits=B pins the first/last layers (0 disables).\n\
          Stages cache as content-addressed artifacts under --cache-dir;\n\
          identical configs re-load instead of re-running, --resume picks\n\
          an interrupted stage up from its last checkpoint."

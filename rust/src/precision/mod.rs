@@ -1,0 +1,612 @@
+//! Per-layer precision plans (DESIGN.md §10): the quantizer-scheme
+//! subsystem that replaced the global `BitConfig` + buried
+//! `li == 0 || li == last` branch.
+//!
+//! A [`PrecisionPlan`] assigns every quantized layer its own
+//! [`LayerPlan`] — weight bits, activation bits, step-size
+//! [`Granularity`] — and is built by pluggable policies:
+//!
+//!   * **Uniform** ([`PrecisionPlan::uniform`]) — one (wbits, abits)
+//!     pair everywhere; composed with the FirstLast8 transform below it
+//!     reproduces the historical behavior bit-identically.
+//!   * **FirstLast8** ([`PrecisionPlan::with_first_last`]) — the
+//!     BRECQ/QDrop first/last-layer 8-bit exception, made an explicit
+//!     plan transform (`first_last_bits = 0` turns it off) instead of a
+//!     branch inside `quant::init_qstate`.
+//!   * **Pareto** ([`sensitivity::pareto_plan`]) — ZeroQ-style mixed
+//!     precision: per-layer quantization sensitivity measured on the
+//!     cached synthetic set (teacher-vs-perturbed KL, sharded on the
+//!     exec pool) drives a greedy bit allocation under a
+//!     `--target-size` weight budget.
+//!
+//! Plans thread through `quant::init_qstate`, block reconstruction, the
+//! artifact-cache keys (a different plan is a different qstate
+//! artifact), `Metrics` (`plan/wbits` / `plan/abits` series) and the
+//! per-layer report (`experiments --exp plan`). They round-trip GTS1
+//! via [`PrecisionPlan::to_store`] / [`PrecisionPlan::from_store`], so
+//! a resolved Pareto plan is itself a cached artifact.
+
+pub mod sensitivity;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+use crate::store::Store;
+use crate::tensor::Tensor;
+
+/// Inclusive bit-width range every grid in the system supports: 0 would
+/// underflow the symmetric activation shift in [`abounds`], anything
+/// past 8 overflows the u32-packed export grid assumptions.
+pub const MIN_BITS: u32 = 1;
+pub const MAX_BITS: u32 = 8;
+
+/// Reject out-of-range bit widths with a diagnosable error (used at
+/// config parse time and by every plan builder).
+pub fn validate_bits(what: &str, bits: u32) -> Result<u32> {
+    anyhow::ensure!(
+        (MIN_BITS..=MAX_BITS).contains(&bits),
+        "{what} must be between {MIN_BITS} and {MAX_BITS} bits, got {bits} \
+         (0 underflows the activation grid; >8 exceeds the export grid)"
+    );
+    Ok(bits)
+}
+
+/// (wn, wp) for the asymmetric weight grid at `bits`.
+pub fn wbounds(bits: u32) -> (f32, f32) {
+    debug_assert!((MIN_BITS..=MAX_BITS).contains(&bits), "wbounds({bits})");
+    (0.0, (1u64 << bits) as f32 - 1.0)
+}
+
+/// (an, ap) for the symmetric activation grid at `bits`.
+pub fn abounds(bits: u32) -> (f32, f32) {
+    debug_assert!((MIN_BITS..=MAX_BITS).contains(&bits), "abounds({bits})");
+    let half = 1u64 << (bits - 1);
+    (-(half as f32), half as f32 - 1.0)
+}
+
+/// Step-size granularity of one layer's weight quantizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One (s, z) per output channel (the paper's setting; default).
+    PerChannel,
+    /// One (s, z) for the whole layer.
+    PerTensor,
+}
+
+impl Granularity {
+    pub fn parse(s: &str) -> Result<Granularity> {
+        match s {
+            "per_channel" | "channel" => Ok(Granularity::PerChannel),
+            "per_tensor" | "tensor" => Ok(Granularity::PerTensor),
+            other => bail!(
+                "unknown granularity '{other}' (want per_channel|per_tensor)"
+            ),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Granularity::PerChannel => "per_channel",
+            Granularity::PerTensor => "per_tensor",
+        }
+    }
+
+    /// One-character tag for fingerprints and labels.
+    fn tag(&self) -> char {
+        match self {
+            Granularity::PerChannel => 'c',
+            Granularity::PerTensor => 't',
+        }
+    }
+
+    fn from_code(code: u32) -> Result<Granularity> {
+        match code {
+            0 => Ok(Granularity::PerChannel),
+            1 => Ok(Granularity::PerTensor),
+            other => bail!("plan store: bad granularity code {other}"),
+        }
+    }
+
+    fn code(&self) -> u32 {
+        match self {
+            Granularity::PerChannel => 0,
+            Granularity::PerTensor => 1,
+        }
+    }
+}
+
+/// Plan-building policy, selected by `--precision` / `precision=`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// One (wbits, abits) pair for every layer (plus the FirstLast8
+    /// transform unless `first_last_bits = 0`) — today's behavior.
+    Uniform,
+    /// Sensitivity-driven mixed precision under a `--target-size`
+    /// weight budget (ZeroQ-style Pareto allocation).
+    Pareto,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s {
+            "uniform" => Ok(Policy::Uniform),
+            "pareto" => Ok(Policy::Pareto),
+            other => bail!("unknown precision policy '{other}' \
+                            (want uniform|pareto)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Policy::Uniform => "uniform",
+            Policy::Pareto => "pareto",
+        }
+    }
+}
+
+/// How a plan is built: the policy plus every knob that shapes it.
+/// Lives inside `QuantCfg` and feeds both the plan builders and the
+/// plan-artifact cache key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionCfg {
+    pub policy: Policy,
+    /// FirstLast8 transform: bits pinned on the first and last quantized
+    /// layers (paper/BRECQ: 8). `0` disables the exception entirely.
+    pub first_last_bits: u32,
+    /// Pareto weight budget as a fraction of the FP32 weight payload
+    /// (0.25 = the all-8-bit size).
+    pub target_size: f32,
+    pub granularity: Granularity,
+    /// Calibration batches per sensitivity probe (cost control).
+    pub sens_batches: usize,
+    /// Candidate weight bit-widths the Pareto allocator chooses from
+    /// (ascending, validated).
+    pub candidates: Vec<u32>,
+}
+
+impl Default for PrecisionCfg {
+    fn default() -> Self {
+        PrecisionCfg {
+            policy: Policy::Uniform,
+            first_last_bits: 8,
+            target_size: 0.25,
+            granularity: Granularity::PerChannel,
+            sens_batches: 2,
+            candidates: vec![2, 3, 4, 5, 6, 8],
+        }
+    }
+}
+
+/// One quantized layer's precision assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub name: String,
+    pub wbits: u32,
+    pub abits: u32,
+    pub granularity: Granularity,
+}
+
+/// Per-layer precision assignments for one model, in manifest
+/// `quant_layers` order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PrecisionPlan {
+    pub layers: Vec<LayerPlan>,
+}
+
+impl PrecisionPlan {
+    /// The Uniform policy: every layer at (wbits, abits).
+    pub fn uniform(
+        m: &Manifest,
+        wbits: u32,
+        abits: u32,
+        granularity: Granularity,
+    ) -> Result<PrecisionPlan> {
+        validate_bits("wbits", wbits)?;
+        validate_bits("abits", abits)?;
+        Ok(PrecisionPlan {
+            layers: m
+                .quant_layers
+                .iter()
+                .map(|q| LayerPlan {
+                    name: q.name.clone(),
+                    wbits,
+                    abits,
+                    granularity,
+                })
+                .collect(),
+        })
+    }
+
+    /// The FirstLast8 transform: pin the first and last layers' weight
+    /// *and* activation bits (the historical exception). `bits = 0` is
+    /// the identity (exception disabled).
+    pub fn with_first_last(mut self, bits: u32) -> Result<PrecisionPlan> {
+        if bits == 0 || self.layers.is_empty() {
+            return Ok(self);
+        }
+        validate_bits("first_last_bits", bits)?;
+        let last = self.layers.len() - 1;
+        for li in [0, last] {
+            self.layers[li].wbits = bits;
+            self.layers[li].abits = bits;
+        }
+        Ok(self)
+    }
+
+    /// Check the plan covers exactly the manifest's quant layers, in
+    /// order, with in-range bits.
+    pub fn validate(&self, m: &Manifest) -> Result<()> {
+        anyhow::ensure!(
+            self.layers.len() == m.quant_layers.len(),
+            "plan covers {} layers, manifest has {}",
+            self.layers.len(),
+            m.quant_layers.len()
+        );
+        for (lp, ql) in self.layers.iter().zip(&m.quant_layers) {
+            anyhow::ensure!(
+                lp.name == ql.name,
+                "plan layer '{}' does not match manifest layer '{}'",
+                lp.name,
+                ql.name
+            );
+            validate_bits(&format!("{} wbits", lp.name), lp.wbits)?;
+            validate_bits(&format!("{} abits", lp.name), lp.abits)?;
+        }
+        Ok(())
+    }
+
+    /// Stable textual identity — the plan's contribution to artifact
+    /// cache keys (two plans fingerprint equal iff they quantize
+    /// identically).
+    pub fn fingerprint(&self) -> String {
+        let mut s = String::new();
+        for lp in &self.layers {
+            s.push_str(&format!(
+                "{}=w{}a{}{};",
+                lp.name,
+                lp.wbits,
+                lp.abits,
+                lp.granularity.tag()
+            ));
+        }
+        s
+    }
+
+    /// Quantized weight payload in bits (Σ numel × wbits) — the quantity
+    /// the Pareto budget constrains. Scale/zero-point side info is
+    /// plan-invariant and reported separately by [`Self::weight_bits`].
+    pub fn payload_bits(&self, m: &Manifest) -> usize {
+        self.layers
+            .iter()
+            .zip(&m.quant_layers)
+            .map(|(lp, ql)| ql.out_ch * ql.flat_k * lp.wbits as usize)
+            .sum()
+    }
+
+    /// Deployable weight size in bits: payload plus the scale/zero-point
+    /// overhead, mirroring `quant::export::export_model`'s size report.
+    /// The export format always emits `[out_ch]` scale/zp vectors (a
+    /// per-tensor plan splats one value into them), so the overhead is
+    /// `out_ch × 2 × 32` regardless of granularity.
+    pub fn weight_bits(&self, m: &Manifest) -> usize {
+        self.layers
+            .iter()
+            .zip(&m.quant_layers)
+            .map(|(lp, ql)| {
+                ql.out_ch * ql.flat_k * lp.wbits as usize + ql.out_ch * 2 * 32
+            })
+            .sum()
+    }
+
+    /// FP32 weight payload in bits (Σ numel × 32) — the Pareto budget
+    /// baseline.
+    pub fn fp32_bits(m: &Manifest) -> usize {
+        m.quant_layers
+            .iter()
+            .map(|q| q.out_ch * q.flat_k * 32)
+            .sum()
+    }
+
+    /// Unweighted mean weight bits (display only; size math goes through
+    /// [`Self::payload_bits`]).
+    pub fn avg_wbits(&self) -> f32 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.wbits as f32).sum::<f32>()
+            / self.layers.len() as f32
+    }
+
+    /// Compact tag for progress lines: "W4A4" when the interior layers
+    /// are uniform (matching the historical prints, which ignored the
+    /// first/last pin), "Wmix~2.7A4" for mixed plans.
+    pub fn label(&self) -> String {
+        let n = self.layers.len();
+        if n == 0 {
+            return "W-A-".into();
+        }
+        let interior: &[LayerPlan] = if n > 2 {
+            &self.layers[1..n - 1]
+        } else {
+            &self.layers
+        };
+        let w = interior[0].wbits;
+        let a = interior[0].abits;
+        if interior.iter().all(|l| l.wbits == w && l.abits == a) {
+            format!("W{w}A{a}")
+        } else {
+            format!("Wmix~{:.1}A{a}", self.avg_wbits())
+        }
+    }
+
+    /// Serialize for the artifact cache / GTS1: one `[wbits, abits,
+    /// granularity]` u32 triple per layer, keyed by layer name.
+    pub fn to_store(&self) -> Store {
+        let mut s = Store::new();
+        s.insert(
+            "plan.len",
+            Tensor::from_u32(&[], vec![self.layers.len() as u32]),
+        );
+        for lp in &self.layers {
+            s.insert(
+                &format!("plan.{}", lp.name),
+                Tensor::from_u32(
+                    &[3],
+                    vec![lp.wbits, lp.abits, lp.granularity.code()],
+                ),
+            );
+        }
+        s
+    }
+
+    /// Rebuild a plan from [`Self::to_store`] bytes, re-keyed by the
+    /// manifest's layer order (a manifest/plan mismatch is an error, not
+    /// a silent misassignment).
+    pub fn from_store(m: &Manifest, s: &Store) -> Result<PrecisionPlan> {
+        let lt = s.get("plan.len")?;
+        anyhow::ensure!(
+            lt.dtype() == crate::tensor::DType::U32,
+            "plan store: plan.len has dtype {:?}",
+            lt.dtype()
+        );
+        let len = *lt
+            .as_u32()
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("plan store: empty plan.len"))?
+            as usize;
+        anyhow::ensure!(
+            len == m.quant_layers.len(),
+            "plan store covers {len} layers, manifest has {}",
+            m.quant_layers.len()
+        );
+        let mut layers = Vec::with_capacity(len);
+        for ql in &m.quant_layers {
+            let t = s.get(&format!("plan.{}", ql.name))?;
+            anyhow::ensure!(
+                t.dtype() == crate::tensor::DType::U32,
+                "plan store: layer '{}' has dtype {:?}",
+                ql.name,
+                t.dtype()
+            );
+            let v = t.as_u32();
+            anyhow::ensure!(
+                v.len() == 3,
+                "plan store: layer '{}' record has {} fields",
+                ql.name,
+                v.len()
+            );
+            layers.push(LayerPlan {
+                name: ql.name.clone(),
+                wbits: validate_bits(&format!("{} wbits", ql.name), v[0])?,
+                abits: validate_bits(&format!("{} abits", ql.name), v[1])?,
+                granularity: Granularity::from_code(v[2])?,
+            });
+        }
+        let plan = PrecisionPlan { layers };
+        plan.validate(m)?;
+        Ok(plan)
+    }
+
+    /// Aligned per-layer report (the `experiments --exp plan` table and
+    /// the Pareto resolution print).
+    pub fn render(&self, m: &Manifest) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>5} {:>5} {:>5} {:>10}\n",
+            "layer", "numel", "wbits", "abits", "gran", "kbits"
+        ));
+        for (lp, ql) in self.layers.iter().zip(&m.quant_layers) {
+            let numel = ql.out_ch * ql.flat_k;
+            out.push_str(&format!(
+                "{:<16} {:>8} {:>5} {:>5} {:>5} {:>10.1}\n",
+                lp.name,
+                numel,
+                lp.wbits,
+                lp.abits,
+                lp.granularity.tag(),
+                numel as f64 * lp.wbits as f64 / 1000.0
+            ));
+        }
+        let fp = Self::fp32_bits(m).max(1);
+        out.push_str(&format!(
+            "total: {:.1} kbit payload ({:.1}% of FP32), {:.1} kbit deployed\n",
+            self.payload_bits(m) as f64 / 1000.0,
+            100.0 * self.payload_bits(m) as f64 / fp as f64,
+            self.weight_bits(m) as f64 / 1000.0,
+        ));
+        out
+    }
+}
+
+/// Synthetic manifest builder shared by the precision unit tests.
+#[cfg(test)]
+pub(crate) fn toy_manifest(layers: &[(&str, usize, usize)]) -> Manifest {
+    let ql: Vec<String> = layers
+        .iter()
+        .map(|(n, o, k)| {
+            format!(
+                r#"{{"name": "{n}", "w_shape": [1, 1, {k}, {o}],
+                    "out_ch": {o}, "flat_k": {k}, "block": 0}}"#
+            )
+        })
+        .collect();
+    Manifest::from_json_text(&format!(
+        r#"{{
+            "model": "toy", "image": [8, 8, 3], "num_classes": 4,
+            "num_blocks": 1, "latent": 16,
+            "batch": {{"train": 8, "eval": 8, "stats": 8, "recon": 8}},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [{}], "learnable": {{"0": []}},
+            "bounds": [], "entrypoints": {{}}
+        }}"#,
+        ql.join(",")
+    ))
+    .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_layer() -> Manifest {
+        toy_manifest(&[("stem", 4, 27), ("mid", 8, 36), ("head", 4, 8)])
+    }
+
+    #[test]
+    fn bounds_match_paper() {
+        assert_eq!(wbounds(4), (0.0, 15.0));
+        assert_eq!(wbounds(2), (0.0, 3.0));
+        assert_eq!(abounds(4), (-8.0, 7.0));
+        assert_eq!(abounds(8), (-128.0, 127.0));
+    }
+
+    #[test]
+    fn validate_bits_rejects_degenerate_grids() {
+        assert!(validate_bits("wbits", 0).is_err());
+        assert!(validate_bits("abits", 9).is_err());
+        for b in MIN_BITS..=MAX_BITS {
+            assert_eq!(validate_bits("wbits", b).unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn default_plan_matches_historical_first_last_formula() {
+        let m = three_layer();
+        let plan = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+            .unwrap()
+            .with_first_last(8)
+            .unwrap();
+        let last = m.quant_layers.len() - 1;
+        for (li, lp) in plan.layers.iter().enumerate() {
+            let first_or_last = li == 0 || li == last;
+            let want = if first_or_last { 8 } else { 4 };
+            assert_eq!(lp.wbits, want, "layer {li} wbits");
+            assert_eq!(lp.abits, want, "layer {li} abits");
+        }
+        plan.validate(&m).unwrap();
+        assert_eq!(plan.label(), "W4A4");
+    }
+
+    #[test]
+    fn strict_uniform_has_no_exception() {
+        let m = three_layer();
+        let plan = PrecisionPlan::uniform(&m, 4, 2, Granularity::PerTensor)
+            .unwrap()
+            .with_first_last(0)
+            .unwrap();
+        assert!(plan.layers.iter().all(|l| l.wbits == 4 && l.abits == 2));
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let m = three_layer();
+        let base = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+            .unwrap();
+        let fl =
+            base.clone().with_first_last(8).unwrap();
+        assert_ne!(base.fingerprint(), fl.fingerprint());
+        let mut gran = base.clone();
+        gran.layers[1].granularity = Granularity::PerTensor;
+        assert_ne!(base.fingerprint(), gran.fingerprint());
+        assert_eq!(base.fingerprint(), base.clone().fingerprint());
+    }
+
+    #[test]
+    fn size_accounting() {
+        let m = three_layer();
+        let plan = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+            .unwrap();
+        let numel = 4 * 27 + 8 * 36 + 4 * 8;
+        assert_eq!(PrecisionPlan::fp32_bits(&m), numel * 32);
+        assert_eq!(plan.payload_bits(&m), numel * 4);
+        // export overhead: (4 + 8 + 4) channels x 2 x 32 bits — the GTS1
+        // export always emits [out_ch] scale/zp vectors, so a per-tensor
+        // plan deploys at the same size
+        assert_eq!(plan.weight_bits(&m), numel * 4 + 16 * 64);
+        let pt = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerTensor)
+            .unwrap();
+        assert_eq!(pt.weight_bits(&m), plan.weight_bits(&m));
+    }
+
+    #[test]
+    fn plan_round_trips_through_gts1() {
+        let m = three_layer();
+        let mut plan =
+            PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+                .unwrap()
+                .with_first_last(8)
+                .unwrap();
+        plan.layers[1].wbits = 3;
+        plan.layers[1].granularity = Granularity::PerTensor;
+        let dir = std::env::temp_dir().join("genie_plan_roundtrip_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.gts");
+        plan.to_store().save(&path).unwrap();
+        let back = PrecisionPlan::from_store(
+            &m,
+            &Store::load(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(plan, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_store_rejects_mismatched_manifest() {
+        let m = three_layer();
+        let plan = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+            .unwrap();
+        let other = toy_manifest(&[("stem", 4, 27)]);
+        assert!(PrecisionPlan::from_store(&other, &plan.to_store()).is_err());
+    }
+
+    #[test]
+    fn labels() {
+        let m = three_layer();
+        let mut plan =
+            PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+                .unwrap()
+                .with_first_last(8)
+                .unwrap();
+        assert_eq!(plan.label(), "W4A4");
+        plan.layers.push(LayerPlan {
+            name: "extra".into(),
+            wbits: 2,
+            abits: 4,
+            granularity: Granularity::PerChannel,
+        });
+        assert!(plan.label().starts_with("Wmix~"));
+    }
+
+    #[test]
+    fn policy_and_granularity_parse() {
+        assert_eq!(Policy::parse("uniform").unwrap(), Policy::Uniform);
+        assert_eq!(Policy::parse("pareto").unwrap(), Policy::Pareto);
+        assert!(Policy::parse("nope").is_err());
+        assert_eq!(
+            Granularity::parse("per_tensor").unwrap(),
+            Granularity::PerTensor
+        );
+        assert!(Granularity::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,500 @@
+//! Pareto policy internals (DESIGN.md §10): per-layer quantization
+//! sensitivity measured on the calibration set, and the greedy
+//! budget-constrained bit allocator it feeds.
+//!
+//! Sensitivity follows ZeroQ: for layer ℓ and candidate bit-width b,
+//! fake-quantize only ℓ's weights (Eq. 6 grid search at b bits and the
+//! configured granularity — the same quantizer the plan deploys), run
+//! the teacher forward on calibration batches, and record
+//! KL(teacher ‖ perturbed) averaged per sample. One probe = one (ℓ, b)
+//! pair; probes are independent, so they fan out as jobs on the exec
+//! pool — deterministically, since nothing here draws randomness
+//! (results land in submission order). The teacher is uploaded once
+//! (`upload_store`, DESIGN.md §8) and Arc-shared by every probe, which
+//! swaps in only its one perturbed weight tensor plus the batches —
+//! never the full model. Layers pinned by the FirstLast8 transform are
+//! not probed at all (the allocator never reads their rows).
+//!
+//! Allocation is the ZeroQ Pareto-frontier greedy: start every free
+//! layer at the cheapest candidate, then repeatedly buy the upgrade
+//! with the best ΔKL per extra payload bit that still fits the
+//! `target_size` budget. First/last pins are honored as fixed costs.
+
+use anyhow::Result;
+
+use crate::data::image_batches;
+use crate::exec::{run_jobs, Parallelism, PoolReport};
+use crate::quant::fake_quant_weights;
+use crate::runtime::{Manifest, ModelRt};
+use crate::store::Store;
+
+use super::{LayerPlan, PrecisionCfg, PrecisionPlan, validate_bits};
+
+/// Cap for non-finite KL probes (an exploding perturbed forward means
+/// "maximally sensitive", not "poisons the argmax with NaN").
+const KL_CAP: f32 = 1e6;
+
+/// Measured per-layer sensitivity: `kl[layer][candidate]`, layers in
+/// manifest order, candidates ascending.
+#[derive(Debug, Clone)]
+pub struct Sensitivity {
+    pub layers: Vec<String>,
+    pub candidates: Vec<u32>,
+    pub kl: Vec<Vec<f32>>,
+}
+
+/// Pareto weight budget in payload bits: `target_size` × the FP32
+/// payload (Σ numel × 32).
+pub fn budget_bits(m: &Manifest, target_size: f32) -> usize {
+    (target_size as f64 * PrecisionPlan::fp32_bits(m) as f64).floor() as usize
+}
+
+/// The FirstLast8 pin set for one manifest: `Some(bits)` on the first
+/// and last quant layers, `None` elsewhere (all-`None` when disabled).
+/// Shared by the sensitivity sweep (pinned layers are not probed) and
+/// the allocator (pins are fixed costs).
+pub fn first_last_pins(m: &Manifest, first_last_bits: u32) -> Vec<Option<u32>> {
+    let n = m.quant_layers.len();
+    (0..n)
+        .map(|i| {
+            if first_last_bits != 0 && (i == 0 || i + 1 == n) {
+                Some(first_last_bits)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Log-softmax of the first `valid` rows of a `[rows, classes]` logits
+/// buffer (stable: max-shifted, f64 accumulation).
+fn log_softmax_rows(logits: &[f32], classes: usize, valid: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(valid * classes);
+    for r in 0..valid {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = row
+            .iter()
+            .map(|&v| ((v - mx) as f64).exp())
+            .sum::<f64>()
+            .ln() as f32
+            + mx;
+        out.extend(row.iter().map(|&v| v - lse));
+    }
+    out
+}
+
+/// Σ p_ref · (log p_ref − log p_q) over flattened log-prob rows.
+fn kl_sum(ref_lp: &[f32], q_lp: &[f32]) -> f64 {
+    ref_lp
+        .iter()
+        .zip(q_lp)
+        .map(|(&r, &q)| (r as f64).exp() * (r - q) as f64)
+        .sum()
+}
+
+/// Measure KL(teacher ‖ layer-perturbed teacher) for every free
+/// (quant layer, candidate bit-width) pair over the first
+/// `cfg.sens_batches` calibration batches, sharded on the exec pool.
+/// Layers pinned by `cfg.first_last_bits` are skipped (their KL rows
+/// stay 0.0 — the allocator never reads them; pass a cfg with
+/// `first_last_bits = 0` to probe everything, e.g. for reports). The
+/// teacher is device-resident: uploaded once, Arc-shared by probes.
+pub fn measure_sensitivity(
+    mrt: &ModelRt,
+    teacher: &Store,
+    calib: &crate::tensor::Tensor,
+    cfg: &PrecisionCfg,
+    pnorm: f32,
+    par: Parallelism,
+) -> Result<(Sensitivity, PoolReport)> {
+    let m = &mrt.manifest;
+    let candidates: &[u32] = &cfg.candidates;
+    anyhow::ensure!(!candidates.is_empty(), "sensitivity: no candidate bits");
+    for &b in candidates {
+        validate_bits("candidate", b)?;
+    }
+    anyhow::ensure!(
+        !m.quant_layers.is_empty(),
+        "sensitivity: manifest has no quant layers"
+    );
+    let classes = m.num_classes;
+    let bs = m.batch("eval");
+    let mut batches = image_batches(calib, bs);
+    batches.truncate(cfg.sens_batches.max(1));
+
+    // one upload of the full teacher, Arc-shared by the reference pass
+    // and every probe (DESIGN.md §8)
+    let teacher_dev = mrt.upload_store(teacher)?;
+    let tdev = &teacher_dev;
+
+    // reference log-probs of the unperturbed teacher, once
+    let mut ref_logp = Vec::with_capacity(batches.len());
+    {
+        let mut dev = teacher_dev.clone();
+        for (bx, valid) in &batches {
+            dev.insert("x", bx)?;
+            mrt.call_device("eval_batch", &mut dev)?;
+            ref_logp.push(log_softmax_rows(
+                dev.fetch("logits")?.as_f32(),
+                classes,
+                *valid,
+            ));
+        }
+    }
+
+    // one pool job per free (layer, candidate) probe — pinned layers
+    // are fixed costs the allocator never compares
+    let pins = first_last_pins(m, cfg.first_last_bits);
+    let probes: Vec<(usize, usize)> = (0..m.quant_layers.len())
+        .filter(|&li| pins[li].is_none())
+        .flat_map(|li| (0..candidates.len()).map(move |ci| (li, ci)))
+        .collect();
+    let granularity = cfg.granularity;
+    let batches = &batches;
+    let ref_logp = &ref_logp;
+    let jobs: Vec<_> = probes
+        .iter()
+        .map(|&(li, ci)| {
+            move || -> Result<f32> {
+                let ql = &m.quant_layers[li];
+                let name = format!("{}.w", ql.name);
+                // the probe quantizer matches the deployed one: same
+                // Eq. 6 search, same granularity
+                let fq = fake_quant_weights(
+                    teacher.get(&name)?,
+                    candidates[ci],
+                    pnorm,
+                    granularity,
+                )?;
+                let mut dev = tdev.clone();
+                dev.insert(&name, &fq)?;
+                let mut kl = 0.0f64;
+                let mut count = 0usize;
+                for (bi, (bx, valid)) in batches.iter().enumerate() {
+                    dev.insert("x", bx)?;
+                    mrt.call_device("eval_batch", &mut dev)?;
+                    let lp = log_softmax_rows(
+                        dev.fetch("logits")?.as_f32(),
+                        classes,
+                        *valid,
+                    );
+                    kl += kl_sum(&ref_logp[bi], &lp);
+                    count += valid;
+                }
+                let kl = (kl / count.max(1) as f64) as f32;
+                Ok(if kl.is_finite() { kl.clamp(0.0, KL_CAP) } else { KL_CAP })
+            }
+        })
+        .collect();
+    let (vals, pool) = run_jobs(par, jobs)?;
+
+    let mut kl = vec![vec![0.0f32; candidates.len()]; m.quant_layers.len()];
+    for (&(li, ci), v) in probes.iter().zip(vals) {
+        kl[li][ci] = v;
+    }
+    Ok((
+        Sensitivity {
+            layers: m.quant_layers.iter().map(|q| q.name.clone()).collect(),
+            candidates: candidates.to_vec(),
+            kl,
+        },
+        pool,
+    ))
+}
+
+/// Greedy Pareto allocation: per-layer weight bits minimizing total
+/// sensitivity subject to `Σ numel × bits ≤ budget`. `pinned[i] =
+/// Some(b)` forces layer i to b bits (its cost still counts against the
+/// budget). Errors when even the cheapest assignment exceeds the
+/// budget, naming the minimum feasible target.
+pub fn allocate_bits(
+    kl: &[Vec<f32>],
+    candidates: &[u32],
+    numel: &[usize],
+    pinned: &[Option<u32>],
+    budget: usize,
+) -> Result<Vec<u32>> {
+    anyhow::ensure!(!candidates.is_empty(), "allocate: no candidate bits");
+    anyhow::ensure!(
+        candidates.windows(2).all(|w| w[0] < w[1]),
+        "allocate: candidates must be strictly ascending: {candidates:?}"
+    );
+    let n = numel.len();
+    anyhow::ensure!(
+        kl.len() == n && pinned.len() == n,
+        "allocate: {} layers but {} kl rows / {} pins",
+        n,
+        kl.len(),
+        pinned.len()
+    );
+    for (i, row) in kl.iter().enumerate() {
+        anyhow::ensure!(
+            row.len() == candidates.len(),
+            "allocate: layer {i} has {} kl samples for {} candidates",
+            row.len(),
+            candidates.len()
+        );
+    }
+
+    let mut bits: Vec<u32> = (0..n)
+        .map(|i| pinned[i].unwrap_or(candidates[0]))
+        .collect();
+    let mut level: Vec<usize> = vec![0; n];
+    let mut total: usize =
+        (0..n).map(|i| numel[i] * bits[i] as usize).sum();
+    if total > budget {
+        let fp: usize = numel.iter().map(|&c| c * 32).sum();
+        anyhow::bail!(
+            "precision budget infeasible: cheapest plan needs {total} \
+             payload bits but the budget is {budget} — raise --target-size \
+             to at least {:.3}",
+            total as f64 / fp.max(1) as f64
+        );
+    }
+
+    loop {
+        // best affordable upgrade: max ΔKL per extra payload bit,
+        // tie-broken by lower layer index (deterministic)
+        let mut best: Option<(f64, usize)> = None;
+        for i in 0..n {
+            if pinned[i].is_some() || level[i] + 1 >= candidates.len() {
+                continue;
+            }
+            let extra = (candidates[level[i] + 1] - candidates[level[i]])
+                as usize
+                * numel[i];
+            if total + extra > budget {
+                continue;
+            }
+            let gain = (kl[i][level[i]] - kl[i][level[i] + 1]).max(0.0) as f64
+                / extra.max(1) as f64;
+            if best.map_or(true, |(g, _)| gain > g) {
+                best = Some((gain, i));
+            }
+        }
+        let Some((_, i)) = best else { break };
+        total += (candidates[level[i] + 1] - candidates[level[i]]) as usize
+            * numel[i];
+        level[i] += 1;
+        bits[i] = candidates[level[i]];
+    }
+    Ok(bits)
+}
+
+/// Build the Pareto plan for a manifest from measured sensitivity:
+/// greedy allocation of weight bits under the `target_size` budget,
+/// uniform `abits` everywhere except the first/last pin.
+pub fn pareto_plan(
+    m: &Manifest,
+    sens: &Sensitivity,
+    abits: u32,
+    cfg: &PrecisionCfg,
+) -> Result<PrecisionPlan> {
+    let n = m.quant_layers.len();
+    anyhow::ensure!(n > 0, "pareto: manifest has no quant layers");
+    anyhow::ensure!(
+        sens.kl.len() == n,
+        "pareto: sensitivity covers {} layers, manifest has {n}",
+        sens.kl.len()
+    );
+    validate_bits("abits", abits)?;
+    let numel: Vec<usize> =
+        m.quant_layers.iter().map(|q| q.out_ch * q.flat_k).collect();
+    let pinned = first_last_pins(m, cfg.first_last_bits);
+    let budget = budget_bits(m, cfg.target_size);
+    let wbits =
+        allocate_bits(&sens.kl, &sens.candidates, &numel, &pinned, budget)?;
+    // compose the allocation with the canonical FirstLast8 transform —
+    // one source of truth for pin semantics (the allocator already
+    // charged the pinned layers at first_last_bits, so the transform
+    // only re-asserts wbits and sets the pinned abits)
+    let layers = m
+        .quant_layers
+        .iter()
+        .enumerate()
+        .map(|(i, q)| LayerPlan {
+            name: q.name.clone(),
+            wbits: wbits[i],
+            abits,
+            granularity: cfg.granularity,
+        })
+        .collect();
+    let plan = PrecisionPlan { layers }
+        .with_first_last(cfg.first_last_bits)?;
+    plan.validate(m)?;
+    anyhow::ensure!(
+        plan.payload_bits(m) <= budget,
+        "pareto: allocated {} payload bits over the {budget}-bit budget",
+        plan.payload_bits(m)
+    );
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::{toy_manifest, Granularity, Policy};
+
+    fn cands() -> Vec<u32> {
+        vec![2, 4, 8]
+    }
+
+    #[test]
+    fn budget_respected_and_sensitive_layer_wins() {
+        // layer 1 hurts a lot at low bits, layer 0 barely cares
+        let kl = vec![
+            vec![0.010, 0.008, 0.007],
+            vec![5.000, 0.500, 0.010],
+        ];
+        let numel = vec![100usize, 100];
+        let pinned = vec![None, None];
+        // budget for exactly one layer at 8 and one at 2: 1000 bits
+        let bits =
+            allocate_bits(&kl, &cands(), &numel, &pinned, 1000).unwrap();
+        assert_eq!(bits, vec![2, 8], "sensitive layer must get the bits");
+        let cost: usize = bits
+            .iter()
+            .zip(&numel)
+            .map(|(&b, &c)| b as usize * c)
+            .sum();
+        assert!(cost <= 1000);
+    }
+
+    #[test]
+    fn generous_budget_saturates_at_max_candidate() {
+        let kl = vec![vec![1.0, 0.5, 0.1]; 3];
+        let numel = vec![10usize; 3];
+        let bits = allocate_bits(
+            &kl, &cands(), &numel, &[None, None, None], usize::MAX,
+        )
+        .unwrap();
+        assert_eq!(bits, vec![8, 8, 8]);
+    }
+
+    #[test]
+    fn pins_are_honored_and_counted() {
+        let kl = vec![vec![1.0, 0.5, 0.1]; 3];
+        let numel = vec![100usize; 3];
+        let pinned = vec![Some(8u32), None, Some(8u32)];
+        // pins cost 1600; 800 left = middle layer at most 8... cap at 600
+        // leaves it at 4 (400 fits, next step to 8 costs +400 more)
+        let bits =
+            allocate_bits(&kl, &cands(), &numel, &pinned, 2200).unwrap();
+        assert_eq!(bits[0], 8);
+        assert_eq!(bits[2], 8);
+        assert_eq!(bits[1], 4);
+    }
+
+    #[test]
+    fn infeasible_budget_errors_with_minimum_target() {
+        let kl = vec![vec![1.0, 0.5, 0.1]];
+        let err = allocate_bits(&kl, &cands(), &[100], &[None], 150)
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("target-size"), "{msg}");
+    }
+
+    #[test]
+    fn allocation_is_deterministic() {
+        let kl = vec![vec![1.0, 0.5, 0.1]; 4];
+        let numel = vec![50usize; 4];
+        let pinned = vec![None; 4];
+        let a = allocate_bits(&kl, &cands(), &numel, &pinned, 700).unwrap();
+        let b = allocate_bits(&kl, &cands(), &numel, &pinned, 700).unwrap();
+        assert_eq!(a, b);
+        // equal gains tie-break toward lower layer index
+        assert!(a[0] >= a[3], "tie-break must favor earlier layers: {a:?}");
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        assert!(allocate_bits(&[], &cands(), &[1], &[None], 10).is_err());
+        assert!(
+            allocate_bits(&[vec![1.0]], &cands(), &[1], &[None], 10).is_err()
+        );
+        assert!(allocate_bits(
+            &[vec![1.0, 0.5, 0.1]],
+            &[4, 2, 8],
+            &[1],
+            &[None],
+            10
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pareto_plan_meets_budget_and_pins_first_last() {
+        let m = toy_manifest(&[("stem", 4, 27), ("mid", 8, 36), ("head", 4, 8)]);
+        let sens = Sensitivity {
+            layers: vec!["stem".into(), "mid".into(), "head".into()],
+            candidates: cands(),
+            kl: vec![
+                vec![1.0, 0.5, 0.1],
+                vec![3.0, 0.2, 0.05],
+                vec![1.0, 0.5, 0.1],
+            ],
+        };
+        let cfg = PrecisionCfg {
+            policy: Policy::Pareto,
+            target_size: 0.25,
+            granularity: Granularity::PerChannel,
+            ..Default::default()
+        };
+        let plan = pareto_plan(&m, &sens, 4, &cfg).unwrap();
+        assert_eq!(plan.layers[0].wbits, 8);
+        assert_eq!(plan.layers[0].abits, 8);
+        assert_eq!(plan.layers[2].wbits, 8);
+        assert!(plan.payload_bits(&m) <= budget_bits(&m, 0.25));
+        assert_eq!(plan.layers[1].abits, 4);
+        plan.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn pareto_budget_scales_allocation() {
+        let m = toy_manifest(&[("a", 8, 32), ("b", 8, 32), ("c", 8, 32)]);
+        let sens = Sensitivity {
+            layers: vec!["a".into(), "b".into(), "c".into()],
+            candidates: cands(),
+            kl: vec![vec![1.0, 0.5, 0.1]; 3],
+        };
+        let mut cfg = PrecisionCfg {
+            policy: Policy::Pareto,
+            first_last_bits: 0,
+            ..Default::default()
+        };
+        cfg.target_size = 0.0626; // just above 2/32: everything at 2 bits
+        let lean = pareto_plan(&m, &sens, 4, &cfg).unwrap();
+        assert!(lean.layers.iter().all(|l| l.wbits == 2), "{lean:?}");
+        cfg.target_size = 0.25; // the all-8-bit budget
+        let rich = pareto_plan(&m, &sens, 4, &cfg).unwrap();
+        assert!(rich.layers.iter().all(|l| l.wbits == 8), "{rich:?}");
+        cfg.target_size = 0.001;
+        assert!(pareto_plan(&m, &sens, 4, &cfg).is_err());
+    }
+
+    #[test]
+    fn first_last_pins_shape() {
+        let m = toy_manifest(&[("a", 2, 4), ("b", 2, 4), ("c", 2, 4)]);
+        assert_eq!(
+            first_last_pins(&m, 8),
+            vec![Some(8), None, Some(8)]
+        );
+        assert_eq!(first_last_pins(&m, 0), vec![None, None, None]);
+        let one = toy_manifest(&[("a", 2, 4)]);
+        assert_eq!(first_last_pins(&one, 8), vec![Some(8)]);
+    }
+
+    #[test]
+    fn log_softmax_and_kl_basics() {
+        // identical distributions => KL 0
+        let lp = log_softmax_rows(&[1.0, 2.0, 3.0, 0.0], 2, 2);
+        assert!((kl_sum(&lp, &lp)).abs() < 1e-9);
+        // rows sum to 1 in prob space
+        let p: f64 = lp[..2].iter().map(|&v| (v as f64).exp()).sum();
+        assert!((p - 1.0).abs() < 1e-5);
+        // diverging distribution => positive KL
+        let q = log_softmax_rows(&[3.0, 1.0, 0.0, 3.0], 2, 2);
+        assert!(kl_sum(&lp, &q) > 0.0);
+    }
+}

@@ -103,7 +103,8 @@ pub fn export_model(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{softbit_init, BitConfig};
+    use crate::precision::wbounds;
+    use crate::quant::softbit_init;
 
     fn mini_qstate() -> Store {
         // 2 channels x 3 weights on a 4-bit grid
@@ -117,7 +118,7 @@ mod tests {
         qs.insert("q.l.b", Tensor::from_f32(&[2, 3], vec![3., 7., 15., 0., 14., 2.]));
         qs.insert("q.l.sw", Tensor::from_f32(&[2], vec![0.1, 0.2]));
         qs.insert("q.l.zp", Tensor::from_f32(&[2], vec![8.0, 7.0]));
-        let (wn, wp) = BitConfig::wbounds(4);
+        let (wn, wp) = wbounds(4);
         qs.insert("q.l.wn", Tensor::scalar_f32(wn));
         qs.insert("q.l.wp", Tensor::scalar_f32(wp));
         qs.insert("q.l.sa", Tensor::scalar_f32(0.05));

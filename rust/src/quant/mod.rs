@@ -1,53 +1,32 @@
 //! Quant-state initialization — the host-side half of GENIE-M.
 //!
 //! From the FP32 checkpoint this module derives, per quantized layer:
-//!   * per-channel step size `s_w` by the Eq. 6 / Eq. A3 grid search
-//!     (p-norm reconstruction error, p configurable — Fig. A2),
+//!   * per-channel (or per-tensor) step size `s_w` by the Eq. 6 / Eq. A3
+//!     grid search (p-norm reconstruction error, p configurable —
+//!     Fig. A2),
 //!   * per-channel zero point `z` (asymmetric weights),
 //!   * the detached base grid `B = clip(floor(W/s) + z, n, p)` (Eq. 9),
 //!   * softbit init `V = h^-1(W/s + z - B)` (AdaRound; rectified sigmoid
 //!     inverse), so h(V) starts exactly at the FP remainder,
 //!   * LSQ activation step `s_a = 2 E|x| / sqrt(q_p)` from teacher
-//!     activation statistics,
-//! and the runtime integer bounds (first/last layer kept at 8 bits, like
-//! BRECQ/QDrop — appendix C).
+//!     activation statistics.
+//!
+//! Bit-widths and granularity come from a
+//! [`PrecisionPlan`](crate::precision::PrecisionPlan) (DESIGN.md §10) —
+//! the historical first/last-layer 8-bit exception is now the plan's
+//! FirstLast8 transform, not a branch here.
 
 pub mod export;
 
 use anyhow::Result;
 
+use crate::precision::{abounds, wbounds, Granularity, PrecisionPlan};
 use crate::runtime::{Manifest, QuantLayer};
 use crate::store::Store;
 use crate::tensor::Tensor;
 
 pub const ZETA: f32 = 1.1;
 pub const GAMMA: f32 = -0.1;
-
-/// Bit-width configuration for one pipeline run.
-#[derive(Debug, Clone, Copy)]
-pub struct BitConfig {
-    pub wbits: u32,
-    pub abits: u32,
-    /// bits for the first and last quantized layers (paper: 8)
-    pub first_last_bits: u32,
-}
-
-impl BitConfig {
-    pub fn new(wbits: u32, abits: u32) -> Self {
-        BitConfig { wbits, abits, first_last_bits: 8 }
-    }
-
-    /// (wn, wp) for asymmetric weight grid at `bits`.
-    pub fn wbounds(bits: u32) -> (f32, f32) {
-        (0.0, (1u64 << bits) as f32 - 1.0)
-    }
-
-    /// (an, ap) for symmetric activation grid at `bits`.
-    pub fn abounds(bits: u32) -> (f32, f32) {
-        let half = 1u64 << (bits - 1);
-        (-(half as f32), half as f32 - 1.0)
-    }
-}
 
 /// Flatten a weight tensor to out-channel-major [O][K] rows, matching
 /// python's `moveaxis(w, -1, 0).reshape(O, -1)` (conv HWIO) / `w.T` (dense).
@@ -81,11 +60,10 @@ pub fn flatten_out_major(w: &Tensor) -> (usize, usize, Vec<f32>) {
 }
 
 /// Quantization error of one channel row for a candidate step size
-/// (asymmetric grid), under the given p-norm.
-fn row_error(row: &[f32], s: f32, p: f32, pnorm: f32) -> f64 {
-    let z = (-(row.iter().cloned().fold(f32::INFINITY, f32::min)) / s)
-        .round()
-        .clamp(0.0, p);
+/// (asymmetric grid), under the given p-norm. `lo` is the row minimum,
+/// computed once per channel by the caller — not refolded per candidate.
+fn row_error(row: &[f32], s: f32, lo: f32, p: f32, pnorm: f32) -> f64 {
+    let z = (-lo / s).round().clamp(0.0, p);
     let mut err = 0.0f64;
     for &w in row {
         let q = ((w / s).round() + z).clamp(0.0, p);
@@ -104,7 +82,7 @@ pub fn search_step_sizes(
     bits: u32,
     pnorm: f32,
 ) -> (Vec<f32>, Vec<f32>) {
-    let (_, p) = BitConfig::wbounds(bits);
+    let (_, p) = wbounds(bits);
     let mut sw = Vec::with_capacity(o);
     let mut zp = Vec::with_capacity(o);
     for ch in 0..o {
@@ -118,7 +96,7 @@ pub fn search_step_sizes(
         // candidates 0.4..1.2 x the min-max step (80-point linear search)
         for i in 0..80 {
             let s = s0 * (0.4 + 0.01 * i as f32);
-            let e = row_error(row, s, p, pnorm);
+            let e = row_error(row, s, lo, p, pnorm);
             if e < best_e {
                 best_e = e;
                 best_s = s;
@@ -129,6 +107,26 @@ pub fn search_step_sizes(
         zp.push(z);
     }
     (sw, zp)
+}
+
+/// (s, z) vectors for one layer under a plan granularity: the Eq. 6
+/// search per channel, or once over the whole layer (then splatted to
+/// the per-channel shape the runtime grids expect).
+pub fn plan_step_sizes(
+    rows: &[f32],
+    o: usize,
+    k: usize,
+    bits: u32,
+    pnorm: f32,
+    granularity: Granularity,
+) -> (Vec<f32>, Vec<f32>) {
+    match granularity {
+        Granularity::PerChannel => search_step_sizes(rows, o, k, bits, pnorm),
+        Granularity::PerTensor => {
+            let (s, z) = search_step_sizes(rows, 1, o * k, bits, pnorm);
+            (vec![s[0]; o], vec![z[0]; o])
+        }
+    }
 }
 
 /// AdaRound softbit init: V = sigmoid^-1((r - GAMMA)/(ZETA - GAMMA)) so
@@ -145,26 +143,58 @@ pub fn h_sigmoid(v: f32) -> f32 {
     (sig * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0)
 }
 
-/// Build the full quant state for a model from its FP32 params.
+/// Round-to-grid fake quantization of a weight tensor at `bits` (Eq. 6
+/// step sizes at the given granularity, hard rounding, dequantized back
+/// to FP32 in the original layout). The sensitivity probes of the
+/// Pareto policy perturb one layer at a time with this, so the probe
+/// quantizer matches the one the plan deploys.
+pub fn fake_quant_weights(
+    w: &Tensor,
+    bits: u32,
+    pnorm: f32,
+    granularity: Granularity,
+) -> Result<Tensor> {
+    anyhow::ensure!(
+        w.shape.len() == 2 || w.shape.len() == 4,
+        "fake_quant_weights: rank {} unsupported",
+        w.shape.len()
+    );
+    let (o, k, rows) = flatten_out_major(w);
+    let (sw, zp) = plan_step_sizes(&rows, o, k, bits, pnorm, granularity);
+    let (wn, wp) = wbounds(bits);
+    // out-channel is the last axis in both supported layouts
+    let co = *w.shape.last().unwrap();
+    debug_assert_eq!(co, o);
+    let v = w.as_f32();
+    let out: Vec<f32> = v
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let ch = i % co;
+            dequant(x, sw[ch], zp[ch], wn, wp)
+        })
+        .collect();
+    Ok(Tensor::from_f32(&w.shape, out))
+}
+
+/// Build the full quant state for a model from its FP32 params, with
+/// per-layer bit-widths and granularity supplied by `plan`.
 ///
 /// `act_stats`: mean |x| per quant layer (from the `act_stats` entrypoint);
 /// pass `None` to start with a placeholder (refreshed later).
 pub fn init_qstate(
     manifest: &Manifest,
     params: &Store,
-    cfg: BitConfig,
+    plan: &PrecisionPlan,
     pnorm: f32,
     act_stats: Option<&[f32]>,
 ) -> Result<Store> {
+    plan.validate(manifest)?;
     let mut qs = Store::new();
-    let layers = &manifest.quant_layers;
-    let last = layers.len() - 1;
-    for (li, ql) in layers.iter().enumerate() {
-        let first_or_last = li == 0 || li == last;
-        let wbits = if first_or_last { cfg.first_last_bits } else { cfg.wbits };
-        let abits = if first_or_last { cfg.first_last_bits } else { cfg.abits };
-        let (wn, wp) = BitConfig::wbounds(wbits);
-        let (an, ap) = BitConfig::abounds(abits);
+    for (li, ql) in manifest.quant_layers.iter().enumerate() {
+        let lp = &plan.layers[li];
+        let (wn, wp) = wbounds(lp.wbits);
+        let (an, ap) = abounds(lp.abits);
         let w = params.get(&format!("{}.w", ql.name))?;
         let (o, k, rows) = flatten_out_major(w);
         anyhow::ensure!(
@@ -172,7 +202,8 @@ pub fn init_qstate(
             "layer {}: manifest shape mismatch",
             ql.name
         );
-        let (sw, zp) = search_step_sizes(&rows, o, k, wbits, pnorm);
+        let (sw, zp) =
+            plan_step_sizes(&rows, o, k, lp.wbits, pnorm, lp.granularity);
         let mut b = vec![0.0f32; o * k];
         let mut v = vec![0.0f32; o * k];
         for ch in 0..o {
@@ -220,7 +251,7 @@ pub fn set_act_steps(
 /// Min-Max step size (Eq. 3) — the baseline initializer (used by the
 /// Fig. A2 ablation arm and tests).
 pub fn minmax_step(row: &[f32], bits: u32) -> (f32, f32) {
-    let (_, p) = BitConfig::wbounds(bits);
+    let (_, p) = wbounds(bits);
     let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
     let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let s = ((hi - lo) / p).max(1e-8);
@@ -237,14 +268,7 @@ pub fn dequant(w: f32, s: f32, z: f32, n: f32, p: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn bounds_match_paper() {
-        assert_eq!(BitConfig::wbounds(4), (0.0, 15.0));
-        assert_eq!(BitConfig::wbounds(2), (0.0, 3.0));
-        assert_eq!(BitConfig::abounds(4), (-8.0, 7.0));
-        assert_eq!(BitConfig::abounds(8), (-128.0, 127.0));
-    }
+    use crate::precision::toy_manifest;
 
     #[test]
     fn flatten_conv_matches_moveaxis() {
@@ -311,5 +335,110 @@ mod tests {
         // extremes representable
         assert!((dequant(-1.0, s, z, 0.0, 15.0) + 1.0).abs() < 1e-5);
         assert!((dequant(2.0, s, z, 0.0, 15.0) - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn per_tensor_splats_one_step() {
+        let mut rng = crate::tensor::Pcg32::new(21);
+        let rows: Vec<f32> = (0..4 * 16).map(|_| rng.normal()).collect();
+        let (sw, zp) =
+            plan_step_sizes(&rows, 4, 16, 4, 2.4, Granularity::PerTensor);
+        assert_eq!(sw.len(), 4);
+        assert!(sw.iter().all(|&s| s == sw[0]));
+        assert!(zp.iter().all(|&z| z == zp[0]));
+        // per-channel generally differs across channels
+        let (sc, _) =
+            plan_step_sizes(&rows, 4, 16, 4, 2.4, Granularity::PerChannel);
+        assert_eq!(sc.len(), 4);
+    }
+
+    #[test]
+    fn fake_quant_stays_on_grid_and_near_input() {
+        let mut rng = crate::tensor::Pcg32::new(33);
+        let w = Tensor::randn(&[2, 2, 3, 4], &mut rng, 0.2);
+        let fq =
+            fake_quant_weights(&w, 8, 2.4, Granularity::PerChannel).unwrap();
+        assert_eq!(fq.shape, w.shape);
+        // 8-bit fake quant is a tight approximation
+        for (a, b) in w.as_f32().iter().zip(fq.as_f32()) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        // 2-bit is coarse: at most 4 distinct values per out-channel
+        let fq2 =
+            fake_quant_weights(&w, 2, 2.4, Granularity::PerChannel).unwrap();
+        let co = 4;
+        for ch in 0..co {
+            let mut vals: Vec<f32> = fq2
+                .as_f32()
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % co == ch)
+                .map(|(_, &v)| v)
+                .collect();
+            vals.sort_by(f32::total_cmp);
+            vals.dedup();
+            assert!(vals.len() <= 4, "channel {ch}: {vals:?}");
+        }
+        // per-tensor: one grid for the whole layer, <= 4 distinct values
+        let fqt =
+            fake_quant_weights(&w, 2, 2.4, Granularity::PerTensor).unwrap();
+        let mut vals: Vec<f32> = fqt.as_f32().to_vec();
+        vals.sort_by(f32::total_cmp);
+        vals.dedup();
+        assert!(vals.len() <= 4, "per-tensor: {vals:?}");
+        assert!(fake_quant_weights(
+            &Tensor::zeros(&[3]),
+            4,
+            2.0,
+            Granularity::PerChannel
+        )
+        .is_err());
+    }
+
+    /// The seed-path contract: a default plan (uniform + FirstLast8)
+    /// reproduces the historical per-layer bounds — 8-bit grids on the
+    /// first and last layers, the configured bits in between.
+    #[test]
+    fn init_qstate_honors_plan_bits() {
+        use crate::precision::PrecisionPlan;
+        let m = toy_manifest(&[("stem", 2, 12), ("mid", 3, 8), ("head", 2, 6)]);
+        let mut rng = crate::tensor::Pcg32::new(5);
+        let mut params = Store::new();
+        params.insert("stem.w", Tensor::randn(&[1, 1, 12, 2], &mut rng, 0.3));
+        params.insert("mid.w", Tensor::randn(&[1, 1, 8, 3], &mut rng, 0.3));
+        params.insert("head.w", Tensor::randn(&[1, 1, 6, 2], &mut rng, 0.3));
+        let plan =
+            PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+                .unwrap()
+                .with_first_last(8)
+                .unwrap();
+        let qs = init_qstate(&m, &params, &plan, 2.4, None).unwrap();
+        assert_eq!(qs.get("q.stem.wp").unwrap().scalar(), 255.0);
+        assert_eq!(qs.get("q.stem.ap").unwrap().scalar(), 127.0);
+        assert_eq!(qs.get("q.mid.wp").unwrap().scalar(), 15.0);
+        assert_eq!(qs.get("q.mid.an").unwrap().scalar(), -8.0);
+        assert_eq!(qs.get("q.head.wp").unwrap().scalar(), 255.0);
+        // a mixed plan moves only its layer's grid
+        let mut mixed = plan.clone();
+        mixed.layers[1].wbits = 2;
+        let qs2 = init_qstate(&m, &params, &mixed, 2.4, None).unwrap();
+        assert_eq!(qs2.get("q.mid.wp").unwrap().scalar(), 3.0);
+        assert_eq!(
+            qs.get("q.stem.b").unwrap(),
+            qs2.get("q.stem.b").unwrap(),
+            "untouched layers must be bit-identical across plans"
+        );
+    }
+
+    #[test]
+    fn init_qstate_rejects_mismatched_plan() {
+        let m = toy_manifest(&[("stem", 2, 12)]);
+        let other = toy_manifest(&[("nope", 2, 12)]);
+        let plan = crate::precision::PrecisionPlan::uniform(
+            &other, 4, 4, Granularity::PerChannel,
+        )
+        .unwrap();
+        let params = Store::new();
+        assert!(init_qstate(&m, &params, &plan, 2.4, None).is_err());
     }
 }

@@ -3,16 +3,18 @@
 
 use std::path::Path;
 
-use genie::artifacts::ArtifactCache;
+use genie::artifacts::{self, ArtifactCache};
 use genie::coordinator::{
-    distill, eval_fp32, eval_quantized, insert_zeros, pretrain, quantize,
-    quantize_ck, teacher_cached, zsq, DistillCfg, DistillMode, Metrics,
-    PretrainCfg, QuantCfg,
+    distill, eval_fp32, eval_quantized, insert_zeros, plan_cached, pretrain,
+    quantize, quantize_cached, quantize_ck, quantize_planned, teacher_cached,
+    zsq, DistillCfg, DistillMode, Metrics, PretrainCfg, QuantCfg,
 };
 use genie::data::{image_batches, Dataset};
 use genie::exec::Parallelism;
 use genie::phase::StageCkpt;
-use genie::quant::{init_qstate, set_act_steps, BitConfig};
+use genie::precision::sensitivity::budget_bits;
+use genie::precision::{wbounds, Granularity, Policy, PrecisionPlan};
+use genie::quant::{init_qstate, set_act_steps};
 use genie::runtime::{ModelRt, Runtime};
 use genie::schedule::{
     BetaAnneal, CosineAnnealing, ExponentialDecay, ReduceLROnPlateau,
@@ -85,10 +87,12 @@ fn end_to_end_toy_pipeline() {
         assert!(last < first, "BNS loss did not fall: {first} -> {last}");
 
         // ---- 8-bit hard quantization stays near FP32 ----
-        let qs8 = init_qstate(
-            &mrt.manifest, &teacher, BitConfig::new(8, 8), 2.4, None,
+        let plan8 = PrecisionPlan::uniform(
+            &mrt.manifest, 8, 8, Granularity::PerChannel,
         )
         .unwrap();
+        let qs8 = init_qstate(&mrt.manifest, &teacher, &plan8, 2.4, None)
+            .unwrap();
         // activation steps need real stats; reuse quantize()'s path via a
         // tiny run instead:
         let qcfg8 = QuantCfg {
@@ -425,9 +429,14 @@ fn engine_quantize_block0_matches_reference_loop() {
             mrt.call("act_stats", &mut store).unwrap();
             store.get("act_stats").unwrap().as_f32().to_vec()
         };
-        let bits = BitConfig::new(cfg.wbits, cfg.abits);
+        let plan = PrecisionPlan::uniform(
+            m, cfg.wbits, cfg.abits, Granularity::PerChannel,
+        )
+        .unwrap()
+        .with_first_last(8)
+        .unwrap();
         let mut qstate =
-            init_qstate(m, &teacher, bits, cfg.pnorm, Some(&stats)).unwrap();
+            init_qstate(m, &teacher, &plan, cfg.pnorm, Some(&stats)).unwrap();
         set_act_steps(&mut qstate, &m.quant_layers, &stats).unwrap();
         let teacher_dev = mrt.upload_store(&teacher).unwrap();
         let batches = image_batches(&images, m.batch("recon"));
@@ -625,6 +634,141 @@ fn quantize_killed_mid_run_resumes_bit_identical() {
                 "qstate '{n}' diverged after interrupted resume"
             );
         }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// The precision-plan seed contract (DESIGN.md §10): the default
+/// quantize path — which now resolves a Uniform+FirstLast8 plan — is
+/// bit-identical to quantizing under that plan built explicitly, so the
+/// refactor cannot have moved the default W4A4 qstate.
+#[test]
+fn default_quantize_matches_explicit_first_last_plan() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt, dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        let dcfg = DistillCfg {
+            samples: 64, steps: 6, seed: 19, ..Default::default()
+        };
+        let images = distill(mrt, &teacher, &dcfg, &mut metrics)
+            .unwrap()
+            .images;
+        let qcfg = QuantCfg { steps_per_block: 8, ..Default::default() };
+
+        let want = quantize(mrt, &teacher, &images, &qcfg, &mut metrics)
+            .unwrap();
+        let plan = PrecisionPlan::uniform(
+            &mrt.manifest, qcfg.wbits, qcfg.abits, Granularity::PerChannel,
+        )
+        .unwrap()
+        .with_first_last(8)
+        .unwrap();
+        let got = quantize_planned(
+            mrt, &teacher, &images, &qcfg, &plan, None, &mut metrics,
+        )
+        .unwrap();
+        assert_eq!(want.names(), got.names());
+        for n in want.names() {
+            assert_eq!(
+                want.get(n).unwrap(),
+                got.get(n).unwrap(),
+                "default-vs-explicit-plan qstate '{n}' diverged"
+            );
+        }
+    });
+}
+
+/// The mixed-precision acceptance contract: a Pareto plan resolved over
+/// real toy artifacts meets its `target_size` payload budget, pins the
+/// first/last layers, drives per-layer grids in the optimized qstate,
+/// and round-trips the artifact DAG (plan + qstate cache hits on the
+/// second run).
+#[test]
+fn pareto_plan_meets_budget_and_caches() {
+    with_ctx(|_rt, mrt, dataset| {
+        let m = &mrt.manifest;
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt, dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        let dcfg = DistillCfg {
+            samples: 64, steps: 6, seed: 23, ..Default::default()
+        };
+        let images = distill(mrt, &teacher, &dcfg, &mut metrics)
+            .unwrap()
+            .images;
+        let mut qcfg = QuantCfg { steps_per_block: 8, ..Default::default() };
+        qcfg.precision.policy = Policy::Pareto;
+        qcfg.precision.target_size = 0.25;
+
+        let dir = std::env::temp_dir().join("genie_it_pareto_cache");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let th = teacher.content_hash();
+
+        let plan = plan_cached(
+            mrt, &teacher, th, &images, &qcfg, &mut cache, &mut metrics,
+        )
+        .unwrap();
+        plan.validate(m).unwrap();
+        assert!(
+            plan.payload_bits(m) <= budget_bits(m, 0.25),
+            "plan payload {} exceeds budget {}",
+            plan.payload_bits(m),
+            budget_bits(m, 0.25)
+        );
+        assert_eq!(plan.layers.first().unwrap().wbits, 8, "first pin");
+        assert_eq!(plan.layers.last().unwrap().wbits, 8, "last pin");
+
+        // the optimized qstate carries the plan's per-layer grids
+        let qstate = quantize_cached(
+            mrt, &teacher, &images, &qcfg, &mut cache, &mut metrics,
+        )
+        .unwrap();
+        for (li, ql) in m.quant_layers.iter().enumerate() {
+            let wp = qstate
+                .get(&format!("q.{}.wp", ql.name))
+                .unwrap()
+                .scalar();
+            assert_eq!(
+                wp,
+                wbounds(plan.layers[li].wbits).1,
+                "layer {} grid does not match the plan",
+                ql.name
+            );
+        }
+
+        // second resolution + quantize: pure DAG lookups, same plan
+        let hits0 = cache.stats().hits;
+        let plan2 = plan_cached(
+            mrt, &teacher, th, &images, &qcfg, &mut cache, &mut metrics,
+        )
+        .unwrap();
+        assert_eq!(plan, plan2, "cached plan must round-trip identically");
+        let qstate2 = quantize_cached(
+            mrt, &teacher, &images, &qcfg, &mut cache, &mut metrics,
+        )
+        .unwrap();
+        assert!(cache.stats().hits >= hits0 + 2, "{:?}", cache.stats());
+        for n in qstate.names() {
+            assert_eq!(qstate.get(n).unwrap(), qstate2.get(n).unwrap(), "{n}");
+        }
+
+        // a different budget is a different plan artifact
+        let mut q2 = qcfg.clone();
+        q2.precision.target_size = 0.5;
+        assert_ne!(
+            artifacts::plan_key(m, &qcfg, th, &images),
+            artifacts::plan_key(m, &q2, th, &images)
+        );
         std::fs::remove_dir_all(&dir).ok();
     });
 }

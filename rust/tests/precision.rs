@@ -1,0 +1,233 @@
+//! Host-side precision-plan suite (DESIGN.md §10) over the public API —
+//! no PJRT artifacts required: plan policies reproduce the seed path's
+//! per-layer bits, the Pareto allocator honors its budget, plans
+//! round-trip GTS1 files, and a changed plan moves the qstate cache key.
+
+use genie::artifacts::{plan_key, quantize_key};
+use genie::coordinator::{QuantCfg, RunConfig};
+use genie::precision::sensitivity::{allocate_bits, budget_bits, pareto_plan, Sensitivity};
+use genie::precision::{
+    abounds, validate_bits, wbounds, Granularity, Policy, PrecisionPlan,
+};
+use genie::quant::init_qstate;
+use genie::runtime::Manifest;
+use genie::store::Store;
+use genie::tensor::{Pcg32, Tensor};
+
+/// A three-quant-layer manifest (no entrypoints — host-side only).
+fn manifest() -> Manifest {
+    Manifest::from_json_text(
+        r#"{
+            "model": "host", "image": [8, 8, 3], "num_classes": 4,
+            "num_blocks": 2, "latent": 16,
+            "batch": {"train": 8, "eval": 8, "stats": 8, "recon": 8},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [
+                {"name": "stem", "w_shape": [1, 1, 12, 4],
+                 "out_ch": 4, "flat_k": 12, "block": 0},
+                {"name": "mid", "w_shape": [1, 1, 16, 8],
+                 "out_ch": 8, "flat_k": 16, "block": 0},
+                {"name": "head", "w_shape": [16, 4],
+                 "out_ch": 4, "flat_k": 16, "block": 1}
+            ],
+            "learnable": {"0": [], "1": []},
+            "bounds": [], "entrypoints": {}
+        }"#,
+    )
+    .unwrap()
+}
+
+fn params_for(m: &Manifest, seed: u64) -> Store {
+    let mut rng = Pcg32::new(seed);
+    let mut s = Store::new();
+    for ql in &m.quant_layers {
+        s.insert(
+            &format!("{}.w", ql.name),
+            Tensor::randn(&ql.w_shape, &mut rng, 0.3),
+        );
+    }
+    s
+}
+
+/// Seed-path contract: the default plan (Uniform + FirstLast8) yields
+/// exactly the per-layer grids the pre-refactor `first_or_last` branch
+/// produced — 8-bit bounds on the first/last layers, cfg bits between.
+#[test]
+fn uniform_plan_reproduces_seed_path_grids() {
+    let m = manifest();
+    let params = params_for(&m, 7);
+    let plan = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+        .unwrap()
+        .with_first_last(8)
+        .unwrap();
+    let qs = init_qstate(&m, &params, &plan, 2.4, None).unwrap();
+
+    // the historical reference, re-derived inline
+    let last = m.quant_layers.len() - 1;
+    for (li, ql) in m.quant_layers.iter().enumerate() {
+        let first_or_last = li == 0 || li == last;
+        let wbits = if first_or_last { 8 } else { 4 };
+        let abits = if first_or_last { 8 } else { 4 };
+        let n = &ql.name;
+        assert_eq!(
+            qs.get(&format!("q.{n}.wp")).unwrap().scalar(),
+            wbounds(wbits).1,
+            "{n} wp"
+        );
+        assert_eq!(
+            qs.get(&format!("q.{n}.wn")).unwrap().scalar(),
+            wbounds(wbits).0,
+            "{n} wn"
+        );
+        assert_eq!(
+            qs.get(&format!("q.{n}.an")).unwrap().scalar(),
+            abounds(abits).0,
+            "{n} an"
+        );
+        assert_eq!(
+            qs.get(&format!("q.{n}.ap")).unwrap().scalar(),
+            abounds(abits).1,
+            "{n} ap"
+        );
+    }
+
+    // determinism: the same plan re-derives the identical qstate
+    let qs2 = init_qstate(&m, &params, &plan, 2.4, None).unwrap();
+    assert_eq!(qs.names(), qs2.names());
+    for n in qs.names() {
+        assert_eq!(qs.get(n).unwrap(), qs2.get(n).unwrap(), "{n}");
+    }
+}
+
+#[test]
+fn pareto_plan_respects_size_budget() {
+    let m = manifest();
+    let sens = Sensitivity {
+        layers: vec!["stem".into(), "mid".into(), "head".into()],
+        candidates: vec![2, 4, 8],
+        kl: vec![
+            vec![0.8, 0.3, 0.05],
+            vec![4.0, 0.4, 0.02],
+            vec![0.5, 0.2, 0.05],
+        ],
+    };
+    for target in [0.1f32, 0.25, 0.5] {
+        let cfg = genie::precision::PrecisionCfg {
+            policy: Policy::Pareto,
+            target_size: target,
+            // unpinned: at 0.1 the 8-bit first/last pins alone would
+            // (correctly) exceed the budget on this tiny model
+            first_last_bits: if target > 0.2 { 8 } else { 0 },
+            ..Default::default()
+        };
+        let plan = pareto_plan(&m, &sens, 4, &cfg).unwrap();
+        assert!(
+            plan.payload_bits(&m) <= budget_bits(&m, target),
+            "target {target}: {} > {}",
+            plan.payload_bits(&m),
+            budget_bits(&m, target)
+        );
+        plan.validate(&m).unwrap();
+    }
+    // under a budget with room for exactly one upgrade, the greedy buys
+    // it for the most sensitive free layer ("mid": ΔKL/bit dominates)
+    let cfg = genie::precision::PrecisionCfg {
+        policy: Policy::Pareto,
+        target_size: 0.10, // 768 of 7680 payload bits
+        first_last_bits: 0,
+        ..Default::default()
+    };
+    let plan = pareto_plan(&m, &sens, 4, &cfg).unwrap();
+    assert_eq!(
+        plan.layers.iter().map(|l| l.wbits).collect::<Vec<_>>(),
+        vec![2, 4, 2],
+        "only mid's 2->4 upgrade fits the 768-bit budget"
+    );
+}
+
+#[test]
+fn greedy_allocator_budget_edge_cases() {
+    let kl = vec![vec![1.0, 0.4, 0.1]; 2];
+    let cands = vec![2u32, 4, 8];
+    // exact-fit budget: both layers at max
+    let bits =
+        allocate_bits(&kl, &cands, &[10, 10], &[None, None], 160).unwrap();
+    assert_eq!(bits, vec![8, 8]);
+    // one bit short of the 4->8 upgrades: both stop at 4
+    let bits =
+        allocate_bits(&kl, &cands, &[10, 10], &[None, None], 119).unwrap();
+    assert_eq!(bits, vec![4, 4]);
+    assert!(bits.iter().map(|&b| b as usize * 10).sum::<usize>() <= 119);
+    // infeasible: clear error
+    assert!(
+        allocate_bits(&kl, &cands, &[10, 10], &[None, None], 39).is_err()
+    );
+}
+
+#[test]
+fn plan_round_trips_through_gts1_file() {
+    let m = manifest();
+    let sens = Sensitivity {
+        layers: vec!["stem".into(), "mid".into(), "head".into()],
+        candidates: vec![2, 4, 8],
+        kl: vec![vec![0.8, 0.3, 0.05]; 3],
+    };
+    let cfg = genie::precision::PrecisionCfg {
+        policy: Policy::Pareto,
+        target_size: 0.2,
+        granularity: Granularity::PerTensor,
+        ..Default::default()
+    };
+    let plan = pareto_plan(&m, &sens, 4, &cfg).unwrap();
+    let dir = std::env::temp_dir().join("genie_precision_it_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.gts");
+    plan.to_store().save(&path).unwrap();
+    let back =
+        PrecisionPlan::from_store(&m, &Store::load(&path).unwrap()).unwrap();
+    assert_eq!(plan, back);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn qstate_cache_key_misses_when_only_plan_changes() {
+    let m = manifest();
+    let cfg = QuantCfg::default();
+    let th = 0x1234u64;
+    let calib = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let base = PrecisionPlan::uniform(&m, 4, 4, Granularity::PerChannel)
+        .unwrap()
+        .with_first_last(8)
+        .unwrap();
+    let k0 = quantize_key(&m, &cfg, th, &calib, &base);
+    assert_eq!(k0, quantize_key(&m, &cfg, th, &calib, &base));
+
+    let mut mixed = base.clone();
+    mixed.layers[1].wbits = 2;
+    assert_ne!(k0, quantize_key(&m, &cfg, th, &calib, &mixed));
+    let mut gran = base.clone();
+    gran.layers[1].granularity = Granularity::PerTensor;
+    assert_ne!(k0, quantize_key(&m, &cfg, th, &calib, &gran));
+
+    // plan keys track the policy knobs that shape the sensitivity pass
+    let mut pcfg = cfg.clone();
+    pcfg.precision.policy = Policy::Pareto;
+    let pk = plan_key(&m, &pcfg, th, &calib);
+    let mut pcfg2 = pcfg.clone();
+    pcfg2.precision.sens_batches += 1;
+    assert_ne!(pk, plan_key(&m, &pcfg2, th, &calib));
+}
+
+#[test]
+fn cli_precision_flags_reach_quant_cfg() {
+    let mut cfg = RunConfig::default();
+    cfg.apply_overrides(&[
+        "precision=pareto".into(),
+        "target_size=0.25".into(),
+        "first_last_bits=8".into(),
+    ])
+    .unwrap();
+    assert_eq!(cfg.quant.precision.policy, Policy::Pareto);
+    assert_eq!(cfg.quant.precision.target_size, 0.25);
+    assert!(validate_bits("wbits", cfg.quant.wbits).is_ok());
+}

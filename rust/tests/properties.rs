@@ -3,9 +3,10 @@
 //! scheduler laws, RNG/batching coverage.
 
 use genie::data::{batches_padded, image_batches};
+use genie::precision::wbounds;
 use genie::quant::{
     dequant, flatten_out_major, h_sigmoid, minmax_step, search_step_sizes,
-    softbit_init, BitConfig,
+    softbit_init,
 };
 use genie::schedule::{CosineAnnealing, ReduceLROnPlateau};
 use genie::store::Store;
@@ -16,7 +17,7 @@ use genie::testutil::forall;
 fn prop_quantized_ints_within_bounds() {
     forall(11, 40, |rng| {
         let bits = [2u32, 3, 4, 8][rng.below(4)];
-        let (n, p) = BitConfig::wbounds(bits);
+        let (n, p) = wbounds(bits);
         let k = 1 + rng.below(64);
         let row: Vec<f32> = (0..k).map(|_| rng.normal() * 0.3).collect();
         let (sw, zp) = search_step_sizes(&row, 1, k, bits, 2.0);
