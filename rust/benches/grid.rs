@@ -1,0 +1,218 @@
+//! Grid-orchestrator benchmarks (DESIGN.md §11). In-tree harness (no
+//! criterion in the offline image); harness = false.
+//!
+//! Always writes `BENCH_grid.json`: cell expansion, DAG build/dedupe and
+//! dry-run render costs over a 240-cell grid (pure host work). With
+//! artifacts present it additionally runs a 3-bit-width grid against the
+//! same three runs executed sequentially, at workers=1 and 4 — all on
+//! cold caches — and asserts the grid beats sequential at workers=4 (it
+//! dispatches the shared teacher/distill once and interleaves the
+//! rest).
+
+use std::collections::BTreeMap;
+
+use genie::artifacts::ArtifactCache;
+use genie::coordinator::{
+    distill_cached, eval_fp32, eval_quantized, quantize_cached,
+    teacher_cached, Metrics, RunConfig,
+};
+use genie::data::Dataset;
+use genie::grid::{self, AxisValue, GridOpts, GridPlan, RunGrid};
+use genie::runtime::{Manifest, ModelRt, Runtime};
+use genie::testutil::{bench_secs, report};
+
+fn toy_manifest() -> Manifest {
+    Manifest::from_json_text(
+        r#"{
+            "model": "toy", "image": [16, 16, 3], "num_classes": 10,
+            "num_blocks": 2, "latent": 256,
+            "batch": {"train": 64},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [], "learnable": {"0": []},
+            "bounds": [], "entrypoints": {}
+        }"#,
+    )
+    .unwrap()
+}
+
+fn small_cfg(cache_dir: &std::path::Path) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: "toy".into(),
+        artifacts: "artifacts".into(),
+        cache_dir: cache_dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    cfg.apply_overrides(&[
+        "pretrain.steps=30".into(),
+        "distill.samples=64".into(),
+        "distill.steps=6".into(),
+        "quant.steps=8".into(),
+    ])
+    .unwrap();
+    cfg
+}
+
+fn main() {
+    let cfg = RunConfig { model: "toy".into(), ..Default::default() };
+
+    // ---- expansion: 4 bits x 30 seeds x 2 sample counts = 240 cells --
+    let grid = RunGrid::new()
+        .axis(
+            "bits",
+            vec![
+                AxisValue::Bits(4, 4),
+                AxisValue::Bits(3, 4),
+                AxisValue::Bits(2, 4),
+                AxisValue::Bits(2, 2),
+            ],
+        )
+        .axis("seed", (0..30u64).map(AxisValue::Seed).collect())
+        .axis(
+            "samples",
+            vec![AxisValue::Samples(64), AxisValue::Samples(128)],
+        );
+    let expand_secs = bench_secs(3, 50, || {
+        std::hint::black_box(grid.cells(&cfg).unwrap());
+    });
+    report("grid/expand_240_cells", expand_secs);
+
+    // ---- DAG build + dedupe over those cells ------------------------
+    let mut manifests = BTreeMap::new();
+    manifests.insert("toy".to_string(), toy_manifest());
+    let cells = grid.cells(&cfg).unwrap();
+    let dag_secs = bench_secs(3, 50, || {
+        std::hint::black_box(
+            GridPlan::build(cells.clone(), &manifests, false).unwrap(),
+        );
+    });
+    report("grid/dag_build_240_cells", dag_secs);
+    let plan = GridPlan::build(cells.clone(), &manifests, false).unwrap();
+    println!(
+        "dag: {} cells -> {} nodes ({} naive, {} deduplicated away)",
+        plan.cells.len(),
+        plan.nodes.len(),
+        plan.naive_stages(),
+        plan.naive_stages() - plan.nodes.len()
+    );
+    let waves_secs = bench_secs(3, 50, || {
+        std::hint::black_box(genie::exec::waves(&plan.deps()));
+    });
+    report("grid/waves_240_cells", waves_secs);
+
+    // ---- dry-run render (DAG + cache resolution, no dataset) ---------
+    let cache = ArtifactCache::disabled();
+    let dry_secs = bench_secs(3, 20, || {
+        std::hint::black_box(plan.render(&manifests, &cache, None));
+    });
+    report("grid/dry_run_render", dry_secs);
+
+    // ---- grid vs sequential wall clock (needs artifacts + PJRT) ------
+    let mut seq_w1 = -1.0f64;
+    let mut seq_w4 = -1.0f64;
+    let mut grid_w1 = -1.0f64;
+    let mut grid_w4 = -1.0f64;
+    let mut dedup_saved = -1.0f64;
+    let mut cache_stores = -1.0f64;
+    if std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let root = std::env::temp_dir().join("genie_bench_grid");
+        std::fs::remove_dir_all(&root).ok();
+        let bits = [(4u32, 4u32), (3, 4), (2, 4)];
+
+        for workers in [1usize, 4] {
+            // sequential: each cell a standalone run on its own cold
+            // cache — every run pays its own teacher + distill
+            let t0 = std::time::Instant::now();
+            for (i, (w, a)) in bits.iter().enumerate() {
+                let mut c = small_cfg(
+                    &root.join(format!("seq_w{workers}_{i}")),
+                );
+                c.set("wbits", &w.to_string()).unwrap();
+                c.set("abits", &a.to_string()).unwrap();
+                c.set("workers", &workers.to_string()).unwrap();
+                let mrt =
+                    ModelRt::load(&rt, &c.artifacts, &c.model).unwrap();
+                let dataset = Dataset::load(&c.artifacts).unwrap();
+                let mut metrics = Metrics::new();
+                let mut cache =
+                    ArtifactCache::open(&c.cache_dir, true, false).unwrap();
+                let teacher = teacher_cached(
+                    &mrt, &dataset, &c.pretrain, &mut cache, &mut metrics,
+                )
+                .unwrap();
+                let out = distill_cached(
+                    &mrt, &teacher, &c.distill, &mut cache, &mut metrics,
+                )
+                .unwrap();
+                let qstate = quantize_cached(
+                    &mrt, &teacher, &out.images, &c.quant, &mut cache,
+                    &mut metrics,
+                )
+                .unwrap();
+                std::hint::black_box(
+                    eval_fp32(&mrt, &teacher, &dataset).unwrap(),
+                );
+                std::hint::black_box(
+                    eval_quantized(&mrt, &teacher, &qstate, &dataset)
+                        .unwrap(),
+                );
+            }
+            let seq = t0.elapsed().as_secs_f64();
+
+            // grid: the same three cells on the shared-artifact
+            // scheduler, cold cache
+            let mut c = small_cfg(&root.join(format!("grid_w{workers}")));
+            c.set("workers", &workers.to_string()).unwrap();
+            let g = RunGrid::new().axis(
+                "bits",
+                bits.iter().map(|&(w, a)| AxisValue::Bits(w, a)).collect(),
+            );
+            let mut metrics = Metrics::new();
+            let t0 = std::time::Instant::now();
+            let out = grid::execute(
+                &rt, &c, &g, &GridOpts::default(), &mut metrics,
+            )
+            .unwrap();
+            let gsecs = t0.elapsed().as_secs_f64();
+            println!(
+                "grid vs sequential @ workers={workers}: \
+                 {gsecs:.2}s vs {seq:.2}s ({:.2}x; {} stages deduplicated)",
+                seq / gsecs.max(1e-9),
+                out.stats.dedup_saved()
+            );
+            if workers == 1 {
+                seq_w1 = seq;
+                grid_w1 = gsecs;
+            } else {
+                seq_w4 = seq;
+                grid_w4 = gsecs;
+                dedup_saved = out.stats.dedup_saved() as f64;
+                cache_stores = out.stats.cache.stores as f64;
+                assert!(
+                    gsecs < seq,
+                    "grid ({gsecs:.2}s) must beat sequential ({seq:.2}s) \
+                     at workers=4"
+                );
+            }
+        }
+        std::fs::remove_dir_all(&root).ok();
+    } else {
+        println!("bench grid/vs_sequential: skipped (run `make artifacts`)");
+    }
+
+    // negative sentinel (-1.0) = artifact-gated section did not run
+    let json = format!(
+        "{{\n  \"expand_secs\": {expand_secs:.6},\n  \
+         \"dag_build_secs\": {dag_secs:.6},\n  \
+         \"waves_secs\": {waves_secs:.6},\n  \
+         \"dry_run_secs\": {dry_secs:.6},\n  \
+         \"seq_w1_secs\": {seq_w1:.4},\n  \
+         \"seq_w4_secs\": {seq_w4:.4},\n  \
+         \"grid_w1_secs\": {grid_w1:.4},\n  \
+         \"grid_w4_secs\": {grid_w4:.4},\n  \
+         \"dedup_saved\": {dedup_saved:.0},\n  \
+         \"cache_stores\": {cache_stores:.0}\n}}\n"
+    );
+    std::fs::write("BENCH_grid.json", json).unwrap();
+    println!("wrote BENCH_grid.json");
+}

@@ -13,12 +13,28 @@
 //! seed is a different artifact). Hashing is FNV-1a 64 over a canonical
 //! `name=value;` rendering plus raw tensor bytes — never std's SipHash,
 //! whose keys are process-random.
+//!
+//! Two key families share the same config field folds (DESIGN.md §11):
+//!
+//!   * **content keys** (`distill_key`, `quantize_key`, ...) fold
+//!     upstream *content hashes* — only computable once the upstream
+//!     artifact exists; they address cache files.
+//!   * **spec keys** (`distill_spec_key`, `quantize_spec_key`, ...) fold
+//!     upstream *spec keys* instead — computable before anything runs.
+//!     The grid orchestrator dedupes its cross-run stage DAG on spec
+//!     keys (equal spec ⇒ equal content within one process, where the
+//!     manifests and dataset are fixed); they never address files.
+//!
+//! Concurrent materialization is serialized per key by
+//! [`ArtifactCache::claim`]: the first claimant creates
+//! `wip_<kind>_<key>.lock` and computes; later claimants block until the
+//! lock releases, then re-check the cache and hit.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
+use crate::coordinator::{DistillCfg, PretrainCfg, QuantCfg};
 use crate::phase::checkpoint::atomic_save;
 use crate::phase::StageCkpt;
 use crate::precision::PrecisionPlan;
@@ -110,15 +126,9 @@ fn manifest_fields(b: KeyBuilder, m: &Manifest) -> KeyBuilder {
         .field("latent", m.latent)
 }
 
-fn mode_str(m: DistillMode) -> &'static str {
-    match m {
-        DistillMode::Genie => "genie",
-        DistillMode::Gba => "gba",
-        DistillMode::Direct => "direct",
-    }
-}
-
-/// Key of the pretrained-teacher artifact.
+/// Key of the pretrained-teacher artifact. Every field is config, so
+/// this doubles as the teacher's *spec* key: the grid orchestrator
+/// dedupes pretrain stages on it directly.
 pub fn pretrain_key(m: &Manifest, cfg: &PretrainCfg) -> CacheKey {
     manifest_fields(KeyBuilder::new("teacher"), m)
         .field("steps", cfg.steps)
@@ -128,19 +138,10 @@ pub fn pretrain_key(m: &Manifest, cfg: &PretrainCfg) -> CacheKey {
         .finish()
 }
 
-/// Key of the synthetic-calibration artifact: the distill config plus
-/// the teacher it was distilled from (by content hash, so a retrained
-/// teacher invalidates downstream artifacts automatically — the caller
-/// computes `Store::content_hash` once and shares it across the stage
-/// keys of one run). `par` is excluded — shard fan-out never changes
-/// the images.
-pub fn distill_key(
-    m: &Manifest,
-    cfg: &DistillCfg,
-    teacher_hash: u64,
-) -> CacheKey {
-    manifest_fields(KeyBuilder::new("distill"), m)
-        .field("mode", mode_str(cfg.mode))
+/// The distill-config folds shared by the content and spec keys. `par`
+/// is excluded — shard fan-out never changes the images.
+fn distill_fields(b: KeyBuilder, cfg: &DistillCfg) -> KeyBuilder {
+    b.field("mode", cfg.mode.as_str())
         .field("swing", cfg.swing)
         .field("samples", cfg.samples)
         .field("steps", cfg.steps)
@@ -148,7 +149,42 @@ pub fn distill_key(
         .field("lr_z", cfg.lr_z)
         .field("log_every", cfg.log_every)
         .field("seed", cfg.seed)
+}
+
+/// Key of the synthetic-calibration artifact: the distill config plus
+/// the teacher it was distilled from (by content hash, so a retrained
+/// teacher invalidates downstream artifacts automatically — the caller
+/// computes `Store::content_hash` once and shares it across the stage
+/// keys of one run).
+pub fn distill_key(
+    m: &Manifest,
+    cfg: &DistillCfg,
+    teacher_hash: u64,
+) -> CacheKey {
+    distill_fields(manifest_fields(KeyBuilder::new("distill"), m), cfg)
         .field("teacher", format!("{teacher_hash:016x}"))
+        .finish()
+}
+
+/// Spec key of a distill stage: same config folds, but the upstream
+/// teacher enters by *spec* key — computable before the teacher exists.
+pub fn distill_spec_key(
+    m: &Manifest,
+    cfg: &DistillCfg,
+    teacher_spec: CacheKey,
+) -> CacheKey {
+    distill_fields(manifest_fields(KeyBuilder::new("distill"), m), cfg)
+        .upstream("teacher_spec", teacher_spec)
+        .finish()
+}
+
+/// Spec key of a real-data calibration draw (`fsq`): the sample count
+/// and the RNG stream that selects them. Valid for dedupe only within
+/// one process, where the dataset is fixed.
+pub fn real_calib_spec_key(samples: usize, seed: u64) -> CacheKey {
+    KeyBuilder::new("realcalib")
+        .field("samples", samples)
+        .field("seed", seed)
         .finish()
 }
 
@@ -179,20 +215,10 @@ pub fn plan_key(
         .finish()
 }
 
-/// Key of the optimized-qstate artifact: the quant config plus the
-/// resolved precision plan (per-layer bits/granularity — a different
-/// plan is a different artifact), the teacher (by precomputed content
-/// hash) and the calibration images (synthetic or real) by content.
-pub fn quantize_key(
-    m: &Manifest,
-    cfg: &QuantCfg,
-    teacher_hash: u64,
-    calib: &Tensor,
-    plan: &PrecisionPlan,
-) -> CacheKey {
-    manifest_fields(KeyBuilder::new("qstate"), m)
-        .field("plan", plan.fingerprint())
-        .field("steps", cfg.steps_per_block)
+/// The quantizer-config folds shared by the content and spec keys
+/// (everything but the plan/precision identity and the upstreams).
+fn quantize_fields(b: KeyBuilder, cfg: &QuantCfg) -> KeyBuilder {
+    b.field("steps", cfg.steps_per_block)
         .field("lr_sw", cfg.lr_sw)
         .field("lr_v", cfg.lr_v)
         .field("lr_sa", cfg.lr_sa)
@@ -204,8 +230,69 @@ pub fn quantize_key(
         .field("refresh", cfg.refresh_student)
         .field("log_every", cfg.log_every)
         .field("seed", cfg.seed)
-        .field("teacher", format!("{teacher_hash:016x}"))
-        .tensor("calib", calib)
+}
+
+/// Key of the optimized-qstate artifact: the quant config plus the
+/// resolved precision plan (per-layer bits/granularity — a different
+/// plan is a different artifact), the teacher (by precomputed content
+/// hash) and the calibration images (synthetic or real) by content.
+pub fn quantize_key(
+    m: &Manifest,
+    cfg: &QuantCfg,
+    teacher_hash: u64,
+    calib: &Tensor,
+    plan: &PrecisionPlan,
+) -> CacheKey {
+    quantize_fields(
+        manifest_fields(KeyBuilder::new("qstate"), m)
+            .field("plan", plan.fingerprint()),
+        cfg,
+    )
+    .field("teacher", format!("{teacher_hash:016x}"))
+    .tensor("calib", calib)
+    .finish()
+}
+
+/// Spec key of a quantize stage: the plan is not resolved yet, so the
+/// plan-shaping config (base bits + every precision knob) stands in for
+/// the fingerprint, and both upstreams — teacher and calibration source
+/// (a distill spec or a [`real_calib_spec_key`]) — enter by spec key.
+pub fn quantize_spec_key(
+    m: &Manifest,
+    cfg: &QuantCfg,
+    teacher_spec: CacheKey,
+    calib_spec: CacheKey,
+) -> CacheKey {
+    let p = &cfg.precision;
+    quantize_fields(
+        manifest_fields(KeyBuilder::new("qstate"), m)
+            .field("wbits", cfg.wbits)
+            .field("abits", cfg.abits)
+            .field("policy", p.policy.as_str())
+            .field("first_last", p.first_last_bits)
+            .field("target_size", p.target_size)
+            .field("granularity", p.granularity.as_str())
+            .field("sens_batches", p.sens_batches)
+            .field("candidates", format!("{:?}", p.candidates)),
+        cfg,
+    )
+    .upstream("teacher_spec", teacher_spec)
+    .upstream("calib_spec", calib_spec)
+    .finish()
+}
+
+/// Spec key of an FP32-teacher eval (dedupes across every cell that
+/// shares the teacher).
+pub fn eval_fp_spec_key(m: &Manifest, teacher_spec: CacheKey) -> CacheKey {
+    manifest_fields(KeyBuilder::new("evalfp"), m)
+        .upstream("teacher_spec", teacher_spec)
+        .finish()
+}
+
+/// Spec key of a quantized eval (one per distinct qstate spec).
+pub fn eval_q_spec_key(m: &Manifest, quantize_spec: CacheKey) -> CacheKey {
+    manifest_fields(KeyBuilder::new("evalq"), m)
+        .upstream("qstate_spec", quantize_spec)
         .finish()
 }
 
@@ -217,14 +304,46 @@ pub struct CacheStats {
     pub stores: u64,
 }
 
+/// A held materialization claim on one artifact key (DESIGN.md §11):
+/// while alive, `wip_<kind>_<key>.lock` exists and every concurrent
+/// [`ArtifactCache::claim`] on the same key blocks. Dropping removes the
+/// lockfile — but only after verifying the file still carries this
+/// claim's token, so a claim whose lock was broken as stale (and
+/// re-acquired by a successor) never deletes the successor's live lock.
+/// A claim from a disabled cache holds nothing.
+#[derive(Debug)]
+pub struct WipClaim {
+    path: Option<PathBuf>,
+    token: String,
+}
+
+impl Drop for WipClaim {
+    fn drop(&mut self) {
+        if let Some(p) = self.path.take() {
+            // ownership check: remove only our own lock (a stolen lock
+            // belongs to whoever broke it)
+            if std::fs::read_to_string(&p)
+                .is_ok_and(|t| t == self.token)
+            {
+                std::fs::remove_file(p).ok();
+            }
+        }
+    }
+}
+
 /// The on-disk cache: completed artifacts as `<kind>_<key>.gts`, stage
-/// work dirs as `wip_<kind>_<key>/`.
+/// work dirs as `wip_<kind>_<key>/`, materialization locks as
+/// `wip_<kind>_<key>.lock`.
 #[derive(Debug)]
 pub struct ArtifactCache {
     dir: PathBuf,
     enabled: bool,
     resume: bool,
     checkpoint_every: usize,
+    /// Lockfiles older than this are treated as left by a crashed
+    /// claimant and broken (claims touch their lock only at creation, so
+    /// age = mtime age).
+    claim_stale_secs: u64,
     stats: CacheStats,
 }
 
@@ -247,6 +366,7 @@ impl ArtifactCache {
             enabled,
             resume,
             checkpoint_every: 50,
+            claim_stale_secs: 1800,
             stats: CacheStats::default(),
         })
     }
@@ -259,6 +379,7 @@ impl ArtifactCache {
             enabled: false,
             resume: false,
             checkpoint_every: 0,
+            claim_stale_secs: 1800,
             stats: CacheStats::default(),
         }
     }
@@ -321,6 +442,92 @@ impl ArtifactCache {
     /// The in-progress work dir for one stage.
     pub fn wip_dir(&self, kind: &str, key: CacheKey) -> PathBuf {
         self.dir.join(format!("wip_{kind}_{}", key.hex()))
+    }
+
+    /// The materialization lockfile for one stage key.
+    pub fn lock_path(&self, kind: &str, key: CacheKey) -> PathBuf {
+        self.dir.join(format!("wip_{kind}_{}.lock", key.hex()))
+    }
+
+    /// Seconds after which a lockfile counts as abandoned (test hook;
+    /// default 1800). The tradeoff: a stage that legitimately computes
+    /// longer than this risks having its lock broken (the worst case is
+    /// duplicated — still deterministic and atomically stored — work),
+    /// while a crashed claimant blocks concurrent runs for at most this
+    /// long.
+    pub fn set_claim_stale_secs(&mut self, secs: u64) {
+        self.claim_stale_secs = secs;
+    }
+
+    /// Claim the right to materialize `<kind>_<key>` (DESIGN.md §11).
+    /// Creates the per-key lockfile atomically (`create_new`, stamped
+    /// with an ownership token); if another claimant — in this process
+    /// or another — holds it, blocks polling until the lock releases (or
+    /// goes stale and is broken — via atomic rename, so exactly one
+    /// waiter takes a stale lock over). Callers check
+    /// [`load`](ArtifactCache::load) after claiming: the released
+    /// claimant usually stored the artifact, turning this claimant's
+    /// compute into a cache hit. Disabled caches return an empty claim
+    /// immediately.
+    pub fn claim(&self, kind: &str, key: CacheKey) -> Result<WipClaim> {
+        use std::io::Write;
+        if !self.enabled {
+            return Ok(WipClaim { path: None, token: String::new() });
+        }
+        static SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let token = format!(
+            "{}:{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        );
+        let path = self.lock_path(kind, key);
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    f.write_all(token.as_bytes()).ok();
+                    return Ok(WipClaim { path: Some(path), token });
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::AlreadyExists =>
+                {
+                    // a crashed claimant never unlocks; break stale
+                    // locks by renaming them away — rename is atomic,
+                    // so exactly one waiter wins the takeover and a
+                    // freshly re-created lock is never deleted by a
+                    // racing waiter that read the old mtime
+                    let stale = std::fs::metadata(&path)
+                        .ok()
+                        .and_then(|m| m.modified().ok())
+                        .and_then(|t| t.elapsed().ok())
+                        .is_some_and(|age| {
+                            age.as_secs() >= self.claim_stale_secs
+                        });
+                    if stale {
+                        let grave = self.dir.join(format!(
+                            "wip_{kind}_{}.stale.{token}",
+                            key.hex()
+                        ));
+                        if std::fs::rename(&path, &grave).is_ok() {
+                            std::fs::remove_file(&grave).ok();
+                        }
+                        continue;
+                    }
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(25),
+                    );
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("claim lockfile {path:?}")
+                    })
+                }
+            }
+        }
     }
 
     /// Per-shard checkpoint policy for one stage; `None` when disabled.
@@ -499,6 +706,120 @@ mod tests {
         assert!(cache.stage_ckpt("stage", key).is_none());
         assert_eq!(cache.stats().misses, 1);
         assert_eq!(cache.stats().stores, 0);
+    }
+
+    #[test]
+    fn spec_keys_dedupe_on_config_not_content() {
+        let m = toy_manifest();
+        let p = PretrainCfg::default();
+        let ts = pretrain_key(&m, &p);
+
+        let d = DistillCfg::default();
+        let k1 = distill_spec_key(&m, &d, ts);
+        assert_eq!(k1, distill_spec_key(&m, &d, ts), "spec keys are stable");
+        let mut d2 = d.clone();
+        d2.seed += 1;
+        assert_ne!(distill_spec_key(&m, &d2, ts), k1);
+        // a different upstream teacher spec separates downstream specs
+        let mut p2 = p.clone();
+        p2.steps += 1;
+        let ts2 = pretrain_key(&m, &p2);
+        assert_ne!(distill_spec_key(&m, &d, ts2), k1);
+        // spec keys never collide with content keys on the same fields
+        assert_ne!(k1, distill_key(&m, &d, ts.0));
+
+        let q = QuantCfg::default();
+        let qs = quantize_spec_key(&m, &q, ts, k1);
+        assert_eq!(qs, quantize_spec_key(&m, &q, ts, k1));
+        // base bits shape the (unresolved) plan, so they move the spec
+        let mut qw = q.clone();
+        qw.wbits = 2;
+        assert_ne!(quantize_spec_key(&m, &qw, ts, k1), qs);
+        // a different calibration source is a different quantize stage
+        let real = real_calib_spec_key(128, q.seed ^ 0x5eed);
+        assert_ne!(quantize_spec_key(&m, &q, ts, real), qs);
+        assert_ne!(real_calib_spec_key(64, 1), real_calib_spec_key(128, 1));
+
+        // eval specs: fp dedupes on the teacher, q on the qstate
+        assert_eq!(eval_fp_spec_key(&m, ts), eval_fp_spec_key(&m, ts));
+        assert_ne!(eval_fp_spec_key(&m, ts), eval_fp_spec_key(&m, ts2));
+        assert_ne!(eval_q_spec_key(&m, qs), eval_fp_spec_key(&m, ts));
+    }
+
+    #[test]
+    fn claim_serializes_concurrent_materialization() {
+        let dir = std::env::temp_dir().join("genie_artifact_claim_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").field("x", 1).finish();
+
+        let first = cache.claim("stage", key).unwrap();
+        assert!(cache.lock_path("stage", key).exists());
+
+        // a second claimant blocks until the first drops
+        let t0 = std::time::Instant::now();
+        let handle = {
+            let dir = dir.clone();
+            std::thread::spawn(move || {
+                let cache = ArtifactCache::open(&dir, true, false).unwrap();
+                let c = cache.claim("stage", key).unwrap();
+                let waited = t0.elapsed();
+                drop(c);
+                waited
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        drop(first);
+        let waited = handle.join().unwrap();
+        assert!(
+            waited.as_millis() >= 100,
+            "second claim should have blocked, waited {waited:?}"
+        );
+        assert!(!cache.lock_path("stage", key).exists(), "lock released");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_claim_is_broken() {
+        let dir = std::env::temp_dir().join("genie_artifact_stale_claim_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").finish();
+        // a lockfile left by a "crashed" claimant (no WipClaim alive)
+        std::fs::write(cache.lock_path("stage", key), b"").unwrap();
+        cache.set_claim_stale_secs(0);
+        let c = cache.claim("stage", key).unwrap();
+        drop(c);
+        assert!(!cache.lock_path("stage", key).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn released_claim_never_removes_a_foreign_lock() {
+        let dir = std::env::temp_dir().join("genie_artifact_foreign_lock");
+        std::fs::remove_dir_all(&dir).ok();
+        let cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").finish();
+        let mine = cache.claim("stage", key).unwrap();
+        // simulate a stale-break + takeover by another claimant: the
+        // lockfile now carries someone else's token
+        std::fs::write(cache.lock_path("stage", key), b"other:0").unwrap();
+        drop(mine);
+        assert!(
+            cache.lock_path("stage", key).exists(),
+            "drop must not delete a successor's live lock"
+        );
+        std::fs::remove_file(cache.lock_path("stage", key)).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disabled_cache_claim_is_inert() {
+        let cache = ArtifactCache::disabled();
+        let key = KeyBuilder::new("test").finish();
+        let c = cache.claim("stage", key).unwrap();
+        assert!(!cache.lock_path("stage", key).exists());
+        drop(c);
     }
 
     #[test]

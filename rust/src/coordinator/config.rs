@@ -35,6 +35,9 @@ pub struct RunConfig {
     /// steps between mid-phase checkpoint writes (0 = shard-boundary
     /// durability only)
     pub checkpoint_every: usize,
+    /// machine-readable outcome sink (`--json <path>`, DESIGN.md §11):
+    /// `genie run`/`genie grid` write their outcome JSON here
+    pub json: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -53,6 +56,7 @@ impl Default for RunConfig {
             cache: true,
             resume: false,
             checkpoint_every: 50,
+            json: None,
         }
     }
 }
@@ -89,6 +93,7 @@ impl RunConfig {
             "checkpoint_every" | "ckpt.every" => {
                 self.checkpoint_every = p!(usize)
             }
+            "json" => self.json = Some(value.to_string()),
             "wbits" | "quant.wbits" => {
                 self.quant.wbits = validate_bits("wbits", p!(u32))?
             }
@@ -222,6 +227,14 @@ mod tests {
         assert!(c.resume);
         assert_eq!(c.cache_dir, "/tmp/x");
         assert_eq!(c.checkpoint_every, 25);
+    }
+
+    #[test]
+    fn json_key_applies() {
+        let mut c = RunConfig::default();
+        assert!(c.json.is_none());
+        c.set("json", "out.json").unwrap();
+        assert_eq!(c.json.as_deref(), Some("out.json"));
     }
 
     #[test]

@@ -51,6 +51,16 @@ impl DistillMode {
             other => anyhow::bail!("unknown distill mode '{other}'"),
         }
     }
+
+    /// Canonical lowercase name (config values, cache-key fields, grid
+    /// cell labels).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DistillMode::Genie => "genie",
+            DistillMode::Gba => "gba",
+            DistillMode::Direct => "direct",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -402,11 +412,7 @@ pub fn distill_ck(
     let bd = m.batch("distill");
     let n_batches = cfg.samples.div_ceil(bd);
     let tag = if cfg.swing { "swing" } else { "noswing" };
-    let mode_name = match cfg.mode {
-        DistillMode::Genie => "genie",
-        DistillMode::Gba => "gba",
-        DistillMode::Direct => "direct",
-    };
+    let mode_name = cfg.mode.as_str();
 
     metrics.start("distill");
     // one teacher upload, Arc-shared by every shard (no per-shard clone
@@ -435,7 +441,7 @@ pub fn distill_ck(
         ckpt_writes += shard.ckpt_writes;
         ckpt_bytes += shard.ckpt_bytes;
         if b == 0 || b == n_batches - 1 {
-            println!(
+            crate::progress!(
                 "distill[{}/{mode_name}/{tag}] shard {}/{}: loss {:.3}",
                 m.model,
                 b + 1,
@@ -468,7 +474,7 @@ pub fn distill_ck(
     let final_loss =
         final_losses.iter().sum::<f32>() / final_losses.len() as f32;
     let rate = metrics.throughput("distill", "images", cfg.samples, secs);
-    println!(
+    crate::progress!(
         "distill[{}/{mode_name}/{tag}]: {} images in {:.1}s \
          ({rate:.1} images/sec on {} workers, final BNS {:.3})",
         m.model, cfg.samples, secs, pool.workers, final_loss

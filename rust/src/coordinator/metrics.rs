@@ -122,6 +122,26 @@ impl Metrics {
         self.log(&format!("{phase}/checkpoint/bytes"), writes, bytes as f32);
     }
 
+    /// Fold another `Metrics` in under a namespace prefix (DESIGN.md
+    /// §11): every series and timer of `other` lands here as
+    /// `<prefix><name>`. The grid executor gives each stage job its own
+    /// `Metrics` (jobs run concurrently and never share a sink) and
+    /// absorbs them at the wave barrier — per-cell stages under
+    /// `cell<i>/`, deduplicated stages under `shared/...` — so one flush
+    /// writes the whole grid without cross-run interleaving. Open
+    /// (un-stopped) timers of `other` are dropped.
+    pub fn absorb(&mut self, prefix: &str, other: Metrics) {
+        for (name, rows) in other.series {
+            let full = format!("{prefix}{name}");
+            for (step, value) in rows {
+                self.log(&full, step, value);
+            }
+        }
+        for (name, secs) in other.timers {
+            self.timers.push((format!("{prefix}{name}"), secs));
+        }
+    }
+
     /// Log a throughput sample (`<phase>/<unit>_per_sec`, step = count)
     /// and return the rate for printing.
     pub fn throughput(
@@ -242,6 +262,25 @@ mod tests {
         assert!((rate - 64.0).abs() < 1e-9);
         assert_eq!(m.last("distill/images_per_sec"), Some(64.0));
         assert_eq!(m.throughput("x", "y", 5, 0.0), 0.0);
+    }
+
+    #[test]
+    fn absorb_namespaces_series_and_timers() {
+        let mut job = Metrics::new();
+        job.log("distill/loss", 1, 0.5);
+        job.log("distill/loss", 2, 0.4);
+        job.start("quantize");
+        job.stop("quantize");
+        let mut grid = Metrics::new();
+        grid.log("cell0/distill/loss", 1, 0.9);
+        grid.absorb("cell1/", job);
+        assert_eq!(grid.last("cell1/distill/loss"), Some(0.4));
+        assert_eq!(grid.series("cell1/distill/loss").unwrap().len(), 2);
+        // existing series under other prefixes are untouched
+        assert_eq!(grid.last("cell0/distill/loss"), Some(0.9));
+        assert!(grid.series("distill/loss").is_none());
+        assert!(grid.timer_total("cell1/quantize") >= 0.0);
+        assert_eq!(grid.timers.len(), 1);
     }
 
     #[test]

@@ -30,7 +30,8 @@ pub use evaluate::{
 };
 pub use metrics::Metrics;
 pub use pipeline::{
-    distill_cached, fsq, plan_cached, quantize_cached, zsq, PipelineOutcome,
+    distill_cached, distill_cached_keyed, fsq, plan_cached, quantize_cached,
+    quantize_cached_planned, zsq, PipelineOutcome,
 };
 pub use pretrain::{pretrain, pretrain_ck, teacher_cached, PretrainCfg};
 pub use quantize::{

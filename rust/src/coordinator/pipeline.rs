@@ -14,10 +14,11 @@
 
 use anyhow::Result;
 
-use crate::artifacts::{self, ArtifactCache};
+use crate::artifacts::{self, ArtifactCache, CacheStats};
 use crate::data::Dataset;
 use crate::phase::checkpoint;
 use crate::precision::{Policy, PrecisionPlan};
+use crate::runtime::json::Json;
 use crate::runtime::ModelRt;
 use crate::store::Store;
 use crate::tensor::{Pcg32, Tensor};
@@ -39,6 +40,10 @@ pub struct PipelineOutcome {
     pub quant_secs: f64,
     /// Final BNS loss of the synthesis; `None` when no synthesis ran.
     pub final_bns_loss: Option<f32>,
+    /// FP32 weight payload of the quantized layers, in bits.
+    pub fp_weight_bits: u64,
+    /// Weight payload under the resolved precision plan, in bits.
+    pub q_weight_bits: u64,
 }
 
 impl PipelineOutcome {
@@ -57,7 +62,7 @@ impl PipelineOutcome {
     }
 
     pub fn print(&self, label: &str) {
-        println!(
+        crate::progress!(
             "== {label} [{}]: FP32 {:.2}%  quant {:.2}%  \
              (distill {}s, quant {:.0}s, BNS {})",
             self.model,
@@ -67,6 +72,42 @@ impl PipelineOutcome {
             self.quant_secs,
             self.bns_cell(),
         );
+    }
+
+    /// Machine-readable outcome for `genie run --json` / `genie grid
+    /// --json` (DESIGN.md §11): `Option` fields serialize as `null`,
+    /// cache counters ride along when the caller has them.
+    pub fn to_json(&self, cache: Option<&CacheStats>) -> Json {
+        let mut pairs = vec![
+            ("model", Json::Str(self.model.clone())),
+            ("fp_top1", Json::num(self.fp_acc as f64)),
+            ("q_top1", Json::num(self.q_acc as f64)),
+            ("distill_secs", Json::opt(self.distill_secs)),
+            ("quant_secs", Json::num(self.quant_secs)),
+            (
+                "final_bns_loss",
+                Json::opt(self.final_bns_loss.map(|x| x as f64)),
+            ),
+            (
+                "fp_weight_kib",
+                Json::num(self.fp_weight_bits as f64 / 8.0 / 1024.0),
+            ),
+            (
+                "q_weight_kib",
+                Json::num(self.q_weight_bits as f64 / 8.0 / 1024.0),
+            ),
+        ];
+        if let Some(s) = cache {
+            pairs.push((
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(s.hits as f64)),
+                    ("misses", Json::num(s.misses as f64)),
+                    ("stores", Json::num(s.stores as f64)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -95,9 +136,12 @@ pub fn distill_cached_keyed(
     metrics: &mut Metrics,
 ) -> Result<DistillOutput> {
     let key = artifacts::distill_key(&mrt.manifest, dcfg, teacher_hash);
+    // claim first (DESIGN.md §11): a concurrent run synthesizing the
+    // same set holds the lock; when it releases, the lookup below hits
+    let _claim = cache.claim("distill", key)?;
     if let Some(art) = cache.load("distill", key) {
         metrics.record_cache("distill", true);
-        println!(
+        crate::progress!(
             "distill[{}]: cache hit ({})",
             mrt.manifest.model,
             key.hex()
@@ -159,16 +203,18 @@ pub fn plan_cached(
         return resolve_plan(mrt, teacher, calib, qcfg, metrics);
     }
     let key = artifacts::plan_key(&mrt.manifest, qcfg, teacher_hash, calib);
-    if let Some(s) = cache.load("plan", key) {
-        if let Ok(plan) = PrecisionPlan::from_store(&mrt.manifest, &s) {
-            metrics.record_cache("plan", true);
-            println!(
-                "plan[{}]: cache hit ({})",
-                mrt.manifest.model,
-                key.hex()
-            );
-            return Ok(plan);
-        }
+    let _claim = cache.claim("plan", key)?;
+    if let Some(plan) = cache
+        .load("plan", key)
+        .and_then(|s| PrecisionPlan::from_store(&mrt.manifest, &s).ok())
+    {
+        metrics.record_cache("plan", true);
+        crate::progress!(
+            "plan[{}]: cache hit ({})",
+            mrt.manifest.model,
+            key.hex()
+        );
+        return Ok(plan);
     }
     metrics.record_cache("plan", false);
     let plan = resolve_plan(mrt, teacher, calib, qcfg, metrics)?;
@@ -191,16 +237,36 @@ pub fn quantize_cached_keyed(
 ) -> Result<Store> {
     let plan =
         plan_cached(mrt, teacher, teacher_hash, calib, qcfg, cache, metrics)?;
+    quantize_cached_planned(
+        mrt, teacher, teacher_hash, calib, qcfg, &plan, cache, metrics,
+    )
+}
+
+/// [`quantize_cached_keyed`] under an already-resolved plan — the grid
+/// executor and the pipelines resolve the plan once (to report payload
+/// sizes) and quantize under it.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_cached_planned(
+    mrt: &ModelRt,
+    teacher: &Store,
+    teacher_hash: u64,
+    calib: &Tensor,
+    qcfg: &QuantCfg,
+    plan: &PrecisionPlan,
+    cache: &mut ArtifactCache,
+    metrics: &mut Metrics,
+) -> Result<Store> {
     let key = artifacts::quantize_key(
         &mrt.manifest,
         qcfg,
         teacher_hash,
         calib,
-        &plan,
+        plan,
     );
+    let _claim = cache.claim("qstate", key)?;
     if let Some(qstate) = cache.load("qstate", key) {
         metrics.record_cache("qstate", true);
-        println!(
+        crate::progress!(
             "quantize[{}]: cache hit ({})",
             mrt.manifest.model,
             key.hex()
@@ -210,7 +276,7 @@ pub fn quantize_cached_keyed(
     metrics.record_cache("qstate", false);
     let ck = cache.stage_ckpt("qstate", key);
     let qstate = quantize_planned(
-        mrt, teacher, calib, qcfg, &plan, ck.as_ref(), metrics,
+        mrt, teacher, calib, qcfg, plan, ck.as_ref(), metrics,
     )?;
     cache.store("qstate", key, &qstate)?;
     Ok(qstate)
@@ -231,8 +297,11 @@ pub fn zsq(
     let teacher_hash = teacher.content_hash();
     let out =
         distill_cached_keyed(mrt, teacher, teacher_hash, dcfg, cache, metrics)?;
-    let qstate = quantize_cached_keyed(
+    let plan = plan_cached(
         mrt, teacher, teacher_hash, &out.images, qcfg, cache, metrics,
+    )?;
+    let qstate = quantize_cached_planned(
+        mrt, teacher, teacher_hash, &out.images, qcfg, &plan, cache, metrics,
     )?;
     let fp_acc = eval_fp32_metered(mrt, teacher, dataset, qcfg.par, metrics)?;
     let q_acc = eval_quantized_metered(
@@ -245,6 +314,8 @@ pub fn zsq(
         distill_secs: Some(metrics.timer_total("distill")),
         quant_secs: metrics.timer_total("quantize"),
         final_bns_loss: Some(out.final_loss),
+        fp_weight_bits: PrecisionPlan::fp32_bits(&mrt.manifest) as u64,
+        q_weight_bits: plan.payload_bits(&mrt.manifest) as u64,
     })
 }
 
@@ -261,7 +332,12 @@ pub fn fsq(
 ) -> Result<PipelineOutcome> {
     let mut rng = Pcg32::new(qcfg.seed ^ 0x5eed);
     let (calib, _) = dataset.calibration(&mut rng, samples);
-    let qstate = quantize_cached(mrt, teacher, &calib, qcfg, cache, metrics)?;
+    let teacher_hash = teacher.content_hash();
+    let plan =
+        plan_cached(mrt, teacher, teacher_hash, &calib, qcfg, cache, metrics)?;
+    let qstate = quantize_cached_planned(
+        mrt, teacher, teacher_hash, &calib, qcfg, &plan, cache, metrics,
+    )?;
     let fp_acc = eval_fp32_metered(mrt, teacher, dataset, qcfg.par, metrics)?;
     let q_acc = eval_quantized_metered(
         mrt, teacher, &qstate, dataset, qcfg.par, metrics,
@@ -273,6 +349,8 @@ pub fn fsq(
         distill_secs: None,
         quant_secs: metrics.timer_total("quantize"),
         final_bns_loss: None,
+        fp_weight_bits: PrecisionPlan::fp32_bits(&mrt.manifest) as u64,
+        q_weight_bits: plan.payload_bits(&mrt.manifest) as u64,
     })
 }
 
@@ -302,6 +380,8 @@ mod tests {
             distill_secs: None,
             quant_secs: 3.0,
             final_bns_loss: None,
+            fp_weight_bits: 32 * 1024,
+            q_weight_bits: 4 * 1024,
         };
         assert_eq!(out.distill_secs_cell(), "—");
         assert_eq!(out.bns_cell(), "—");
@@ -312,5 +392,38 @@ mod tests {
         };
         assert_eq!(full.distill_secs_cell(), "12");
         assert_eq!(full.bns_cell(), "0.123");
+    }
+
+    #[test]
+    fn outcome_json_serializes_options_as_null() {
+        let out = PipelineOutcome {
+            model: "toy".into(),
+            fp_acc: 0.5,
+            q_acc: 0.25,
+            distill_secs: None,
+            quant_secs: 3.0,
+            final_bns_loss: None,
+            fp_weight_bits: 8 * 8 * 1024,
+            q_weight_bits: 8 * 1024,
+        };
+        let text = out.to_json(None).render();
+        assert!(text.contains("\"distill_secs\":null"), "{text}");
+        assert!(text.contains("\"final_bns_loss\":null"), "{text}");
+        assert!(text.contains("\"model\":\"toy\""), "{text}");
+        assert!(text.contains("\"fp_weight_kib\":8"), "{text}");
+        assert!(!text.contains("cache"), "{text}");
+        // round-trips through the parser
+        assert!(Json::parse(&text).is_ok());
+
+        let stats = CacheStats { hits: 2, misses: 1, stores: 1 };
+        let with_cache = PipelineOutcome {
+            distill_secs: Some(1.5),
+            final_bns_loss: Some(0.25),
+            ..out
+        }
+        .to_json(Some(&stats))
+        .render();
+        assert!(with_cache.contains("\"distill_secs\":1.5"), "{with_cache}");
+        assert!(with_cache.contains("\"hits\":2"), "{with_cache}");
     }
 }

@@ -159,7 +159,7 @@ pub fn pretrain_ck(
     let (h2d, d2h) = dev.transfer_bytes();
     metrics.record_transfers("pretrain", cfg.steps, h2d, d2h);
     let secs = metrics.stop("pretrain");
-    println!(
+    crate::progress!(
         "pretrain[{}]: {} steps in {:.1}s  loss={:.3} acc={:.3}",
         m.model,
         cfg.steps,
@@ -181,9 +181,14 @@ pub fn teacher_cached(
     metrics: &mut Metrics,
 ) -> Result<Store> {
     let key = crate::artifacts::pretrain_key(&mrt.manifest, cfg);
+    // claim first (DESIGN.md §11): a concurrent run computing the same
+    // teacher holds the lock; once it releases, the lookup below turns
+    // this run's compute into a cache hit — and every stage performs
+    // exactly one counted lookup
+    let _claim = cache.claim("teacher", key)?;
     if let Some(s) = cache.load("teacher", key) {
         metrics.record_cache("teacher", true);
-        println!(
+        crate::progress!(
             "teacher[{}]: cache hit ({})",
             mrt.manifest.model,
             key.hex()
@@ -210,12 +215,12 @@ pub fn teacher_or_pretrain(
     let ckpt = runs_dir.join(format!("teacher_{}.bin", mrt.manifest.model));
     if ckpt.exists() {
         let s = Store::load(&ckpt)?;
-        println!("teacher[{}]: loaded {:?}", mrt.manifest.model, ckpt);
+        crate::progress!("teacher[{}]: loaded {:?}", mrt.manifest.model, ckpt);
         return Ok(s);
     }
     let teacher = pretrain(mrt, dataset, cfg, metrics)?;
     std::fs::create_dir_all(runs_dir)?;
     teacher.save(&ckpt)?;
-    println!("teacher[{}]: saved {:?}", mrt.manifest.model, ckpt);
+    crate::progress!("teacher[{}]: saved {:?}", mrt.manifest.model, ckpt);
     Ok(teacher)
 }

@@ -486,7 +486,7 @@ pub fn resolve_plan(
             }
             let plan = pareto_plan(m, &sens, cfg.abits, p)?;
             let secs = metrics.stop("plan");
-            println!(
+            crate::progress!(
                 "plan[{}]: pareto target {:.2} -> {:.1}% of FP32 \
                  ({probed} probes in {secs:.1}s)",
                 m.model,
@@ -494,7 +494,9 @@ pub fn resolve_plan(
                 100.0 * plan.payload_bits(m) as f64
                     / PrecisionPlan::fp32_bits(m).max(1) as f64,
             );
-            print!("{}", plan.render(m));
+            // one multi-line progress write: the rendered table cannot
+            // shear across concurrent runs
+            crate::progress!("{}", plan.render(m).trim_end());
             Ok(plan)
         }
     }
@@ -640,7 +642,7 @@ pub fn quantize_planned(
             d2h_total += out.transfer.1;
             ckpt_writes += out.ckpt_writes;
             ckpt_bytes += out.ckpt_bytes;
-            println!(
+            crate::progress!(
                 "quantize[{} {label}] block {}/{}: rec {:.5}",
                 m.model, out.block + 1, nb, out.last_rec
             );
@@ -658,7 +660,7 @@ pub fn quantize_planned(
     }
     let secs = metrics.stop("quantize");
     let rate = metrics.throughput("quantize", "blocks", nb, secs);
-    println!(
+    crate::progress!(
         "quantize[{} {label}]: {} blocks x {} steps in {:.1}s ({rate:.2} blocks/sec)",
         m.model, nb, cfg.steps_per_block, secs
     );

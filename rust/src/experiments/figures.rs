@@ -1,11 +1,14 @@
 //! Figure harnesses (paper evaluation + appendix; index in DESIGN.md §4).
+//! Fig. 6's sample-count sweep runs as a declarative grid
+//! (DESIGN.md §11); the trace/energy figures keep their bespoke loops.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::{
     distill, eval_quantized, quantize, DistillCfg, DistillMode, Metrics,
     QuantCfg, RunConfig,
 };
+use crate::grid::{AxisValue, DataMode, GridOpts, QuantArm, RunGrid};
 use crate::runtime::Runtime;
 use crate::tensor::{checkerboard_energy, Pcg32};
 
@@ -47,37 +50,43 @@ pub fn fig5(cfg: &RunConfig) -> Result<()> {
 }
 
 /// Fig. 6 / Table A1 / Fig. A4: accuracy vs number of synthetic samples,
-/// for GENIE vs ZeroQ data (quantizer fixed).
+/// for GENIE vs ZeroQ data (quantizer fixed) — a samples × arm grid; the
+/// six cells share one teacher and one FP32 eval, and the scheduler
+/// interleaves the six syntheses/quantizations on the pool.
 pub fn fig6(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
-    let ctx = load_ctx(&rt, cfg, cfg.model.split(',').next().unwrap())?;
     let mut table = ResultTable::new(
         "fig6_sample_count",
         &["samples", "method", "top1"],
     );
-    let counts = [64usize, 128, 256];
-    for n in counts {
-        for (name, mode, swing) in [
-            ("ZeroQ", DistillMode::Direct, false),
-            ("GENIE", DistillMode::Genie, true),
-        ] {
-            let mut dcfg = cfg.distill.clone();
-            dcfg.mode = mode;
-            dcfg.swing = swing;
-            dcfg.samples = n;
-            let mut qcfg = cfg.quant.clone();
-            if mode == DistillMode::Direct {
-                qcfg = qcfg.adaround();
-            }
-            let mut metrics = Metrics::new();
-            let out = distill(&ctx.mrt, &ctx.teacher, &dcfg, &mut metrics)?;
-            let qstate =
-                quantize(&ctx.mrt, &ctx.teacher, &out.images, &qcfg, &mut metrics)?;
-            let acc =
-                eval_quantized(&ctx.mrt, &ctx.teacher, &qstate, &ctx.dataset)?;
-            println!("[fig6] {name} n={n}: {}", pct(acc));
-            table.row(vec![n.to_string(), name.into(), pct(acc)]);
-        }
+    let arms = vec![
+        AxisValue::Arm {
+            label: "ZeroQ".into(),
+            data: DataMode::Synthetic { mode: DistillMode::Direct, swing: false },
+            quant: QuantArm { adaround: true, no_drop: false },
+        },
+        AxisValue::Arm {
+            label: "GENIE".into(),
+            data: DataMode::Synthetic { mode: DistillMode::Genie, swing: true },
+            quant: QuantArm::default(),
+        },
+    ];
+    let grid = RunGrid::new()
+        .axis(
+            "samples",
+            [64usize, 128, 256].into_iter().map(AxisValue::Samples).collect(),
+        )
+        .axis("arm", arms);
+    let mut metrics = Metrics::new();
+    let out = crate::grid::execute(
+        &rt, cfg, &grid, &GridOpts::default(), &mut metrics,
+    )?;
+    for cell in &out.cells {
+        let o = cell.outcome.as_ref().context("fig6: missing outcome")?;
+        let n = cell.spec.distill.samples;
+        let name = cell.spec.coord("arm").unwrap_or("?");
+        println!("[fig6] {name} n={n}: {}", pct(o.q_acc));
+        table.row(vec![n.to_string(), name.into(), pct(o.q_acc)]);
     }
     table.print_and_save()
 }

@@ -3,8 +3,14 @@
 //! Models and budgets default to a single-CPU-core scale; override with
 //! e.g. `model=resnet14,mobilenetv2_t distill.steps=500 quant.steps=500`.
 //! Paper-vs-measured comparisons live in EXPERIMENTS.md.
+//!
+//! The sweep-shaped tables (2, 4, 5) and fig6 are declarative
+//! [`RunGrid`]s on the shared-artifact scheduler (DESIGN.md §11): the
+//! grid dedupes the teacher and every shared synthetic set across arms
+//! and interleaves the remaining cells on the exec pool, instead of the
+//! bespoke sequential loops these harnesses used to hand-roll.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::artifacts::ArtifactCache;
 use crate::coordinator::{
@@ -12,6 +18,9 @@ use crate::coordinator::{
     quantize, zsq, DistillCfg, DistillMode, Metrics, QuantCfg, RunConfig,
 };
 use crate::data::Dataset;
+use crate::grid::{
+    self, AxisValue, DataMode, GridOpts, QuantArm, RunGrid,
+};
 use crate::precision::sensitivity::{budget_bits, measure_sensitivity, pareto_plan};
 use crate::precision::PrecisionPlan;
 use crate::runtime::{ModelRt, Runtime};
@@ -25,6 +34,38 @@ use super::{pct, ResultTable};
 /// comma-separated list.
 fn models_of(cfg: &RunConfig) -> Vec<String> {
     cfg.model.split(',').map(|s| s.trim().to_string()).collect()
+}
+
+/// The model axis of a multi-model grid.
+fn model_axis(cfg: &RunConfig) -> Vec<AxisValue> {
+    models_of(cfg).into_iter().map(AxisValue::Model).collect()
+}
+
+/// One FP row per model, from the (deduplicated) FP32 eval of any cell
+/// of that model.
+fn fp_acc_of(out: &grid::GridOutcome, model: &str) -> Option<f32> {
+    out.cells
+        .iter()
+        .filter(|c| c.spec.model == model)
+        .find_map(|c| c.outcome.as_ref().map(|o| o.fp_acc))
+}
+
+/// One `ModelRt` per distinct model of a grid outcome (the post-grid
+/// harness passes — QAT sweeps, sensitivity probes — reuse these
+/// instead of reloading per cell).
+fn model_rts<'rt>(
+    rt: &'rt Runtime,
+    cfg: &RunConfig,
+    out: &grid::GridOutcome,
+) -> Result<std::collections::BTreeMap<String, ModelRt<'rt>>> {
+    let mut mrts = std::collections::BTreeMap::new();
+    for cell in &out.cells {
+        if !mrts.contains_key(&cell.spec.model) {
+            let mrt = ModelRt::load(rt, &cfg.artifacts, &cell.spec.model)?;
+            mrts.insert(cell.spec.model.clone(), mrt);
+        }
+    }
+    Ok(mrts)
 }
 
 pub(crate) struct Ctx<'a> {
@@ -65,59 +106,80 @@ fn arm(
     eval_quantized(&ctx.mrt, &ctx.teacher, &qstate, &ctx.dataset)
 }
 
-/// Table 2: the M1–M7 ablation (swing x generator x latents x GENIE-M).
+/// Table 2: the M1–M7 ablation (swing x generator x latents x GENIE-M)
+/// as a declarative grid — model × bits × arm. The M1/M3 pair shares a
+/// teacher with every arm, M5 and the GENIE-M-less M6 share synthetic
+/// sets with their quantizer-ablated twins, and the grid dispatches each
+/// shared stage once.
 pub fn table2(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
-    // low-bit panels: where the ablation spreads (the W4A4 panel of the
-    // paper saturates on the scaled task, see EXPERIMENTS.md)
-    let bit_settings = [(2u32, 4u32), (2, 2)];
     let mut table = ResultTable::new(
         "table2_ablation",
         &["bits", "arm", "swing", "gen", "z", "genie_m", "model", "top1"],
     );
-    for model in models_of(cfg) {
-        let ctx = load_ctx(&rt, cfg, &model)?;
-        println!("[table2] {model}: FP32 {}", pct(ctx.fp_acc));
-        for (w, a) in bit_settings {
-            // (name, mode, swing, genie_m)
-            let arms: [(&str, DistillMode, bool, bool); 7] = [
-                ("M1", DistillMode::Direct, false, false),
-                ("M2", DistillMode::Direct, false, true),
-                ("M3", DistillMode::Direct, true, false),
-                ("M4", DistillMode::Gba, false, false),
-                ("M5", DistillMode::Genie, false, false),
-                ("M6", DistillMode::Genie, true, false),
-                ("M7", DistillMode::Genie, true, true),
-            ];
-            for (name, mode, swing, genie_m) in arms {
-                let mut dcfg = cfg.distill.clone();
-                dcfg.mode = mode;
-                dcfg.swing = swing;
-                let mut qcfg = cfg.quant.clone();
-                qcfg.wbits = w;
-                qcfg.abits = a;
-                if !genie_m {
-                    qcfg = qcfg.adaround(); // AdaRound+QDrop baseline
-                }
-                let mut metrics = Metrics::new();
-                let acc = arm(&ctx, &dcfg, &qcfg, &mut metrics)?;
-                println!("[table2] {model} W{w}A{a} {name}: {}", pct(acc));
-                table.row(vec![
-                    format!("{w}/{a}"),
-                    name.into(),
-                    swing.to_string(),
-                    (mode != DistillMode::Direct).to_string(),
-                    (mode == DistillMode::Genie).to_string(),
-                    genie_m.to_string(),
-                    model.clone(),
-                    pct(acc),
-                ]);
-            }
-        }
+    // (name, mode, swing, genie_m)
+    let arm_defs: [(&str, DistillMode, bool, bool); 7] = [
+        ("M1", DistillMode::Direct, false, false),
+        ("M2", DistillMode::Direct, false, true),
+        ("M3", DistillMode::Direct, true, false),
+        ("M4", DistillMode::Gba, false, false),
+        ("M5", DistillMode::Genie, false, false),
+        ("M6", DistillMode::Genie, true, false),
+        ("M7", DistillMode::Genie, true, true),
+    ];
+    let arms: Vec<AxisValue> = arm_defs
+        .into_iter()
+        .map(|(name, mode, swing, genie_m)| AxisValue::Arm {
+            label: name.into(),
+            data: DataMode::Synthetic { mode, swing },
+            // non-GENIE-M arms fall back to AdaRound+QDrop
+            quant: QuantArm { adaround: !genie_m, no_drop: false },
+        })
+        .collect();
+    // low-bit panels: where the ablation spreads (the W4A4 panel of the
+    // paper saturates on the scaled task, see EXPERIMENTS.md)
+    let grid = RunGrid::new()
+        .axis("model", model_axis(cfg))
+        .axis("bits", vec![AxisValue::Bits(2, 4), AxisValue::Bits(2, 2)])
+        .axis("arm", arms);
+    let mut metrics = Metrics::new();
+    let out =
+        grid::execute(&rt, cfg, &grid, &GridOpts::default(), &mut metrics)?;
+
+    for cell in &out.cells {
+        let spec = &cell.spec;
+        let o = cell.outcome.as_ref().context("table2: missing outcome")?;
+        let (w, a) = (spec.quant.wbits, spec.quant.abits);
+        let name = spec.coord("arm").unwrap_or("?");
+        let (mode, swing) = match spec.data {
+            DataMode::Synthetic { mode, swing } => (mode, swing),
+            DataMode::Real => (DistillMode::Direct, false),
+        };
+        println!(
+            "[table2] {} W{w}A{a} {name}: {}",
+            spec.model,
+            pct(o.q_acc)
+        );
         table.row(vec![
-            "32/32".into(), "FP".into(), "-".into(), "-".into(), "-".into(),
-            "-".into(), model.clone(), pct(ctx.fp_acc),
+            format!("{w}/{a}"),
+            name.into(),
+            swing.to_string(),
+            (mode != DistillMode::Direct).to_string(),
+            (mode == DistillMode::Genie).to_string(),
+            // GENIE-M = learned step sizes (the AdaRound arms zero them)
+            (spec.quant.lr_sw != 0.0).to_string(),
+            spec.model.clone(),
+            pct(o.q_acc),
         ]);
+    }
+    for model in models_of(cfg) {
+        if let Some(fp) = fp_acc_of(&out, &model) {
+            println!("[table2] {model}: FP32 {}", pct(fp));
+            table.row(vec![
+                "32/32".into(), "FP".into(), "-".into(), "-".into(),
+                "-".into(), "-".into(), model, pct(fp),
+            ]);
+        }
     }
     table.print_and_save()
 }
@@ -226,65 +288,80 @@ pub fn table3(cfg: &RunConfig) -> Result<()> {
 }
 
 /// Table 4 (+ Table A2): PTQ (GENIE) vs netwise Min-Max QAT on the same
-/// synthetic data, including the sample-count sweep of Table A2.
+/// synthetic data, including the sample-count sweep of Table A2. The
+/// PTQ cells run as a grid (model × bits over one GENIE-D data node per
+/// model — the two bit panels share it); the QAT sweep then trains on
+/// the grid-materialized images of each cell.
 pub fn table4(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
     let mut table = ResultTable::new(
         "table4_ptq_vs_qat",
         &["bits", "method", "samples", "model", "top1"],
     );
-    for model in models_of(cfg) {
-        let ctx = load_ctx(&rt, cfg, &model)?;
-        for (w, a) in [(4u32, 4u32), (2, 4)] {
-            // shared GENIE-D synthetic data
-            let mut dcfg = cfg.distill.clone();
-            dcfg.mode = DistillMode::Genie;
-            dcfg.swing = true;
-            let mut metrics = Metrics::new();
-            let images = distill(&ctx.mrt, &ctx.teacher, &dcfg, &mut metrics)?.images;
+    let grid = RunGrid::new()
+        .axis("model", model_axis(cfg))
+        .axis("bits", vec![AxisValue::Bits(4, 4), AxisValue::Bits(2, 4)])
+        .axis(
+            "data",
+            vec![AxisValue::Data(DataMode::Synthetic {
+                mode: DistillMode::Genie,
+                swing: true,
+            })],
+        );
+    let opts = GridOpts {
+        keep_calib: true,
+        keep_teacher: true,
+        ..Default::default()
+    };
+    let mut metrics = Metrics::new();
+    let out = grid::execute(&rt, cfg, &grid, &opts, &mut metrics)?;
+    let dataset = Dataset::load(&cfg.artifacts)?;
+    let mrts = model_rts(&rt, cfg, &out)?;
 
-            // PTQ: GENIE-M
-            let mut qcfg = cfg.quant.clone();
-            qcfg.wbits = w;
-            qcfg.abits = a;
-            let qstate =
-                quantize(&ctx.mrt, &ctx.teacher, &images, &qcfg, &mut metrics)?;
-            let acc = eval_quantized(&ctx.mrt, &ctx.teacher, &qstate, &ctx.dataset)?;
-            println!("[table4] {model} W{w}A{a} GENIE(PTQ): {}", pct(acc));
+    for cell in &out.cells {
+        let spec = &cell.spec;
+        let o = cell.outcome.as_ref().context("table4: missing outcome")?;
+        let (w, a) = (spec.quant.wbits, spec.quant.abits);
+        let model = spec.model.clone();
+        println!("[table4] {model} W{w}A{a} GENIE(PTQ): {}", pct(o.q_acc));
+        table.row(vec![
+            format!("{w}/{a}"), "GENIE(PTQ)".into(),
+            spec.distill.samples.to_string(), model.clone(), pct(o.q_acc),
+        ]);
+
+        // QAT sweep over sample counts (Table A2 shape), on the grid's
+        // shared synthetic set (mult=1) and a doubled re-distill
+        let mrt = &mrts[&model];
+        let teacher =
+            cell.teacher.as_ref().context("table4: teacher not kept")?;
+        let images =
+            cell.calib.as_ref().context("table4: calib not kept")?;
+        for mult in [1usize, 2] {
+            let mut d2 = spec.distill.clone();
+            d2.samples = spec.distill.samples * mult;
+            let imgs = if mult == 1 {
+                images.clone()
+            } else {
+                distill(mrt, teacher, &d2, &mut metrics)?.images
+            };
+            let qat_cfg = QatCfg {
+                wbits: w,
+                abits: a,
+                steps: spec.quant.steps_per_block * mrt.manifest.num_blocks,
+                lr: 1e-4,
+                seed: cfg.seed ^ 0x9a7,
+            };
+            let student =
+                qat_train(mrt, teacher, &imgs, &qat_cfg, &mut metrics)?;
+            let acc = qat_eval(mrt, teacher, &student, &dataset, &qat_cfg)?;
+            println!(
+                "[table4] {model} W{w}A{a} MinMax-QAT ({} imgs): {}",
+                d2.samples, pct(acc)
+            );
             table.row(vec![
-                format!("{w}/{a}"), "GENIE(PTQ)".into(),
-                dcfg.samples.to_string(), model.clone(), pct(acc),
+                format!("{w}/{a}"), "MinMax-QAT".into(),
+                d2.samples.to_string(), model.clone(), pct(acc),
             ]);
-
-            // QAT sweep over sample counts (Table A2 shape)
-            for mult in [1usize, 2] {
-                let mut d2 = dcfg.clone();
-                d2.samples = dcfg.samples * mult;
-                let imgs = if mult == 1 {
-                    images.clone()
-                } else {
-                    distill(&ctx.mrt, &ctx.teacher, &d2, &mut metrics)?.images
-                };
-                let qat_cfg = QatCfg {
-                    wbits: w,
-                    abits: a,
-                    steps: cfg.quant.steps_per_block * ctx.mrt.manifest.num_blocks,
-                    lr: 1e-4,
-                    seed: cfg.seed ^ 0x9a7,
-                };
-                let student =
-                    qat_train(&ctx.mrt, &ctx.teacher, &imgs, &qat_cfg, &mut metrics)?;
-                let acc =
-                    qat_eval(&ctx.mrt, &ctx.teacher, &student, &ctx.dataset, &qat_cfg)?;
-                println!(
-                    "[table4] {model} W{w}A{a} MinMax-QAT ({} imgs): {}",
-                    d2.samples, pct(acc)
-                );
-                table.row(vec![
-                    format!("{w}/{a}"), "MinMax-QAT".into(),
-                    d2.samples.to_string(), model.clone(), pct(acc),
-                ]);
-            }
         }
     }
     table.print_and_save()
@@ -293,7 +370,8 @@ pub fn table4(cfg: &RunConfig) -> Result<()> {
 /// Per-layer precision-plan report (DESIGN.md §10): measure ZeroQ-style
 /// sensitivity on GENIE-D synthetic data, resolve the uniform and
 /// Pareto plans side by side, and tabulate per-layer bits, sensitivity
-/// and payload — plus a budget line per model.
+/// and payload — plus a budget line per model. The shared teacher +
+/// synthetic set per model come from a data-only grid (DESIGN.md §11).
 pub fn plan_report(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
     let mut table = ResultTable::new(
@@ -303,16 +381,31 @@ pub fn plan_report(cfg: &RunConfig) -> Result<()> {
             "abits", "pareto_kbits",
         ],
     );
-    for model in models_of(cfg) {
-        let ctx = load_ctx(&rt, cfg, &model)?;
-        let m = &ctx.mrt.manifest;
+    let grid = RunGrid::new().axis("model", model_axis(cfg)).axis(
+        "data",
+        vec![AxisValue::Data(DataMode::Synthetic {
+            mode: DistillMode::Genie,
+            swing: true,
+        })],
+    );
+    let opts = GridOpts {
+        data_only: true,
+        keep_calib: true,
+        keep_teacher: true,
+        ..Default::default()
+    };
+    let mut metrics = Metrics::new();
+    let out = grid::execute(&rt, cfg, &grid, &opts, &mut metrics)?;
+    let mrts = model_rts(&rt, cfg, &out)?;
+
+    for cell in &out.cells {
+        let model = cell.spec.model.clone();
+        let mrt = &mrts[&model];
+        let m = &mrt.manifest;
         let p = &cfg.quant.precision;
-        let mut metrics = Metrics::new();
-        let mut dcfg = cfg.distill.clone();
-        dcfg.mode = DistillMode::Genie;
-        dcfg.swing = true;
-        let images =
-            distill(&ctx.mrt, &ctx.teacher, &dcfg, &mut metrics)?.images;
+        let teacher =
+            cell.teacher.as_ref().context("plan: teacher not kept")?;
+        let images = cell.calib.as_ref().context("plan: calib not kept")?;
 
         let uniform =
             PrecisionPlan::uniform(m, cfg.quant.wbits, cfg.quant.abits,
@@ -326,9 +419,9 @@ pub fn plan_report(cfg: &RunConfig) -> Result<()> {
             ..p.clone()
         };
         let (sens, _pool) = measure_sensitivity(
-            &ctx.mrt,
-            &ctx.teacher,
-            &images,
+            mrt,
+            teacher,
+            images,
             &probe_cfg,
             cfg.quant.pnorm,
             cfg.quant.par,
@@ -365,41 +458,65 @@ pub fn plan_report(cfg: &RunConfig) -> Result<()> {
 }
 
 /// Table 5: FSQ on real data — AdaRound vs GENIE-M, +/- QDrop, at
-/// W4A4 / W2A4 / W3A3 / W2A2.
+/// W4A4 / W2A4 / W3A3 / W2A2 — as a grid over model × bits × quantizer
+/// arm with a real-data calibration source (the `genie fsq` draw), all
+/// sixteen cells of a model sharing one teacher and one FP32 eval.
 pub fn table5(cfg: &RunConfig) -> Result<()> {
     let rt = Runtime::cpu()?;
     let mut table = ResultTable::new(
         "table5_real_data",
         &["bits", "method", "model", "top1"],
     );
+    let arms: Vec<AxisValue> = [
+        ("AdaRound+NoDrop", QuantArm { adaround: true, no_drop: true }),
+        ("AdaRound+QDrop", QuantArm { adaround: true, no_drop: false }),
+        ("GENIE-M+NoDrop", QuantArm { adaround: false, no_drop: true }),
+        ("GENIE-M+QDrop", QuantArm { adaround: false, no_drop: false }),
+    ]
+    .into_iter()
+    .map(|(name, quant)| AxisValue::Arm {
+        label: name.into(),
+        data: DataMode::Real,
+        quant,
+    })
+    .collect();
+    let grid = RunGrid::new()
+        .axis("model", model_axis(cfg))
+        .axis(
+            "bits",
+            vec![
+                AxisValue::Bits(4, 4),
+                AxisValue::Bits(2, 4),
+                AxisValue::Bits(3, 3),
+                AxisValue::Bits(2, 2),
+            ],
+        )
+        .axis("arm", arms);
+    let mut metrics = Metrics::new();
+    let out =
+        grid::execute(&rt, cfg, &grid, &GridOpts::default(), &mut metrics)?;
+
+    for cell in &out.cells {
+        let spec = &cell.spec;
+        let o = cell.outcome.as_ref().context("table5: missing outcome")?;
+        let (w, a) = (spec.quant.wbits, spec.quant.abits);
+        let name = spec.coord("arm").unwrap_or("?");
+        println!(
+            "[table5] {} W{w}A{a} {name}: {}",
+            spec.model,
+            pct(o.q_acc)
+        );
+        table.row(vec![
+            format!("{w}/{a}"),
+            name.into(),
+            spec.model.clone(),
+            pct(o.q_acc),
+        ]);
+    }
     for model in models_of(cfg) {
-        let ctx = load_ctx(&rt, cfg, &model)?;
-        let mut rng = Pcg32::new(cfg.seed ^ 0x7ab5);
-        let (calib, _) = ctx.dataset.calibration(&mut rng, cfg.fsq_samples);
-        for (w, a) in [(4u32, 4), (2, 4), (3, 3), (2, 2)] {
-            let base = {
-                let mut q = cfg.quant.clone();
-                q.wbits = w;
-                q.abits = a;
-                q
-            };
-            let arms = [
-                ("AdaRound+NoDrop", base.clone().adaround().no_drop()),
-                ("AdaRound+QDrop", base.clone().adaround()),
-                ("GENIE-M+NoDrop", base.clone().no_drop()),
-                ("GENIE-M+QDrop", base.clone()),
-            ];
-            for (name, q) in arms {
-                let mut metrics = Metrics::new();
-                let qstate =
-                    quantize(&ctx.mrt, &ctx.teacher, &calib, &q, &mut metrics)?;
-                let acc =
-                    eval_quantized(&ctx.mrt, &ctx.teacher, &qstate, &ctx.dataset)?;
-                println!("[table5] {model} W{w}A{a} {name}: {}", pct(acc));
-                table.row(vec![format!("{w}/{a}"), name.into(), model.clone(), pct(acc)]);
-            }
+        if let Some(fp) = fp_acc_of(&out, &model) {
+            table.row(vec!["32/32".into(), "FP".into(), model, pct(fp)]);
         }
-        table.row(vec!["32/32".into(), "FP".into(), model.clone(), pct(ctx.fp_acc)]);
     }
     table.print_and_save()
 }

@@ -1,0 +1,983 @@
+//! Multi-run grid orchestrator (DESIGN.md §11): every paper result is a
+//! *grid* — Table 2 sweeps distill arms × quantizers, Table 5 sweeps
+//! bit-widths over real data, Fig. 6 sweeps sample counts — and this
+//! module turns such sweeps from hand-rolled sequential loops into one
+//! declarative object.
+//!
+//! A [`RunGrid`] is a list of [`Axis`]es (model × bits × data mode ×
+//! seed × samples × quantizer × precision, plus curated combo "arms");
+//! [`RunGrid::cells`] expands their cartesian product into fully
+//! resolved [`RunSpec`]s — each cell is exactly the configuration a
+//! standalone `genie run` with the same overrides would use, so a grid
+//! cell is bit-identical to the run executed alone. [`GridPlan::build`]
+//! then lowers the cells onto a stage DAG (teacher → data → quantize →
+//! evals) deduplicated on *spec keys* ([`crate::artifacts`]): every cell
+//! that agrees on the pretrain config shares one teacher node, every
+//! cell that agrees on the distill config shares one synthesis node —
+//! the grid dispatches shared work exactly once and overlaps the rest.
+//! The executor ([`run`]) walks the DAG in topological waves on the
+//! shared exec pool.
+//!
+//! Spec keys dedupe *within* one orchestrator invocation (fixed
+//! manifests + dataset); on-disk artifacts remain addressed by the
+//! content-hash keys of DESIGN.md §9, so a grid also cooperates with —
+//! and resumes from — everything previous single runs cached.
+
+pub mod run;
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{bail, Context, Result};
+
+use crate::artifacts::{self, ArtifactCache, CacheKey};
+use crate::coordinator::{
+    DistillCfg, DistillMode, PretrainCfg, QuantCfg, RunConfig,
+};
+use crate::data::Dataset;
+use crate::precision::{validate_bits, Policy, PrecisionPlan};
+use crate::runtime::Manifest;
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+pub use run::{
+    execute, execute_cells, CellOutcome, GridOpts, GridOutcome, GridStats,
+};
+
+/// Where a cell's calibration data comes from: GENIE-D synthesis (zsq)
+/// or real samples (fsq).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataMode {
+    Synthetic { mode: DistillMode, swing: bool },
+    Real,
+}
+
+impl DataMode {
+    pub fn is_real(&self) -> bool {
+        matches!(self, DataMode::Real)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DataMode::Synthetic { mode, swing } => {
+                format!(
+                    "{}{}",
+                    mode.as_str(),
+                    if *swing { "" } else { "+noswing" }
+                )
+            }
+            DataMode::Real => "real".into(),
+        }
+    }
+}
+
+/// The quantizer ablation arm of a cell: GENIE-M (learned step sizes)
+/// vs the AdaRound baseline, with or without QDrop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QuantArm {
+    pub adaround: bool,
+    pub no_drop: bool,
+}
+
+impl QuantArm {
+    pub fn label(&self) -> String {
+        let base = if self.adaround { "adaround" } else { "genie_m" };
+        if self.no_drop {
+            format!("{base}+nodrop")
+        } else {
+            base.into()
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<QuantArm> {
+        let mut arm = QuantArm::default();
+        for part in s.split('+') {
+            match part.trim() {
+                "genie_m" | "geniem" => arm.adaround = false,
+                "adaround" => arm.adaround = true,
+                "qdrop" => arm.no_drop = false,
+                "nodrop" => arm.no_drop = true,
+                other => bail!(
+                    "unknown quantizer arm '{other}' \
+                     (want genie_m|adaround[+qdrop|+nodrop])"
+                ),
+            }
+        }
+        Ok(arm)
+    }
+
+    fn apply(&self, q: &mut QuantCfg) {
+        if self.adaround {
+            *q = q.clone().adaround();
+        }
+        if self.no_drop {
+            *q = q.clone().no_drop();
+        }
+    }
+}
+
+/// One value of one grid axis. Applying a value patches the cell's
+/// [`RunSpec`]; the curated [`AxisValue::Arm`] patches several fields at
+/// once (Table 2's M1–M7).
+#[derive(Debug, Clone)]
+pub enum AxisValue {
+    Model(String),
+    /// (wbits, abits)
+    Bits(u32, u32),
+    Seed(u64),
+    /// Synthetic sample count (and fsq calibration count).
+    Samples(usize),
+    Data(DataMode),
+    Quantizer(QuantArm),
+    Precision(Policy),
+    Arm { label: String, data: DataMode, quant: QuantArm },
+}
+
+impl AxisValue {
+    pub fn label(&self) -> String {
+        match self {
+            AxisValue::Model(m) => m.clone(),
+            AxisValue::Bits(w, a) => format!("w{w}a{a}"),
+            AxisValue::Seed(s) => s.to_string(),
+            AxisValue::Samples(n) => n.to_string(),
+            AxisValue::Data(d) => d.label(),
+            AxisValue::Quantizer(q) => q.label(),
+            AxisValue::Precision(p) => p.as_str().into(),
+            AxisValue::Arm { label, .. } => label.clone(),
+        }
+    }
+
+    fn apply(&self, spec: &mut RunSpec) {
+        match self {
+            AxisValue::Model(m) => spec.model = m.clone(),
+            AxisValue::Bits(w, a) => {
+                spec.quant.wbits = *w;
+                spec.quant.abits = *a;
+            }
+            AxisValue::Seed(s) => spec.set_seed(*s),
+            AxisValue::Samples(n) => {
+                spec.distill.samples = *n;
+                spec.fsq_samples = *n;
+            }
+            AxisValue::Data(d) => spec.set_data(*d),
+            AxisValue::Quantizer(q) => q.apply(&mut spec.quant),
+            AxisValue::Precision(p) => spec.quant.precision.policy = *p,
+            AxisValue::Arm { data, quant, .. } => {
+                spec.set_data(*data);
+                quant.apply(&mut spec.quant);
+            }
+        }
+    }
+}
+
+/// One grid dimension: a name (the cell-coordinate key) and its values.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<AxisValue>,
+}
+
+/// One fully resolved grid cell — the exact configuration a standalone
+/// run with the same overrides would use.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub cell: usize,
+    pub model: String,
+    pub seed: u64,
+    pub pretrain: PretrainCfg,
+    pub data: DataMode,
+    pub distill: DistillCfg,
+    pub fsq_samples: usize,
+    pub quant: QuantCfg,
+    /// (axis name, value label) in axis order — the cell's coordinates.
+    pub coords: Vec<(String, String)>,
+}
+
+impl RunSpec {
+    /// The base cell: `cfg` verbatim, no axis applied.
+    pub fn base(cfg: &RunConfig) -> RunSpec {
+        RunSpec {
+            cell: 0,
+            model: cfg.model.split(',').next().unwrap_or("").trim().into(),
+            seed: cfg.seed,
+            pretrain: cfg.pretrain.clone(),
+            data: DataMode::Synthetic {
+                mode: cfg.distill.mode,
+                swing: cfg.distill.swing,
+            },
+            distill: cfg.distill.clone(),
+            fsq_samples: cfg.fsq_samples,
+            quant: cfg.quant.clone(),
+            coords: Vec::new(),
+        }
+    }
+
+    /// Re-seed the cell exactly like `RunConfig::set("seed", ..)` fans
+    /// the master seed into the phase configs — a grid cell at seed `s`
+    /// must match `genie run seed=s` bit for bit.
+    pub fn set_seed(&mut self, s: u64) {
+        self.seed = s;
+        self.pretrain.seed = s ^ 1;
+        self.distill.seed = s ^ 2;
+        self.quant.seed = s ^ 3;
+    }
+
+    fn set_data(&mut self, d: DataMode) {
+        self.data = d;
+        if let DataMode::Synthetic { mode, swing } = d {
+            self.distill.mode = mode;
+            self.distill.swing = swing;
+        }
+    }
+
+    /// "bits=w2a4 seed=7" — the cell's coordinates, or `cell<i>` for an
+    /// axis-less grid.
+    pub fn label(&self) -> String {
+        if self.coords.is_empty() {
+            return format!("cell{}", self.cell);
+        }
+        self.coords
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// The cell's value label on one axis (row extraction in the table
+    /// harnesses).
+    pub fn coord(&self, axis: &str) -> Option<&str> {
+        self.coords
+            .iter()
+            .find(|(k, _)| k == axis)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A declarative run grid: axes over a base [`RunConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct RunGrid {
+    pub axes: Vec<Axis>,
+}
+
+impl RunGrid {
+    pub fn new() -> RunGrid {
+        RunGrid { axes: Vec::new() }
+    }
+
+    /// Add one axis (builder style).
+    pub fn axis(mut self, name: &str, values: Vec<AxisValue>) -> RunGrid {
+        self.axes.push(Axis { name: name.into(), values });
+        self
+    }
+
+    /// Parse one CLI `--axis name=v1,v2,...` argument. Bits accept `4`,
+    /// `2/4` or `w2a4`; data accepts distill modes (`genie`, `gba`,
+    /// `direct`, optionally `+noswing`) and `real`/`fsq`; quantizer
+    /// accepts `genie_m`/`adaround` (`+qdrop`/`+nodrop`).
+    pub fn parse_axis(&mut self, arg: &str, base: &RunConfig) -> Result<()> {
+        let Some((name, csv)) = arg.split_once('=') else {
+            bail!("--axis wants name=v1,v2,..., got '{arg}'");
+        };
+        let name = name.trim();
+        let toks: Vec<&str> =
+            csv.split(',').map(str::trim).filter(|t| !t.is_empty()).collect();
+        if toks.is_empty() {
+            bail!("axis '{name}' has no values");
+        }
+        let mut values = Vec::with_capacity(toks.len());
+        for t in &toks {
+            values.push(parse_axis_value(name, t, base)?);
+        }
+        self.axes.push(Axis { name: name.into(), values });
+        Ok(())
+    }
+
+    /// Expand the cartesian product of the axes over the base config.
+    /// The first axis is the outermost loop, so rows come out in the
+    /// order the axes were declared.
+    pub fn cells(&self, base: &RunConfig) -> Result<Vec<RunSpec>> {
+        let mut seen = std::collections::HashSet::new();
+        for ax in &self.axes {
+            if ax.values.is_empty() {
+                bail!("axis '{}' has no values", ax.name);
+            }
+            if !seen.insert(ax.name.as_str()) {
+                bail!("duplicate axis '{}'", ax.name);
+            }
+        }
+        let total: usize =
+            self.axes.iter().map(|a| a.values.len()).product::<usize>().max(1);
+        let mut cells = Vec::with_capacity(total);
+        for i in 0..total {
+            let mut spec = RunSpec::base(base);
+            spec.cell = i;
+            let mut stride = total;
+            for ax in &self.axes {
+                stride /= ax.values.len();
+                let v = &ax.values[(i / stride) % ax.values.len()];
+                v.apply(&mut spec);
+                spec.coords.push((ax.name.clone(), v.label()));
+            }
+            cells.push(spec);
+        }
+        Ok(cells)
+    }
+}
+
+fn parse_axis_value(
+    name: &str,
+    tok: &str,
+    base: &RunConfig,
+) -> Result<AxisValue> {
+    let int = |t: &str| -> Result<u64> {
+        t.parse::<u64>()
+            .with_context(|| format!("bad value '{t}' for axis '{name}'"))
+    };
+    Ok(match name {
+        "model" => AxisValue::Model(tok.into()),
+        "bits" => {
+            let (w, a) = parse_bits(tok)?;
+            AxisValue::Bits(w, a)
+        }
+        "seed" => AxisValue::Seed(int(tok)?),
+        "samples" => {
+            let n = int(tok)? as usize;
+            anyhow::ensure!(n > 0, "samples axis value must be > 0");
+            AxisValue::Samples(n)
+        }
+        "data" | "mode" => AxisValue::Data(parse_data(tok, base)?),
+        "quant" | "quantizer" => AxisValue::Quantizer(QuantArm::parse(tok)?),
+        "precision" => AxisValue::Precision(Policy::parse(tok)?),
+        other => bail!(
+            "unknown axis '{other}' \
+             (want model|bits|seed|samples|data|quant|precision)"
+        ),
+    })
+}
+
+/// `4` → (4,4); `2/4` → (2,4); `w2a4` → (2,4). Validated 1..=8.
+pub fn parse_bits(tok: &str) -> Result<(u32, u32)> {
+    let parse_one = |t: &str| -> Result<u32> {
+        let b = t
+            .parse::<u32>()
+            .with_context(|| format!("bad bit-width '{t}'"))?;
+        validate_bits("bits", b)
+    };
+    if let Some(rest) = tok.strip_prefix('w') {
+        let Some((w, a)) = rest.split_once('a') else {
+            bail!("bad bits value '{tok}' (want B, W/A or wWaA)");
+        };
+        return Ok((parse_one(w)?, parse_one(a)?));
+    }
+    if let Some((w, a)) = tok.split_once('/') {
+        return Ok((parse_one(w)?, parse_one(a)?));
+    }
+    let b = parse_one(tok)?;
+    Ok((b, b))
+}
+
+fn parse_data(tok: &str, base: &RunConfig) -> Result<DataMode> {
+    if matches!(tok, "real" | "fsq") {
+        return Ok(DataMode::Real);
+    }
+    let (mode_tok, swing) = match tok.split_once('+') {
+        Some((m, "swing")) => (m, true),
+        Some((m, "noswing")) => (m, false),
+        Some((_, other)) => {
+            bail!("bad data suffix '+{other}' (want +swing|+noswing)")
+        }
+        None => (tok, base.distill.swing),
+    };
+    Ok(DataMode::Synthetic { mode: DistillMode::parse(mode_tok)?, swing })
+}
+
+/// One deduplicated stage of the merged cross-run DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Teacher,
+    Distill,
+    Quantize,
+    EvalFp,
+    EvalQ,
+}
+
+impl StageKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StageKind::Teacher => "teacher",
+            StageKind::Distill => "distill",
+            StageKind::Quantize => "quantize",
+            StageKind::EvalFp => "eval_fp32",
+            StageKind::EvalQ => "eval_quant",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StageNode {
+    pub kind: StageKind,
+    /// Spec key the node deduplicates on (never addresses a file).
+    pub spec: CacheKey,
+    pub label: String,
+    /// Node indices that must complete first (always < this node's).
+    pub deps: Vec<usize>,
+    /// Cells served by this node (≥ 2 ⇒ deduplicated shared work).
+    pub cells: Vec<usize>,
+}
+
+/// The lowered grid: cells plus their merged, deduplicated stage DAG.
+#[derive(Debug)]
+pub struct GridPlan {
+    pub cells: Vec<RunSpec>,
+    pub nodes: Vec<StageNode>,
+    /// Per cell: its teacher node.
+    pub teacher_of: Vec<usize>,
+    /// Per cell: its distill node (`None` for real-data cells).
+    pub distill_of: Vec<Option<usize>>,
+    /// Per cell: quantize / eval nodes (`None` when built data-only).
+    pub quantize_of: Vec<Option<usize>>,
+    pub evalfp_of: Vec<Option<usize>>,
+    pub evalq_of: Vec<Option<usize>>,
+}
+
+impl GridPlan {
+    /// Lower cells onto the deduplicated stage DAG. `data_only` stops
+    /// after the calibration data (the harness mode for reports that
+    /// only need the shared synthetic sets). Nodes come out in
+    /// topological order.
+    pub fn build(
+        cells: Vec<RunSpec>,
+        manifests: &BTreeMap<String, Manifest>,
+        data_only: bool,
+    ) -> Result<GridPlan> {
+        let n = cells.len();
+        let mut plan = GridPlan {
+            cells,
+            nodes: Vec::new(),
+            teacher_of: vec![0; n],
+            distill_of: vec![None; n],
+            quantize_of: vec![None; n],
+            evalfp_of: vec![None; n],
+            evalq_of: vec![None; n],
+        };
+        let mut by_spec: HashMap<u64, usize> = HashMap::new();
+        let mut intern = |nodes: &mut Vec<StageNode>,
+                          kind: StageKind,
+                          spec: CacheKey,
+                          label: String,
+                          deps: Vec<usize>,
+                          cell: usize|
+         -> usize {
+            let idx = *by_spec.entry(spec.0).or_insert_with(|| {
+                nodes.push(StageNode {
+                    kind,
+                    spec,
+                    label,
+                    deps,
+                    cells: Vec::new(),
+                });
+                nodes.len() - 1
+            });
+            if nodes[idx].cells.last() != Some(&cell) {
+                nodes[idx].cells.push(cell);
+            }
+            idx
+        };
+
+        for c in 0..n {
+            let spec = plan.cells[c].clone();
+            let m = manifests.get(&spec.model).with_context(|| {
+                format!("grid: no manifest for model '{}'", spec.model)
+            })?;
+            let tspec = artifacts::pretrain_key(m, &spec.pretrain);
+            let t = intern(
+                &mut plan.nodes,
+                StageKind::Teacher,
+                tspec,
+                format!(
+                    "teacher[{}] steps={} seed={}",
+                    spec.model, spec.pretrain.steps, spec.pretrain.seed
+                ),
+                Vec::new(),
+                c,
+            );
+            plan.teacher_of[c] = t;
+
+            let calib_spec = match spec.data {
+                DataMode::Synthetic { .. } => {
+                    let dspec =
+                        artifacts::distill_spec_key(m, &spec.distill, tspec);
+                    let d = intern(
+                        &mut plan.nodes,
+                        StageKind::Distill,
+                        dspec,
+                        format!(
+                            "distill[{}] {} x{} steps={} seed={}",
+                            spec.model,
+                            spec.data.label(),
+                            spec.distill.samples,
+                            spec.distill.steps,
+                            spec.distill.seed
+                        ),
+                        vec![t],
+                        c,
+                    );
+                    plan.distill_of[c] = Some(d);
+                    dspec
+                }
+                DataMode::Real => artifacts::real_calib_spec_key(
+                    spec.fsq_samples,
+                    spec.quant.seed ^ 0x5eed,
+                ),
+            };
+            if data_only {
+                continue;
+            }
+
+            let qspec =
+                artifacts::quantize_spec_key(m, &spec.quant, tspec, calib_spec);
+            let mut qdeps = vec![t];
+            if let Some(d) = plan.distill_of[c] {
+                qdeps.push(d);
+            }
+            let q = intern(
+                &mut plan.nodes,
+                StageKind::Quantize,
+                qspec,
+                format!(
+                    "quantize[{}] w{}a{} {} steps={} seed={}",
+                    spec.model,
+                    spec.quant.wbits,
+                    spec.quant.abits,
+                    spec.quant.precision.policy.as_str(),
+                    spec.quant.steps_per_block,
+                    spec.quant.seed
+                ),
+                qdeps,
+                c,
+            );
+            plan.quantize_of[c] = Some(q);
+
+            let efp = intern(
+                &mut plan.nodes,
+                StageKind::EvalFp,
+                artifacts::eval_fp_spec_key(m, tspec),
+                format!("eval_fp32[{}]", spec.model),
+                vec![t],
+                c,
+            );
+            plan.evalfp_of[c] = Some(efp);
+            let eq = intern(
+                &mut plan.nodes,
+                StageKind::EvalQ,
+                artifacts::eval_q_spec_key(m, qspec),
+                format!(
+                    "eval_quant[{}] w{}a{}",
+                    spec.model, spec.quant.wbits, spec.quant.abits
+                ),
+                vec![t, q],
+                c,
+            );
+            plan.evalq_of[c] = Some(eq);
+        }
+        Ok(plan)
+    }
+
+    /// Dependency lists in [`crate::exec::waves`] shape.
+    pub fn deps(&self) -> Vec<Vec<usize>> {
+        self.nodes.iter().map(|n| n.deps.clone()).collect()
+    }
+
+    /// Stage count a naive cell-by-cell execution would run (the dedupe
+    /// baseline the dry run reports against).
+    pub fn naive_stages(&self) -> usize {
+        self.nodes.iter().map(|n| n.cells.len()).sum()
+    }
+
+    /// Node count by kind.
+    pub fn count(&self, kind: StageKind) -> usize {
+        self.nodes.iter().filter(|n| n.kind == kind).count()
+    }
+
+    /// Best-effort cache resolution for the dry run: walk the DAG in
+    /// topo order resolving each node's *content* key from cached
+    /// upstream artifacts. [`Cached::Unknown`] means an upstream must
+    /// run first, so the content key (and thus the hit) is undecidable
+    /// without executing.
+    pub fn resolve_cached(
+        &self,
+        manifests: &BTreeMap<String, Manifest>,
+        cache: &ArtifactCache,
+        dataset: Option<&Dataset>,
+    ) -> Vec<Cached> {
+        let mut out = vec![Cached::Run; self.nodes.len()];
+        // per teacher node: the cached teacher's content hash
+        let mut teacher_hash: HashMap<usize, u64> = HashMap::new();
+        // per distill node: the cached synthetic images
+        let mut images: HashMap<usize, Tensor> = HashMap::new();
+
+        for (i, node) in self.nodes.iter().enumerate() {
+            // any cell of the node carries the configs that key it
+            let cell = &self.cells[node.cells[0]];
+            let Some(m) = manifests.get(&cell.model) else { continue };
+            match node.kind {
+                StageKind::Teacher => {
+                    if !cache.is_enabled() {
+                        continue;
+                    }
+                    if let Ok(s) = Store::load(cache.path("teacher", node.spec))
+                    {
+                        out[i] = Cached::Hit;
+                        teacher_hash.insert(i, s.content_hash());
+                    }
+                }
+                StageKind::Distill => {
+                    let Some(&th) = teacher_hash.get(&node.deps[0]) else {
+                        out[i] = Cached::Unknown;
+                        continue;
+                    };
+                    let key = artifacts::distill_key(m, &cell.distill, th);
+                    match Store::load(cache.path("distill", key)) {
+                        Ok(art) => {
+                            if let Ok(t) = art.get("images") {
+                                images.insert(i, t.clone());
+                            }
+                            out[i] = Cached::Hit;
+                        }
+                        Err(_) => out[i] = Cached::Run,
+                    }
+                }
+                StageKind::Quantize => {
+                    let Some(&th) = teacher_hash.get(&node.deps[0]) else {
+                        out[i] = Cached::Unknown;
+                        continue;
+                    };
+                    let calib: Option<Tensor> = match cell.data {
+                        DataMode::Synthetic { .. } => {
+                            images.get(&node.deps[1]).cloned()
+                        }
+                        DataMode::Real => dataset.map(|ds| {
+                            let mut rng =
+                                Pcg32::new(cell.quant.seed ^ 0x5eed);
+                            ds.calibration(&mut rng, cell.fsq_samples).0
+                        }),
+                    };
+                    let Some(calib) = calib else {
+                        out[i] = Cached::Unknown;
+                        continue;
+                    };
+                    let plan = match cell.quant.precision.policy {
+                        Policy::Uniform => PrecisionPlan::uniform(
+                            m,
+                            cell.quant.wbits,
+                            cell.quant.abits,
+                            cell.quant.precision.granularity,
+                        )
+                        .and_then(|p| {
+                            p.with_first_last(
+                                cell.quant.precision.first_last_bits,
+                            )
+                        })
+                        .ok(),
+                        Policy::Pareto => {
+                            let pk = artifacts::plan_key(
+                                m, &cell.quant, th, &calib,
+                            );
+                            Store::load(cache.path("plan", pk))
+                                .ok()
+                                .and_then(|s| {
+                                    PrecisionPlan::from_store(m, &s).ok()
+                                })
+                        }
+                    };
+                    let Some(plan) = plan else {
+                        out[i] = Cached::Unknown;
+                        continue;
+                    };
+                    let key = artifacts::quantize_key(
+                        m, &cell.quant, th, &calib, &plan,
+                    );
+                    if Store::load(cache.path("qstate", key)).is_ok() {
+                        out[i] = Cached::Hit;
+                    }
+                }
+                // evals have no artifacts; they always execute
+                StageKind::EvalFp | StageKind::EvalQ => out[i] = Cached::Run,
+            }
+        }
+        out
+    }
+
+    /// Render the resolved DAG for `--dry-run`: cells, deduplicated
+    /// stages with the cells they serve, and the expected cache
+    /// disposition of each.
+    pub fn render(
+        &self,
+        manifests: &BTreeMap<String, Manifest>,
+        cache: &ArtifactCache,
+        dataset: Option<&Dataset>,
+    ) -> String {
+        let cached = self.resolve_cached(manifests, cache, dataset);
+        let mut s = String::new();
+        s.push_str(&format!(
+            "grid: {} cells, {} stage nodes ({} naive; {} deduplicated \
+             away)\n",
+            self.cells.len(),
+            self.nodes.len(),
+            self.naive_stages(),
+            self.naive_stages() - self.nodes.len(),
+        ));
+        for c in &self.cells {
+            s.push_str(&format!("  cell {}: {}\n", c.cell, c.label()));
+        }
+        let waves = crate::exec::waves(&self.deps());
+        s.push_str(&format!("schedule: {} waves\n", waves.len()));
+        for (w, wave) in waves.iter().enumerate() {
+            s.push_str(&format!("  wave {w}:\n"));
+            for &i in wave {
+                let node = &self.nodes[i];
+                s.push_str(&format!(
+                    "    [{i}] {} ({} cell{}) — {}\n",
+                    node.label,
+                    node.cells.len(),
+                    if node.cells.len() == 1 { "" } else { "s" },
+                    cached[i].as_str(),
+                ));
+            }
+        }
+        s
+    }
+}
+
+/// Dry-run cache disposition of one stage node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cached {
+    /// The artifact exists; the node will load, not compute.
+    Hit,
+    /// The node will compute (no artifact, or a stage with none).
+    Run,
+    /// Undecidable until an upstream runs (content key unresolved).
+    Unknown,
+}
+
+impl Cached {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Cached::Hit => "cached",
+            Cached::Run => "run",
+            Cached::Unknown => "run (upstream pending)",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::from_json_text(
+            r#"{
+                "model": "toy", "image": [16, 16, 3], "num_classes": 10,
+                "num_blocks": 2, "latent": 256,
+                "batch": {"train": 64},
+                "params": [], "bn": [], "qstate": [], "gen_params": [],
+                "quant_layers": [], "learnable": {"0": []},
+                "bounds": [], "entrypoints": {}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn manifests() -> BTreeMap<String, Manifest> {
+        let mut m = BTreeMap::new();
+        m.insert("toy".to_string(), toy_manifest());
+        m
+    }
+
+    fn base() -> RunConfig {
+        RunConfig { model: "toy".into(), ..Default::default() }
+    }
+
+    #[test]
+    fn cells_expand_cartesian_in_axis_order() {
+        let grid = RunGrid::new()
+            .axis(
+                "bits",
+                vec![AxisValue::Bits(4, 4), AxisValue::Bits(2, 4)],
+            )
+            .axis("seed", vec![AxisValue::Seed(0), AxisValue::Seed(1)]);
+        let cells = grid.cells(&base()).unwrap();
+        assert_eq!(cells.len(), 4);
+        // first axis outermost
+        assert_eq!(cells[0].label(), "bits=w4a4 seed=0");
+        assert_eq!(cells[1].label(), "bits=w4a4 seed=1");
+        assert_eq!(cells[2].label(), "bits=w2a4 seed=0");
+        assert_eq!(cells[3].quant.wbits, 2);
+        assert_eq!(cells[3].coord("seed"), Some("1"));
+        assert_eq!(cells[3].cell, 3);
+    }
+
+    #[test]
+    fn seed_axis_fans_out_like_runconfig() {
+        let grid = RunGrid::new().axis("seed", vec![AxisValue::Seed(99)]);
+        let cells = grid.cells(&base()).unwrap();
+        let mut want = base();
+        want.set("seed", "99").unwrap();
+        assert_eq!(cells[0].pretrain.seed, want.pretrain.seed);
+        assert_eq!(cells[0].distill.seed, want.distill.seed);
+        assert_eq!(cells[0].quant.seed, want.quant.seed);
+    }
+
+    #[test]
+    fn empty_grid_is_the_base_cell() {
+        let cells = RunGrid::new().cells(&base()).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].label(), "cell0");
+        assert_eq!(cells[0].quant.wbits, base().quant.wbits);
+    }
+
+    #[test]
+    fn duplicate_or_empty_axes_rejected() {
+        let dup = RunGrid::new()
+            .axis("seed", vec![AxisValue::Seed(0)])
+            .axis("seed", vec![AxisValue::Seed(1)]);
+        assert!(dup.cells(&base()).is_err());
+        let empty = RunGrid::new().axis("seed", vec![]);
+        assert!(empty.cells(&base()).is_err());
+    }
+
+    #[test]
+    fn parse_axis_forms() {
+        let b = base();
+        let mut g = RunGrid::new();
+        g.parse_axis("bits=4,2/4,w3a3", &b).unwrap();
+        g.parse_axis("seed=0,1", &b).unwrap();
+        g.parse_axis("data=genie,direct+noswing,real", &b).unwrap();
+        g.parse_axis("quant=genie_m,adaround+nodrop", &b).unwrap();
+        g.parse_axis("samples=64,128", &b).unwrap();
+        g.parse_axis("precision=uniform,pareto", &b).unwrap();
+        g.parse_axis("model=toy", &b).unwrap();
+        assert_eq!(g.axes.len(), 7);
+        assert_eq!(
+            g.axes[0].values.iter().map(|v| v.label()).collect::<Vec<_>>(),
+            vec!["w4a4", "w2a4", "w3a3"]
+        );
+        assert_eq!(g.axes[2].values[1].label(), "direct+noswing");
+        assert_eq!(g.axes[2].values[2].label(), "real");
+        assert_eq!(g.axes[3].values[1].label(), "adaround+nodrop");
+
+        assert!(RunGrid::new().parse_axis("bits=0", &b).is_err());
+        assert!(RunGrid::new().parse_axis("bits=9", &b).is_err());
+        assert!(RunGrid::new().parse_axis("nope=1", &b).is_err());
+        assert!(RunGrid::new().parse_axis("bits", &b).is_err());
+        assert!(RunGrid::new().parse_axis("samples=0", &b).is_err());
+        assert!(RunGrid::new().parse_axis("data=warp", &b).is_err());
+    }
+
+    #[test]
+    fn quant_arm_applies_ablation_fields() {
+        let mut spec = RunSpec::base(&base());
+        AxisValue::Quantizer(QuantArm { adaround: true, no_drop: true })
+            .apply(&mut spec);
+        assert_eq!(spec.quant.lr_sw, 0.0);
+        assert_eq!(spec.quant.lr_sa, 0.0);
+        assert_eq!(spec.quant.drop_p, 0.0);
+    }
+
+    #[test]
+    fn plan_dedupes_shared_teacher_and_distill() {
+        let grid = RunGrid::new().axis(
+            "bits",
+            vec![
+                AxisValue::Bits(4, 4),
+                AxisValue::Bits(3, 4),
+                AxisValue::Bits(2, 4),
+            ],
+        );
+        let cells = grid.cells(&base()).unwrap();
+        let plan = GridPlan::build(cells, &manifests(), false).unwrap();
+        // 3 cells share 1 teacher, 1 distill, 1 fp eval; quantize and
+        // quantized eval stay per-cell
+        assert_eq!(plan.count(StageKind::Teacher), 1);
+        assert_eq!(plan.count(StageKind::Distill), 1);
+        assert_eq!(plan.count(StageKind::EvalFp), 1);
+        assert_eq!(plan.count(StageKind::Quantize), 3);
+        assert_eq!(plan.count(StageKind::EvalQ), 3);
+        assert_eq!(plan.nodes.len(), 9);
+        assert_eq!(plan.naive_stages(), 3 * 5);
+        let t = plan.teacher_of[0];
+        assert_eq!(plan.nodes[t].cells, vec![0, 1, 2]);
+        // every cell maps to a node of the right kind
+        for c in 0..3 {
+            assert_eq!(plan.teacher_of[c], t);
+            assert_eq!(plan.distill_of[c], plan.distill_of[0]);
+            let q = plan.quantize_of[c].unwrap();
+            assert_eq!(plan.nodes[q].kind, StageKind::Quantize);
+            assert_eq!(plan.nodes[q].cells, vec![c]);
+        }
+        // deps are topologically consistent; waves accept them
+        let waves = crate::exec::waves(&plan.deps());
+        assert_eq!(waves.len(), 4, "teacher -> distill -> quantize -> evalq");
+    }
+
+    #[test]
+    fn different_seeds_split_the_distill_node() {
+        let grid = RunGrid::new()
+            .axis("seed", vec![AxisValue::Seed(0), AxisValue::Seed(1)]);
+        let cells = grid.cells(&base()).unwrap();
+        let plan = GridPlan::build(cells, &manifests(), false).unwrap();
+        // seed fans into pretrain/distill/quant, so nothing dedupes
+        assert_eq!(plan.count(StageKind::Teacher), 2);
+        assert_eq!(plan.count(StageKind::Distill), 2);
+    }
+
+    #[test]
+    fn real_data_cells_have_no_distill_node() {
+        let grid = RunGrid::new()
+            .axis("data", vec![AxisValue::Data(DataMode::Real)])
+            .axis(
+                "bits",
+                vec![AxisValue::Bits(4, 4), AxisValue::Bits(2, 4)],
+            );
+        let cells = grid.cells(&base()).unwrap();
+        assert!(cells.iter().all(|c| c.data.is_real()));
+        let plan = GridPlan::build(cells, &manifests(), false).unwrap();
+        assert_eq!(plan.count(StageKind::Distill), 0);
+        assert_eq!(plan.count(StageKind::Quantize), 2);
+        assert!(plan.distill_of.iter().all(|d| d.is_none()));
+    }
+
+    #[test]
+    fn data_only_plan_stops_at_the_images() {
+        let grid = RunGrid::new().axis(
+            "bits",
+            vec![AxisValue::Bits(4, 4), AxisValue::Bits(2, 4)],
+        );
+        let cells = grid.cells(&base()).unwrap();
+        let plan = GridPlan::build(cells, &manifests(), true).unwrap();
+        assert_eq!(plan.count(StageKind::Teacher), 1);
+        assert_eq!(plan.count(StageKind::Distill), 1);
+        assert_eq!(plan.count(StageKind::Quantize), 0);
+        assert!(plan.quantize_of.iter().all(|q| q.is_none()));
+    }
+
+    #[test]
+    fn dry_run_renders_cells_waves_and_dispositions() {
+        let grid = RunGrid::new().axis(
+            "bits",
+            vec![AxisValue::Bits(4, 4), AxisValue::Bits(2, 4)],
+        );
+        let cells = grid.cells(&base()).unwrap();
+        let plan = GridPlan::build(cells, &manifests(), false).unwrap();
+        let cache = ArtifactCache::disabled();
+        let text = plan.render(&manifests(), &cache, None);
+        assert!(text.contains("2 cells"), "{text}");
+        assert!(text.contains("deduplicated away"), "{text}");
+        assert!(text.contains("cell 0: bits=w4a4"), "{text}");
+        assert!(text.contains("teacher[toy]"), "{text}");
+        assert!(text.contains("(2 cells)"), "{text}");
+        assert!(text.contains("wave 0"), "{text}");
+        // nothing cached under a disabled cache: teacher runs, its
+        // dependents are pending on it
+        assert!(text.contains("— run"), "{text}");
+    }
+}

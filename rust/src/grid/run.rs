@@ -1,0 +1,568 @@
+//! Grid executor (DESIGN.md §11): walk the merged stage DAG in
+//! topological waves, running every ready stage — from *different* runs
+//! — concurrently on the shared exec pool.
+//!
+//! Each stage job is self-contained: it opens its own [`ArtifactCache`]
+//! handle on the shared cache dir (stage artifacts are content-addressed
+//! and claim-locked, so concurrent jobs cooperate instead of colliding),
+//! logs into its own [`Metrics`] sink, and tags its progress lines with
+//! the cell (`c3`) or `shared:<stage>` it serves. At the wave barrier
+//! the scheduler absorbs each job's metrics under a `cell<i>/` or
+//! `shared/...` prefix — one namespaced sink for the whole grid — and
+//! publishes the stage product for downstream waves.
+//!
+//! Determinism: stages are bit-identical for any worker count
+//! (DESIGN.md §5), the pool returns results in submission order, and a
+//! cell's configs are exactly what a standalone run with the same
+//! overrides would use — so every cell of a grid reproduces the same
+//! run executed alone, bit for bit (`tests/grid.rs`).
+//!
+//! Resume: an interrupted grid re-run walks the same DAG; finished
+//! stages are cache hits, the interrupted stage continues from its wip
+//! checkpoints (`--resume`), and only unfinished cells compute.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::artifacts::{ArtifactCache, CacheStats};
+use crate::coordinator::{
+    distill_cached_keyed, eval_fp32_metered, eval_quantized_metered,
+    plan_cached, quantize_cached_planned, teacher_cached, Metrics,
+    PipelineOutcome, RunConfig,
+};
+use crate::data::Dataset;
+use crate::exec::{run_jobs, PoolReport};
+use crate::precision::PrecisionPlan;
+use crate::runtime::json::Json;
+use crate::runtime::{Manifest, ModelRt, Runtime};
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+use super::{DataMode, GridPlan, RunGrid, RunSpec, StageKind};
+
+/// What the executor materializes beyond the per-cell outcomes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GridOpts {
+    /// Stop after the calibration data (teacher + distill nodes only);
+    /// outcomes are `None`. Harness mode for reports that consume the
+    /// shared synthetic sets directly.
+    pub data_only: bool,
+    /// Keep each cell's calibration tensor on the outcome.
+    pub keep_calib: bool,
+    /// Keep each cell's (shared) teacher store on the outcome.
+    pub keep_teacher: bool,
+    /// Keep each cell's optimized qstate on the outcome.
+    pub keep_qstate: bool,
+}
+
+/// One cell's results.
+#[derive(Debug)]
+pub struct CellOutcome {
+    pub spec: RunSpec,
+    /// `None` under [`GridOpts::data_only`].
+    pub outcome: Option<PipelineOutcome>,
+    /// The resolved precision plan (`None` under `data_only`).
+    pub plan: Option<PrecisionPlan>,
+    /// Requested via [`GridOpts::keep_calib`] (synthetic or real).
+    pub calib: Option<Tensor>,
+    /// Requested via [`GridOpts::keep_teacher`].
+    pub teacher: Option<Store>,
+    /// Requested via [`GridOpts::keep_qstate`].
+    pub qstate: Option<Store>,
+}
+
+/// Whole-grid accounting: DAG shape, dedupe, merged cache traffic.
+#[derive(Debug, Clone, Default)]
+pub struct GridStats {
+    pub cells: usize,
+    pub nodes: usize,
+    /// Stage count a naive cell-by-cell execution would run.
+    pub naive_stages: usize,
+    pub teacher_nodes: usize,
+    pub distill_nodes: usize,
+    pub quantize_nodes: usize,
+    pub waves: usize,
+    pub wall_secs: f64,
+    /// Cache traffic merged across every stage job.
+    pub cache: CacheStats,
+}
+
+impl GridStats {
+    /// Stages the dedupe removed relative to cell-by-cell execution.
+    pub fn dedup_saved(&self) -> usize {
+        self.naive_stages - self.nodes
+    }
+}
+
+#[derive(Debug)]
+pub struct GridOutcome {
+    pub cells: Vec<CellOutcome>,
+    pub stats: GridStats,
+}
+
+impl GridOutcome {
+    /// Machine-readable grid report for `genie grid --json`
+    /// (DESIGN.md §11): per-cell coordinates + outcome (null fields for
+    /// stages that did not run) and the dedupe/cache statistics.
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("cell", Json::num(c.spec.cell as f64)),
+                    ("label", Json::Str(c.spec.label())),
+                    ("model", Json::Str(c.spec.model.clone())),
+                    ("wbits", Json::num(c.spec.quant.wbits as f64)),
+                    ("abits", Json::num(c.spec.quant.abits as f64)),
+                    ("seed", Json::num(c.spec.seed as f64)),
+                    ("data", Json::Str(c.spec.data.label())),
+                    (
+                        "outcome",
+                        match &c.outcome {
+                            Some(o) => o.to_json(None),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let s = &self.stats;
+        Json::obj(vec![
+            ("cells", Json::Arr(cells)),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("cells", Json::num(s.cells as f64)),
+                    ("nodes", Json::num(s.nodes as f64)),
+                    ("naive_stages", Json::num(s.naive_stages as f64)),
+                    ("dedup_saved", Json::num(s.dedup_saved() as f64)),
+                    ("teacher_nodes", Json::num(s.teacher_nodes as f64)),
+                    ("distill_nodes", Json::num(s.distill_nodes as f64)),
+                    (
+                        "quantize_nodes",
+                        Json::num(s.quantize_nodes as f64),
+                    ),
+                    ("waves", Json::num(s.waves as f64)),
+                    ("wall_secs", Json::num(s.wall_secs)),
+                    (
+                        "cache",
+                        Json::obj(vec![
+                            ("hits", Json::num(s.cache.hits as f64)),
+                            ("misses", Json::num(s.cache.misses as f64)),
+                            ("stores", Json::num(s.cache.stores as f64)),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// One node's published product, read by downstream waves.
+#[derive(Debug)]
+enum NodeOut {
+    Teacher {
+        store: Store,
+        hash: u64,
+    },
+    Images {
+        images: Tensor,
+        final_loss: f32,
+        secs: f64,
+    },
+    Quant {
+        qstate: Store,
+        plan: PrecisionPlan,
+        /// Present when [`GridOpts::keep_calib`].
+        calib: Option<Tensor>,
+        secs: f64,
+    },
+    Acc(f32),
+}
+
+fn teacher_at(results: &[Option<NodeOut>], i: usize) -> Result<(&Store, u64)> {
+    match results[i].as_ref() {
+        Some(NodeOut::Teacher { store, hash }) => Ok((store, *hash)),
+        _ => bail!("grid: teacher node {i} not materialized"),
+    }
+}
+
+fn images_at(results: &[Option<NodeOut>], i: usize) -> Result<&Tensor> {
+    match results[i].as_ref() {
+        Some(NodeOut::Images { images, .. }) => Ok(images),
+        _ => bail!("grid: distill node {i} not materialized"),
+    }
+}
+
+fn quant_at(
+    results: &[Option<NodeOut>],
+    i: usize,
+) -> Result<(&Store, &PrecisionPlan, &Option<Tensor>, f64)> {
+    match results[i].as_ref() {
+        Some(NodeOut::Quant { qstate, plan, calib, secs }) => {
+            Ok((qstate, plan, calib, *secs))
+        }
+        _ => bail!("grid: quantize node {i} not materialized"),
+    }
+}
+
+fn acc_at(results: &[Option<NodeOut>], i: usize) -> Result<f32> {
+    match results[i].as_ref() {
+        Some(NodeOut::Acc(a)) => Ok(*a),
+        _ => bail!("grid: eval node {i} not materialized"),
+    }
+}
+
+fn open_job_cache(cfg: &RunConfig) -> Result<ArtifactCache> {
+    let mut cache = ArtifactCache::open(&cfg.cache_dir, cfg.cache, cfg.resume)?;
+    cache.set_checkpoint_every(cfg.checkpoint_every);
+    Ok(cache)
+}
+
+fn fold_stats(total: &mut CacheStats, job: &CacheStats) {
+    total.hits += job.hits;
+    total.misses += job.misses;
+    total.stores += job.stores;
+}
+
+/// Expand the grid over the base config and execute it.
+pub fn execute(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    grid: &RunGrid,
+    opts: &GridOpts,
+    metrics: &mut Metrics,
+) -> Result<GridOutcome> {
+    execute_cells(rt, cfg, grid.cells(cfg)?, opts, metrics)
+}
+
+/// Execute pre-expanded cells (the table harnesses build their cell
+/// lists through [`RunGrid::cells`] too; this entry just skips the
+/// re-expansion).
+pub fn execute_cells(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    cells: Vec<RunSpec>,
+    opts: &GridOpts,
+    metrics: &mut Metrics,
+) -> Result<GridOutcome> {
+    anyhow::ensure!(!cells.is_empty(), "grid: no cells to execute");
+    let t0 = std::time::Instant::now();
+
+    // one ModelRt per distinct model; one dataset for the testbed
+    let mut mrts: BTreeMap<String, ModelRt> = BTreeMap::new();
+    for c in &cells {
+        if !mrts.contains_key(&c.model) {
+            let mrt = ModelRt::load(rt, &cfg.artifacts, &c.model)
+                .with_context(|| format!("grid: load model '{}'", c.model))?;
+            mrts.insert(c.model.clone(), mrt);
+        }
+    }
+    let dataset = Dataset::load(&cfg.artifacts)?;
+    let manifests: BTreeMap<String, Manifest> = mrts
+        .iter()
+        .map(|(k, v)| (k.clone(), v.manifest.clone()))
+        .collect();
+
+    let plan = GridPlan::build(cells, &manifests, opts.data_only)?;
+    let waves = crate::exec::waves(&plan.deps());
+    crate::progress!(
+        "grid: {} cells -> {} stage nodes ({} deduplicated away), {} waves \
+         on {} workers",
+        plan.cells.len(),
+        plan.nodes.len(),
+        plan.naive_stages() - plan.nodes.len(),
+        waves.len(),
+        cfg.par.resolve(),
+    );
+
+    let mut results: Vec<Option<NodeOut>> = Vec::new();
+    results.resize_with(plan.nodes.len(), || None);
+    let mut cache_total = CacheStats::default();
+    let mut pool_total = PoolReport::default();
+
+    for wave in &waves {
+        let outs = {
+            let results_ref = &results;
+            let dataset = &dataset;
+            let plan_ref = &plan;
+            let jobs: Vec<_> = wave
+                .iter()
+                .map(|&i| {
+                    let node = &plan_ref.nodes[i];
+                    // any serving cell carries the configs that key the
+                    // node (equal spec key ⇒ equal configs for every
+                    // field the stage reads)
+                    let spec = &plan_ref.cells[node.cells[0]];
+                    let mrt = &mrts[&spec.model];
+                    move || -> Result<(NodeOut, Metrics, CacheStats)> {
+                        let mut jm = Metrics::new();
+                        let mut cache = open_job_cache(cfg)?;
+                        let tag = if node.cells.len() == 1 {
+                            format!("c{}", node.cells[0])
+                        } else {
+                            format!("shared:{}", node.kind.as_str())
+                        };
+                        let _tag = crate::progress::push_tag(&tag);
+                        let out = run_node(
+                            node.kind, spec, mrt, dataset, results_ref,
+                            node, opts, &mut cache, &mut jm,
+                        )?;
+                        Ok((out, jm, cache.stats().clone()))
+                    }
+                })
+                .collect();
+            let (outs, pool) = run_jobs(cfg.par, jobs)?;
+            pool_total.merge(&pool);
+            outs
+        };
+        // barrier: absorb job metrics under per-run namespaces and
+        // publish the products for the next wave
+        for (&i, (out, jm, cstats)) in wave.iter().zip(outs) {
+            let node = &plan.nodes[i];
+            let prefix = if node.cells.len() == 1 {
+                format!("cell{}/", node.cells[0])
+            } else {
+                format!("shared/{}{}/", node.kind.as_str(), i)
+            };
+            metrics.absorb(&prefix, jm);
+            fold_stats(&mut cache_total, &cstats);
+            results[i] = Some(out);
+        }
+    }
+    metrics.record_pool("grid", &pool_total);
+
+    // assemble per-cell outcomes
+    let mut out_cells = Vec::with_capacity(plan.cells.len());
+    for (c, spec) in plan.cells.iter().enumerate() {
+        let (tstore, _) = teacher_at(&results, plan.teacher_of[c])?;
+        let mut cell = CellOutcome {
+            spec: spec.clone(),
+            outcome: None,
+            plan: None,
+            calib: None,
+            teacher: opts.keep_teacher.then(|| tstore.clone()),
+            qstate: None,
+        };
+        if opts.data_only {
+            if opts.keep_calib {
+                if let Some(d) = plan.distill_of[c] {
+                    cell.calib = Some(images_at(&results, d)?.clone());
+                }
+            }
+            out_cells.push(cell);
+            continue;
+        }
+        let q = plan.quantize_of[c]
+            .with_context(|| format!("grid: cell {c} has no quantize node"))?;
+        let (qstate, qplan, calib, quant_secs) = quant_at(&results, q)?;
+        let fp_acc = acc_at(
+            &results,
+            plan.evalfp_of[c].context("grid: missing fp eval node")?,
+        )?;
+        let q_acc = acc_at(
+            &results,
+            plan.evalq_of[c].context("grid: missing quant eval node")?,
+        )?;
+        let (distill_secs, final_bns_loss) = match plan.distill_of[c] {
+            Some(d) => match results[d].as_ref() {
+                Some(NodeOut::Images { final_loss, secs, .. }) => {
+                    (Some(*secs), Some(*final_loss))
+                }
+                _ => (None, None),
+            },
+            None => (None, None),
+        };
+        let m = &manifests[&spec.model];
+        cell.outcome = Some(PipelineOutcome {
+            model: spec.model.clone(),
+            fp_acc,
+            q_acc,
+            distill_secs,
+            quant_secs,
+            final_bns_loss,
+            fp_weight_bits: PrecisionPlan::fp32_bits(m) as u64,
+            q_weight_bits: qplan.payload_bits(m) as u64,
+        });
+        cell.plan = Some(qplan.clone());
+        if opts.keep_calib {
+            cell.calib = calib.clone();
+        }
+        if opts.keep_qstate {
+            cell.qstate = Some(qstate.clone());
+        }
+        out_cells.push(cell);
+    }
+
+    let stats = GridStats {
+        cells: plan.cells.len(),
+        nodes: plan.nodes.len(),
+        naive_stages: plan.naive_stages(),
+        teacher_nodes: plan.count(StageKind::Teacher),
+        distill_nodes: plan.count(StageKind::Distill),
+        quantize_nodes: plan.count(StageKind::Quantize),
+        waves: waves.len(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        cache: cache_total,
+    };
+    crate::progress!(
+        "grid: {} cells in {:.1}s ({} stages deduplicated away; cache {} \
+         hits, {} misses, {} stores)",
+        stats.cells,
+        stats.wall_secs,
+        stats.dedup_saved(),
+        stats.cache.hits,
+        stats.cache.misses,
+        stats.cache.stores,
+    );
+    Ok(GridOutcome { cells: out_cells, stats })
+}
+
+/// Execute one stage node. Runs on a pool worker; everything it touches
+/// is either shared immutable state or job-local.
+#[allow(clippy::too_many_arguments)]
+fn run_node(
+    kind: StageKind,
+    spec: &RunSpec,
+    mrt: &ModelRt,
+    dataset: &Dataset,
+    results: &[Option<NodeOut>],
+    node: &super::StageNode,
+    opts: &GridOpts,
+    cache: &mut ArtifactCache,
+    jm: &mut Metrics,
+) -> Result<NodeOut> {
+    match kind {
+        StageKind::Teacher => {
+            let store =
+                teacher_cached(mrt, dataset, &spec.pretrain, cache, jm)?;
+            let hash = store.content_hash();
+            Ok(NodeOut::Teacher { store, hash })
+        }
+        StageKind::Distill => {
+            let (teacher, th) = teacher_at(results, node.deps[0])?;
+            let out = distill_cached_keyed(
+                mrt, teacher, th, &spec.distill, cache, jm,
+            )?;
+            Ok(NodeOut::Images {
+                images: out.images,
+                final_loss: out.final_loss,
+                secs: jm.timer_total("distill"),
+            })
+        }
+        StageKind::Quantize => {
+            let (teacher, th) = teacher_at(results, node.deps[0])?;
+            let calib: Tensor = match spec.data {
+                DataMode::Synthetic { .. } => {
+                    images_at(results, node.deps[1])?.clone()
+                }
+                DataMode::Real => {
+                    let mut rng = Pcg32::new(spec.quant.seed ^ 0x5eed);
+                    dataset.calibration(&mut rng, spec.fsq_samples).0
+                }
+            };
+            let plan = plan_cached(
+                mrt, teacher, th, &calib, &spec.quant, cache, jm,
+            )?;
+            let qstate = quantize_cached_planned(
+                mrt, teacher, th, &calib, &spec.quant, &plan, cache, jm,
+            )?;
+            Ok(NodeOut::Quant {
+                qstate,
+                plan,
+                calib: opts.keep_calib.then_some(calib),
+                secs: jm.timer_total("quantize"),
+            })
+        }
+        StageKind::EvalFp => {
+            let (teacher, _) = teacher_at(results, node.deps[0])?;
+            let acc = eval_fp32_metered(
+                mrt, teacher, dataset, spec.quant.par, jm,
+            )?;
+            Ok(NodeOut::Acc(acc))
+        }
+        StageKind::EvalQ => {
+            let (teacher, _) = teacher_at(results, node.deps[0])?;
+            let (qstate, _, _, _) = quant_at(results, node.deps[1])?;
+            let acc = eval_quantized_metered(
+                mrt, teacher, qstate, dataset, spec.quant.par, jm,
+            )?;
+            Ok(NodeOut::Acc(acc))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_json_reports_cells_and_dedupe() {
+        let spec = RunSpec::base(&RunConfig::default());
+        let out = GridOutcome {
+            cells: vec![CellOutcome {
+                spec,
+                outcome: Some(PipelineOutcome {
+                    model: "toy".into(),
+                    fp_acc: 0.9,
+                    q_acc: 0.8,
+                    distill_secs: None,
+                    quant_secs: 2.0,
+                    final_bns_loss: None,
+                    fp_weight_bits: 1024,
+                    q_weight_bits: 128,
+                }),
+                plan: None,
+                calib: None,
+                teacher: None,
+                qstate: None,
+            }],
+            stats: GridStats {
+                cells: 1,
+                nodes: 5,
+                naive_stages: 5,
+                teacher_nodes: 1,
+                distill_nodes: 1,
+                quantize_nodes: 1,
+                waves: 4,
+                wall_secs: 1.25,
+                cache: CacheStats { hits: 1, misses: 4, stores: 4 },
+            },
+        };
+        let text = out.to_json().render();
+        assert!(text.contains("\"cells\":["), "{text}");
+        assert!(text.contains("\"dedup_saved\":0"), "{text}");
+        assert!(text.contains("\"distill_secs\":null"), "{text}");
+        assert!(text.contains("\"hits\":1"), "{text}");
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn grid_json_data_only_outcome_is_null() {
+        let spec = RunSpec::base(&RunConfig::default());
+        let out = GridOutcome {
+            cells: vec![CellOutcome {
+                spec,
+                outcome: None,
+                plan: None,
+                calib: None,
+                teacher: None,
+                qstate: None,
+            }],
+            stats: GridStats::default(),
+        };
+        let text = out.to_json().render();
+        assert!(text.contains("\"outcome\":null"), "{text}");
+    }
+
+    #[test]
+    fn missing_node_results_error_cleanly() {
+        let results: Vec<Option<NodeOut>> = vec![None];
+        assert!(teacher_at(&results, 0).is_err());
+        assert!(images_at(&results, 0).is_err());
+        assert!(quant_at(&results, 0).is_err());
+        assert!(acc_at(&results, 0).is_err());
+    }
+}

@@ -19,7 +19,9 @@ pub mod artifacts;
 pub mod quant;
 pub mod schedule;
 pub mod data;
+pub mod progress;
 pub mod coordinator;
+pub mod grid;
 pub mod experiments;
 pub mod testutil;
 

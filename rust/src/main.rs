@@ -5,8 +5,11 @@
 //!   pretrain  --model M [k=v ...]      train + checkpoint the FP32 teacher
 //!   eval      --model M [k=v ...]      FP32 teacher accuracy
 //!   distill   --model M [k=v ...]      GENIE-D synthetic data (saved to runs/)
-//!   zsq       --model M [k=v ...]      full zero-shot pipeline
+//!   zsq | run --model M [k=v ...]      full zero-shot pipeline
 //!   fsq       --model M [k=v ...]      few-shot (real-data) GENIE-M
+//!   grid      --axis k=v1,v2 ...       multi-run sweep on the shared-
+//!                                      artifact scheduler (DESIGN.md §11);
+//!                                      --dry-run prints the resolved DAG
 //!   experiments --exp ID [k=v ...]     paper table/figure harnesses
 //!
 //! Config overrides are `key=value` (see coordinator::config); notably
@@ -18,7 +21,8 @@
 //! artifacts under `--cache-dir` (default `cache/`); a re-run with the
 //! same config loads them instead of recomputing, `--resume` continues an
 //! interrupted stage from its checkpoints, and `--no-cache` turns the
-//! whole mechanism off.
+//! whole mechanism off. `--json <path>` writes a machine-readable outcome
+//! report (run and grid).
 
 use anyhow::{bail, Result};
 
@@ -28,6 +32,7 @@ use genie::coordinator::{
 };
 use genie::data::Dataset;
 use genie::experiments;
+use genie::grid::{GridOpts, GridPlan, RunGrid};
 use genie::runtime::{ModelRt, Runtime};
 
 fn main() -> Result<()> {
@@ -39,6 +44,8 @@ fn main() -> Result<()> {
 
     let mut cfg = RunConfig::default();
     let mut exp = String::new();
+    let mut axes: Vec<String> = Vec::new();
+    let mut dry_run = false;
     let mut overrides = Vec::new();
     let mut it = args[1..].iter().peekable();
     while let Some(a) = it.next() {
@@ -56,6 +63,12 @@ fn main() -> Result<()> {
                 let v = next(&mut it, "--target-size")?;
                 cfg.set("target_size", &v)?;
             }
+            "--axis" => axes.push(next(&mut it, "--axis")?),
+            "--dry-run" => dry_run = true,
+            "--json" => {
+                let v = next(&mut it, "--json")?;
+                cfg.set("json", &v)?;
+            }
             "--exp" => exp = next(&mut it, "--exp")?,
             "--help" | "-h" => {
                 usage();
@@ -72,8 +85,11 @@ fn main() -> Result<()> {
         "pretrain" => cmd_pretrain(&cfg),
         "eval" => cmd_eval(&cfg),
         "distill" => cmd_distill(&cfg),
-        "zsq" => cmd_zsq(&cfg),
+        // `run` = one pipeline run (zsq), the single-cell counterpart of
+        // `grid`
+        "zsq" | "run" => cmd_zsq(&cfg),
         "fsq" => cmd_fsq(&cfg),
+        "grid" => cmd_grid(&cfg, &axes, dry_run),
         "export" => cmd_export(&cfg),
         "report" => cmd_report(),
         "experiments" => experiments::run(&exp, &cfg),
@@ -96,11 +112,12 @@ fn next(
 fn usage() {
     println!(
         "genie — GENIE zero-shot quantization (rust+JAX+Pallas reproduction)\n\
-         usage: genie <info|pretrain|eval|distill|zsq|fsq|experiments>\n\
+         usage: genie <info|pretrain|eval|distill|zsq|run|fsq|grid|experiments>\n\
                 [--model M] [--artifacts DIR] [--exp ID]\n\
                 [--precision uniform|pareto] [--target-size F]\n\
+                [--axis name=v1,v2 ...] [--dry-run] [--json PATH]\n\
                 [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
-         keys: wbits abits seed workers checkpoint_every\n\
+         keys: wbits abits seed workers checkpoint_every json\n\
                precision target_size first_last_bits granularity\n\
                sens_batches candidates\n\
                pretrain.{{steps,lr}}\n\
@@ -114,7 +131,14 @@ fn usage() {
          first_last_bits=B pins the first/last layers (0 disables).\n\
          Stages cache as content-addressed artifacts under --cache-dir;\n\
          identical configs re-load instead of re-running, --resume picks\n\
-         an interrupted stage up from its last checkpoint."
+         an interrupted stage up from its last checkpoint.\n\
+         grid sweeps axes (model bits seed samples data quant precision)\n\
+         on the shared-artifact scheduler: cells are bit-identical to\n\
+         standalone runs, shared teacher/distill work dispatches once,\n\
+         and stages from different cells interleave on the pool. E.g.:\n\
+           genie grid --axis bits=4,3,2 --axis seed=0,1 workers=4\n\
+           genie grid --axis bits=w2a4,w2a2 --axis data=real --dry-run\n\
+         --json PATH writes the outcome report (run and grid) as JSON."
     );
 }
 
@@ -324,6 +348,7 @@ fn cmd_zsq(cfg: &RunConfig) -> Result<()> {
     )?;
     out.print("zsq");
     print_cache_stats(&cache);
+    write_json(cfg, &out.to_json(Some(cache.stats())))?;
     metrics.flush()
 }
 
@@ -344,5 +369,55 @@ fn cmd_fsq(cfg: &RunConfig) -> Result<()> {
     )?;
     out.print("fsq");
     print_cache_stats(&cache);
+    write_json(cfg, &out.to_json(Some(cache.stats())))?;
+    metrics.flush()
+}
+
+/// Write the machine-readable outcome report when `--json` was given.
+fn write_json(cfg: &RunConfig, json: &genie::runtime::json::Json) -> Result<()> {
+    if let Some(path) = &cfg.json {
+        std::fs::write(path, json.render())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Multi-run grid sweep on the shared-artifact scheduler (DESIGN.md
+/// §11). `--dry-run` prints the resolved DAG — cells, deduplicated
+/// stages, expected cache dispositions — and executes nothing.
+fn cmd_grid(cfg: &RunConfig, axes: &[String], dry_run: bool) -> Result<()> {
+    let mut grid = RunGrid::new();
+    for a in axes {
+        grid.parse_axis(a, cfg)?;
+    }
+    if dry_run {
+        let cells = grid.cells(cfg)?;
+        let mut manifests = std::collections::BTreeMap::new();
+        for c in &cells {
+            if !manifests.contains_key(&c.model) {
+                let dir = std::path::Path::new(&cfg.artifacts).join(&c.model);
+                manifests
+                    .insert(c.model.clone(), genie::runtime::Manifest::load(dir)?);
+            }
+        }
+        let plan = GridPlan::build(cells, &manifests, false)?;
+        let cache = open_cache(cfg)?;
+        let dataset = Dataset::load(&cfg.artifacts).ok();
+        print!("{}", plan.render(&manifests, &cache, dataset.as_ref()));
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let mut metrics = Metrics::with_dir(
+        std::path::Path::new(&cfg.runs_dir).join("grid"),
+    )?;
+    let out = genie::grid::execute(
+        &rt, cfg, &grid, &GridOpts::default(), &mut metrics,
+    )?;
+    for cell in &out.cells {
+        if let Some(o) = &cell.outcome {
+            o.print(&cell.spec.label());
+        }
+    }
+    write_json(cfg, &out.to_json())?;
     metrics.flush()
 }

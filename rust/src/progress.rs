@@ -1,0 +1,131 @@
+//! Run-tagged, line-buffered progress logger (DESIGN.md §11).
+//!
+//! When the grid scheduler interleaves stage jobs from different runs on
+//! the exec pool, raw `println!` calls shear: two workers can write
+//! partial lines that end up interleaved on the terminal. Every stage
+//! progress line therefore goes through [`emit`] (via the
+//! [`progress!`](crate::progress!) macro), which formats the *complete*
+//! line — including the current run tag — into one buffer and hands it
+//! to the stdout lock in a single `write_all`.
+//!
+//! The run tag is thread-local: the grid executor pushes a tag (e.g.
+//! `c3` for cell 3, `shared:distill` for a deduplicated stage) around
+//! each stage job with [`push_tag`], and every progress line the job
+//! prints — stage summaries, cache hits, per-shard lines — carries it as
+//! a `[tag] ` prefix. Untagged threads (single runs, tests) print bare
+//! lines, so the logger is invisible outside grid mode. Inner pool
+//! worker threads spawned *by* a stage do not inherit the tag, but all
+//! stage progress output happens on the stage job's own thread (shard
+//! results are printed from the aggregation loop), so lines stay tagged.
+
+use std::cell::RefCell;
+use std::io::Write;
+
+thread_local! {
+    static TAG: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Restores the previous tag when dropped, so tags nest.
+pub struct TagGuard {
+    prev: Option<String>,
+}
+
+impl Drop for TagGuard {
+    fn drop(&mut self) {
+        TAG.with(|t| *t.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Tag every [`progress!`] line on this thread with `[tag] ` until the
+/// returned guard drops.
+pub fn push_tag(tag: &str) -> TagGuard {
+    TAG.with(|t| {
+        let prev = t.borrow_mut().replace(tag.to_string());
+        TagGuard { prev }
+    })
+}
+
+/// The current thread's run tag, if any.
+pub fn current_tag() -> Option<String> {
+    TAG.with(|t| t.borrow().clone())
+}
+
+/// Render one complete progress line (tag prefix + body + newline).
+/// Factored out of [`emit`] so the formatting is testable without
+/// capturing stdout.
+pub fn render_line(tag: Option<&str>, body: &str) -> String {
+    match tag {
+        Some(tag) => format!("[{tag}] {body}\n"),
+        None => format!("{body}\n"),
+    }
+}
+
+/// Write one progress line atomically (single `write_all` under the
+/// stdout lock). Prefer the [`progress!`](crate::progress!) macro.
+pub fn emit(args: std::fmt::Arguments<'_>) {
+    let tag = current_tag();
+    let line = render_line(tag.as_deref(), &format!("{args}"));
+    let stdout = std::io::stdout();
+    let mut lock = stdout.lock();
+    let _ = lock.write_all(line.as_bytes());
+}
+
+/// `println!`-compatible progress line through the run-tagged,
+/// line-buffered logger. Multi-line bodies are written in the same
+/// single syscall, so block reports (e.g. a rendered precision plan)
+/// don't interleave either.
+#[macro_export]
+macro_rules! progress {
+    ($($arg:tt)*) => {
+        $crate::progress::emit(format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untagged_line_is_bare() {
+        assert_eq!(render_line(None, "hello"), "hello\n");
+    }
+
+    #[test]
+    fn tagged_line_carries_prefix() {
+        assert_eq!(render_line(Some("c3"), "loss 0.5"), "[c3] loss 0.5\n");
+    }
+
+    #[test]
+    fn tags_nest_and_restore() {
+        assert_eq!(current_tag(), None);
+        {
+            let _a = push_tag("outer");
+            assert_eq!(current_tag().as_deref(), Some("outer"));
+            {
+                let _b = push_tag("inner");
+                assert_eq!(current_tag().as_deref(), Some("inner"));
+            }
+            assert_eq!(current_tag().as_deref(), Some("outer"));
+        }
+        assert_eq!(current_tag(), None);
+    }
+
+    #[test]
+    fn tags_are_thread_local() {
+        let _a = push_tag("main");
+        std::thread::spawn(|| {
+            assert_eq!(current_tag(), None);
+            let _b = push_tag("worker");
+            assert_eq!(current_tag().as_deref(), Some("worker"));
+        })
+        .join()
+        .unwrap();
+        assert_eq!(current_tag().as_deref(), Some("main"));
+    }
+
+    #[test]
+    fn emit_does_not_panic() {
+        let _t = push_tag("test");
+        emit(format_args!("progress {} of {}", 1, 2));
+    }
+}

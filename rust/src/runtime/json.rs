@@ -1,7 +1,12 @@
-//! Minimal JSON parser for manifest.json (std-only; the offline testbed
-//! vendors no serde). Supports the full JSON grammar we emit from
-//! python/compile/aot.py: objects, arrays, strings (with escapes),
-//! numbers, booleans, null.
+//! Minimal JSON parser + serializer (std-only; the offline testbed
+//! vendors no serde). The parser supports the full JSON grammar we emit
+//! from python/compile/aot.py: objects, arrays, strings (with escapes),
+//! numbers, booleans, null. The serializer ([`Json::render`]) is the
+//! machine-readable sink for `genie run --json` / `genie grid --json`
+//! outcome reports (DESIGN.md §11): object keys render sorted so the
+//! output is byte-stable across runs, `Option`-like absences render as
+//! `null`, and non-finite numbers degrade to `null` rather than emitting
+//! invalid JSON.
 
 use std::collections::HashMap;
 
@@ -75,6 +80,100 @@ impl Json {
             .map(|v| Ok(v.as_str()?.to_string()))
             .collect()
     }
+
+    /// Build an object from (key, value) pairs (key order is irrelevant:
+    /// [`render`](Json::render) sorts).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+
+    /// `f64` value; a non-finite number becomes `null`.
+    pub fn num(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Optional `f64`: `None` → `null` (the satellite contract for
+    /// Option-typed outcome fields).
+    pub fn opt(x: Option<f64>) -> Json {
+        match x {
+            Some(v) => Json::num(v),
+            None => Json::Null,
+        }
+    }
+
+    /// Serialize to compact JSON text. Object keys are emitted in sorted
+    /// order (the backing map is unordered), so equal values render to
+    /// equal bytes.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // Display for f64 never uses exponent notation, so
+                    // the text is always a valid JSON number
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                out.push('{');
+                for (i, k) in keys.into_iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    m[k].write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -285,5 +384,43 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert!(matches!(Json::parse("{}").unwrap(), Json::Obj(_)));
+    }
+
+    #[test]
+    fn render_sorts_keys_and_round_trips() {
+        let j = Json::obj(vec![
+            ("zeta", Json::num(1.5)),
+            ("alpha", Json::Str("a\"b\n".into())),
+            ("mid", Json::Arr(vec![Json::Bool(true), Json::Null])),
+        ]);
+        let text = j.render();
+        assert_eq!(
+            text,
+            r#"{"alpha":"a\"b\n","mid":[true,null],"zeta":1.5}"#
+        );
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn render_options_and_nonfinite_as_null() {
+        assert_eq!(Json::opt(None).render(), "null");
+        assert_eq!(Json::opt(Some(2.0)).render(), "2");
+        assert_eq!(Json::num(f64::NAN).render(), "null");
+        assert_eq!(Json::num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn render_is_stable_across_equal_objects() {
+        let a = Json::obj(vec![("b", Json::num(1.0)), ("a", Json::num(2.0))]);
+        let b = Json::obj(vec![("a", Json::num(2.0)), ("b", Json::num(1.0))]);
+        assert_eq!(a.render(), b.render());
+    }
+
+    #[test]
+    fn render_escapes_control_chars() {
+        let j = Json::Str("\u{1}x".into());
+        let text = j.render();
+        assert_eq!(text, "\"\\u0001x\"");
+        assert_eq!(Json::parse(&text).unwrap(), j);
     }
 }

@@ -1,0 +1,285 @@
+//! Grid-orchestrator acceptance tests over the real toy artifacts
+//! (DESIGN.md §11; requires `make artifacts` — gated tests skip
+//! otherwise):
+//!
+//!   * bit-identity: every cell of a 2×2 grid (bits × seed) matches the
+//!     same run executed alone through the single-run pipeline API, at
+//!     workers=1 and workers=4 — accuracies and the full qstate store;
+//!   * dedupe: a grid over 3 bit-widths dispatches exactly one pretrain
+//!     and one distill set (runtime dispatch counters + node/cache
+//!     stats).
+
+use std::path::Path;
+
+use genie::artifacts::ArtifactCache;
+use genie::coordinator::{
+    distill_cached, eval_fp32, eval_quantized, quantize_cached,
+    teacher_cached, Metrics, RunConfig,
+};
+use genie::data::Dataset;
+use genie::grid::{self, AxisValue, GridOpts, RunGrid};
+use genie::runtime::{ModelRt, Runtime};
+use genie::store::Store;
+
+fn artifacts_dir() -> String {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn require_artifacts() -> bool {
+    let ok = Path::new(&artifacts_dir()).join("toy/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+/// A small-budget base config rooted at the test artifacts, caching into
+/// `cache_dir`.
+fn base_cfg(cache_dir: &Path) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: "toy".into(),
+        artifacts: artifacts_dir(),
+        cache_dir: cache_dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    cfg.apply_overrides(&[
+        "pretrain.steps=30".into(),
+        "distill.samples=64".into(),
+        "distill.steps=6".into(),
+        "quant.steps=8".into(),
+    ])
+    .unwrap();
+    cfg
+}
+
+/// The acceptance contract: a 2×2 grid (bits × seed) produces per-cell
+/// accuracies and qstate stores bit-identical to the same four runs
+/// executed alone through the single-run cached pipeline, at workers=1
+/// and workers=4.
+#[test]
+fn grid_cells_match_sequential_runs_bit_identical() {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let root = std::env::temp_dir().join("genie_grid_vs_seq");
+    std::fs::remove_dir_all(&root).ok();
+
+    let combos: [(u32, u32, u64); 4] =
+        [(4, 4, 1234), (4, 4, 99), (2, 4, 1234), (2, 4, 99)];
+
+    // sequential reference: each combo as a standalone run with its own
+    // cache dir, configured through the same key=value path the CLI uses
+    let mut seq: Vec<(f32, f32, Store)> = Vec::new();
+    for (i, (w, a, seed)) in combos.iter().enumerate() {
+        let mut cfg = base_cfg(&root.join(format!("seq{i}")));
+        cfg.set("wbits", &w.to_string()).unwrap();
+        cfg.set("abits", &a.to_string()).unwrap();
+        cfg.set("seed", &seed.to_string()).unwrap();
+        let mrt = ModelRt::load(&rt, &cfg.artifacts, &cfg.model).unwrap();
+        let dataset = Dataset::load(&cfg.artifacts).unwrap();
+        let mut metrics = Metrics::new();
+        let mut cache =
+            ArtifactCache::open(&cfg.cache_dir, true, false).unwrap();
+        let teacher =
+            teacher_cached(&mrt, &dataset, &cfg.pretrain, &mut cache,
+                           &mut metrics)
+                .unwrap();
+        let out = distill_cached(
+            &mrt, &teacher, &cfg.distill, &mut cache, &mut metrics,
+        )
+        .unwrap();
+        let qstate = quantize_cached(
+            &mrt, &teacher, &out.images, &cfg.quant, &mut cache, &mut metrics,
+        )
+        .unwrap();
+        let fp = eval_fp32(&mrt, &teacher, &dataset).unwrap();
+        let qa = eval_quantized(&mrt, &teacher, &qstate, &dataset).unwrap();
+        seq.push((fp, qa, qstate));
+    }
+
+    // the same four cells as one grid, at 1 and 4 workers
+    for workers in [1usize, 4] {
+        let mut cfg = base_cfg(&root.join(format!("grid_w{workers}")));
+        cfg.set("workers", &workers.to_string()).unwrap();
+        let grid = RunGrid::new()
+            .axis(
+                "bits",
+                vec![AxisValue::Bits(4, 4), AxisValue::Bits(2, 4)],
+            )
+            .axis(
+                "seed",
+                vec![AxisValue::Seed(1234), AxisValue::Seed(99)],
+            );
+        let mut metrics = Metrics::new();
+        let opts = GridOpts { keep_qstate: true, ..Default::default() };
+        let out =
+            grid::execute(&rt, &cfg, &grid, &opts, &mut metrics).unwrap();
+        assert_eq!(out.cells.len(), 4);
+
+        for (cell, (w, a, seed)) in out.cells.iter().zip(&combos) {
+            assert_eq!(cell.spec.quant.wbits, *w);
+            assert_eq!(cell.spec.quant.abits, *a);
+            assert_eq!(cell.spec.seed, *seed);
+            let (fp, qa, want_qs) = &seq[cell.spec.cell];
+            let o = cell.outcome.as_ref().unwrap();
+            assert_eq!(
+                o.fp_acc, *fp,
+                "workers={workers} cell {}: FP32 acc diverged",
+                cell.spec.label()
+            );
+            assert_eq!(
+                o.q_acc, *qa,
+                "workers={workers} cell {}: quant acc diverged",
+                cell.spec.label()
+            );
+            let got_qs = cell.qstate.as_ref().unwrap();
+            assert_eq!(got_qs.names(), want_qs.names());
+            for n in want_qs.names() {
+                assert_eq!(
+                    got_qs.get(n).unwrap(),
+                    want_qs.get(n).unwrap(),
+                    "workers={workers} cell {}: qstate '{n}' diverged",
+                    cell.spec.label()
+                );
+            }
+        }
+        // 4 cells with 2 distinct seeds: 2 teachers, 2 distills, 4
+        // quantizes — 4 naive teacher+distill+evalfp stages deduplicated
+        assert_eq!(out.stats.teacher_nodes, 2);
+        assert_eq!(out.stats.distill_nodes, 2);
+        assert_eq!(out.stats.quantize_nodes, 4);
+        assert!(out.stats.dedup_saved() >= 6, "{:?}", out.stats);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The dedupe acceptance contract: a grid over 3 bit-widths (same seed,
+/// same data config) dispatches exactly one pretrain and one distill
+/// set — asserted via the runtime's per-entry dispatch counters and the
+/// grid's node/cache statistics.
+#[test]
+fn grid_dispatches_shared_pretrain_and_distill_once() {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let root = std::env::temp_dir().join("genie_grid_dedupe");
+    std::fs::remove_dir_all(&root).ok();
+    let mut cfg = base_cfg(&root);
+    cfg.set("workers", "4").unwrap();
+
+    let grid = RunGrid::new().axis(
+        "bits",
+        vec![
+            AxisValue::Bits(4, 4),
+            AxisValue::Bits(3, 4),
+            AxisValue::Bits(2, 4),
+        ],
+    );
+    rt.reset_stats();
+    let mut metrics = Metrics::new();
+    let out = grid::execute(
+        &rt, &cfg, &grid, &GridOpts::default(), &mut metrics,
+    )
+    .unwrap();
+    assert_eq!(out.cells.len(), 3);
+
+    // node dedupe: one teacher, one distill, one fp eval; per-cell
+    // quantize
+    assert_eq!(out.stats.teacher_nodes, 1);
+    assert_eq!(out.stats.distill_nodes, 1);
+    assert_eq!(out.stats.quantize_nodes, 3);
+
+    // dispatch counters: exactly one pretrain (train_step per step) and
+    // one distill set (gen_init once per shard) ran for the whole grid
+    let stats = rt.dispatch_stats();
+    assert_eq!(
+        stats["train_step"].calls, 30,
+        "pretrain must have dispatched exactly once (30 steps)"
+    );
+    let mrt = ModelRt::load(&rt, &cfg.artifacts, "toy").unwrap();
+    let shards =
+        64usize.div_ceil(mrt.manifest.batch("distill")) as u64;
+    assert_eq!(
+        stats["gen_init"].calls, shards,
+        "distill must have synthesized exactly one shard set"
+    );
+
+    // artifact stores: teacher + distill + 3 qstates (uniform plans are
+    // derived, never stored)
+    assert_eq!(out.stats.cache.stores, 5, "{:?}", out.stats.cache);
+    // no stage hit the cache on this cold run
+    assert_eq!(out.stats.cache.hits, 0, "{:?}", out.stats.cache);
+
+    // a second identical grid is a pure DAG lookup: zero stage
+    // dispatches beyond evals
+    rt.reset_stats();
+    let mut metrics2 = Metrics::new();
+    let out2 = grid::execute(
+        &rt, &cfg, &grid, &GridOpts::default(), &mut metrics2,
+    )
+    .unwrap();
+    let stats2 = rt.dispatch_stats();
+    for banned in ["train_step", "gen_init", "gen_images", "act_stats"] {
+        assert!(
+            !stats2.contains_key(banned),
+            "{banned} dispatched on a fully cached grid"
+        );
+    }
+    assert!(out2.stats.cache.hits >= 5, "{:?}", out2.stats.cache);
+    for (a, b) in out.cells.iter().zip(&out2.cells) {
+        let (oa, ob) =
+            (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(oa.q_acc, ob.q_acc);
+        assert_eq!(oa.fp_acc, ob.fp_acc);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Real-data (fsq) grid cells match the standalone fsq pipeline.
+#[test]
+fn real_data_grid_matches_fsq() {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let root = std::env::temp_dir().join("genie_grid_fsq");
+    std::fs::remove_dir_all(&root).ok();
+
+    // standalone fsq
+    let cfg = base_cfg(&root.join("seq"));
+    let mrt = ModelRt::load(&rt, &cfg.artifacts, &cfg.model).unwrap();
+    let dataset = Dataset::load(&cfg.artifacts).unwrap();
+    let mut metrics = Metrics::new();
+    let mut cache = ArtifactCache::open(&cfg.cache_dir, true, false).unwrap();
+    let teacher = teacher_cached(
+        &mrt, &dataset, &cfg.pretrain, &mut cache, &mut metrics,
+    )
+    .unwrap();
+    let want = genie::coordinator::fsq(
+        &mrt, &teacher, &dataset, cfg.fsq_samples, &cfg.quant, &mut cache,
+        &mut metrics,
+    )
+    .unwrap();
+
+    // the same run as a one-cell real-data grid
+    let mut gcfg = base_cfg(&root.join("grid"));
+    gcfg.set("workers", "4").unwrap();
+    let mut grid = RunGrid::new();
+    grid.parse_axis("data=real", &gcfg).unwrap();
+    let mut gm = Metrics::new();
+    let out =
+        grid::execute(&rt, &gcfg, &grid, &GridOpts::default(), &mut gm)
+            .unwrap();
+    let o = out.cells[0].outcome.as_ref().unwrap();
+    assert_eq!(o.fp_acc, want.fp_acc);
+    assert_eq!(o.q_acc, want.q_acc);
+    assert!(o.distill_secs.is_none(), "real-data cell has no synthesis");
+    assert!(o.final_bns_loss.is_none());
+    assert_eq!(out.stats.distill_nodes, 0);
+    std::fs::remove_dir_all(&root).ok();
+}
