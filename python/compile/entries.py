@@ -219,6 +219,34 @@ def build_entries(model):
         res = [_f("x", xsh), _f("xm", xsh), _f("xv", xsh), _f("loss", ())]
         entries.append(Entry(f"distill_direct_{tag}", direct_fn, args, res))
 
+        def zaq_fn(*flat, _swing=swing):
+            i = 0
+            gp = _dict_from(flat[i:i + n_g], gspecs); i += n_g
+            gm = _dict_from(flat[i:i + n_g], gspecs); i += n_g
+            gv = _dict_from(flat[i:i + n_g], gspecs); i += n_g
+            z, zm, zv, t = flat[i:i + 4]; i += 4
+            params = _dict_from(flat[i:i + n_p], pspecs); i += n_p
+            bn = _dict_from(flat[i:i + n_bn], bnspecs); i += n_bn
+            key, lr_g, lr_z = steps.unwrap_key(flat[i]), flat[i + 1], flat[i + 2]
+            wp, ap = flat[i + 3], flat[i + 4]
+            gp2, gm2, gv2, z2, zm2, zv2, loss = steps.distill_zaq_step(
+                model, gp, gm, gv, z, zm, zv, t, params, bn, key, lr_g,
+                lr_z, wp, ap, _swing)
+            return (tuple(gp2[n] for n, _ in gspecs)
+                    + tuple(gm2[n] for n, _ in gspecs)
+                    + tuple(gv2[n] for n, _ in gspecs)
+                    + (z2, zm2, zv2, loss))
+
+        # genie's signature plus the student proxy's Min-Max bit-widths
+        args = (_named(gspecs) + _named(gspecs, "am.") + _named(gspecs, "av.")
+                + [_f("z", zsh), _f("zm", zsh), _f("zv", zsh), _f("t", ())]
+                + _named(pspecs) + _named(bnspecs)
+                + [("key", U32, [2]), _f("lr_g", ()), _f("lr_z", ()),
+                   _f("wp", ()), _f("ap", ())])
+        res = (_named(gspecs) + _named(gspecs, "am.") + _named(gspecs, "av.")
+               + [_f("z", zsh), _f("zm", zsh), _f("zv", zsh), _f("loss", ())])
+        entries.append(Entry(f"distill_zaq_{tag}", zaq_fn, args, res))
+
     # ---- qat_step / eval_qat (netwise Min-Max QAT baseline) ----
     def qat_fn(*flat):
         i = 0

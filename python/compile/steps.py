@@ -96,6 +96,36 @@ def distill_direct_step(model, x, xm, xv, t, params, bn_state, key, lr,
     return x2, xm2, xv2, loss
 
 
+# weight of the adversarial term against the BNS regularizer (ZAQ Eq. 8
+# balances discrepancy against realism; BNS plays the realism role here)
+ZAQ_ADV_WEIGHT = 10.0
+
+
+def distill_zaq_step(model, gen_params, gm, gv, z, zm, zv, t, params,
+                     bn_state, key, lr_g, lr_z, wp, ap, swing):
+    """One ZAQ-style adversarial step: generator + latents *maximize* the
+    teacher/student output discrepancy, where the student is the teacher's
+    own weights under per-tensor Min-Max fake-quant at (wp, ap) bits —
+    the synthesis-time adversary proxy. The BNS term regularizes the
+    images onto the BN-statistics manifold so the discrepancy is not won
+    by drifting off-distribution."""
+    def loss_fn(gp, zz):
+        x = generator.apply(gp, zz, model.image)
+        t_logits, _ = ir.forward(model, params, bn_state, x)
+        s_logits, _ = ir.forward(model, params, bn_state, x,
+                                 minmax=(wp, ap))
+        disc = jnp.mean(jnp.abs(jax.nn.softmax(t_logits)
+                                - jax.nn.softmax(s_logits)))
+        bns = bns_loss(model, params, bn_state, x, key, swing)
+        return bns - ZAQ_ADV_WEIGHT * disc
+
+    loss, (g_gen, g_z) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        gen_params, z)
+    gp2, gm2, gv2 = adam_update_tree(gen_params, g_gen, gm, gv, t, lr_g)
+    z2, zm2, zv2 = adam_update(z, g_z, zm, zv, t, lr_z)
+    return gp2, gm2, gv2, z2, zm2, zv2, loss
+
+
 # ---------------------------------------------------------------------------
 # Collection + GENIE-M block reconstruction
 # ---------------------------------------------------------------------------

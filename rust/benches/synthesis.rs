@@ -1,0 +1,145 @@
+//! Synthesis-engine benchmarks (DESIGN.md §12). In-tree harness (no
+//! criterion in the offline image); harness = false.
+//!
+//! Always writes `BENCH_synthesis.json`: host-side costs of the engine
+//! machinery — per-engine distill cache keys and a DAG build over a
+//! `synthesis x bits` ablation grid. With artifacts present it
+//! additionally distills one small calibration set per engine on the
+//! toy model (cold, uncached) and reports the per-engine wall clock —
+//! the number the grid scheduler amortizes. Engines whose step graphs
+//! the compiled artifacts predate (zaq on pre-§12 bundles) stay at the
+//! -1.0 sentinel.
+
+use std::collections::BTreeMap;
+
+use genie::artifacts::{distill_spec_key, pretrain_key};
+use genie::coordinator::{
+    distill, pretrain, DistillCfg, Metrics, PretrainCfg, RunConfig,
+};
+use genie::data::Dataset;
+use genie::grid::{AxisValue, GridPlan, RunGrid};
+use genie::runtime::{Manifest, ModelRt, Runtime};
+use genie::synthesis::Engine;
+use genie::testutil::{bench_secs, report};
+
+const ENGINES: [Engine; 3] = [Engine::Genie, Engine::Zeroq, Engine::Zaq];
+
+fn toy_manifest() -> Manifest {
+    Manifest::from_json_text(
+        r#"{
+            "model": "toy", "image": [16, 16, 3], "num_classes": 10,
+            "num_blocks": 2, "latent": 256,
+            "batch": {"train": 64},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [], "learnable": {"0": []},
+            "bounds": [], "entrypoints": {}
+        }"#,
+    )
+    .unwrap()
+}
+
+fn main() {
+    let m = toy_manifest();
+
+    // ---- per-engine distill keys: the folds every cache probe pays ---
+    let tspec = pretrain_key(&m, &PretrainCfg::default());
+    let key_secs = bench_secs(3, 200, || {
+        for e in ENGINES {
+            let cfg = DistillCfg { engine: e, ..Default::default() };
+            std::hint::black_box(distill_spec_key(&m, &cfg, tspec));
+        }
+    });
+    report("synthesis/spec_keys_3_engines", key_secs);
+
+    // ---- DAG build over a synthesis x bits ablation grid -------------
+    let cfg = RunConfig { model: "toy".into(), ..Default::default() };
+    let grid = RunGrid::new()
+        .axis(
+            "synthesis",
+            ENGINES.iter().copied().map(AxisValue::Synthesis).collect(),
+        )
+        .axis(
+            "bits",
+            vec![
+                AxisValue::Bits(4, 4),
+                AxisValue::Bits(3, 4),
+                AxisValue::Bits(2, 4),
+            ],
+        )
+        .axis("seed", (0..8u64).map(AxisValue::Seed).collect());
+    let mut manifests = BTreeMap::new();
+    manifests.insert("toy".to_string(), m);
+    let cells = grid.cells(&cfg).unwrap();
+    let dag_secs = bench_secs(3, 50, || {
+        std::hint::black_box(
+            GridPlan::build(cells.clone(), &manifests, false).unwrap(),
+        );
+    });
+    report("synthesis/dag_build_72_cells", dag_secs);
+    let plan = GridPlan::build(cells, &manifests, false).unwrap();
+    println!(
+        "dag: {} cells -> {} nodes ({} naive; one distill set per \
+         engine/seed, teachers shared across engines)",
+        plan.cells.len(),
+        plan.nodes.len(),
+        plan.naive_stages()
+    );
+
+    // ---- per-engine distill wall clock (needs artifacts + PJRT) ------
+    let mut engine_secs = [-1.0f64; 3];
+    if std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let mrt = ModelRt::load(&rt, "artifacts", "toy").unwrap();
+        let dataset = Dataset::load("artifacts").unwrap();
+        let mut metrics = Metrics::new();
+        let pcfg = PretrainCfg { steps: 60, ..Default::default() };
+        let teacher = pretrain(&mrt, &dataset, &pcfg, &mut metrics).unwrap();
+
+        for (i, e) in ENGINES.into_iter().enumerate() {
+            let dcfg = DistillCfg {
+                engine: e,
+                samples: 64,
+                steps: 30,
+                ..Default::default()
+            };
+            let entry = e.policy().entry(&dcfg, "swing");
+            if !mrt.manifest.entrypoints.contains_key(&entry) {
+                println!(
+                    "bench synthesis/distill_{}: skipped (artifacts \
+                     predate entry '{entry}')",
+                    e.as_str()
+                );
+                continue;
+            }
+            let t0 = std::time::Instant::now();
+            let out = distill(&mrt, &teacher, &dcfg, &mut metrics).unwrap();
+            engine_secs[i] = t0.elapsed().as_secs_f64();
+            println!(
+                "distill[{}]: {} samples in {:.2}s (final loss {:.4})",
+                e.as_str(),
+                out.images.shape[0],
+                engine_secs[i],
+                out.final_loss
+            );
+            report(&format!("synthesis/distill_{}", e.as_str()),
+                   engine_secs[i]);
+        }
+    } else {
+        println!(
+            "bench synthesis/distill_per_engine: skipped (run `make \
+             artifacts`)"
+        );
+    }
+
+    // negative sentinel (-1.0) = artifact-gated section did not run
+    let json = format!(
+        "{{\n  \"spec_keys_3_engines_secs\": {key_secs:.6},\n  \
+         \"dag_build_72_cells_secs\": {dag_secs:.6},\n  \
+         \"distill_genie_secs\": {:.4},\n  \
+         \"distill_zeroq_secs\": {:.4},\n  \
+         \"distill_zaq_secs\": {:.4}\n}}\n",
+        engine_secs[0], engine_secs[1], engine_secs[2]
+    );
+    std::fs::write("BENCH_synthesis.json", json).unwrap();
+    println!("wrote BENCH_synthesis.json");
+}

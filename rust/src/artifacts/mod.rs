@@ -141,7 +141,8 @@ pub fn pretrain_key(m: &Manifest, cfg: &PretrainCfg) -> CacheKey {
 /// The distill-config folds shared by the content and spec keys. `par`
 /// is excluded — shard fan-out never changes the images.
 fn distill_fields(b: KeyBuilder, cfg: &DistillCfg) -> KeyBuilder {
-    b.field("mode", cfg.mode.as_str())
+    b.field("engine", cfg.engine.as_str())
+        .field("mode", cfg.mode.as_str())
         .field("swing", cfg.swing)
         .field("samples", cfg.samples)
         .field("steps", cfg.steps)
@@ -421,6 +422,33 @@ impl ArtifactCache {
         }
     }
 
+    /// [`Self::load`] gated on a coherence check: an artifact that
+    /// parses but fails `check` — missing tensors, e.g. a partial copy
+    /// from another cache — is demoted to a miss, so the stage
+    /// recomputes and rewrites it instead of erroring on the decode
+    /// (and the grid dry run predicts the same disposition).
+    pub fn load_checked(
+        &mut self,
+        kind: &str,
+        key: CacheKey,
+        check: impl Fn(&Store) -> bool,
+    ) -> Option<Store> {
+        if !self.enabled {
+            self.stats.misses += 1;
+            return None;
+        }
+        match Store::load(self.path(kind, key)) {
+            Ok(s) if check(&s) => {
+                self.stats.hits += 1;
+                Some(s)
+            }
+            _ => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
     /// Store a completed artifact (atomic write) and clear the stage's
     /// work dir. No-op when disabled.
     pub fn store(
@@ -590,6 +618,18 @@ mod tests {
         teacher2.insert("w", Tensor::from_f32(&[2], vec![1.0, 2.5]));
         assert_ne!(distill_key(&m, &d, teacher2.content_hash()), k1);
 
+        // the synthesis engine is a key field: switching engines misses,
+        // switching back re-derives the exact original key (pure hit)
+        let mut dz = d.clone();
+        dz.engine = crate::synthesis::Engine::Zeroq;
+        assert_ne!(distill_key(&m, &dz, th), k1);
+        let mut dq = d.clone();
+        dq.engine = crate::synthesis::Engine::Zaq;
+        assert_ne!(distill_key(&m, &dq, th), k1);
+        assert_ne!(distill_key(&m, &dz, th), distill_key(&m, &dq, th));
+        dz.engine = crate::synthesis::Engine::Genie;
+        assert_eq!(distill_key(&m, &dz, th), k1);
+
         // different stage kinds never collide on the same fields
         let p = PretrainCfg::default();
         assert_ne!(pretrain_key(&m, &p).0, k1.0);
@@ -720,6 +760,10 @@ mod tests {
         let mut d2 = d.clone();
         d2.seed += 1;
         assert_ne!(distill_spec_key(&m, &d2, ts), k1);
+        // a different synthesis engine is a different distill stage
+        let mut dz = d.clone();
+        dz.engine = crate::synthesis::Engine::Zeroq;
+        assert_ne!(distill_spec_key(&m, &dz, ts), k1);
         // a different upstream teacher spec separates downstream specs
         let mut p2 = p.clone();
         p2.steps += 1;
@@ -795,6 +839,53 @@ mod tests {
     }
 
     #[test]
+    fn dead_holders_lock_is_taken_over_and_waiter_hits() {
+        // crash simulation: a claimant "dies" holding the lock (the
+        // lockfile exists, nobody will ever release it) *after* the
+        // artifact landed. Waiters must break the stale lock via the
+        // rename path and wake to a coherent cache hit — exactly one
+        // takeover, no deleted live locks, no corrupted artifact.
+        let dir = std::env::temp_dir().join("genie_artifact_crash_sim");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").field("x", 9).finish();
+        let mut art = Store::new();
+        art.insert("images", Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]));
+        cache.store("stage", key, &art).unwrap();
+        // the dead holder's lock: a token no live WipClaim carries
+        std::fs::write(cache.lock_path("stage", key), b"dead:0").unwrap();
+
+        let waiters: Vec<_> = (0..2)
+            .map(|_| {
+                let dir = dir.clone();
+                std::thread::spawn(move || {
+                    let mut c =
+                        ArtifactCache::open(&dir, true, false).unwrap();
+                    c.set_claim_stale_secs(0);
+                    let claim = c.claim("stage", key).unwrap();
+                    let got = c.load("stage", key);
+                    drop(claim);
+                    (got, c.stats().hits)
+                })
+            })
+            .collect();
+        for w in waiters {
+            let (got, hits) = w.join().unwrap();
+            let got = got.expect("waiter must wake to a cache hit");
+            assert_eq!(
+                got.get("images").unwrap(),
+                art.get("images").unwrap(),
+                "takeover must surface the intact artifact"
+            );
+            assert_eq!(hits, 1);
+        }
+        // every claim released; the dead holder's lock is gone, not
+        // resurrected
+        assert!(!cache.lock_path("stage", key).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn released_claim_never_removes_a_foreign_lock() {
         let dir = std::env::temp_dir().join("genie_artifact_foreign_lock");
         std::fs::remove_dir_all(&dir).ok();
@@ -831,6 +922,28 @@ mod tests {
         std::fs::write(cache.path("stage", key), b"NOPE").unwrap();
         assert!(cache.load("stage", key).is_none());
         assert_eq!(cache.stats().misses, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn incoherent_artifact_is_a_checked_miss() {
+        let dir = std::env::temp_dir().join("genie_artifact_checked_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").finish();
+        // parses fine, but the piece the stage decodes is missing
+        let mut partial = Store::new();
+        partial.insert("final_loss", Tensor::scalar_f32(0.5));
+        cache.store("stage", key, &partial).unwrap();
+        let check = |a: &Store| a.get("images").is_ok();
+        assert!(cache.load_checked("stage", key, check).is_none());
+        assert_eq!(cache.stats().misses, 1);
+        // rewriting it coherently turns the same lookup into a hit
+        let mut full = partial.clone();
+        full.insert("images", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        cache.store("stage", key, &full).unwrap();
+        assert!(cache.load_checked("stage", key, check).is_some());
+        assert_eq!(cache.stats().hits, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -9,6 +9,7 @@ use anyhow::{bail, Result};
 
 use crate::exec::Parallelism;
 use crate::precision::{validate_bits, Granularity, Policy};
+use crate::synthesis::Engine;
 
 use super::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
 
@@ -142,6 +143,9 @@ impl RunConfig {
             "fsq_samples" => self.fsq_samples = p!(usize),
             "pretrain.steps" => self.pretrain.steps = p!(usize),
             "pretrain.lr" => self.pretrain.lr = p!(f32),
+            "synthesis" | "distill.engine" => {
+                self.distill.engine = Engine::parse(value)?
+            }
             "distill.mode" => self.distill.mode = DistillMode::parse(value)?,
             "distill.swing" => self.distill.swing = p!(bool),
             "distill.samples" => self.distill.samples = p!(usize),
@@ -191,6 +195,21 @@ mod tests {
         assert_eq!(c.distill.mode, DistillMode::Gba);
         assert_eq!(c.quant.drop_p, 0.0);
         assert!(!c.distill.swing);
+    }
+
+    #[test]
+    fn synthesis_keys_apply() {
+        use crate::synthesis::Engine;
+        let mut c = RunConfig::default();
+        assert_eq!(c.distill.engine, Engine::Genie);
+        c.set("synthesis", "zeroq").unwrap();
+        assert_eq!(c.distill.engine, Engine::Zeroq);
+        // dotted alias, same field
+        c.set("distill.engine", "zaq").unwrap();
+        assert_eq!(c.distill.engine, Engine::Zaq);
+        c.set("synthesis", "genie").unwrap();
+        assert_eq!(c.distill.engine, Engine::Genie);
+        assert!(c.set("synthesis", "synq").is_err());
     }
 
     #[test]

@@ -1,5 +1,8 @@
-//! GENIE-D data distillation scheduler (Algorithm 1) plus the baseline
-//! arms of the Table 2 ablation:
+//! Synthetic-data distillation scheduler (Algorithm 1) — sharding,
+//! checkpoint/resume and aggregation for whichever [`Engine`] the config
+//! selects (DESIGN.md §12). The per-shard optimization itself lives in
+//! `crate::synthesis` behind the `SynthesisPolicy` trait; the default
+//! GENIE-D engine keeps the Table 2 ablation arms:
 //!
 //!   * `Genie`  — generator + learnable latents (lr_z > 0), Alg. 1
 //!   * `Gba`    — generator only, latents frozen (lr_z = 0) — M4
@@ -18,7 +21,7 @@
 //! for any worker count.
 //!
 //! Each shard's step loop runs on the shared phase engine (DESIGN.md §9):
-//! [`GenieShard`] / [`DirectShard`] supply the per-step scalars and the
+//! the policy-built [`Phase`] supplies the per-step scalars and the
 //! carried state names; [`StepLoop`] owns residency and — with a stage
 //! checkpoint attached — periodic GTS1 checkpoints plus `shard{b}.done`
 //! results, so an interrupted synthesis resumes per shard, mid-loop,
@@ -27,10 +30,10 @@
 use anyhow::Result;
 
 use crate::exec::{run_jobs, Parallelism};
-use crate::phase::{checkpoint, Phase, StageCkpt, StepLoop};
-use crate::runtime::{DeviceStore, ModelRt, Scalars};
-use crate::schedule::{ExponentialDecay, ReduceLROnPlateau};
+use crate::phase::{checkpoint, StageCkpt, StepLoop};
+use crate::runtime::{DeviceStore, ModelRt};
 use crate::store::Store;
+use crate::synthesis::Engine;
 use crate::tensor::{Pcg32, Tensor};
 
 use super::Metrics;
@@ -65,6 +68,8 @@ impl DistillMode {
 
 #[derive(Debug, Clone)]
 pub struct DistillCfg {
+    /// which synthesis engine builds the shard phases (DESIGN.md §12)
+    pub engine: Engine,
     pub mode: DistillMode,
     pub swing: bool,
     /// number of synthetic images to distill (rounded up to whole batches)
@@ -82,6 +87,7 @@ pub struct DistillCfg {
 impl Default for DistillCfg {
     fn default() -> Self {
         DistillCfg {
+            engine: Engine::Genie,
             mode: DistillMode::Genie,
             swing: true,
             samples: 128,
@@ -103,215 +109,6 @@ pub struct DistillOutput {
     pub loss_trace: Vec<(usize, f32)>,
     /// final BNS loss averaged over batches
     pub final_loss: f32,
-}
-
-/// One generator-based shard (GENIE / GBA) as a [`Phase`]: generator
-/// params, Adam moments and latents stay device-resident across steps;
-/// only `key`/`t`/`lr_*` go up and the loss comes down per step.
-struct GenieShard<'a, 'rt> {
-    mrt: &'a ModelRt<'rt>,
-    tag: &'a str,
-    rng: Pcg32,
-    gen_sched: ExponentialDecay,
-    z_sched: ReduceLROnPlateau,
-    lr_z: f32,
-    lr_z_active: bool,
-}
-
-impl<'a, 'rt> GenieShard<'a, 'rt> {
-    fn new(
-        mrt: &'a ModelRt<'rt>,
-        cfg: &DistillCfg,
-        tag: &'a str,
-        rng: Pcg32,
-    ) -> Self {
-        let lr_z_active = cfg.mode == DistillMode::Genie;
-        GenieShard {
-            mrt,
-            tag,
-            rng,
-            gen_sched: ExponentialDecay::new(cfg.lr_g, 0.95, 100),
-            z_sched: ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30),
-            lr_z: if lr_z_active { cfg.lr_z } else { 0.0 },
-            lr_z_active,
-        }
-    }
-}
-
-impl Phase for GenieShard<'_, '_> {
-    fn name(&self) -> String {
-        "distill".into()
-    }
-
-    fn entry(&self) -> String {
-        format!("distill_genie_{}", self.tag)
-    }
-
-    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
-        let m = &self.mrt.manifest;
-        let bd = m.batch("distill");
-        // fresh generator per batch (appendix A)
-        let (kh, kl) = self.rng.key_pair();
-        dev.insert("key", &Tensor::key(kh, kl))?;
-        self.mrt.call_device("gen_init", dev)?;
-        for (name, shape) in &m.gen_params {
-            dev.insert(&format!("am.{name}"), &Tensor::zeros(shape))?;
-            dev.insert(&format!("av.{name}"), &Tensor::zeros(shape))?;
-        }
-        // latents z ~ N(0, I), learnable (the GLO insight, section 3.1)
-        let zshape = [bd, m.latent];
-        dev.insert("z", &Tensor::randn(&zshape, &mut self.rng, 1.0))?;
-        dev.insert("zm", &Tensor::zeros(&zshape))?;
-        dev.insert("zv", &Tensor::zeros(&zshape))?;
-        Ok(())
-    }
-
-    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
-        let (kh, kl) = self.rng.key_pair();
-        dev.insert("key", &Tensor::key(kh, kl))?;
-        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
-        dev.insert("lr_g", &Tensor::scalar_f32(self.gen_sched.lr(t - 1)))?;
-        dev.insert("lr_z", &Tensor::scalar_f32(self.lr_z))?;
-        Ok(())
-    }
-
-    fn after_step(
-        &mut self,
-        _t: usize,
-        scalars: &Scalars,
-        _dev: &mut DeviceStore,
-    ) -> Result<()> {
-        if self.lr_z_active {
-            self.lr_z = self.z_sched.observe(scalars["loss"]);
-        }
-        Ok(())
-    }
-
-    fn carried(&self) -> Vec<String> {
-        let m = &self.mrt.manifest;
-        let mut v = Vec::new();
-        for (n, _) in &m.gen_params {
-            v.push(n.clone());
-            v.push(format!("am.{n}"));
-            v.push(format!("av.{n}"));
-        }
-        v.extend(["z".to_string(), "zm".to_string(), "zv".to_string()]);
-        v
-    }
-
-    fn snapshot(&self) -> Store {
-        let mut s = Store::new();
-        s.insert("rng", checkpoint::rng_tensor(&self.rng));
-        s.insert("z_sched", checkpoint::plateau_tensor(&self.z_sched));
-        s.insert("lr_z", Tensor::scalar_f32(self.lr_z));
-        s
-    }
-
-    fn restore(&mut self, snap: &Store) -> Result<()> {
-        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
-        checkpoint::plateau_restore(&mut self.z_sched, snap.get("z_sched")?)?;
-        self.lr_z = snap.get("lr_z")?.scalar();
-        Ok(())
-    }
-
-    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
-        // phase boundary: the only full-tensor download of the shard
-        self.mrt.call_device("gen_images", dev)?;
-        let mut out = Store::new();
-        out.insert("images", dev.fetch("images")?);
-        Ok(out)
-    }
-}
-
-/// One direct (ZeroQ/DBA) shard as a [`Phase`]: the images themselves
-/// are the parameters, living on device until the final fetch.
-struct DirectShard<'a, 'rt> {
-    mrt: &'a ModelRt<'rt>,
-    tag: &'a str,
-    rng: Pcg32,
-    sched: ReduceLROnPlateau,
-    lr: f32,
-}
-
-impl<'a, 'rt> DirectShard<'a, 'rt> {
-    fn new(
-        mrt: &'a ModelRt<'rt>,
-        cfg: &DistillCfg,
-        tag: &'a str,
-        rng: Pcg32,
-    ) -> Self {
-        DirectShard {
-            mrt,
-            tag,
-            rng,
-            sched: ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30),
-            lr: cfg.lr_z,
-        }
-    }
-}
-
-impl Phase for DirectShard<'_, '_> {
-    fn name(&self) -> String {
-        "distill".into()
-    }
-
-    fn entry(&self) -> String {
-        format!("distill_direct_{}", self.tag)
-    }
-
-    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
-        let m = &self.mrt.manifest;
-        let bd = m.batch("distill");
-        let img = &m.image;
-        let xshape = [bd, img[0], img[1], img[2]];
-        dev.insert("x", &Tensor::randn(&xshape, &mut self.rng, 1.0))?;
-        dev.insert("xm", &Tensor::zeros(&xshape))?;
-        dev.insert("xv", &Tensor::zeros(&xshape))?;
-        Ok(())
-    }
-
-    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
-        let (kh, kl) = self.rng.key_pair();
-        dev.insert("key", &Tensor::key(kh, kl))?;
-        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
-        dev.insert("lr", &Tensor::scalar_f32(self.lr))?;
-        Ok(())
-    }
-
-    fn after_step(
-        &mut self,
-        _t: usize,
-        scalars: &Scalars,
-        _dev: &mut DeviceStore,
-    ) -> Result<()> {
-        self.lr = self.sched.observe(scalars["loss"]);
-        Ok(())
-    }
-
-    fn carried(&self) -> Vec<String> {
-        vec!["x".into(), "xm".into(), "xv".into()]
-    }
-
-    fn snapshot(&self) -> Store {
-        let mut s = Store::new();
-        s.insert("rng", checkpoint::rng_tensor(&self.rng));
-        s.insert("sched", checkpoint::plateau_tensor(&self.sched));
-        s.insert("lr", Tensor::scalar_f32(self.lr));
-        s
-    }
-
-    fn restore(&mut self, snap: &Store) -> Result<()> {
-        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
-        checkpoint::plateau_restore(&mut self.sched, snap.get("sched")?)?;
-        self.lr = snap.get("lr")?.scalar();
-        Ok(())
-    }
-
-    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
-        let mut out = Store::new();
-        out.insert("images", dev.fetch("x")?);
-        Ok(out)
-    }
 }
 
 /// What one shard job hands back to the aggregation loop.
@@ -353,16 +150,8 @@ fn distill_shard(
     let steploop = StepLoop::new(cfg.steps, cfg.log_every.max(1))
         .with_checkpoint(ck.map(|c| c.shard(&shard_name)));
     let rng = Pcg32::new_stream(cfg.seed, b as u64);
-    let out = match cfg.mode {
-        DistillMode::Direct => {
-            let mut phase = DirectShard::new(mrt, cfg, tag, rng);
-            steploop.run(mrt, &mut phase, &mut dev)?
-        }
-        _ => {
-            let mut phase = GenieShard::new(mrt, cfg, tag, rng);
-            steploop.run(mrt, &mut phase, &mut dev)?
-        }
-    };
+    let mut phase = cfg.engine.policy().shard(mrt, cfg, tag, rng);
+    let out = steploop.run(mrt, phase.as_mut(), &mut dev)?;
     anyhow::ensure!(
         out.completed,
         "distill shard {b}: interrupted by step budget (checkpoint \
@@ -412,7 +201,7 @@ pub fn distill_ck(
     let bd = m.batch("distill");
     let n_batches = cfg.samples.div_ceil(bd);
     let tag = if cfg.swing { "swing" } else { "noswing" };
-    let mode_name = cfg.mode.as_str();
+    let mode_name = cfg.engine.display(cfg.mode);
 
     metrics.start("distill");
     // one teacher upload, Arc-shared by every shard (no per-shard clone

@@ -139,7 +139,14 @@ pub fn distill_cached_keyed(
     // claim first (DESIGN.md §11): a concurrent run synthesizing the
     // same set holds the lock; when it releases, the lookup below hits
     let _claim = cache.claim("distill", key)?;
-    if let Some(art) = cache.load("distill", key) {
+    // a parseable artifact missing any of its pieces is a miss, not an
+    // error: recompute and rewrite, matching the dry-run prediction
+    let coherent = |a: &Store| {
+        a.get("images").is_ok()
+            && a.get("final_loss").is_ok()
+            && checkpoint::trace_from_store(a, "trace").is_ok()
+    };
+    if let Some(art) = cache.load_checked("distill", key, coherent) {
         metrics.record_cache("distill", true);
         crate::progress!(
             "distill[{}]: cache hit ({})",

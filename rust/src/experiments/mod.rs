@@ -21,6 +21,7 @@ pub fn run(exp: &str, cfg: &RunConfig) -> Result<()> {
         "table4" => tables::table4(cfg),
         "table5" => tables::table5(cfg),
         "table6" => tables::table6(cfg),
+        "synth" => tables::synth(cfg),
         "plan" => tables::plan_report(cfg),
         "fig5" => figures::fig5(cfg),
         "fig6" => figures::fig6(cfg),
@@ -28,14 +29,14 @@ pub fn run(exp: &str, cfg: &RunConfig) -> Result<()> {
         "figA5" => figures::fig_a5(cfg),
         "all" => {
             for e in ["table2", "table3", "table4", "table5", "table6",
-                      "plan", "fig5", "fig6", "figA2", "figA5"] {
+                      "synth", "plan", "fig5", "fig6", "figA2", "figA5"] {
                 println!("\n################ {e} ################");
                 run(e, cfg)?;
             }
             Ok(())
         }
         "" => bail!(
-            "experiments: pass --exp <table2|table3|table4|table5|table6|plan|fig5|fig6|figA2|figA5|all>"
+            "experiments: pass --exp <table2|table3|table4|table5|table6|synth|plan|fig5|fig6|figA2|figA5|all>"
         ),
         other => bail!("unknown experiment '{other}'"),
     }

@@ -23,8 +23,9 @@ use crate::grid::{
 };
 use crate::precision::sensitivity::{budget_bits, measure_sensitivity, pareto_plan};
 use crate::precision::PrecisionPlan;
-use crate::runtime::{ModelRt, Runtime};
+use crate::runtime::{Manifest, ModelRt, Runtime};
 use crate::store::Store;
+use crate::synthesis::Engine;
 use crate::tensor::Pcg32;
 
 use super::qat::{qat_eval, qat_train, QatCfg};
@@ -583,6 +584,69 @@ pub fn table6(cfg: &RunConfig) -> Result<()> {
             model.clone(), "MinMax-QAT".into(), format!("{:.1}", d + q),
             format!("{d:.1}"), pct(acc),
         ]);
+    }
+    table.print_and_save()
+}
+
+/// Synthesis-engine ablation (DESIGN.md §12): every available engine
+/// distills its own calibration set against one shared teacher, then
+/// runs the same quantizer — the grid's exactly-once dedupe makes the
+/// comparison one teacher + one distill per engine, so the top1 deltas
+/// are attributable to the calibration data alone. Engines whose step
+/// graphs the compiled artifacts predate are skipped with a notice.
+pub fn synth(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let mut table = ResultTable::new(
+        "synth_engines",
+        &["model", "engine", "top1", "fp32", "distill_secs"],
+    );
+    for model in models_of(cfg) {
+        let m = Manifest::load(format!("{}/{}", cfg.artifacts, model))?;
+        let engines: Vec<AxisValue> =
+            [Engine::Genie, Engine::Zeroq, Engine::Zaq]
+                .into_iter()
+                .filter(|e| {
+                    let mut dc = cfg.distill.clone();
+                    dc.engine = *e;
+                    let entry = e.policy().entry(&dc, "swing");
+                    let ok = m.entrypoints.contains_key(&entry);
+                    if !ok {
+                        println!(
+                            "[synth] {model}: skipping {} (artifacts \
+                             predate entry '{entry}')",
+                            e.as_str()
+                        );
+                    }
+                    ok
+                })
+                .map(AxisValue::Synthesis)
+                .collect();
+        if engines.is_empty() {
+            continue;
+        }
+        let grid = RunGrid::new()
+            .axis("model", vec![AxisValue::Model(model.clone())])
+            .axis("synthesis", engines);
+        let mut metrics = Metrics::new();
+        let out = grid::execute(
+            &rt, cfg, &grid, &GridOpts::default(), &mut metrics,
+        )?;
+        for cell in &out.cells {
+            let o =
+                cell.outcome.as_ref().context("synth: missing outcome")?;
+            let engine = cell.spec.coord("synthesis").unwrap_or("?");
+            println!(
+                "[synth] {} {}: {} (fp32 {})",
+                cell.spec.model, engine, pct(o.q_acc), pct(o.fp_acc)
+            );
+            table.row(vec![
+                cell.spec.model.clone(),
+                engine.into(),
+                pct(o.q_acc),
+                pct(o.fp_acc),
+                o.distill_secs_cell(),
+            ]);
+        }
     }
     table.print_and_save()
 }

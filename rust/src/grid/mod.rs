@@ -5,7 +5,8 @@
 //! declarative object.
 //!
 //! A [`RunGrid`] is a list of [`Axis`]es (model × bits × data mode ×
-//! seed × samples × quantizer × precision, plus curated combo "arms");
+//! seed × samples × quantizer × precision × synthesis engine, plus
+//! curated combo "arms");
 //! [`RunGrid::cells`] expands their cartesian product into fully
 //! resolved [`RunSpec`]s — each cell is exactly the configuration a
 //! standalone `genie run` with the same overrides would use, so a grid
@@ -37,6 +38,7 @@ use crate::data::Dataset;
 use crate::precision::{validate_bits, Policy, PrecisionPlan};
 use crate::runtime::Manifest;
 use crate::store::Store;
+use crate::synthesis::Engine;
 use crate::tensor::{Pcg32, Tensor};
 
 pub use run::{
@@ -129,6 +131,7 @@ pub enum AxisValue {
     Data(DataMode),
     Quantizer(QuantArm),
     Precision(Policy),
+    Synthesis(Engine),
     Arm { label: String, data: DataMode, quant: QuantArm },
 }
 
@@ -142,6 +145,7 @@ impl AxisValue {
             AxisValue::Data(d) => d.label(),
             AxisValue::Quantizer(q) => q.label(),
             AxisValue::Precision(p) => p.as_str().into(),
+            AxisValue::Synthesis(e) => e.as_str().into(),
             AxisValue::Arm { label, .. } => label.clone(),
         }
     }
@@ -161,6 +165,7 @@ impl AxisValue {
             AxisValue::Data(d) => spec.set_data(*d),
             AxisValue::Quantizer(q) => q.apply(&mut spec.quant),
             AxisValue::Precision(p) => spec.quant.precision.policy = *p,
+            AxisValue::Synthesis(e) => spec.distill.engine = *e,
             AxisValue::Arm { data, quant, .. } => {
                 spec.set_data(*data);
                 quant.apply(&mut spec.quant);
@@ -272,7 +277,8 @@ impl RunGrid {
     /// Parse one CLI `--axis name=v1,v2,...` argument. Bits accept `4`,
     /// `2/4` or `w2a4`; data accepts distill modes (`genie`, `gba`,
     /// `direct`, optionally `+noswing`) and `real`/`fsq`; quantizer
-    /// accepts `genie_m`/`adaround` (`+qdrop`/`+nodrop`).
+    /// accepts `genie_m`/`adaround` (`+qdrop`/`+nodrop`); synthesis
+    /// accepts the engine names (`genie`, `zeroq`, `zaq`).
     pub fn parse_axis(&mut self, arg: &str, base: &RunConfig) -> Result<()> {
         let Some((name, csv)) = arg.split_once('=') else {
             bail!("--axis wants name=v1,v2,..., got '{arg}'");
@@ -347,9 +353,10 @@ fn parse_axis_value(
         "data" | "mode" => AxisValue::Data(parse_data(tok, base)?),
         "quant" | "quantizer" => AxisValue::Quantizer(QuantArm::parse(tok)?),
         "precision" => AxisValue::Precision(Policy::parse(tok)?),
+        "synthesis" | "engine" => AxisValue::Synthesis(Engine::parse(tok)?),
         other => bail!(
             "unknown axis '{other}' \
-             (want model|bits|seed|samples|data|quant|precision)"
+             (want model|bits|seed|samples|data|quant|precision|synthesis)"
         ),
     })
 }
@@ -511,9 +518,10 @@ impl GridPlan {
                         StageKind::Distill,
                         dspec,
                         format!(
-                            "distill[{}] {} x{} steps={} seed={}",
+                            "distill[{}] {}{} x{} steps={} seed={}",
                             spec.model,
-                            spec.data.label(),
+                            spec.distill.engine.display(spec.distill.mode),
+                            if spec.distill.swing { "" } else { "+noswing" },
                             spec.distill.samples,
                             spec.distill.steps,
                             spec.distill.seed
@@ -636,13 +644,18 @@ impl GridPlan {
                         continue;
                     };
                     let key = artifacts::distill_key(m, &cell.distill, th);
+                    // a parseable artifact without its images tensor is
+                    // incoherent (e.g. a partial copy): execution treats
+                    // it as a miss and recomputes, so the prediction
+                    // must too — Hit only when the images are loadable
                     match Store::load(cache.path("distill", key)) {
-                        Ok(art) => {
-                            if let Ok(t) = art.get("images") {
+                        Ok(art) => match art.get("images") {
+                            Ok(t) => {
                                 images.insert(i, t.clone());
+                                out[i] = Cached::Hit;
                             }
-                            out[i] = Cached::Hit;
-                        }
+                            Err(_) => out[i] = Cached::Run,
+                        },
                         Err(_) => out[i] = Cached::Run,
                     }
                 }
@@ -729,6 +742,16 @@ impl GridPlan {
         for c in &self.cells {
             s.push_str(&format!("  cell {}: {}\n", c.cell, c.label()));
         }
+        let hits = cached.iter().filter(|&&c| c == Cached::Hit).count();
+        let pending =
+            cached.iter().filter(|&&c| c == Cached::Unknown).count();
+        s.push_str(&format!(
+            "expected: {} cached, {} run ({} undecidable until an \
+             upstream runs)\n",
+            hits,
+            self.nodes.len() - hits,
+            pending,
+        ));
         let waves = crate::exec::waves(&self.deps());
         s.push_str(&format!("schedule: {} waves\n", waves.len()));
         for (w, wave) in waves.iter().enumerate() {
@@ -855,8 +878,9 @@ mod tests {
         g.parse_axis("quant=genie_m,adaround+nodrop", &b).unwrap();
         g.parse_axis("samples=64,128", &b).unwrap();
         g.parse_axis("precision=uniform,pareto", &b).unwrap();
+        g.parse_axis("synthesis=genie,zeroq,zaq", &b).unwrap();
         g.parse_axis("model=toy", &b).unwrap();
-        assert_eq!(g.axes.len(), 7);
+        assert_eq!(g.axes.len(), 8);
         assert_eq!(
             g.axes[0].values.iter().map(|v| v.label()).collect::<Vec<_>>(),
             vec!["w4a4", "w2a4", "w3a3"]
@@ -864,6 +888,10 @@ mod tests {
         assert_eq!(g.axes[2].values[1].label(), "direct+noswing");
         assert_eq!(g.axes[2].values[2].label(), "real");
         assert_eq!(g.axes[3].values[1].label(), "adaround+nodrop");
+        assert_eq!(
+            g.axes[6].values.iter().map(|v| v.label()).collect::<Vec<_>>(),
+            vec!["genie", "zeroq", "zaq"]
+        );
 
         assert!(RunGrid::new().parse_axis("bits=0", &b).is_err());
         assert!(RunGrid::new().parse_axis("bits=9", &b).is_err());
@@ -871,6 +899,30 @@ mod tests {
         assert!(RunGrid::new().parse_axis("bits", &b).is_err());
         assert!(RunGrid::new().parse_axis("samples=0", &b).is_err());
         assert!(RunGrid::new().parse_axis("data=warp", &b).is_err());
+        assert!(RunGrid::new().parse_axis("synthesis=synq", &b).is_err());
+    }
+
+    #[test]
+    fn synthesis_axis_splits_distill_but_shares_the_teacher() {
+        let grid = RunGrid::new().axis(
+            "synthesis",
+            vec![
+                AxisValue::Synthesis(Engine::Genie),
+                AxisValue::Synthesis(Engine::Zeroq),
+            ],
+        );
+        let cells = grid.cells(&base()).unwrap();
+        assert_eq!(cells[0].distill.engine, Engine::Genie);
+        assert_eq!(cells[1].distill.engine, Engine::Zeroq);
+        assert_eq!(cells[1].label(), "synthesis=zeroq");
+        let plan = GridPlan::build(cells, &manifests(), false).unwrap();
+        // the engine folds into the distill spec key, so each engine
+        // gets its own synthesis node under one shared teacher
+        assert_eq!(plan.count(StageKind::Teacher), 1);
+        assert_eq!(plan.count(StageKind::Distill), 2);
+        assert_ne!(plan.distill_of[0], plan.distill_of[1]);
+        let d1 = plan.distill_of[1].unwrap();
+        assert!(plan.nodes[d1].label.contains("zeroq"), "{}", plan.nodes[d1].label);
     }
 
     #[test]
@@ -958,6 +1010,56 @@ mod tests {
         assert_eq!(plan.count(StageKind::Distill), 1);
         assert_eq!(plan.count(StageKind::Quantize), 0);
         assert!(plan.quantize_of.iter().all(|q| q.is_none()));
+    }
+
+    #[test]
+    fn partially_warm_cache_predicts_miss_not_hit() {
+        let dir = std::env::temp_dir().join("genie_grid_partial_warm");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let ms = manifests();
+        let m = &ms["toy"];
+
+        let cells = RunGrid::new().cells(&base()).unwrap();
+        let cell = cells[0].clone();
+        let plan = GridPlan::build(cells, &ms, false).unwrap();
+        let t = plan.teacher_of[0];
+        let d = plan.distill_of[0].unwrap();
+        let q = plan.quantize_of[0].unwrap();
+
+        // warm the teacher; its spec key doubles as its content key
+        let mut teacher = Store::new();
+        teacher.insert("w", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        cache.store("teacher", plan.nodes[t].spec, &teacher).unwrap();
+        let th = teacher.content_hash();
+
+        // a distill artifact that parses but is missing its images
+        // tensor (e.g. a partial copy from another cache): execution
+        // would recompute, so the dry run must say "run", and the
+        // downstream quantize stays undecidable
+        let dkey = artifacts::distill_key(m, &cell.distill, th);
+        let mut partial = Store::new();
+        partial.insert("final_loss", Tensor::scalar_f32(0.5));
+        cache.store("distill", dkey, &partial).unwrap();
+        let got = plan.resolve_cached(&ms, &cache, None);
+        assert_eq!(got[t], Cached::Hit);
+        assert_eq!(got[d], Cached::Run, "incoherent artifact must miss");
+        assert_eq!(got[q], Cached::Unknown);
+
+        // the summary line reflects the prediction
+        let text = plan.render(&ms, &cache, None);
+        assert!(text.contains("expected: 1 cached"), "{text}");
+
+        // once the artifact is coherent the same node predicts a hit
+        let mut full = partial.clone();
+        full.insert(
+            "images",
+            Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+        );
+        cache.store("distill", dkey, &full).unwrap();
+        let got = plan.resolve_cached(&ms, &cache, None);
+        assert_eq!(got[d], Cached::Hit);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod exec;
 pub mod runtime;
 pub mod phase;
 pub mod precision;
+pub mod synthesis;
 pub mod artifacts;
 pub mod quant;
 pub mod schedule;

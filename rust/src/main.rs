@@ -63,6 +63,10 @@ fn main() -> Result<()> {
                 let v = next(&mut it, "--target-size")?;
                 cfg.set("target_size", &v)?;
             }
+            "--synthesis" => {
+                let v = next(&mut it, "--synthesis")?;
+                cfg.set("synthesis", &v)?;
+            }
             "--axis" => axes.push(next(&mut it, "--axis")?),
             "--dry-run" => dry_run = true,
             "--json" => {
@@ -115,13 +119,14 @@ fn usage() {
          usage: genie <info|pretrain|eval|distill|zsq|run|fsq|grid|experiments>\n\
                 [--model M] [--artifacts DIR] [--exp ID]\n\
                 [--precision uniform|pareto] [--target-size F]\n\
+                [--synthesis genie|zeroq|zaq]\n\
                 [--axis name=v1,v2 ...] [--dry-run] [--json PATH]\n\
                 [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
          keys: wbits abits seed workers checkpoint_every json\n\
                precision target_size first_last_bits granularity\n\
-               sens_batches candidates\n\
+               sens_batches candidates synthesis\n\
                pretrain.{{steps,lr}}\n\
-               distill.{{mode,swing,samples,steps,lr_g,lr_z}}\n\
+               distill.{{engine,mode,swing,samples,steps,lr_g,lr_z}}\n\
                quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}\n\
          workers=K runs distill shards, quant blocks and eval batches on\n\
          K pool workers (0 = auto); results are bit-identical for any K.\n\
@@ -132,12 +137,17 @@ fn usage() {
          Stages cache as content-addressed artifacts under --cache-dir;\n\
          identical configs re-load instead of re-running, --resume picks\n\
          an interrupted stage up from its last checkpoint.\n\
-         grid sweeps axes (model bits seed samples data quant precision)\n\
-         on the shared-artifact scheduler: cells are bit-identical to\n\
-         standalone runs, shared teacher/distill work dispatches once,\n\
-         and stages from different cells interleave on the pool. E.g.:\n\
+         --synthesis picks the calibration-data engine (DESIGN.md §12):\n\
+         genie (generator+latents, default), zeroq (BN-statistics\n\
+         image-space matching), zaq (adversarial generator vs a W4A4\n\
+         student proxy); each engine caches under its own keys.\n\
+         grid sweeps axes (model bits seed samples data quant precision\n\
+         synthesis) on the shared-artifact scheduler: cells are\n\
+         bit-identical to standalone runs, shared teacher/distill work\n\
+         dispatches once, and stages from different cells interleave\n\
+         on the pool. E.g.:\n\
            genie grid --axis bits=4,3,2 --axis seed=0,1 workers=4\n\
-           genie grid --axis bits=w2a4,w2a2 --axis data=real --dry-run\n\
+           genie grid --axis synthesis=genie,zeroq --axis bits=w2a4 --dry-run\n\
          --json PATH writes the outcome report (run and grid) as JSON."
     );
 }

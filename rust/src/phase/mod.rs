@@ -123,7 +123,7 @@ impl StepLoop {
     /// Run the loop. `dev` holds whatever is already resident (e.g. the
     /// Arc-shared teacher); `init` (fresh start) or the checkpoint
     /// (resume) supplies the phase's own state on top.
-    pub fn run<P: Phase>(
+    pub fn run<P: Phase + ?Sized>(
         &self,
         mrt: &ModelRt,
         phase: &mut P,

@@ -1,0 +1,548 @@
+//! Pluggable synthesis engines (DESIGN.md §12): the data half of
+//! zero-shot quantization behind a policy trait, mirroring the
+//! precision `Policy` design (§10).
+//!
+//! A [`SynthesisPolicy`] builds the per-shard [`Phase`] that the distill
+//! scheduler (`coordinator::distill`) drives through [`StepLoop`] — the
+//! scheduler owns sharding, checkpoint/resume and aggregation; the
+//! policy owns what one shard optimizes:
+//!
+//!   * [`Engine::Genie`] — GENIE-D (Alg. 1): generator + learnable
+//!     latents, with the `distill.mode` ablation arms (`gba` freezes
+//!     latents, `direct` drops the generator) exactly as before the
+//!     refactor — byte-identical output, same entrypoints.
+//!   * [`Engine::Zeroq`] — ZeroQ-style BN-statistics distribution
+//!     matching (Cai et al., 2020): no generator at all; the images are
+//!     the parameters, optimized directly against the stored BN µ/σ via
+//!     the `distill_direct_*` graphs, whatever `distill.mode` says.
+//!   * [`Engine::Zaq`] — ZAQ-style adversarial synthesis (Liu et al.,
+//!     2021): generator + latents step to *maximize* the discrepancy
+//!     between the FP32 teacher and a fake-quantized student proxy
+//!     (the `distill_zaq_*` graphs, W4A4 Min-Max student), regularized
+//!     by the BNS term so samples stay on the teacher's manifold.
+//!
+//! Every engine inherits the determinism contract: shard `b` draws all
+//! randomness from `Pcg32::new_stream(seed, b)`, so a synthetic set is
+//! bit-identical for any worker count and resumes bit-identically from
+//! checkpoints. The engine choice folds into the distill cache keys
+//! (`artifacts::distill_key`/`distill_spec_key`), so two engines never
+//! collide on an artifact, and a grid can ablate data engines with
+//! `--axis synthesis=genie,zeroq,zaq` the way it ablates bits.
+
+use anyhow::Result;
+
+use crate::coordinator::{DistillCfg, DistillMode};
+use crate::phase::{checkpoint, Phase};
+use crate::runtime::{DeviceStore, ModelRt, Scalars};
+use crate::schedule::{ExponentialDecay, ReduceLROnPlateau};
+use crate::store::Store;
+use crate::tensor::{Pcg32, Tensor};
+
+/// Bit-widths of the ZAQ fake-quant student proxy (fixed: the proxy is
+/// a synthesis-time adversary, not the run's quantizer, so it does not
+/// track `wbits`/`abits` and does not enter the cache key beyond the
+/// engine name).
+const ZAQ_PROXY_WBITS: f32 = 4.0;
+const ZAQ_PROXY_ABITS: f32 = 4.0;
+
+/// Which synthesis engine produces the calibration set — a config value
+/// (`--synthesis`, `distill.engine=`), a grid axis (`--axis synthesis=`)
+/// and a cache-key field, like `precision::Policy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Genie,
+    Zeroq,
+    Zaq,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "genie" => Ok(Engine::Genie),
+            "zeroq" => Ok(Engine::Zeroq),
+            "zaq" => Ok(Engine::Zaq),
+            other => anyhow::bail!(
+                "unknown synthesis engine '{other}' (want genie|zeroq|zaq)"
+            ),
+        }
+    }
+
+    /// Canonical lowercase name (config values, cache-key fields, grid
+    /// cell labels).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Engine::Genie => "genie",
+            Engine::Zeroq => "zeroq",
+            Engine::Zaq => "zaq",
+        }
+    }
+
+    /// The policy implementing this engine.
+    pub fn policy(self) -> &'static dyn SynthesisPolicy {
+        match self {
+            Engine::Genie => &GenieEngine,
+            Engine::Zeroq => &ZeroqEngine,
+            Engine::Zaq => &ZaqEngine,
+        }
+    }
+
+    /// The name shown in progress lines: the GENIE engine keeps naming
+    /// its `distill.mode` arm (genie/gba/direct, as before the policy
+    /// refactor); the other engines are their own arm.
+    pub fn display(self, mode: DistillMode) -> &'static str {
+        match self {
+            Engine::Genie => mode.as_str(),
+            e => e.as_str(),
+        }
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::Genie
+    }
+}
+
+/// One synthesis engine: builds the per-shard optimization [`Phase`]
+/// the distill scheduler runs. Implementations must draw randomness
+/// only from the `rng` handed in (the shard's `new_stream(seed, b)`),
+/// never from ambient state — that is the whole §5 determinism
+/// contract.
+pub trait SynthesisPolicy: Sync {
+    /// Canonical engine name; equals `Engine::as_str`.
+    fn name(&self) -> &'static str;
+
+    /// The manifest entrypoint the shard's step loop dispatches
+    /// (`tag` is the swing/noswing lowering variant). Lets callers
+    /// check availability before spending a shard run.
+    fn entry(&self, cfg: &DistillCfg, tag: &str) -> String;
+
+    /// Build shard phase: generator/image state init, per-step scalar
+    /// schedules, checkpoint snapshot/restore, final image fetch.
+    fn shard<'a>(
+        &self,
+        mrt: &'a ModelRt<'a>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Box<dyn Phase + 'a>;
+}
+
+/// GENIE-D (the pre-refactor engine, ported unchanged): `distill.mode`
+/// still selects the Alg. 1 generator arm or the direct ablation arm,
+/// with identical dispatch, schedules and entrypoints.
+pub struct GenieEngine;
+
+impl SynthesisPolicy for GenieEngine {
+    fn name(&self) -> &'static str {
+        "genie"
+    }
+
+    fn entry(&self, cfg: &DistillCfg, tag: &str) -> String {
+        match cfg.mode {
+            DistillMode::Direct => format!("distill_direct_{tag}"),
+            _ => format!("distill_genie_{tag}"),
+        }
+    }
+
+    fn shard<'a>(
+        &self,
+        mrt: &'a ModelRt<'a>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Box<dyn Phase + 'a> {
+        match cfg.mode {
+            DistillMode::Direct => {
+                Box::new(DirectShard::new(mrt, cfg, tag, rng))
+            }
+            _ => Box::new(GenieShard::new(mrt, cfg, tag, rng)),
+        }
+    }
+}
+
+/// ZeroQ-style distribution matching: image-space optimization against
+/// the stored BN statistics, no generator — the cheapest engine. Reuses
+/// the `distill_direct_*` graphs regardless of `distill.mode` (the
+/// engine, not the mode, is the arm; the cache keys separate on it).
+pub struct ZeroqEngine;
+
+impl SynthesisPolicy for ZeroqEngine {
+    fn name(&self) -> &'static str {
+        "zeroq"
+    }
+
+    fn entry(&self, _cfg: &DistillCfg, tag: &str) -> String {
+        format!("distill_direct_{tag}")
+    }
+
+    fn shard<'a>(
+        &self,
+        mrt: &'a ModelRt<'a>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Box<dyn Phase + 'a> {
+        Box::new(DirectShard::new(mrt, cfg, tag, rng))
+    }
+}
+
+/// ZAQ-style adversarial synthesis: the generator state machine of
+/// GENIE-D (same carried tensors, same schedules) driven through the
+/// `distill_zaq_*` graphs, whose loss rewards teacher-vs-student
+/// discrepancy instead of pure BNS matching. Latents always learn
+/// (the adversary needs every degree of freedom).
+pub struct ZaqEngine;
+
+impl SynthesisPolicy for ZaqEngine {
+    fn name(&self) -> &'static str {
+        "zaq"
+    }
+
+    fn entry(&self, _cfg: &DistillCfg, tag: &str) -> String {
+        format!("distill_zaq_{tag}")
+    }
+
+    fn shard<'a>(
+        &self,
+        mrt: &'a ModelRt<'a>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Box<dyn Phase + 'a> {
+        Box::new(ZaqShard::new(mrt, cfg, tag, rng))
+    }
+}
+
+/// One generator-based shard (GENIE / GBA) as a [`Phase`]: generator
+/// params, Adam moments and latents stay device-resident across steps;
+/// only `key`/`t`/`lr_*` go up and the loss comes down per step.
+struct GenieShard<'a, 'rt> {
+    mrt: &'a ModelRt<'rt>,
+    tag: &'a str,
+    rng: Pcg32,
+    gen_sched: ExponentialDecay,
+    z_sched: ReduceLROnPlateau,
+    lr_z: f32,
+    lr_z_active: bool,
+}
+
+impl<'a, 'rt> GenieShard<'a, 'rt> {
+    fn new(
+        mrt: &'a ModelRt<'rt>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Self {
+        let lr_z_active = cfg.mode == DistillMode::Genie;
+        GenieShard {
+            mrt,
+            tag,
+            rng,
+            gen_sched: ExponentialDecay::new(cfg.lr_g, 0.95, 100),
+            z_sched: ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30),
+            lr_z: if lr_z_active { cfg.lr_z } else { 0.0 },
+            lr_z_active,
+        }
+    }
+}
+
+impl Phase for GenieShard<'_, '_> {
+    fn name(&self) -> String {
+        "distill".into()
+    }
+
+    fn entry(&self) -> String {
+        format!("distill_genie_{}", self.tag)
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        let m = &self.mrt.manifest;
+        let bd = m.batch("distill");
+        // fresh generator per batch (appendix A)
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        self.mrt.call_device("gen_init", dev)?;
+        for (name, shape) in &m.gen_params {
+            dev.insert(&format!("am.{name}"), &Tensor::zeros(shape))?;
+            dev.insert(&format!("av.{name}"), &Tensor::zeros(shape))?;
+        }
+        // latents z ~ N(0, I), learnable (the GLO insight, section 3.1)
+        let zshape = [bd, m.latent];
+        dev.insert("z", &Tensor::randn(&zshape, &mut self.rng, 1.0))?;
+        dev.insert("zm", &Tensor::zeros(&zshape))?;
+        dev.insert("zv", &Tensor::zeros(&zshape))?;
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr_g", &Tensor::scalar_f32(self.gen_sched.lr(t - 1)))?;
+        dev.insert("lr_z", &Tensor::scalar_f32(self.lr_z))?;
+        Ok(())
+    }
+
+    fn after_step(
+        &mut self,
+        _t: usize,
+        scalars: &Scalars,
+        _dev: &mut DeviceStore,
+    ) -> Result<()> {
+        if self.lr_z_active {
+            self.lr_z = self.z_sched.observe(scalars["loss"]);
+        }
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        let m = &self.mrt.manifest;
+        let mut v = Vec::new();
+        for (n, _) in &m.gen_params {
+            v.push(n.clone());
+            v.push(format!("am.{n}"));
+            v.push(format!("av.{n}"));
+        }
+        v.extend(["z".to_string(), "zm".to_string(), "zv".to_string()]);
+        v
+    }
+
+    fn snapshot(&self) -> Store {
+        let mut s = Store::new();
+        s.insert("rng", checkpoint::rng_tensor(&self.rng));
+        s.insert("z_sched", checkpoint::plateau_tensor(&self.z_sched));
+        s.insert("lr_z", Tensor::scalar_f32(self.lr_z));
+        s
+    }
+
+    fn restore(&mut self, snap: &Store) -> Result<()> {
+        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
+        checkpoint::plateau_restore(&mut self.z_sched, snap.get("z_sched")?)?;
+        self.lr_z = snap.get("lr_z")?.scalar();
+        Ok(())
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        // phase boundary: the only full-tensor download of the shard
+        self.mrt.call_device("gen_images", dev)?;
+        let mut out = Store::new();
+        out.insert("images", dev.fetch("images")?);
+        Ok(out)
+    }
+}
+
+/// One direct (ZeroQ/DBA) shard as a [`Phase`]: the images themselves
+/// are the parameters, living on device until the final fetch.
+struct DirectShard<'a, 'rt> {
+    mrt: &'a ModelRt<'rt>,
+    tag: &'a str,
+    rng: Pcg32,
+    sched: ReduceLROnPlateau,
+    lr: f32,
+}
+
+impl<'a, 'rt> DirectShard<'a, 'rt> {
+    fn new(
+        mrt: &'a ModelRt<'rt>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Self {
+        DirectShard {
+            mrt,
+            tag,
+            rng,
+            sched: ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30),
+            lr: cfg.lr_z,
+        }
+    }
+}
+
+impl Phase for DirectShard<'_, '_> {
+    fn name(&self) -> String {
+        "distill".into()
+    }
+
+    fn entry(&self) -> String {
+        format!("distill_direct_{}", self.tag)
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        let m = &self.mrt.manifest;
+        let bd = m.batch("distill");
+        let img = &m.image;
+        let xshape = [bd, img[0], img[1], img[2]];
+        dev.insert("x", &Tensor::randn(&xshape, &mut self.rng, 1.0))?;
+        dev.insert("xm", &Tensor::zeros(&xshape))?;
+        dev.insert("xv", &Tensor::zeros(&xshape))?;
+        Ok(())
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        let (kh, kl) = self.rng.key_pair();
+        dev.insert("key", &Tensor::key(kh, kl))?;
+        dev.insert("t", &Tensor::scalar_f32(t as f32))?;
+        dev.insert("lr", &Tensor::scalar_f32(self.lr))?;
+        Ok(())
+    }
+
+    fn after_step(
+        &mut self,
+        _t: usize,
+        scalars: &Scalars,
+        _dev: &mut DeviceStore,
+    ) -> Result<()> {
+        self.lr = self.sched.observe(scalars["loss"]);
+        Ok(())
+    }
+
+    fn carried(&self) -> Vec<String> {
+        vec!["x".into(), "xm".into(), "xv".into()]
+    }
+
+    fn snapshot(&self) -> Store {
+        let mut s = Store::new();
+        s.insert("rng", checkpoint::rng_tensor(&self.rng));
+        s.insert("sched", checkpoint::plateau_tensor(&self.sched));
+        s.insert("lr", Tensor::scalar_f32(self.lr));
+        s
+    }
+
+    fn restore(&mut self, snap: &Store) -> Result<()> {
+        self.rng = checkpoint::rng_from_tensor(snap.get("rng")?)?;
+        checkpoint::plateau_restore(&mut self.sched, snap.get("sched")?)?;
+        self.lr = snap.get("lr")?.scalar();
+        Ok(())
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        let mut out = Store::new();
+        out.insert("images", dev.fetch("x")?);
+        Ok(out)
+    }
+}
+
+/// One adversarial (ZAQ) shard: the GENIE generator state machine with
+/// the `distill_zaq_*` loss. The inner [`GenieShard`] carries all the
+/// device state and schedules; this wrapper swaps the entrypoint and
+/// feeds the student proxy's bit-widths as per-step scalars.
+struct ZaqShard<'a, 'rt> {
+    inner: GenieShard<'a, 'rt>,
+}
+
+impl<'a, 'rt> ZaqShard<'a, 'rt> {
+    fn new(
+        mrt: &'a ModelRt<'rt>,
+        cfg: &DistillCfg,
+        tag: &'a str,
+        rng: Pcg32,
+    ) -> Self {
+        let mut inner = GenieShard::new(mrt, cfg, tag, rng);
+        // the adversary always learns its latents, whatever the
+        // (GENIE-specific) mode arm says
+        inner.lr_z_active = true;
+        inner.lr_z = cfg.lr_z;
+        ZaqShard { inner }
+    }
+}
+
+impl Phase for ZaqShard<'_, '_> {
+    fn name(&self) -> String {
+        "distill".into()
+    }
+
+    fn entry(&self) -> String {
+        format!("distill_zaq_{}", self.inner.tag)
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+        self.inner.init(dev)
+    }
+
+    fn before_step(&mut self, t: usize, dev: &mut DeviceStore) -> Result<()> {
+        self.inner.before_step(t, dev)?;
+        dev.insert("wp", &Tensor::scalar_f32(ZAQ_PROXY_WBITS))?;
+        dev.insert("ap", &Tensor::scalar_f32(ZAQ_PROXY_ABITS))?;
+        Ok(())
+    }
+
+    fn after_step(
+        &mut self,
+        t: usize,
+        scalars: &Scalars,
+        dev: &mut DeviceStore,
+    ) -> Result<()> {
+        self.inner.after_step(t, scalars, dev)
+    }
+
+    fn carried(&self) -> Vec<String> {
+        self.inner.carried()
+    }
+
+    fn snapshot(&self) -> Store {
+        self.inner.snapshot()
+    }
+
+    fn restore(&mut self, snap: &Store) -> Result<()> {
+        self.inner.restore(snap)
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+        self.inner.finish(dev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parse_round_trips() {
+        for e in [Engine::Genie, Engine::Zeroq, Engine::Zaq] {
+            assert_eq!(Engine::parse(e.as_str()).unwrap(), e);
+        }
+        assert!(Engine::parse("synq").is_err());
+        assert_eq!(Engine::default(), Engine::Genie);
+    }
+
+    #[test]
+    fn policy_names_match_engine_names() {
+        for e in [Engine::Genie, Engine::Zeroq, Engine::Zaq] {
+            assert_eq!(e.policy().name(), e.as_str());
+        }
+    }
+
+    #[test]
+    fn entry_names_per_engine_and_mode() {
+        let mut cfg = DistillCfg::default();
+        let genie = Engine::Genie.policy();
+        assert_eq!(genie.entry(&cfg, "swing"), "distill_genie_swing");
+        cfg.mode = DistillMode::Gba;
+        assert_eq!(genie.entry(&cfg, "noswing"), "distill_genie_noswing");
+        cfg.mode = DistillMode::Direct;
+        assert_eq!(genie.entry(&cfg, "swing"), "distill_direct_swing");
+
+        // zeroq always optimizes images directly, whatever the mode
+        for mode in [DistillMode::Genie, DistillMode::Direct] {
+            cfg.mode = mode;
+            assert_eq!(
+                Engine::Zeroq.policy().entry(&cfg, "swing"),
+                "distill_direct_swing"
+            );
+        }
+        assert_eq!(
+            Engine::Zaq.policy().entry(&cfg, "noswing"),
+            "distill_zaq_noswing"
+        );
+    }
+
+    #[test]
+    fn display_keeps_genie_mode_arms() {
+        assert_eq!(Engine::Genie.display(DistillMode::Genie), "genie");
+        assert_eq!(Engine::Genie.display(DistillMode::Gba), "gba");
+        assert_eq!(Engine::Genie.display(DistillMode::Direct), "direct");
+        assert_eq!(Engine::Zeroq.display(DistillMode::Genie), "zeroq");
+        assert_eq!(Engine::Zaq.display(DistillMode::Direct), "zaq");
+    }
+}

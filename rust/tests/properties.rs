@@ -8,6 +8,7 @@ use genie::quant::{
     dequant, flatten_out_major, h_sigmoid, minmax_step, search_step_sizes,
     softbit_init,
 };
+use genie::runtime::json::Json;
 use genie::schedule::{CosineAnnealing, ReduceLROnPlateau};
 use genie::store::Store;
 use genie::tensor::{Pcg32, Tensor};
@@ -242,5 +243,288 @@ fn prop_rng_key_pairs_unique() {
         for _ in 0..200 {
             assert!(seen.insert(rng.key_pair()));
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// runtime/json.rs: render invariants checked against a hand-rolled parser
+// ---------------------------------------------------------------------------
+
+/// Order-preserving JSON value: objects keep keys in *parsed* order so the
+/// sorted-key contract of `Json::render` is directly assertable.
+#[derive(Debug, PartialEq)]
+enum V {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<V>),
+    Obj(Vec<(String, V)>),
+}
+
+/// Tiny recursive-descent parser over exactly the compact grammar that
+/// `Json::render` emits (no whitespace, no exponents, `\uXXXX` escapes).
+/// Independent of the production parser on purpose.
+fn tiny_parse(b: &[u8], i: &mut usize) -> V {
+    match b[*i] {
+        b'n' => {
+            assert_eq!(&b[*i..*i + 4], b"null");
+            *i += 4;
+            V::Null
+        }
+        b't' => {
+            assert_eq!(&b[*i..*i + 4], b"true");
+            *i += 4;
+            V::Bool(true)
+        }
+        b'f' => {
+            assert_eq!(&b[*i..*i + 5], b"false");
+            *i += 5;
+            V::Bool(false)
+        }
+        b'"' => V::Str(tiny_string(b, i)),
+        b'[' => {
+            *i += 1;
+            let mut items = Vec::new();
+            if b[*i] == b']' {
+                *i += 1;
+                return V::Arr(items);
+            }
+            loop {
+                items.push(tiny_parse(b, i));
+                match b[*i] {
+                    b',' => *i += 1,
+                    b']' => {
+                        *i += 1;
+                        break;
+                    }
+                    c => panic!("unexpected array byte {c:#x}"),
+                }
+            }
+            V::Arr(items)
+        }
+        b'{' => {
+            *i += 1;
+            let mut pairs = Vec::new();
+            if b[*i] == b'}' {
+                *i += 1;
+                return V::Obj(pairs);
+            }
+            loop {
+                let k = tiny_string(b, i);
+                assert_eq!(b[*i], b':');
+                *i += 1;
+                let v = tiny_parse(b, i);
+                pairs.push((k, v));
+                match b[*i] {
+                    b',' => *i += 1,
+                    b'}' => {
+                        *i += 1;
+                        break;
+                    }
+                    c => panic!("unexpected object byte {c:#x}"),
+                }
+            }
+            V::Obj(pairs)
+        }
+        _ => {
+            let start = *i;
+            while *i < b.len() && matches!(b[*i], b'0'..=b'9' | b'-' | b'.') {
+                *i += 1;
+            }
+            V::Num(
+                std::str::from_utf8(&b[start..*i])
+                    .unwrap()
+                    .parse()
+                    .unwrap(),
+            )
+        }
+    }
+}
+
+fn tiny_string(b: &[u8], i: &mut usize) -> String {
+    assert_eq!(b[*i], b'"');
+    *i += 1;
+    let mut s = String::new();
+    loop {
+        match b[*i] {
+            b'"' => {
+                *i += 1;
+                return s;
+            }
+            b'\\' => {
+                *i += 1;
+                match b[*i] {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'u' => {
+                        let hex =
+                            std::str::from_utf8(&b[*i + 1..*i + 5]).unwrap();
+                        let cp = u32::from_str_radix(hex, 16).unwrap();
+                        s.push(char::from_u32(cp).unwrap());
+                        *i += 4;
+                    }
+                    c => panic!("unexpected escape {c:#x}"),
+                }
+                *i += 1;
+            }
+            _ => {
+                // multi-byte UTF-8 passes through unescaped
+                let c = std::str::from_utf8(&b[*i..])
+                    .unwrap()
+                    .chars()
+                    .next()
+                    .unwrap();
+                s.push(c);
+                *i += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn gen_json_string(rng: &mut Pcg32) -> String {
+    const POOL: &[char] = &[
+        'a', 'B', '7', '_', ' ', ':', ',', '"', '\\', '\n', '\t', '\r',
+        '\u{1}', '\u{1f}', 'é', '日',
+    ];
+    (0..rng.below(8)).map(|_| POOL[rng.below(POOL.len())]).collect()
+}
+
+fn gen_json(rng: &mut Pcg32, depth: usize) -> Json {
+    // at depth 0 only leaf variants are eligible
+    match rng.below(if depth > 0 { 6 } else { 4 }) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 1),
+        2 => Json::Num(match rng.below(6) {
+            0 => f64::NAN,
+            1 => f64::INFINITY,
+            2 => f64::NEG_INFINITY,
+            3 => rng.below(2001) as f64 - 1000.0,
+            _ => rng.normal() as f64 * 1e4,
+        }),
+        3 => Json::Str(gen_json_string(rng)),
+        4 => Json::Arr(
+            (0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|_| (gen_json_string(rng), gen_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// What `render` is contractually supposed to emit: non-finite numbers
+/// collapse to null and object keys come out sorted.
+fn expected_tree(j: &Json) -> V {
+    match j {
+        Json::Null => V::Null,
+        Json::Bool(b) => V::Bool(*b),
+        Json::Num(n) if !n.is_finite() => V::Null,
+        Json::Num(n) => V::Num(*n),
+        Json::Str(s) => V::Str(s.clone()),
+        Json::Arr(items) => V::Arr(items.iter().map(expected_tree).collect()),
+        Json::Obj(m) => {
+            let mut keys: Vec<&String> = m.keys().collect();
+            keys.sort();
+            V::Obj(
+                keys.into_iter()
+                    .map(|k| (k.clone(), expected_tree(&m[k])))
+                    .collect(),
+            )
+        }
+    }
+}
+
+fn assert_keys_sorted(v: &V) {
+    match v {
+        V::Arr(items) => items.iter().for_each(assert_keys_sorted),
+        V::Obj(pairs) => {
+            for w in pairs.windows(2) {
+                assert!(w[0].0 < w[1].0, "keys out of order: {pairs:?}");
+            }
+            pairs.iter().for_each(|(_, v)| assert_keys_sorted(v));
+        }
+        _ => {}
+    }
+}
+
+#[test]
+fn prop_json_render_round_trips_via_hand_rolled_parser() {
+    forall(61, 60, |rng| {
+        let j = gen_json(rng, 3);
+        let text = j.render();
+        let mut i = 0;
+        let got = tiny_parse(text.as_bytes(), &mut i);
+        assert_eq!(i, text.len(), "trailing bytes in {text:?}");
+        assert_eq!(got, expected_tree(&j), "mismatch for {text:?}");
+        assert_keys_sorted(&got);
+        // the production parser agrees: re-rendering is byte-stable
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.render(), text);
+    });
+}
+
+#[test]
+fn prop_json_nested_map_keys_sorted_at_every_level() {
+    forall(67, 40, |rng| {
+        // insertion order scrambled on purpose; HashMap scrambles further
+        let inner: Json = Json::Obj(
+            ["zz", "mid", "aa", "q9"]
+                .iter()
+                .map(|k| (k.to_string(), Json::num(rng.uniform() as f64)))
+                .collect(),
+        );
+        let outer = Json::obj(vec![
+            ("w", inner),
+            ("b", Json::Arr(vec![gen_json(rng, 2)])),
+            ("a", gen_json(rng, 1)),
+        ]);
+        let text = outer.render();
+        let mut i = 0;
+        let got = tiny_parse(text.as_bytes(), &mut i);
+        assert_keys_sorted(&got);
+        if let V::Obj(pairs) = &got {
+            let keys: Vec<&str> =
+                pairs.iter().map(|(k, _)| k.as_str()).collect();
+            assert_eq!(keys, ["a", "b", "w"]);
+            if let V::Obj(ip) = &pairs[2].1 {
+                let ik: Vec<&str> =
+                    ip.iter().map(|(k, _)| k.as_str()).collect();
+                assert_eq!(ik, ["aa", "mid", "q9", "zz"]);
+            } else {
+                panic!("inner map lost: {text:?}");
+            }
+        } else {
+            panic!("outer map lost: {text:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_json_nonfinite_and_none_render_null() {
+    for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        assert_eq!(Json::Num(bad).render(), "null");
+        assert!(matches!(Json::num(bad), Json::Null));
+        assert_eq!(Json::opt(Some(bad)).render(), "null");
+    }
+    assert_eq!(Json::opt(None).render(), "null");
+    assert_eq!(Json::opt(Some(2.5)).render(), "2.5");
+    forall(71, 40, |rng| {
+        // burying a non-finite value anywhere still yields literal null
+        let bad = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY]
+            [rng.below(3)];
+        let j = Json::obj(vec![
+            ("pad", gen_json(rng, 2)),
+            ("x", Json::Arr(vec![Json::Num(bad)])),
+        ]);
+        let text = j.render();
+        assert!(text.contains("\"x\":[null]"), "{text:?}");
+        let mut i = 0;
+        tiny_parse(text.as_bytes(), &mut i);
+        assert_eq!(i, text.len());
     });
 }

@@ -1,0 +1,575 @@
+//! Synthesis-engine conformance suite (DESIGN.md §12): every engine
+//! behind [`genie::synthesis::SynthesisPolicy`] must honor the same
+//! contracts the GENIE-D engine shipped with —
+//!
+//!   * worker-count bit-identity: the distill set at `workers=1` equals
+//!     the set at `workers=4` (or whatever `GENIE_TEST_WORKERS` says);
+//!   * checkpoint/interrupt/resume: a crash-looped synthesis converges
+//!     to a set bit-identical to the uninterrupted run;
+//!   * cache-key separation: switching engines is a cache miss,
+//!     switching back is a pure hit (zero synthesis dispatches);
+//!   * pinned regression: `--synthesis genie` output is byte-identical
+//!     to the pre-refactor inline GENIE-D loop, re-implemented here;
+//!   * grid: a 2-engine grid dispatches exactly one distill set per
+//!     engine, and its `--dry-run` prediction matches the executed run.
+//!
+//! Engine-agnostic key/plan tests run offline; everything touching the
+//! runtime requires `make artifacts` and skips otherwise. ZAQ sections
+//! additionally gate on the `distill_zaq_*` entrypoints so a pre-§12
+//! artifact build skips them instead of failing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use genie::artifacts::{self, ArtifactCache};
+use genie::coordinator::{
+    distill, distill_cached, distill_ck, pretrain, DistillCfg, Metrics,
+    PretrainCfg, RunConfig,
+};
+use genie::data::Dataset;
+use genie::exec::Parallelism;
+use genie::grid::{self, AxisValue, Cached, GridOpts, GridPlan, RunGrid, StageKind};
+use genie::phase::StageCkpt;
+use genie::runtime::{Manifest, ModelRt, Runtime};
+use genie::schedule::{ExponentialDecay, ReduceLROnPlateau};
+use genie::synthesis::Engine;
+use genie::tensor::{Pcg32, Tensor};
+
+fn artifacts_dir() -> String {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn require_artifacts() -> bool {
+    let ok = Path::new(&artifacts_dir()).join("toy/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+/// One Runtime per test binary: PJRT CPU clients are heavyweight.
+fn with_ctx(f: impl FnOnce(&Runtime, &ModelRt, &Dataset)) {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let dir = artifacts_dir();
+    let mrt = ModelRt::load(&rt, &dir, "toy").unwrap();
+    let dataset = Dataset::load(&dir).unwrap();
+    f(&rt, &mrt, &dataset);
+}
+
+const ALL_ENGINES: [Engine; 3] = [Engine::Genie, Engine::Zeroq, Engine::Zaq];
+
+/// Whether the loaded artifacts carry the graphs this engine dispatches
+/// (a pre-§12 artifact build has no `distill_zaq_*`; skip, don't fail).
+fn engine_available(mrt: &ModelRt, e: Engine, cfg: &DistillCfg) -> bool {
+    let tag = if cfg.swing { "swing" } else { "noswing" };
+    let entry = e.policy().entry(cfg, tag);
+    let ok = mrt.manifest.entrypoints.contains_key(&entry);
+    if !ok {
+        eprintln!(
+            "skipping {}: no '{entry}' entrypoint (rebuild artifacts)",
+            e.as_str()
+        );
+    }
+    ok
+}
+
+/// Worker counts to sweep: the CI matrix pins one count per job via
+/// `GENIE_TEST_WORKERS`; a plain `cargo test` sweeps both.
+fn worker_counts() -> Vec<usize> {
+    match std::env::var("GENIE_TEST_WORKERS") {
+        Ok(v) => {
+            vec![v.parse().expect("GENIE_TEST_WORKERS must be an integer")]
+        }
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn small_distill(e: Engine) -> DistillCfg {
+    DistillCfg {
+        engine: e,
+        samples: 64,
+        steps: 6,
+        seed: 47,
+        log_every: 3,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Offline: keys, config, plan lowering (no artifacts needed)
+// ---------------------------------------------------------------------
+
+fn toy_manifest() -> Manifest {
+    Manifest::from_json_text(
+        r#"{
+            "model": "toy", "image": [16, 16, 3], "num_classes": 10,
+            "num_blocks": 2, "latent": 256,
+            "batch": {"train": 64},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [], "learnable": {"0": []},
+            "bounds": [], "entrypoints": {}
+        }"#,
+    )
+    .unwrap()
+}
+
+/// Engine choice folds into both the content key and the spec key:
+/// every pair of engines separates, and switching back re-derives the
+/// original key exactly (the pure-hit precondition).
+#[test]
+fn engine_keys_separate_and_switch_back_rederives() {
+    let m = toy_manifest();
+    let th = 0xfeed_beef_u64;
+    let mut cfg = DistillCfg::default();
+    let tspec = artifacts::pretrain_key(&m, &PretrainCfg::default());
+
+    let mut content = Vec::new();
+    let mut spec = Vec::new();
+    for e in ALL_ENGINES {
+        cfg.engine = e;
+        content.push(artifacts::distill_key(&m, &cfg, th).0);
+        spec.push(artifacts::distill_spec_key(&m, &cfg, tspec).0);
+    }
+    for i in 0..content.len() {
+        for j in i + 1..content.len() {
+            assert_ne!(content[i], content[j], "engines {i}/{j} collide");
+            assert_ne!(spec[i], spec[j], "spec keys {i}/{j} collide");
+        }
+    }
+    cfg.engine = Engine::Genie;
+    assert_eq!(artifacts::distill_key(&m, &cfg, th).0, content[0]);
+    assert_eq!(artifacts::distill_spec_key(&m, &cfg, tspec).0, spec[0]);
+}
+
+/// The CLI surface: `--synthesis`/`synthesis=`/`distill.engine=` all
+/// set the engine, and the grid accepts it as a first-class axis.
+#[test]
+fn engine_config_and_axis_wiring() {
+    let mut cfg = RunConfig::default();
+    assert_eq!(cfg.distill.engine, Engine::Genie);
+    cfg.set("synthesis", "zaq").unwrap();
+    assert_eq!(cfg.distill.engine, Engine::Zaq);
+    cfg.set("distill.engine", "zeroq").unwrap();
+    assert_eq!(cfg.distill.engine, Engine::Zeroq);
+    assert!(cfg.set("synthesis", "dreamq").is_err());
+
+    let base = RunConfig::default();
+    let mut g = RunGrid::new();
+    g.parse_axis("synthesis=genie,zeroq,zaq", &base).unwrap();
+    let cells = g.cells(&base).unwrap();
+    assert_eq!(cells.len(), 3);
+    assert_eq!(cells[0].distill.engine, Engine::Genie);
+    assert_eq!(cells[1].distill.engine, Engine::Zeroq);
+    assert_eq!(cells[2].distill.engine, Engine::Zaq);
+    assert_eq!(cells[2].label(), "synthesis=zaq");
+    assert!(RunGrid::new()
+        .parse_axis("synthesis=dreamq", &base)
+        .is_err());
+}
+
+/// Plan lowering: a 2-engine grid shares one teacher and splits the
+/// synthesis stage — the dedupe shape the executed grid must realize.
+#[test]
+fn two_engine_plan_shares_teacher_splits_distill() {
+    let mut manifests = BTreeMap::new();
+    manifests.insert("toy".to_string(), toy_manifest());
+    let base = RunConfig { model: "toy".into(), ..Default::default() };
+    let grid = RunGrid::new().axis(
+        "synthesis",
+        vec![
+            AxisValue::Synthesis(Engine::Genie),
+            AxisValue::Synthesis(Engine::Zeroq),
+        ],
+    );
+    let cells = grid.cells(&base).unwrap();
+    let plan = GridPlan::build(cells, &manifests, false).unwrap();
+    assert_eq!(plan.count(StageKind::Teacher), 1);
+    assert_eq!(plan.count(StageKind::Distill), 2);
+    assert_ne!(plan.distill_of[0], plan.distill_of[1]);
+}
+
+// ---------------------------------------------------------------------
+// Runtime conformance (requires `make artifacts`)
+// ---------------------------------------------------------------------
+
+/// Contract 1 — worker-count bit-identity: the distill set is a pure
+/// function of the seed for every engine (§5: shard b draws only from
+/// `new_stream(seed, b)`), so any worker count produces the same bytes.
+#[test]
+fn every_engine_is_bit_identical_across_worker_counts() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt,
+            dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        for e in ALL_ENGINES {
+            let cfg = small_distill(e);
+            if !engine_available(mrt, e, &cfg) {
+                continue;
+            }
+            let mut reference = cfg.clone();
+            reference.par = Parallelism::new(1);
+            let want = distill(mrt, &teacher, &reference, &mut metrics)
+                .unwrap();
+            assert_eq!(want.images.shape[0], 64);
+            assert!(want.final_loss.is_finite());
+            for workers in worker_counts() {
+                let mut c = cfg.clone();
+                c.par = Parallelism::new(workers);
+                let got =
+                    distill(mrt, &teacher, &c, &mut metrics).unwrap();
+                assert_eq!(
+                    got.images,
+                    want.images,
+                    "{}: workers={workers} diverged",
+                    e.as_str()
+                );
+                assert_eq!(
+                    got.loss_trace,
+                    want.loss_trace,
+                    "{}: workers={workers} trace diverged",
+                    e.as_str()
+                );
+            }
+        }
+    });
+}
+
+/// Contract 2 — interrupt/resume: a synthesis killed mid-shard by a
+/// step budget (on-disk state exactly as a dead process leaves it) and
+/// crash-looped to completion yields the uninterrupted bytes.
+#[test]
+fn every_engine_resumes_bit_identical_after_interrupts() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt,
+            dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        for e in ALL_ENGINES {
+            let cfg = small_distill(e);
+            if !engine_available(mrt, e, &cfg) {
+                continue;
+            }
+            let want =
+                distill(mrt, &teacher, &cfg, &mut metrics).unwrap();
+
+            let dir = std::env::temp_dir()
+                .join(format!("genie_synth_resume_{}", e.as_str()));
+            std::fs::remove_dir_all(&dir).ok();
+            let mut ck = StageCkpt::new(&dir, 2, true);
+            ck.budget = Some(4); // dies mid-shard, every attempt
+            let mut got = None;
+            for attempt in 0..30 {
+                match distill_ck(
+                    mrt, &teacher, &cfg, Some(&ck), &mut metrics,
+                ) {
+                    Ok(out) => {
+                        assert!(
+                            attempt > 0,
+                            "{}: the budget must interrupt at least once",
+                            e.as_str()
+                        );
+                        got = Some(out);
+                        break;
+                    }
+                    Err(err) => assert!(
+                        format!("{err}").contains("interrupted"),
+                        "{}: unexpected error {err}",
+                        e.as_str()
+                    ),
+                }
+            }
+            let got = got.expect("crash-looped distill never finished");
+            assert_eq!(
+                got.images,
+                want.images,
+                "{}: resumed images diverged",
+                e.as_str()
+            );
+            assert_eq!(got.loss_trace, want.loss_trace);
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    });
+}
+
+/// Contract 3 — cache-key separation: under one cache dir, switching
+/// engines misses (each engine materializes its own artifact) and
+/// switching back is a pure hit — zero synthesis dispatches.
+#[test]
+fn engine_switch_misses_switch_back_hits_pure() {
+    with_ctx(|rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let dir = std::env::temp_dir().join("genie_synth_cache_sep");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let teacher = genie::coordinator::teacher_cached(
+            mrt,
+            dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut cache,
+            &mut metrics,
+        )
+        .unwrap();
+
+        let engines: Vec<Engine> = ALL_ENGINES
+            .into_iter()
+            .filter(|&e| engine_available(mrt, e, &small_distill(e)))
+            .collect();
+        let mut first_images: Vec<Tensor> = Vec::new();
+        let mut misses = cache.stats().misses;
+        let mut stores = cache.stats().stores;
+        for &e in &engines {
+            let out = distill_cached(
+                mrt, &teacher, &small_distill(e), &mut cache, &mut metrics,
+            )
+            .unwrap();
+            assert_eq!(
+                cache.stats().misses,
+                misses + 1,
+                "{}: switching engines must miss",
+                e.as_str()
+            );
+            assert_eq!(cache.stats().stores, stores + 1);
+            misses = cache.stats().misses;
+            stores = cache.stats().stores;
+            first_images.push(out.images);
+        }
+
+        // engines must not have produced identical bytes under distinct
+        // keys by coincidence of sharing graphs: zeroq optimizes images
+        // directly while genie goes through the generator
+        if engines.len() >= 2 {
+            assert_ne!(
+                first_images[0], first_images[1],
+                "distinct engines produced identical distill sets"
+            );
+        }
+
+        // switch back: pure hits, nothing dispatches, bytes unchanged
+        rt.reset_stats();
+        let hits = cache.stats().hits;
+        for (i, &e) in engines.iter().enumerate() {
+            let again = distill_cached(
+                mrt, &teacher, &small_distill(e), &mut cache, &mut metrics,
+            )
+            .unwrap();
+            assert_eq!(again.images, first_images[i]);
+        }
+        assert_eq!(cache.stats().hits, hits + engines.len() as u64);
+        let stats = rt.dispatch_stats();
+        for banned in
+            ["gen_init", "gen_images", "distill_genie_swing",
+             "distill_direct_swing", "distill_zaq_swing"]
+        {
+            assert!(
+                !stats.contains_key(banned),
+                "{banned} dispatched on what must be a pure cache hit"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// Contract 4 — pinned regression: the engine selected by the CLI's
+/// `--synthesis genie` produces bytes identical to the pre-refactor
+/// GENIE-D shard loop, re-implemented inline here as the reference.
+#[test]
+fn synthesis_genie_is_byte_identical_to_pre_refactor_loop() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt,
+            dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        // engine selected exactly as the CLI flag does
+        let mut rc = RunConfig::default();
+        rc.set("synthesis", "genie").unwrap();
+        rc.set("distill.samples", "64").unwrap();
+        rc.set("distill.steps", "9").unwrap();
+        let cfg = DistillCfg { seed: 91, ..rc.distill.clone() };
+
+        // reference: the pre-refactor inline per-shard loop, verbatim
+        let m = &mrt.manifest;
+        let bd = m.batch("distill");
+        let n_batches = cfg.samples.div_ceil(bd);
+        let teacher_dev = mrt.upload_store(&teacher).unwrap();
+        let mut parts = Vec::new();
+        for b in 0..n_batches {
+            let mut rng = Pcg32::new_stream(cfg.seed, b as u64);
+            let mut dev = teacher_dev.clone();
+            let (kh, kl) = rng.key_pair();
+            dev.insert("key", &Tensor::key(kh, kl)).unwrap();
+            mrt.call_device("gen_init", &mut dev).unwrap();
+            for (name, shape) in &m.gen_params {
+                dev.insert(&format!("am.{name}"), &Tensor::zeros(shape))
+                    .unwrap();
+                dev.insert(&format!("av.{name}"), &Tensor::zeros(shape))
+                    .unwrap();
+            }
+            let zshape = [bd, m.latent];
+            dev.insert("z", &Tensor::randn(&zshape, &mut rng, 1.0))
+                .unwrap();
+            dev.insert("zm", &Tensor::zeros(&zshape)).unwrap();
+            dev.insert("zv", &Tensor::zeros(&zshape)).unwrap();
+            let gen_sched = ExponentialDecay::new(cfg.lr_g, 0.95, 100);
+            let mut z_sched = ReduceLROnPlateau::new(cfg.lr_z, 0.5, 30);
+            let entry = mrt.entry("distill_genie_swing").unwrap();
+            let mut lr_z = cfg.lr_z;
+            for t in 1..=cfg.steps {
+                let (kh, kl) = rng.key_pair();
+                dev.insert("key", &Tensor::key(kh, kl)).unwrap();
+                dev.insert("t", &Tensor::scalar_f32(t as f32)).unwrap();
+                dev.insert(
+                    "lr_g",
+                    &Tensor::scalar_f32(gen_sched.lr(t - 1)),
+                )
+                .unwrap();
+                dev.insert("lr_z", &Tensor::scalar_f32(lr_z)).unwrap();
+                let scalars =
+                    mrt.rt.call_device(&entry, &mut dev).unwrap();
+                lr_z = z_sched.observe(scalars["loss"]);
+            }
+            mrt.call_device("gen_images", &mut dev).unwrap();
+            parts.push(dev.fetch("images").unwrap());
+        }
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let mut want = Tensor::concat_rows(&refs);
+        want.truncate_rows(cfg.samples);
+
+        let got = distill(mrt, &teacher, &cfg, &mut metrics).unwrap();
+        assert_eq!(
+            got.images, want,
+            "--synthesis genie diverged from the pre-refactor loop"
+        );
+    });
+}
+
+/// Contract 5 — the executed 2-engine grid: exactly one distill set
+/// dispatches per engine, and the `--dry-run` hit/miss prediction
+/// matches what the run then does (cold and warm).
+#[test]
+fn two_engine_grid_dispatches_once_per_engine_and_matches_dry_run() {
+    with_ctx(|rt, _mrt, _dataset| {
+        let root = std::env::temp_dir().join("genie_synth_grid");
+        std::fs::remove_dir_all(&root).ok();
+        let mut cfg = RunConfig {
+            model: "toy".into(),
+            artifacts: artifacts_dir(),
+            cache_dir: root.to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        cfg.apply_overrides(&[
+            "pretrain.steps=30".into(),
+            "distill.samples=64".into(),
+            "distill.steps=6".into(),
+            "quant.steps=8".into(),
+            "workers=4".into(),
+        ])
+        .unwrap();
+        let mut g = RunGrid::new();
+        g.parse_axis("synthesis=genie,zeroq", &cfg).unwrap();
+
+        let cells = g.cells(&cfg).unwrap();
+        let mut manifests = BTreeMap::new();
+        manifests.insert(
+            "toy".to_string(),
+            Manifest::load(Path::new(&artifacts_dir()).join("toy"))
+                .unwrap(),
+        );
+        let plan =
+            GridPlan::build(cells.clone(), &manifests, false).unwrap();
+        let cache = ArtifactCache::open(&root, true, false).unwrap();
+
+        // cold prediction: teacher runs, everything downstream pending
+        let cold = plan.resolve_cached(&manifests, &cache, None);
+        let t = plan.teacher_of[0];
+        assert_eq!(cold[t], Cached::Run);
+        for c in 0..2 {
+            assert_eq!(cold[plan.distill_of[c].unwrap()], Cached::Unknown);
+        }
+
+        rt.reset_stats();
+        let mut metrics = Metrics::new();
+        let out = grid::execute(
+            rt, &cfg, &g, &GridOpts::default(), &mut metrics,
+        )
+        .unwrap();
+        assert_eq!(out.cells.len(), 2);
+        assert_eq!(out.stats.teacher_nodes, 1);
+        assert_eq!(out.stats.distill_nodes, 2);
+        // cold run: the prediction said nothing was cached, and indeed
+        // every stage computed
+        assert_eq!(out.stats.cache.hits, 0, "{:?}", out.stats.cache);
+
+        // exactly one distill set per engine: the genie cell re-inits
+        // the generator once per shard; the zeroq cell dispatches the
+        // direct graph steps-per-shard times; nothing runs twice
+        let mrt = ModelRt::load(rt, &cfg.artifacts, "toy").unwrap();
+        let shards =
+            64usize.div_ceil(mrt.manifest.batch("distill")) as u64;
+        let stats = rt.dispatch_stats();
+        assert_eq!(
+            stats["gen_init"].calls, shards,
+            "genie engine must synthesize exactly one shard set"
+        );
+        assert_eq!(
+            stats["distill_direct_swing"].calls,
+            6 * shards,
+            "zeroq engine must synthesize exactly one shard set"
+        );
+
+        // warm prediction: teacher + both distills + both quantizes now
+        // resolve to hits, and the re-executed grid agrees (pure hits,
+        // zero synthesis dispatches)
+        let warm = plan.resolve_cached(&manifests, &cache, None);
+        assert_eq!(warm[t], Cached::Hit);
+        for c in 0..2 {
+            assert_eq!(warm[plan.distill_of[c].unwrap()], Cached::Hit);
+            assert_eq!(warm[plan.quantize_of[c].unwrap()], Cached::Hit);
+        }
+        let predicted_hits =
+            warm.iter().filter(|&&d| d == Cached::Hit).count() as u64;
+        rt.reset_stats();
+        let mut metrics2 = Metrics::new();
+        let out2 = grid::execute(
+            rt, &cfg, &g, &GridOpts::default(), &mut metrics2,
+        )
+        .unwrap();
+        assert_eq!(
+            out2.stats.cache.hits, predicted_hits,
+            "dry-run prediction and executed run disagree: {:?}",
+            out2.stats.cache
+        );
+        let stats2 = rt.dispatch_stats();
+        for banned in ["train_step", "gen_init", "distill_direct_swing"] {
+            assert!(
+                !stats2.contains_key(banned),
+                "{banned} dispatched on a fully warm grid"
+            );
+        }
+        for (a, b) in out.cells.iter().zip(&out2.cells) {
+            let (oa, ob) =
+                (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+            assert_eq!(oa.q_acc, ob.q_acc);
+            assert_eq!(oa.fp_acc, ob.fp_acc);
+        }
+        std::fs::remove_dir_all(&root).ok();
+    });
+}
