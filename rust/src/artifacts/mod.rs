@@ -29,6 +29,13 @@
 //! [`ArtifactCache::claim`]: the first claimant creates
 //! `wip_<kind>_<key>.lock` and computes; later claimants block until the
 //! lock releases, then re-check the cache and hit.
+//!
+//! Integrity (DESIGN.md §13): every store writes a `<file>.fnv` sidecar
+//! carrying the FNV-1a 64 hash of the artifact bytes; every load
+//! re-hashes the raw file and verifies it (plus the GTS1 parse). A
+//! corrupt or torn artifact is moved into the `quarantine/` sidecar dir,
+//! counted as a miss *and* as [`CacheStats::quarantined`], and the stage
+//! recomputes — a crash-looping service never wedges on a bad file.
 
 use std::path::{Path, PathBuf};
 
@@ -303,6 +310,10 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub stores: u64,
+    /// Corrupt/torn artifacts detected on load and moved to the
+    /// `quarantine/` sidecar dir (each is also counted as a miss — the
+    /// stage recomputes and rewrites).
+    pub quarantined: u64,
 }
 
 /// A held materialization claim on one artifact key (DESIGN.md §11):
@@ -403,19 +414,80 @@ impl ArtifactCache {
         self.dir.join(format!("{kind}_{}.gts", key.hex()))
     }
 
-    /// Look a completed artifact up, counting the hit/miss. A missing or
-    /// unparseable file is a miss (the stage re-runs and rewrites it).
+    /// The content-hash sidecar next to an artifact file
+    /// (`<file>.gts.fnv`, 16 hex chars of FNV-1a 64 over the file bytes).
+    pub fn sidecar_path(&self, kind: &str, key: CacheKey) -> PathBuf {
+        self.dir.join(format!("{kind}_{}.gts.fnv", key.hex()))
+    }
+
+    /// Where corrupt/torn artifacts are moved on detection.
+    pub fn quarantine_dir(&self) -> PathBuf {
+        self.dir.join("quarantine")
+    }
+
+    /// Move a bad artifact (and its sidecar) into `quarantine/`,
+    /// counting it. The caller then reports a miss and recomputes; the
+    /// re-store overwrites cleanly.
+    fn quarantine(&mut self, kind: &str, key: CacheKey, why: &str) {
+        let qdir = self.quarantine_dir();
+        std::fs::create_dir_all(&qdir).ok();
+        for p in [self.path(kind, key), self.sidecar_path(kind, key)] {
+            if let Some(name) = p.file_name() {
+                if p.exists() {
+                    std::fs::rename(&p, qdir.join(name)).ok();
+                }
+            }
+        }
+        self.stats.quarantined += 1;
+        crate::progress!(
+            "cache: quarantined {kind}_{} ({why}); stage will recompute",
+            key.hex()
+        );
+    }
+
+    /// Read + verify one artifact: offer it to the fault injector, hash
+    /// the raw bytes against the sidecar (a missing sidecar skips the
+    /// hash check — pre-§13 caches), then parse. Hash mismatches and
+    /// parse failures quarantine the file; a missing file is `None`
+    /// without quarantine (the ordinary cold miss).
+    fn load_verified(&mut self, kind: &str, key: CacheKey) -> Option<Store> {
+        let path = self.path(kind, key);
+        crate::faults::corrupt_hook(
+            &format!("{kind}_{}", key.hex()),
+            &path,
+        );
+        let bytes = std::fs::read(&path).ok()?;
+        if let Ok(want) = std::fs::read_to_string(self.sidecar_path(kind, key))
+        {
+            let got = format!("{:016x}", fnv1a(FNV_OFFSET, &bytes));
+            if want.trim() != got {
+                self.quarantine(kind, key, "content hash mismatch");
+                return None;
+            }
+        }
+        match Store::from_bytes(&bytes) {
+            Ok(s) => Some(s),
+            Err(_) => {
+                self.quarantine(kind, key, "unparseable GTS1 bytes");
+                None
+            }
+        }
+    }
+
+    /// Look a completed artifact up, counting the hit/miss. A missing
+    /// file is a miss; a corrupt/torn file is quarantined *and* counted
+    /// as a miss (the stage re-runs and rewrites it).
     pub fn load(&mut self, kind: &str, key: CacheKey) -> Option<Store> {
         if !self.enabled {
             self.stats.misses += 1;
             return None;
         }
-        match Store::load(self.path(kind, key)) {
-            Ok(s) => {
+        match self.load_verified(kind, key) {
+            Some(s) => {
                 self.stats.hits += 1;
                 Some(s)
             }
-            Err(_) => {
+            None => {
                 self.stats.misses += 1;
                 None
             }
@@ -424,9 +496,10 @@ impl ArtifactCache {
 
     /// [`Self::load`] gated on a coherence check: an artifact that
     /// parses but fails `check` — missing tensors, e.g. a partial copy
-    /// from another cache — is demoted to a miss, so the stage
-    /// recomputes and rewrites it instead of erroring on the decode
-    /// (and the grid dry run predicts the same disposition).
+    /// from another cache — is demoted to a miss (no quarantine: the
+    /// bytes are intact, just incomplete), so the stage recomputes and
+    /// rewrites it instead of erroring on the decode (and the grid dry
+    /// run predicts the same disposition).
     pub fn load_checked(
         &mut self,
         kind: &str,
@@ -437,8 +510,8 @@ impl ArtifactCache {
             self.stats.misses += 1;
             return None;
         }
-        match Store::load(self.path(kind, key)) {
-            Ok(s) if check(&s) => {
+        match self.load_verified(kind, key) {
+            Some(s) if check(&s) => {
                 self.stats.hits += 1;
                 Some(s)
             }
@@ -449,8 +522,11 @@ impl ArtifactCache {
         }
     }
 
-    /// Store a completed artifact (atomic write) and clear the stage's
-    /// work dir. No-op when disabled.
+    /// Store a completed artifact (atomic write + content-hash sidecar)
+    /// and clear the stage's work dir. No-op when disabled. The sidecar
+    /// lands after the artifact, so a crash between the two leaves a
+    /// state the next load either verifies (no sidecar yet: parse-only)
+    /// or quarantines — never serves silently corrupted.
     pub fn store(
         &mut self,
         kind: &str,
@@ -462,6 +538,13 @@ impl ArtifactCache {
         }
         let p = self.path(kind, key);
         atomic_save(s, &p)?;
+        // Store::write_to is the file serializer, so the content hash
+        // *is* the FNV-1a of the on-disk bytes — no re-read needed
+        std::fs::write(
+            self.sidecar_path(kind, key),
+            format!("{:016x}", s.content_hash()),
+        )
+        .with_context(|| format!("write hash sidecar for {p:?}"))?;
         self.stats.stores += 1;
         self.clear_wip(kind, key);
         Ok(Some(p))
@@ -914,7 +997,7 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_artifact_is_a_miss() {
+    fn corrupt_artifact_is_a_quarantined_miss() {
         let dir = std::env::temp_dir().join("genie_artifact_corrupt_test");
         std::fs::remove_dir_all(&dir).ok();
         let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
@@ -922,6 +1005,47 @@ mod tests {
         std::fs::write(cache.path("stage", key), b"NOPE").unwrap();
         assert!(cache.load("stage", key).is_none());
         assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().quarantined, 1);
+        // the bad file moved aside instead of lingering in the cache
+        assert!(!cache.path("stage", key).exists());
+        let moved = cache
+            .quarantine_dir()
+            .join(format!("stage_{}.gts", key.hex()));
+        assert_eq!(std::fs::read(moved).unwrap(), b"NOPE");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_writes_hash_sidecar_and_load_verifies_it() {
+        let dir = std::env::temp_dir().join("genie_artifact_sidecar_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").field("x", 3).finish();
+        let mut art = Store::new();
+        art.insert("images", Tensor::from_f32(&[4], vec![1., 2., 3., 4.]));
+        cache.store("stage", key, &art).unwrap();
+        let sidecar = cache.sidecar_path("stage", key);
+        let want = std::fs::read_to_string(&sidecar).unwrap();
+        assert_eq!(want, format!("{:016x}", art.content_hash()));
+
+        // a flipped byte in the middle of a *parseable* region is caught
+        // by the hash (the parse alone might accept it)
+        let p = cache.path("stage", key);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(cache.load("stage", key).is_none());
+        assert_eq!(cache.stats().quarantined, 1);
+        assert_eq!(cache.stats().misses, 1);
+        assert!(!p.exists() && !sidecar.exists(), "both moved aside");
+
+        // recompute path: the re-store overwrites and the next load is a
+        // bit-identical hit
+        cache.store("stage", key, &art).unwrap();
+        let back = cache.load("stage", key).unwrap();
+        assert_eq!(back.content_hash(), art.content_hash());
+        assert_eq!(cache.stats().hits, 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -39,6 +39,13 @@ pub struct RunConfig {
     /// machine-readable outcome sink (`--json <path>`, DESIGN.md §11):
     /// `genie run`/`genie grid` write their outcome JSON here
     pub json: Option<String>,
+    /// supervised-dispatch attempt budget per grid stage node
+    /// (`retry.max=N`, DESIGN.md §13): 1 = no retries; the default 2
+    /// absorbs one transient failure per stage
+    pub retry_max: u32,
+    /// deterministic backoff base between attempts, milliseconds
+    /// (`retry.backoff_ms`): attempt k sleeps `(k-1) * backoff_ms`
+    pub retry_backoff_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -58,6 +65,8 @@ impl Default for RunConfig {
             resume: false,
             checkpoint_every: 50,
             json: None,
+            retry_max: 2,
+            retry_backoff_ms: 25,
         }
     }
 }
@@ -95,6 +104,15 @@ impl RunConfig {
                 self.checkpoint_every = p!(usize)
             }
             "json" => self.json = Some(value.to_string()),
+            "retry.max" | "retries" => {
+                let v = p!(u32);
+                anyhow::ensure!(
+                    v >= 1,
+                    "retry.max must be >= 1 (1 = no retries)"
+                );
+                self.retry_max = v;
+            }
+            "retry.backoff_ms" => self.retry_backoff_ms = p!(u64),
             "wbits" | "quant.wbits" => {
                 self.quant.wbits = validate_bits("wbits", p!(u32))?
             }
@@ -246,6 +264,22 @@ mod tests {
         assert!(c.resume);
         assert_eq!(c.cache_dir, "/tmp/x");
         assert_eq!(c.checkpoint_every, 25);
+    }
+
+    #[test]
+    fn retry_keys_apply() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.retry_max, 2, "default absorbs one transient failure");
+        c.apply_overrides(&[
+            "retry.max=4".into(),
+            "retry.backoff_ms=5".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.retry_max, 4);
+        assert_eq!(c.retry_backoff_ms, 5);
+        c.set("retries", "1").unwrap();
+        assert_eq!(c.retry_max, 1);
+        assert!(c.set("retry.max", "0").is_err());
     }
 
     #[test]

@@ -134,6 +134,9 @@ fn distill_shard(
     ck: Option<&StageCkpt>,
 ) -> Result<ShardResult> {
     let shard_name = format!("shard{b}");
+    // deterministic fault-injection site (DESIGN.md §13):
+    // GENIE_FAULTS=distill:shard2:attempt1=panic fires here
+    crate::faults::check("distill", &shard_name)?;
     if let Some(ck) = ck {
         if let Some(done) = ck.load_done(&shard_name) {
             return Ok(ShardResult {

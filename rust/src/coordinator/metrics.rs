@@ -84,6 +84,26 @@ impl Metrics {
             r.workers,
             r.utilization() as f32,
         );
+        if r.panics > 0 {
+            self.log(
+                &format!("{phase}/pool/panics"),
+                r.workers,
+                r.panics as f32,
+            );
+        }
+    }
+
+    /// Record one fault-tolerance event for a stage (DESIGN.md §13):
+    /// bumps the `faults/<stage>/<event>` series (step = running count,
+    /// like [`record_cache`](Self::record_cache)). Events in use:
+    /// `retry` (a supervised attempt re-ran), `panic` (a caught job
+    /// panic), `quarantine` (a corrupt artifact moved aside),
+    /// `stage_failed` (retry budget exhausted), `skipped` (a node
+    /// quarantined because an upstream failed).
+    pub fn record_fault(&mut self, stage: &str, event: &str) {
+        let name = format!("faults/{stage}/{event}");
+        let n = self.series(&name).map_or(0, |s| s.len());
+        self.log(&name, n + 1, 1.0);
     }
 
     /// Log a host↔device transfer-volume sample for a phase
@@ -213,6 +233,7 @@ mod tests {
             worker_busy_secs: vec![0.6, 0.8],
             worker_jobs: vec![3, 5],
             steals: 2,
+            panics: 0,
         };
         m.record_pool("distill", &r);
         assert!(m.timer_total("distill/worker0") > 0.5);
@@ -245,6 +266,20 @@ mod tests {
         assert_eq!(m.series("cache/distill/miss").unwrap()[1].0, 2);
         assert_eq!(m.series("cache/distill/hit").unwrap().len(), 1);
         assert!(m.series("cache/quantize/hit").is_none());
+    }
+
+    #[test]
+    fn record_fault_counts_per_stage_events() {
+        let mut m = Metrics::new();
+        m.record_fault("quantize", "retry");
+        m.record_fault("quantize", "retry");
+        m.record_fault("quantize", "panic");
+        m.record_fault("distill", "quarantine");
+        assert_eq!(m.series("faults/quantize/retry").unwrap().len(), 2);
+        assert_eq!(m.series("faults/quantize/retry").unwrap()[1].0, 2);
+        assert_eq!(m.series("faults/quantize/panic").unwrap().len(), 1);
+        assert_eq!(m.series("faults/distill/quarantine").unwrap().len(), 1);
+        assert!(m.series("faults/distill/retry").is_none());
     }
 
     #[test]

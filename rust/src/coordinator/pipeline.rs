@@ -422,7 +422,12 @@ mod tests {
         // round-trips through the parser
         assert!(Json::parse(&text).is_ok());
 
-        let stats = CacheStats { hits: 2, misses: 1, stores: 1 };
+        let stats = CacheStats {
+            hits: 2,
+            misses: 1,
+            stores: 1,
+            quarantined: 0,
+        };
         let with_cache = PipelineOutcome {
             distill_secs: Some(1.5),
             final_bns_loss: Some(0.25),

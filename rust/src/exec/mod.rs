@@ -20,7 +20,7 @@
 pub mod pool;
 pub mod schedule;
 
-pub use pool::{run_jobs, PoolReport};
+pub use pool::{panic_message, run_jobs, PoolReport};
 pub use schedule::{chain_deps, independent_deps, waves};
 
 /// Worker-count configuration, threaded from the CLI (`workers=K`)

@@ -11,6 +11,13 @@
 //! interleaving. Combined with shard-keyed RNG streams
 //! ([`Pcg32::new_stream`](crate::tensor::Pcg32::new_stream)) inside the
 //! jobs, every parallel phase is bit-identical for any worker count.
+//!
+//! Fault containment (DESIGN.md §13): a panicking job is caught via
+//! `catch_unwind` and converted into a deterministic per-job-index error
+//! instead of killing the pool — sibling jobs complete, their unwinding
+//! destructors (claim lockfiles, device handles) run, and the error the
+//! caller sees is always the *lowest-index* failure regardless of which
+//! worker hit it first or in what order jobs finished.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -20,6 +27,40 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::Parallelism;
+
+/// Best-effort human-readable payload of a caught panic.
+pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Run one job with panic containment: a panic becomes a deterministic
+/// `Err` naming the job index, so the pool (and its caller) survive.
+/// The flag reports whether the job panicked (for [`PoolReport::panics`]).
+fn run_caught<T>(
+    idx: usize,
+    f: impl FnOnce() -> Result<T>,
+) -> (Result<T>, bool) {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => (r, false),
+        Err(p) => (
+            Err(anyhow::anyhow!(
+                "job {idx} panicked: {}",
+                panic_message(p.as_ref())
+            )),
+            true,
+        ),
+    }
+}
+
+/// Poison-proof lock: a mutex poisoned by a panicking thread still
+/// guards valid data here (slots hold plain `Option`s, deques plain
+/// jobs), so recover the guard instead of propagating the poison.
+fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Per-run accounting: wall clock, per-worker busy time and job counts,
 /// and the number of steals. Feeds
@@ -38,6 +79,8 @@ pub struct PoolReport {
     pub worker_jobs: Vec<usize>,
     /// Cross-deque steals (0 in serial runs).
     pub steals: usize,
+    /// Jobs that panicked (caught and converted to per-index errors).
+    pub panics: usize,
 }
 
 impl PoolReport {
@@ -60,6 +103,7 @@ impl PoolReport {
         self.jobs += other.jobs;
         self.wall_secs += other.wall_secs;
         self.steals += other.steals;
+        self.panics += other.panics;
         if self.worker_busy_secs.len() < other.worker_busy_secs.len() {
             self.worker_busy_secs.resize(other.worker_busy_secs.len(), 0.0);
             self.worker_jobs.resize(other.worker_jobs.len(), 0);
@@ -75,9 +119,14 @@ impl PoolReport {
 
 /// Run every job, returning results in submission order plus the pool
 /// report. Jobs run on `par.resolve_for(jobs.len())` workers; a single
-/// worker short-circuits to an in-thread loop (no spawn overhead). On
-/// failure the earliest-submitted failing job's error is returned and
-/// sibling results are dropped.
+/// worker short-circuits to an in-thread loop (no spawn overhead).
+///
+/// Failure contract: a panicking job is caught and converted to an error
+/// naming its index (the pool always survives), and the error returned
+/// is the **lowest-submission-index** failure regardless of worker
+/// count, steal pattern, or completion order — serial runs stop at the
+/// first (= lowest-index) failure, parallel runs complete every job and
+/// pick the lowest-index `Err` slot. Sibling results are dropped.
 pub fn run_jobs<T, F>(par: Parallelism, jobs: Vec<F>) -> Result<(Vec<T>, PoolReport)>
 where
     T: Send,
@@ -91,10 +140,14 @@ where
         let mut busy = 0.0;
         let mut out = Vec::with_capacity(n);
         let mut first_err = None;
-        for job in jobs {
+        let mut panics = 0usize;
+        let mut ran = 0usize;
+        for (i, job) in jobs.into_iter().enumerate() {
             let tj = Instant::now();
-            let r = job();
+            let (r, panicked) = run_caught(i, job);
             busy += tj.elapsed().as_secs_f64();
+            panics += panicked as usize;
+            ran += 1;
             match r {
                 Ok(v) => out.push(v),
                 Err(e) => {
@@ -108,8 +161,9 @@ where
             jobs: n,
             wall_secs: t0.elapsed().as_secs_f64(),
             worker_busy_secs: vec![busy],
-            worker_jobs: vec![out.len()],
+            worker_jobs: vec![ran],
             steals: 0,
+            panics,
         };
         return match first_err {
             Some(e) => Err(e),
@@ -128,6 +182,7 @@ where
     let slots: Vec<Mutex<Option<Result<T>>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
     let steals = AtomicUsize::new(0);
+    let panics = AtomicUsize::new(0);
 
     let mut worker_busy_secs = vec![0.0; workers];
     let mut worker_jobs = vec![0; workers];
@@ -137,17 +192,18 @@ where
                 let deques = &deques;
                 let slots = &slots;
                 let steals = &steals;
+                let panics = &panics;
                 s.spawn(move || {
                     let mut busy = 0.0f64;
                     let mut count = 0usize;
                     loop {
                         // own queue first (front = submission order) ...
-                        let mut job = deques[w].lock().unwrap().pop_front();
+                        let mut job = lock_clean(&deques[w]).pop_front();
                         // ... then steal from a victim's back
                         if job.is_none() {
                             for k in 1..deques.len() {
                                 let v = (w + k) % deques.len();
-                                job = deques[v].lock().unwrap().pop_back();
+                                job = lock_clean(&deques[v]).pop_back();
                                 if job.is_some() {
                                     steals.fetch_add(1, Ordering::Relaxed);
                                     break;
@@ -158,17 +214,25 @@ where
                         // final, so exiting here never strands a job.
                         let Some((idx, f)) = job else { break };
                         let tj = Instant::now();
-                        let r = f();
+                        // panic containment: the job's unwind stops
+                        // here, its error lands in the slot like any
+                        // other failure, and the worker keeps draining.
+                        let (r, panicked) = run_caught(idx, f);
                         busy += tj.elapsed().as_secs_f64();
                         count += 1;
-                        *slots[idx].lock().unwrap() = Some(r);
+                        if panicked {
+                            panics.fetch_add(1, Ordering::Relaxed);
+                        }
+                        *lock_clean(&slots[idx]) = Some(r);
                     }
                     (busy, count)
                 })
             })
             .collect();
         for (w, h) in handles.into_iter().enumerate() {
-            let (busy, count) = h.join().expect("pool worker panicked");
+            // workers never unwind (jobs are caught above); if one does
+            // anyway, lose its accounting rather than the whole pool
+            let (busy, count) = h.join().unwrap_or((0.0, 0));
             worker_busy_secs[w] = busy;
             worker_jobs[w] = count;
         }
@@ -181,10 +245,14 @@ where
         worker_busy_secs,
         worker_jobs,
         steals: steals.load(Ordering::Relaxed),
+        panics: panics.load(Ordering::Relaxed),
     };
+    // drain slots in submission order: the first `Err` seen is by
+    // construction the lowest-index failure, whatever order jobs
+    // actually completed in
     let mut out = Vec::with_capacity(n);
     for slot in slots {
-        match slot.into_inner().unwrap() {
+        match slot.into_inner().unwrap_or_else(|p| p.into_inner()) {
             Some(Ok(v)) => out.push(v),
             Some(Err(e)) => return Err(e),
             None => anyhow::bail!("pool: job never ran (internal error)"),
@@ -243,6 +311,62 @@ mod tests {
             let err = run_jobs::<usize, _>(Parallelism::new(workers), jobs)
                 .unwrap_err();
             assert_eq!(format!("{err}"), "job 2 failed");
+        }
+    }
+
+    #[test]
+    fn panics_become_per_index_errors_not_pool_death() {
+        for workers in [1, 4] {
+            let jobs: Vec<_> = (0..8usize)
+                .map(|i| {
+                    move || {
+                        if i == 5 {
+                            panic!("boom {i}");
+                        }
+                        Ok(i)
+                    }
+                })
+                .collect();
+            let err = run_jobs::<usize, _>(Parallelism::new(workers), jobs)
+                .unwrap_err();
+            assert_eq!(
+                format!("{err}"),
+                "job 5 panicked: boom 5",
+                "workers={workers}"
+            );
+        }
+        // the report still lands when no job fails, and panics count
+        let jobs: Vec<_> = (0..4usize).map(|i| move || Ok(i)).collect();
+        let (_, report) = run_jobs(Parallelism::new(4), jobs).unwrap();
+        assert_eq!(report.panics, 0);
+    }
+
+    #[test]
+    fn lowest_index_failure_wins_regardless_of_completion_order() {
+        // workers=4: job 6 (and a panicking job 2) fail immediately,
+        // while job 1 fails only after a delay — the returned error must
+        // still be job 1's, the lowest submitted index, every time.
+        for _ in 0..3 {
+            let jobs: Vec<_> = (0..8usize)
+                .map(|i| {
+                    move || -> Result<usize> {
+                        match i {
+                            1 => {
+                                std::thread::sleep(
+                                    std::time::Duration::from_millis(60),
+                                );
+                                anyhow::bail!("job 1 failed")
+                            }
+                            2 => panic!("fast panic"),
+                            6 => anyhow::bail!("job 6 failed"),
+                            _ => Ok(i),
+                        }
+                    }
+                })
+                .collect();
+            let err = run_jobs::<usize, _>(Parallelism::new(4), jobs)
+                .unwrap_err();
+            assert_eq!(format!("{err}"), "job 1 failed");
         }
     }
 

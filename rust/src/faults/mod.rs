@@ -1,0 +1,451 @@
+//! Deterministic fault injection (DESIGN.md §13): a config/env-driven
+//! [`FaultPlan`] that fires failures at named stage/site/attempt points,
+//! so every recovery path in the stack — pool panic containment, grid
+//! retry/quarantine supervision, artifact-corruption quarantine — is
+//! testable on demand and repeatable bit-for-bit.
+//!
+//! Grammar (`GENIE_FAULTS`, comma-separated entries):
+//!
+//! ```text
+//! <stage>:<site>:attempt<N>=panic|err    inject at a named check point
+//! <stage>:<site>:*=panic|err             ... on every attempt
+//! artifact:corrupt:<key-prefix>          flip a byte in the next cached
+//!                                        artifact whose file stem
+//!                                        (`<kind>_<hexkey>`) starts with
+//!                                        the prefix (`*` = any); each
+//!                                        corrupt entry fires once
+//! ```
+//!
+//! `<stage>`/`<site>` match exactly or via `*`. Check points are wired
+//! through the stack: the grid executor checks `(<stagekind>, <tag>)` per
+//! supervised attempt (e.g. `quantize:c3`, `distill:shared:distill`), the
+//! distill scheduler checks `(distill, shard<b>)` per shard, the phase
+//! engine checks `(steploop, <phase-name>)` per loop entry, and the
+//! artifact cache offers every load to the corrupt hook. Attempt counters
+//! are keyed by the concrete `(stage, site)` pair, so
+//! `distill:shard2:attempt1=panic` panics the first execution of shard 2
+//! and lets the supervised retry through — deterministically, whatever
+//! the worker count or completion order.
+//!
+//! The active plan is process-global: seeded lazily from `GENIE_FAULTS`
+//! (or eagerly via [`init_from_env`], which surfaces parse errors), and
+//! swappable under a scope guard ([`scoped`]) for in-process tests. No
+//! plan active (the production default) means every check is an inert
+//! `Ok(())`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+/// What an injection point does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the check point — exercises `catch_unwind`
+    /// containment in the pool and the grid supervisor.
+    Panic,
+    /// Return an `Err` from the check point — a transient failure the
+    /// bounded-retry path recovers from.
+    Err,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "panic" => Ok(FaultKind::Panic),
+            "err" | "error" => Ok(FaultKind::Err),
+            other => bail!("unknown fault kind '{other}' (want panic|err)"),
+        }
+    }
+
+    fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Err => "err",
+        }
+    }
+}
+
+/// One stage/site/attempt injection point (`*` wildcards stage or site;
+/// `attempt == 0` means every attempt).
+#[derive(Debug, Clone)]
+struct FaultPoint {
+    stage: String,
+    site: String,
+    attempt: u32,
+    kind: FaultKind,
+}
+
+#[derive(Debug, Default)]
+struct PlanState {
+    /// Per-(stage, site) check counts — the attempt number each check
+    /// observes. Keyed by the concrete pair, so a wildcard spec fires
+    /// once per distinct site.
+    attempts: HashMap<(String, String), u32>,
+    /// One flag per corrupt prefix: each fires at most once.
+    corrupt_fired: Vec<bool>,
+    /// Human-readable log of every fault that actually fired.
+    injected: Vec<String>,
+}
+
+/// A parsed, stateful fault plan. Instance methods are safe to share
+/// across threads (attempt counters live behind a mutex); unit tests use
+/// instances directly, the runtime consults the process-global one.
+#[derive(Debug)]
+pub struct FaultPlan {
+    points: Vec<FaultPoint>,
+    corrupt: Vec<String>,
+    state: Mutex<PlanState>,
+}
+
+fn pat_matches(pat: &str, v: &str) -> bool {
+    pat == "*" || pat == v
+}
+
+impl FaultPlan {
+    /// Parse the `GENIE_FAULTS` grammar (see module docs).
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut points = Vec::new();
+        let mut corrupt = Vec::new();
+        for raw in text.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if let Some(prefix) = entry.strip_prefix("artifact:corrupt:") {
+                let prefix = prefix.trim();
+                anyhow::ensure!(
+                    !prefix.is_empty(),
+                    "fault entry '{entry}': empty key prefix (use * for any)"
+                );
+                corrupt.push(prefix.to_string());
+                continue;
+            }
+            let Some((point, kind)) = entry.split_once('=') else {
+                bail!(
+                    "fault entry '{entry}': expected \
+                     stage:site:attemptN=panic|err or \
+                     artifact:corrupt:<key-prefix>"
+                );
+            };
+            let kind = FaultKind::parse(kind.trim())
+                .with_context(|| format!("fault entry '{entry}'"))?;
+            let parts: Vec<&str> = point.split(':').collect();
+            let [stage, site, when] = parts.as_slice() else {
+                bail!(
+                    "fault entry '{entry}': expected three ':'-separated \
+                     fields (stage:site:attemptN)"
+                );
+            };
+            let attempt = if when.trim() == "*" {
+                0
+            } else {
+                let n: u32 = when
+                    .trim()
+                    .strip_prefix("attempt")
+                    .and_then(|n| n.parse().ok())
+                    .with_context(|| {
+                        format!(
+                            "fault entry '{entry}': bad attempt selector \
+                             '{when}' (want attempt<N> or *)"
+                        )
+                    })?;
+                anyhow::ensure!(
+                    n >= 1,
+                    "fault entry '{entry}': attempts are 1-based"
+                );
+                n
+            };
+            points.push(FaultPoint {
+                stage: stage.trim().to_string(),
+                site: site.trim().to_string(),
+                attempt,
+                kind,
+            });
+        }
+        let corrupt_fired = vec![false; corrupt.len()];
+        Ok(FaultPlan {
+            points,
+            corrupt,
+            state: Mutex::new(PlanState {
+                corrupt_fired,
+                ..Default::default()
+            }),
+        })
+    }
+
+    /// An inert plan (parses the empty string).
+    pub fn empty() -> FaultPlan {
+        FaultPlan {
+            points: Vec::new(),
+            corrupt: Vec::new(),
+            state: Mutex::new(PlanState::default()),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty() && self.corrupt.is_empty()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PlanState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// One named check point: bumps the `(stage, site)` attempt counter
+    /// and fires any matching point — `panic!` for [`FaultKind::Panic`],
+    /// `Err` for [`FaultKind::Err`]. Inert when nothing matches.
+    pub fn check(&self, stage: &str, site: &str) -> Result<()> {
+        if self.points.is_empty() {
+            return Ok(());
+        }
+        let fired = {
+            let mut st = self.lock();
+            let n = st
+                .attempts
+                .entry((stage.to_string(), site.to_string()))
+                .or_insert(0);
+            *n += 1;
+            let n = *n;
+            let hit = self.points.iter().find(|p| {
+                pat_matches(&p.stage, stage)
+                    && pat_matches(&p.site, site)
+                    && (p.attempt == 0 || p.attempt == n)
+            });
+            match hit {
+                Some(p) => {
+                    st.injected.push(format!(
+                        "{stage}:{site}:attempt{n}={}",
+                        p.kind.as_str()
+                    ));
+                    Some((p.kind, n))
+                }
+                None => None,
+            }
+        };
+        match fired {
+            None => Ok(()),
+            Some((FaultKind::Err, n)) => bail!(
+                "injected transient fault: {stage}:{site} attempt {n}"
+            ),
+            Some((FaultKind::Panic, n)) => {
+                panic!("injected fault: {stage}:{site} attempt {n}")
+            }
+        }
+    }
+
+    /// Offer one on-disk artifact to the corrupt specs: the first unfired
+    /// prefix matching `stem` (`<kind>_<hexkey>`) flips a byte in the
+    /// middle of the file and is marked fired. Returns whether the file
+    /// was corrupted.
+    pub fn corrupt_artifact(&self, stem: &str, path: &Path) -> bool {
+        if self.corrupt.is_empty() {
+            return false;
+        }
+        let mut st = self.lock();
+        for (i, prefix) in self.corrupt.iter().enumerate() {
+            if st.corrupt_fired[i] {
+                continue;
+            }
+            if !(prefix == "*" || stem.starts_with(prefix.as_str())) {
+                continue;
+            }
+            let Ok(mut bytes) = std::fs::read(path) else { continue };
+            if bytes.is_empty() {
+                continue;
+            }
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0xff;
+            if std::fs::write(path, &bytes).is_err() {
+                continue;
+            }
+            st.corrupt_fired[i] = true;
+            st.injected.push(format!("artifact:corrupt:{stem}"));
+            return true;
+        }
+        false
+    }
+
+    /// Every fault that actually fired, in firing order.
+    pub fn injected(&self) -> Vec<String> {
+        self.lock().injected.clone()
+    }
+}
+
+static ACTIVE: RwLock<Option<Arc<FaultPlan>>> = RwLock::new(None);
+static ENV_SEEDED: OnceLock<()> = OnceLock::new();
+
+fn seed_from_env() {
+    ENV_SEEDED.get_or_init(|| {
+        if let Ok(text) = std::env::var("GENIE_FAULTS") {
+            if !text.trim().is_empty() {
+                match FaultPlan::parse(&text) {
+                    Ok(p) if !p.is_empty() => {
+                        *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) =
+                            Some(Arc::new(p));
+                    }
+                    Ok(_) => {}
+                    Err(e) => eprintln!(
+                        "warning: GENIE_FAULTS ignored (parse error: {e})"
+                    ),
+                }
+            }
+        }
+    });
+}
+
+/// The active plan, if any — seeded from `GENIE_FAULTS` on first use.
+pub fn current() -> Option<Arc<FaultPlan>> {
+    seed_from_env();
+    ACTIVE.read().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Eagerly parse `GENIE_FAULTS`, surfacing parse errors (the CLI calls
+/// this at startup so a typo'd plan fails fast instead of being ignored
+/// by the lazy path).
+pub fn init_from_env() -> Result<()> {
+    if let Ok(text) = std::env::var("GENIE_FAULTS") {
+        if !text.trim().is_empty() {
+            FaultPlan::parse(&text)
+                .context("bad GENIE_FAULTS")?;
+        }
+    }
+    seed_from_env();
+    Ok(())
+}
+
+/// Process-global check point (see [`FaultPlan::check`]); inert without
+/// an active plan.
+pub fn check(stage: &str, site: &str) -> Result<()> {
+    match current() {
+        Some(p) => p.check(stage, site),
+        None => Ok(()),
+    }
+}
+
+/// Process-global corrupt hook: called by the artifact cache before every
+/// load with the file stem (`<kind>_<hexkey>`) and path.
+pub fn corrupt_hook(stem: &str, path: &Path) {
+    if let Some(p) = current() {
+        if p.corrupt_artifact(stem, path) {
+            crate::progress!("faults: corrupted cached artifact {stem}");
+        }
+    }
+}
+
+/// Restores the previously active plan when dropped.
+#[derive(Debug)]
+pub struct ScopedPlan {
+    prev: Option<Arc<FaultPlan>>,
+}
+
+impl Drop for ScopedPlan {
+    fn drop(&mut self) {
+        *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) =
+            self.prev.take();
+    }
+}
+
+/// Install `plan` as the process-global plan for the guard's lifetime
+/// (test harness hook — fault-injection tests in one binary must
+/// serialize around this, the global is process-wide).
+pub fn scoped(plan: FaultPlan) -> ScopedPlan {
+    seed_from_env();
+    let mut slot = ACTIVE.write().unwrap_or_else(|e| e.into_inner());
+    let prev = slot.replace(Arc::new(plan));
+    ScopedPlan { prev }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_grammar_and_wildcards() {
+        let p = FaultPlan::parse(
+            "distill:shard2:attempt1=panic, quantize:*:attempt1=err, \
+             artifact:corrupt:distill, steploop:*:*=err",
+        )
+        .unwrap();
+        assert_eq!(p.points.len(), 3);
+        assert_eq!(p.corrupt, vec!["distill".to_string()]);
+        assert_eq!(p.points[0].kind, FaultKind::Panic);
+        assert_eq!(p.points[0].attempt, 1);
+        assert_eq!(p.points[1].site, "*");
+        assert_eq!(p.points[2].attempt, 0, "'*' selector = every attempt");
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        assert!(FaultPlan::parse("distill:shard2=panic").is_err());
+        assert!(FaultPlan::parse("distill:shard2:attempt1=boom").is_err());
+        assert!(FaultPlan::parse("distill:shard2:attempt0=err").is_err());
+        assert!(FaultPlan::parse("distill:shard2:first=err").is_err());
+        assert!(FaultPlan::parse("artifact:corrupt:").is_err());
+        assert!(FaultPlan::parse("justtext").is_err());
+    }
+
+    #[test]
+    fn err_fires_on_named_attempt_only() {
+        let p = FaultPlan::parse("quantize:*:attempt1=err").unwrap();
+        // attempt 1 at each distinct site fails; attempt 2 passes
+        assert!(p.check("quantize", "c0").is_err());
+        assert!(p.check("quantize", "c0").is_ok());
+        assert!(p.check("quantize", "c1").is_err(), "per-site counters");
+        assert!(p.check("distill", "c0").is_ok(), "stage must match");
+        assert_eq!(p.injected().len(), 2);
+    }
+
+    #[test]
+    fn every_attempt_selector_always_fires() {
+        let p = FaultPlan::parse("quantize:c3:*=err").unwrap();
+        for _ in 0..3 {
+            assert!(p.check("quantize", "c3").is_err());
+        }
+        assert!(p.check("quantize", "c2").is_ok());
+    }
+
+    #[test]
+    fn panic_kind_panics_and_is_catchable() {
+        let p = FaultPlan::parse("distill:shard2:attempt1=panic").unwrap();
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| p.check("distill", "shard2")),
+        );
+        assert!(r.is_err(), "first attempt must panic");
+        // the counter advanced: the retry passes
+        assert!(p.check("distill", "shard2").is_ok());
+        assert_eq!(p.injected(), vec![
+            "distill:shard2:attempt1=panic".to_string()
+        ]);
+    }
+
+    #[test]
+    fn corrupt_fires_once_per_prefix_and_flips_a_byte() {
+        let dir = std::env::temp_dir().join("genie_faults_corrupt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("distill_abcd.gts");
+        std::fs::write(&f, b"0123456789").unwrap();
+        let p = FaultPlan::parse("artifact:corrupt:distill").unwrap();
+        assert!(!p.corrupt_artifact("qstate_abcd", &f), "prefix gates");
+        assert!(p.corrupt_artifact("distill_abcd", &f));
+        let bytes = std::fs::read(&f).unwrap();
+        assert_ne!(bytes, b"0123456789", "a byte must have flipped");
+        assert_eq!(bytes.len(), 10, "corruption preserves length");
+        assert!(
+            !p.corrupt_artifact("distill_abcd", &f),
+            "each corrupt entry fires once"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::empty();
+        for _ in 0..4 {
+            assert!(p.check("any", "where").is_ok());
+        }
+        assert!(p.injected().is_empty());
+    }
+}

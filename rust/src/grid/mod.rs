@@ -42,7 +42,8 @@ use crate::synthesis::Engine;
 use crate::tensor::{Pcg32, Tensor};
 
 pub use run::{
-    execute, execute_cells, CellOutcome, GridOpts, GridOutcome, GridStats,
+    execute, execute_cells, supervise, CellOutcome, CellStatus, GridOpts,
+    GridOutcome, GridStats, SuperviseReport,
 };
 
 /// Where a cell's calibration data comes from: GENIE-D synthesis (zsq)

@@ -20,8 +20,18 @@
 //! Resume: an interrupted grid re-run walks the same DAG; finished
 //! stages are cache hits, the interrupted stage continues from its wip
 //! checkpoints (`--resume`), and only unfinished cells compute.
+//!
+//! Fault tolerance (DESIGN.md §13): every stage node is dispatched
+//! through [`supervise`] — bounded retries with deterministic linear
+//! backoff, panics caught per attempt. A node that exhausts its budget
+//! is recorded `Failed` and quarantines only its *dependents*: nodes
+//! whose deps failed are marked `Skipped` without dispatching, while
+//! independent nodes in the same wave (and every later wave) keep
+//! running. Each cell then reports `ok | failed | skipped` on its
+//! [`CellOutcome`], so one bad cell never aborts its siblings.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 use anyhow::{bail, Context, Result};
 
@@ -32,7 +42,7 @@ use crate::coordinator::{
     PipelineOutcome, RunConfig,
 };
 use crate::data::Dataset;
-use crate::exec::{run_jobs, PoolReport};
+use crate::exec::{panic_message, run_jobs, PoolReport};
 use crate::precision::PrecisionPlan;
 use crate::runtime::json::Json;
 use crate::runtime::{Manifest, ModelRt, Runtime};
@@ -56,10 +66,52 @@ pub struct GridOpts {
     pub keep_qstate: bool,
 }
 
+/// Terminal status of one cell after supervised execution
+/// (DESIGN.md §13).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CellStatus {
+    /// Every stage the cell needs completed.
+    Ok,
+    /// A stage serving this cell exhausted its retry budget.
+    Failed { stage: String, reason: String },
+    /// An upstream stage failed, so this cell's remaining stages were
+    /// never dispatched.
+    Skipped { stage: String, reason: String },
+}
+
+impl CellStatus {
+    /// Status keyword as emitted in `--json`: `ok | failed | skipped`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CellStatus::Ok => "ok",
+            CellStatus::Failed { .. } => "failed",
+            CellStatus::Skipped { .. } => "skipped",
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, CellStatus::Ok)
+    }
+
+    /// Human-readable `stage: reason` detail (`None` for `Ok`).
+    pub fn describe(&self) -> Option<String> {
+        match self {
+            CellStatus::Ok => None,
+            CellStatus::Failed { stage, reason }
+            | CellStatus::Skipped { stage, reason } => {
+                Some(format!("{stage}: {reason}"))
+            }
+        }
+    }
+}
+
 /// One cell's results.
 #[derive(Debug)]
 pub struct CellOutcome {
     pub spec: RunSpec,
+    /// Whether the cell's stage chain completed; non-`Ok` cells carry
+    /// `None` for every product field below.
+    pub status: CellStatus,
     /// `None` under [`GridOpts::data_only`].
     pub outcome: Option<PipelineOutcome>,
     /// The resolved precision plan (`None` under `data_only`).
@@ -84,6 +136,14 @@ pub struct GridStats {
     pub quantize_nodes: usize,
     pub waves: usize,
     pub wall_secs: f64,
+    /// Nodes that exhausted their retry budget.
+    pub failed_nodes: usize,
+    /// Nodes never dispatched because an upstream node failed.
+    pub skipped_nodes: usize,
+    /// Extra attempts made beyond each node's first (all nodes).
+    pub retries: u64,
+    /// Attempts that ended in a caught panic (all nodes).
+    pub panics: u64,
     /// Cache traffic merged across every stage job.
     pub cache: CacheStats,
 }
@@ -118,6 +178,14 @@ impl GridOutcome {
                     ("abits", Json::num(c.spec.quant.abits as f64)),
                     ("seed", Json::num(c.spec.seed as f64)),
                     ("data", Json::Str(c.spec.data.label())),
+                    ("status", Json::Str(c.status.as_str().to_string())),
+                    (
+                        "reason",
+                        match c.status.describe() {
+                            Some(r) => Json::Str(r),
+                            None => Json::Null,
+                        },
+                    ),
                     (
                         "outcome",
                         match &c.outcome {
@@ -146,18 +214,111 @@ impl GridOutcome {
                     ),
                     ("waves", Json::num(s.waves as f64)),
                     ("wall_secs", Json::num(s.wall_secs)),
+                    ("failed_nodes", Json::num(s.failed_nodes as f64)),
+                    (
+                        "skipped_nodes",
+                        Json::num(s.skipped_nodes as f64),
+                    ),
+                    ("retries", Json::num(s.retries as f64)),
+                    ("panics", Json::num(s.panics as f64)),
                     (
                         "cache",
                         Json::obj(vec![
                             ("hits", Json::num(s.cache.hits as f64)),
                             ("misses", Json::num(s.cache.misses as f64)),
                             ("stores", Json::num(s.cache.stores as f64)),
+                            (
+                                "quarantined",
+                                Json::num(s.cache.quarantined as f64),
+                            ),
                         ]),
                     ),
                 ]),
             ),
         ])
     }
+
+    /// Whether every cell completed (`genie grid` exits nonzero when
+    /// this is false).
+    pub fn all_ok(&self) -> bool {
+        self.cells.iter().all(|c| c.status.is_ok())
+    }
+}
+
+/// Per-node execution state tracked by the wave scheduler.
+#[derive(Debug, Clone)]
+enum NodeState {
+    Pending,
+    Ok,
+    Failed(String),
+    Skipped(String),
+}
+
+/// Accounting for one supervised stage dispatch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SuperviseReport {
+    /// Attempts actually made (1 = first try succeeded).
+    pub attempts: u32,
+    /// Attempts that ended in a panic (caught, converted to errors).
+    pub panics: u32,
+}
+
+/// Run `f` under the grid retry policy (DESIGN.md §13): up to
+/// `max_attempts` tries, a deterministic linear backoff of
+/// `(attempt-1) * backoff_ms` before each retry, and a per-attempt
+/// `catch_unwind` so a panicking stage becomes a retryable error
+/// instead of poisoning the pool. Injected faults
+/// ([`crate::faults::check`]) fire inside the guarded region, so a
+/// `panic`/`err` fault exercises exactly the recovery path a real one
+/// would. Returns the final result plus attempt accounting; the caller
+/// decides whether a terminal `Err` fails or skips dependents.
+pub fn supervise<T>(
+    stage: &str,
+    site: &str,
+    max_attempts: u32,
+    backoff_ms: u64,
+    mut f: impl FnMut() -> Result<T>,
+) -> (Result<T>, SuperviseReport) {
+    let max = max_attempts.max(1);
+    let mut rep = SuperviseReport::default();
+    let mut last_err: Option<anyhow::Error> = None;
+    for attempt in 1..=max {
+        if attempt > 1 {
+            let ms = backoff_ms.saturating_mul(u64::from(attempt - 1));
+            crate::progress!(
+                "grid: retrying {stage}[{site}] attempt {attempt}/{max} \
+                 after {ms}ms: {}",
+                last_err
+                    .as_ref()
+                    .map(|e| e.to_string())
+                    .unwrap_or_default(),
+            );
+            if ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+        }
+        rep.attempts = attempt;
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            crate::faults::check(stage, site)?;
+            f()
+        }));
+        match caught {
+            Ok(Ok(v)) => return (Ok(v), rep),
+            Ok(Err(e)) => last_err = Some(e),
+            Err(p) => {
+                rep.panics += 1;
+                last_err = Some(anyhow::anyhow!(
+                    "{stage}[{site}] attempt {attempt} panicked: {}",
+                    panic_message(p.as_ref())
+                ));
+            }
+        }
+    }
+    let e = last_err
+        .unwrap_or_else(|| anyhow::anyhow!("{stage}[{site}]: no attempts"));
+    let wrapped =
+        e.context(format!("{stage}[{site}]: failed after {max} attempts"));
+    (Err(wrapped), rep)
 }
 
 /// One node's published product, read by downstream waves.
@@ -225,6 +386,58 @@ fn fold_stats(total: &mut CacheStats, job: &CacheStats) {
     total.hits += job.hits;
     total.misses += job.misses;
     total.stores += job.stores;
+    total.quarantined += job.quarantined;
+}
+
+/// First non-`Ok` node in a cell's stage chain decides the cell's
+/// status: a `Failed` node makes the cell `failed` at that stage, a
+/// `Skipped` (or never-dispatched) node makes it `skipped`.
+fn status_of_chain(
+    chain: &[(usize, &str)],
+    states: &[NodeState],
+) -> CellStatus {
+    for &(i, kind) in chain {
+        match &states[i] {
+            NodeState::Ok => {}
+            NodeState::Failed(r) => {
+                return CellStatus::Failed {
+                    stage: kind.to_string(),
+                    reason: r.clone(),
+                }
+            }
+            NodeState::Skipped(r) => {
+                return CellStatus::Skipped {
+                    stage: kind.to_string(),
+                    reason: r.clone(),
+                }
+            }
+            NodeState::Pending => {
+                return CellStatus::Skipped {
+                    stage: kind.to_string(),
+                    reason: "stage never dispatched".to_string(),
+                }
+            }
+        }
+    }
+    CellStatus::Ok
+}
+
+/// The cell's stage chain in execution order (teacher → distill →
+/// quantize → evals), restricted to nodes the plan actually has.
+fn cell_chain(plan: &GridPlan, c: usize) -> Vec<(usize, &'static str)> {
+    let mut v = vec![(plan.teacher_of[c], StageKind::Teacher.as_str())];
+    let opt = [
+        (plan.distill_of[c], StageKind::Distill.as_str()),
+        (plan.quantize_of[c], StageKind::Quantize.as_str()),
+        (plan.evalfp_of[c], StageKind::EvalFp.as_str()),
+        (plan.evalq_of[c], StageKind::EvalQ.as_str()),
+    ];
+    for (o, kind) in opt {
+        if let Some(i) = o {
+            v.push((i, kind));
+        }
+    }
+    v
 }
 
 /// Expand the grid over the base config and execute it.
@@ -280,15 +493,51 @@ pub fn execute_cells(
 
     let mut results: Vec<Option<NodeOut>> = Vec::new();
     results.resize_with(plan.nodes.len(), || None);
+    let mut states = vec![NodeState::Pending; plan.nodes.len()];
     let mut cache_total = CacheStats::default();
     let mut pool_total = PoolReport::default();
+    let mut retries_total: u64 = 0;
+    let mut panics_total: u64 = 0;
 
     for wave in &waves {
+        // quarantine dependents of failed nodes: a node whose dep did
+        // not complete is skipped without dispatch, so the failure
+        // stays contained to its cell chain while independent nodes in
+        // this wave run normally
+        let mut runnable: Vec<usize> = Vec::with_capacity(wave.len());
+        for &i in wave {
+            let node = &plan.nodes[i];
+            let bad = node.deps.iter().find_map(|&d| match &states[d] {
+                NodeState::Failed(r) => Some((d, "failed", r.clone())),
+                NodeState::Skipped(r) => Some((d, "skipped", r.clone())),
+                _ => None,
+            });
+            match bad {
+                Some((d, what, r)) => {
+                    let kind = node.kind.as_str();
+                    let reason = format!(
+                        "upstream {} node {d} {what}: {r}",
+                        plan.nodes[d].kind.as_str(),
+                    );
+                    crate::progress!(
+                        "grid: skipping {kind} node {i}: {reason}"
+                    );
+                    metrics.record_fault(kind, "skipped");
+                    states[i] = NodeState::Skipped(reason);
+                }
+                None => runnable.push(i),
+            }
+        }
+        if runnable.is_empty() {
+            continue;
+        }
         let outs = {
             let results_ref = &results;
             let dataset = &dataset;
             let plan_ref = &plan;
-            let jobs: Vec<_> = wave
+            type JobOut =
+                (Result<NodeOut>, Metrics, CacheStats, SuperviseReport);
+            let jobs: Vec<_> = runnable
                 .iter()
                 .map(|&i| {
                     let node = &plan_ref.nodes[i];
@@ -297,20 +546,34 @@ pub fn execute_cells(
                     // field the stage reads)
                     let spec = &plan_ref.cells[node.cells[0]];
                     let mrt = &mrts[&spec.model];
-                    move || -> Result<(NodeOut, Metrics, CacheStats)> {
+                    move || -> Result<JobOut> {
                         let mut jm = Metrics::new();
-                        let mut cache = open_job_cache(cfg)?;
+                        let mut cstats = CacheStats::default();
                         let tag = if node.cells.len() == 1 {
                             format!("c{}", node.cells[0])
                         } else {
                             format!("shared:{}", node.kind.as_str())
                         };
                         let _tag = crate::progress::push_tag(&tag);
-                        let out = run_node(
-                            node.kind, spec, mrt, dataset, results_ref,
-                            node, opts, &mut cache, &mut jm,
-                        )?;
-                        Ok((out, jm, cache.stats().clone()))
+                        let (res, rep) = supervise(
+                            node.kind.as_str(),
+                            &tag,
+                            cfg.retry_max,
+                            cfg.retry_backoff_ms,
+                            || {
+                                let mut cache = open_job_cache(cfg)?;
+                                let r = run_node(
+                                    node.kind, spec, mrt, dataset,
+                                    results_ref, node, opts, &mut cache,
+                                    &mut jm,
+                                );
+                                fold_stats(&mut cstats, cache.stats());
+                                r
+                            },
+                        );
+                        // the outer Result never carries stage failure:
+                        // metrics and cache stats must survive it
+                        Ok((res, jm, cstats, rep))
                     }
                 })
                 .collect();
@@ -318,34 +581,73 @@ pub fn execute_cells(
             pool_total.merge(&pool);
             outs
         };
-        // barrier: absorb job metrics under per-run namespaces and
-        // publish the products for the next wave
-        for (&i, (out, jm, cstats)) in wave.iter().zip(outs) {
+        // barrier: absorb job metrics under per-run namespaces
+        // (including failed jobs'), account faults, and publish the
+        // products for the next wave
+        for (&i, (res, jm, cstats, rep)) in runnable.iter().zip(outs) {
             let node = &plan.nodes[i];
+            let kind = node.kind.as_str();
             let prefix = if node.cells.len() == 1 {
                 format!("cell{}/", node.cells[0])
             } else {
-                format!("shared/{}{}/", node.kind.as_str(), i)
+                format!("shared/{}{}/", kind, i)
             };
             metrics.absorb(&prefix, jm);
             fold_stats(&mut cache_total, &cstats);
-            results[i] = Some(out);
+            for _ in 1..rep.attempts {
+                metrics.record_fault(kind, "retry");
+            }
+            for _ in 0..rep.panics {
+                metrics.record_fault(kind, "panic");
+            }
+            for _ in 0..cstats.quarantined {
+                metrics.record_fault(kind, "quarantine");
+            }
+            retries_total += u64::from(rep.attempts.saturating_sub(1));
+            panics_total += u64::from(rep.panics);
+            match res {
+                Ok(out) => {
+                    results[i] = Some(out);
+                    states[i] = NodeState::Ok;
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    crate::progress!(
+                        "grid: {kind} node {i} failed permanently: {msg}"
+                    );
+                    metrics.record_fault(kind, "stage_failed");
+                    states[i] = NodeState::Failed(msg);
+                }
+            }
         }
     }
     metrics.record_pool("grid", &pool_total);
 
-    // assemble per-cell outcomes
+    // assemble per-cell outcomes; non-ok cells report their status and
+    // carry no products
     let mut out_cells = Vec::with_capacity(plan.cells.len());
     for (c, spec) in plan.cells.iter().enumerate() {
-        let (tstore, _) = teacher_at(&results, plan.teacher_of[c])?;
+        let status = status_of_chain(&cell_chain(&plan, c), &states);
         let mut cell = CellOutcome {
             spec: spec.clone(),
+            status: status.clone(),
             outcome: None,
             plan: None,
             calib: None,
-            teacher: opts.keep_teacher.then(|| tstore.clone()),
+            teacher: None,
             qstate: None,
         };
+        if !status.is_ok() {
+            crate::progress!(
+                "grid: cell {c} {}: {}",
+                status.as_str(),
+                status.describe().unwrap_or_default(),
+            );
+            out_cells.push(cell);
+            continue;
+        }
+        let (tstore, _) = teacher_at(&results, plan.teacher_of[c])?;
+        cell.teacher = opts.keep_teacher.then(|| tstore.clone());
         if opts.data_only {
             if opts.keep_calib {
                 if let Some(d) = plan.distill_of[c] {
@@ -396,6 +698,14 @@ pub fn execute_cells(
         out_cells.push(cell);
     }
 
+    let (mut failed_nodes, mut skipped_nodes) = (0, 0);
+    for s in &states {
+        match s {
+            NodeState::Failed(_) => failed_nodes += 1,
+            NodeState::Skipped(_) => skipped_nodes += 1,
+            _ => {}
+        }
+    }
     let stats = GridStats {
         cells: plan.cells.len(),
         nodes: plan.nodes.len(),
@@ -405,6 +715,10 @@ pub fn execute_cells(
         quantize_nodes: plan.count(StageKind::Quantize),
         waves: waves.len(),
         wall_secs: t0.elapsed().as_secs_f64(),
+        failed_nodes,
+        skipped_nodes,
+        retries: retries_total,
+        panics: panics_total,
         cache: cache_total,
     };
     crate::progress!(
@@ -417,6 +731,20 @@ pub fn execute_cells(
         stats.cache.misses,
         stats.cache.stores,
     );
+    if stats.failed_nodes + stats.skipped_nodes > 0
+        || stats.retries > 0
+        || stats.cache.quarantined > 0
+    {
+        crate::progress!(
+            "grid: faults: {} node(s) failed, {} skipped, {} retries, {} \
+             panic(s) caught, {} artifact(s) quarantined",
+            stats.failed_nodes,
+            stats.skipped_nodes,
+            stats.retries,
+            stats.panics,
+            stats.cache.quarantined,
+        );
+    }
     Ok(GridOutcome { cells: out_cells, stats })
 }
 
@@ -504,6 +832,7 @@ mod tests {
         let out = GridOutcome {
             cells: vec![CellOutcome {
                 spec,
+                status: CellStatus::Ok,
                 outcome: Some(PipelineOutcome {
                     model: "toy".into(),
                     fp_acc: 0.9,
@@ -528,7 +857,16 @@ mod tests {
                 quantize_nodes: 1,
                 waves: 4,
                 wall_secs: 1.25,
-                cache: CacheStats { hits: 1, misses: 4, stores: 4 },
+                failed_nodes: 0,
+                skipped_nodes: 0,
+                retries: 1,
+                panics: 0,
+                cache: CacheStats {
+                    hits: 1,
+                    misses: 4,
+                    stores: 4,
+                    quarantined: 0,
+                },
             },
         };
         let text = out.to_json().render();
@@ -536,6 +874,11 @@ mod tests {
         assert!(text.contains("\"dedup_saved\":0"), "{text}");
         assert!(text.contains("\"distill_secs\":null"), "{text}");
         assert!(text.contains("\"hits\":1"), "{text}");
+        assert!(text.contains("\"status\":\"ok\""), "{text}");
+        assert!(text.contains("\"reason\":null"), "{text}");
+        assert!(text.contains("\"retries\":1"), "{text}");
+        assert!(text.contains("\"quarantined\":0"), "{text}");
+        assert!(out.all_ok());
         assert!(Json::parse(&text).is_ok());
     }
 
@@ -545,6 +888,7 @@ mod tests {
         let out = GridOutcome {
             cells: vec![CellOutcome {
                 spec,
+                status: CellStatus::Ok,
                 outcome: None,
                 plan: None,
                 calib: None,
@@ -555,6 +899,120 @@ mod tests {
         };
         let text = out.to_json().render();
         assert!(text.contains("\"outcome\":null"), "{text}");
+    }
+
+    #[test]
+    fn grid_json_reports_failed_cell_status_and_reason() {
+        let spec = RunSpec::base(&RunConfig::default());
+        let out = GridOutcome {
+            cells: vec![CellOutcome {
+                spec,
+                status: CellStatus::Failed {
+                    stage: "quantize".into(),
+                    reason: "failed after 2 attempts".into(),
+                },
+                outcome: None,
+                plan: None,
+                calib: None,
+                teacher: None,
+                qstate: None,
+            }],
+            stats: GridStats::default(),
+        };
+        assert!(!out.all_ok());
+        let text = out.to_json().render();
+        assert!(text.contains("\"status\":\"failed\""), "{text}");
+        assert!(
+            text.contains("quantize: failed after 2 attempts"),
+            "{text}"
+        );
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn chain_status_first_bad_stage_wins() {
+        let states = vec![
+            NodeState::Ok,
+            NodeState::Failed("boom".into()),
+            NodeState::Skipped("upstream distill node 1 failed".into()),
+            NodeState::Pending,
+        ];
+        // clean chain
+        let ok = status_of_chain(&[(0, "teacher")], &states);
+        assert!(ok.is_ok());
+        // own-stage failure => failed at that stage
+        let f = status_of_chain(
+            &[(0, "teacher"), (1, "distill"), (2, "quantize")],
+            &states,
+        );
+        assert_eq!(f.as_str(), "failed");
+        assert_eq!(
+            f.describe().unwrap(),
+            "distill: boom",
+            "first non-ok stage decides"
+        );
+        // upstream-failure propagation => skipped
+        let s = status_of_chain(&[(0, "teacher"), (2, "quantize")], &states);
+        assert_eq!(s.as_str(), "skipped");
+        // a never-dispatched node also reads as skipped
+        let p = status_of_chain(&[(3, "evalq")], &states);
+        assert_eq!(p.as_str(), "skipped");
+    }
+
+    #[test]
+    fn supervise_retries_transient_failures() {
+        let mut n = 0;
+        let (r, rep) = supervise("test", "s0", 3, 0, || {
+            n += 1;
+            if n < 3 {
+                bail!("flaky")
+            }
+            Ok(n)
+        });
+        assert_eq!(r.unwrap(), 3);
+        assert_eq!(rep.attempts, 3);
+        assert_eq!(rep.panics, 0);
+    }
+
+    #[test]
+    fn supervise_exhausts_budget_and_reports_last_error() {
+        let (r, rep) =
+            supervise("quantize", "c1", 2, 0, || -> Result<()> {
+                bail!("always broken")
+            });
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(
+            msg.contains("quantize[c1]: failed after 2 attempts"),
+            "{msg}"
+        );
+        assert!(msg.contains("always broken"), "{msg}");
+        assert_eq!(rep.attempts, 2);
+    }
+
+    #[test]
+    fn supervise_catches_panics_per_attempt() {
+        let mut n = 0;
+        let (r, rep) = supervise("distill", "c0", 2, 0, || {
+            n += 1;
+            if n == 1 {
+                panic!("shard blew up");
+            }
+            Ok(n)
+        });
+        assert_eq!(r.unwrap(), 2);
+        assert_eq!(rep.attempts, 2);
+        assert_eq!(rep.panics, 1);
+    }
+
+    #[test]
+    fn supervise_zero_budget_still_runs_once() {
+        let mut n = 0;
+        let (r, rep) = supervise("t", "s", 0, 0, || {
+            n += 1;
+            Ok(n)
+        });
+        assert_eq!(r.unwrap(), 1);
+        assert_eq!(rep.attempts, 1);
     }
 
     #[test]

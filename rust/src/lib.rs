@@ -17,6 +17,7 @@ pub mod phase;
 pub mod precision;
 pub mod synthesis;
 pub mod artifacts;
+pub mod faults;
 pub mod quant;
 pub mod schedule;
 pub mod data;

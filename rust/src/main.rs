@@ -36,6 +36,9 @@ use genie::grid::{GridOpts, GridPlan, RunGrid};
 use genie::runtime::{ModelRt, Runtime};
 
 fn main() -> Result<()> {
+    // validate GENIE_FAULTS eagerly so a typo fails the run up front
+    // instead of silently injecting nothing (DESIGN.md §13)
+    genie::faults::init_from_env()?;
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
         usage();
@@ -124,7 +127,7 @@ fn usage() {
                 [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
          keys: wbits abits seed workers checkpoint_every json\n\
                precision target_size first_last_bits granularity\n\
-               sens_batches candidates synthesis\n\
+               sens_batches candidates synthesis retry.{{max,backoff_ms}}\n\
                pretrain.{{steps,lr}}\n\
                distill.{{engine,mode,swing,samples,steps,lr_g,lr_z}}\n\
                quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}\n\
@@ -148,7 +151,14 @@ fn usage() {
          on the pool. E.g.:\n\
            genie grid --axis bits=4,3,2 --axis seed=0,1 workers=4\n\
            genie grid --axis synthesis=genie,zeroq --axis bits=w2a4 --dry-run\n\
-         --json PATH writes the outcome report (run and grid) as JSON."
+         --json PATH writes the outcome report (run and grid) as JSON.\n\
+         Fault tolerance (DESIGN.md §13): grid stages retry transient\n\
+         failures (retry.max attempts, linear retry.backoff_ms between\n\
+         them), a panicking stage is contained to its cell, and corrupt\n\
+         cached artifacts are quarantined + recomputed. Cells report\n\
+         ok|failed|skipped in --json; any non-ok cell exits nonzero.\n\
+         GENIE_FAULTS=stage:site:attemptN=panic|err[,artifact:corrupt:P]\n\
+         injects deterministic faults at named sites (testing only)."
     );
 }
 
@@ -174,6 +184,12 @@ fn print_cache_stats(cache: &ArtifactCache) {
             "cache: {} hits, {} misses, {} artifacts stored",
             s.hits, s.misses, s.stores
         );
+        if s.quarantined > 0 {
+            println!(
+                "cache: {} corrupt artifact(s) quarantined and recomputed",
+                s.quarantined
+            );
+        }
     }
 }
 
@@ -426,8 +442,26 @@ fn cmd_grid(cfg: &RunConfig, axes: &[String], dry_run: bool) -> Result<()> {
     for cell in &out.cells {
         if let Some(o) = &cell.outcome {
             o.print(&cell.spec.label());
+        } else if !cell.status.is_ok() {
+            println!(
+                "{}: {} ({})",
+                cell.spec.label(),
+                cell.status.as_str(),
+                cell.status.describe().unwrap_or_default()
+            );
         }
     }
+    // the report and metrics land even when cells failed — the exit
+    // code signals the failure, the JSON says which cells and why
     write_json(cfg, &out.to_json())?;
-    metrics.flush()
+    metrics.flush()?;
+    if !out.all_ok() {
+        let bad = out.cells.iter().filter(|c| !c.status.is_ok()).count();
+        bail!(
+            "grid: {bad} of {} cell(s) did not complete (statuses in the \
+             --json report)",
+            out.cells.len()
+        );
+    }
+    Ok(())
 }

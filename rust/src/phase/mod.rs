@@ -129,6 +129,9 @@ impl StepLoop {
         phase: &mut P,
         dev: &mut DeviceStore,
     ) -> Result<LoopOutcome> {
+        // deterministic fault-injection site (DESIGN.md §13):
+        // GENIE_FAULTS=steploop:<phase-name>:attemptN=... fires here
+        crate::faults::check("steploop", &phase.name())?;
         let mut start = 0usize;
         let mut trace: Vec<(usize, Scalars)> = Vec::new();
         let mut restored = false;
