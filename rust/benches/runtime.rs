@@ -9,6 +9,7 @@
 use genie::coordinator::Metrics;
 use genie::coordinator::pretrain::{teacher_or_pretrain, PretrainCfg};
 use genie::data::Dataset;
+use genie::phase::{Phase, StepLoop};
 use genie::runtime::{to_literal, DeviceStore, ModelRt, Runtime};
 use genie::store::Store;
 use genie::tensor::{Pcg32, Tensor};
@@ -20,6 +21,87 @@ fn step_scalars(dev: &mut DeviceStore, t: usize) {
     dev.insert("t", &Tensor::scalar_f32(t as f32)).unwrap();
     dev.insert("lr_g", &Tensor::scalar_f32(0.01)).unwrap();
     dev.insert("lr_z", &Tensor::scalar_f32(0.1)).unwrap();
+}
+
+/// A minimal fusible phase over the registered host-fn step graph: one
+/// carried scalar, one scalar feed per step, no after_step device work.
+struct FusedBenchPhase;
+
+impl Phase for FusedBenchPhase {
+    fn name(&self) -> String {
+        "bench_fused".into()
+    }
+
+    fn entry(&self) -> String {
+        "bench_step".into()
+    }
+
+    fn init(&mut self, dev: &mut DeviceStore) -> anyhow::Result<()> {
+        dev.insert("state", &Tensor::scalar_f32(1.0))
+    }
+
+    fn before_step(
+        &mut self,
+        _t: usize,
+        dev: &mut DeviceStore,
+    ) -> anyhow::Result<()> {
+        dev.insert("lr", &Tensor::scalar_f32(0.01))
+    }
+
+    fn carried(&self) -> Vec<String> {
+        vec!["state".into()]
+    }
+
+    fn fusible(&self) -> bool {
+        true
+    }
+
+    fn finish(&mut self, dev: &mut DeviceStore) -> anyhow::Result<Store> {
+        let mut out = Store::new();
+        out.insert("state", dev.fetch("state")?);
+        Ok(out)
+    }
+}
+
+/// Register the host-fn step graph the fused sweep drives (state' =
+/// 0.999·state + lr; loss = state') and wrap it in a [`ModelRt`]. The
+/// executable is a host function, so the sweep runs in the offline stub.
+fn fused_bench_mrt(rt: &Runtime) -> ModelRt<'_> {
+    let manifest = genie::runtime::Manifest::from_json_text(
+        r#"{
+            "model": "bench", "image": [2, 2, 1], "num_classes": 2,
+            "num_blocks": 1, "latent": 4,
+            "batch": {"train": 1},
+            "params": [], "bn": [], "qstate": [], "gen_params": [],
+            "quant_layers": [], "learnable": {"0": []},
+            "bounds": [], "entrypoints": {
+                "bench_step": {
+                    "file": "bench_step.hlo.txt",
+                    "args": [
+                        ["state", "f32", []],
+                        ["lr", "f32", []]
+                    ],
+                    "results": [
+                        ["state", "f32", []],
+                        ["loss", "f32", []]
+                    ]
+                }
+            }
+        }"#,
+    )
+    .unwrap();
+    let spec = manifest.entry("bench_step").unwrap().clone();
+    let exe = xla::PjRtLoadedExecutable::from_host_fn(2, |args| {
+        let state = args[0].to_vec::<f32>()?[0];
+        let lr = args[1].to_vec::<f32>()?[0];
+        let next = state * 0.999 + lr;
+        Ok(vec![
+            xla::Literal::vec1(&[next]).reshape(&[])?,
+            xla::Literal::vec1(&[next]).reshape(&[])?,
+        ])
+    });
+    rt.register_entry(".", "bench_step", spec, exe);
+    ModelRt { rt, dir: std::path::PathBuf::from("."), manifest }
 }
 
 fn main() {
@@ -114,6 +196,53 @@ fn main() {
          ({roundtrip_bytes_per_step} -> {resident_bytes_per_step})"
     );
 
+    // ---- fused dispatch K-sweep (DESIGN.md §14) -----------------------
+    // Drive the same resident-path StepLoop at K = 1/2/4/8 steps per
+    // dispatch over a host-fn step graph. The per-step *dispatch count*
+    // is the contract (64/K, strictly decreasing); wall time per step is
+    // recorded alongside it so regressions in the staging/validation
+    // overhead of the fused path show up in the artifact.
+    const SWEEP_STEPS: usize = 64;
+    let mrt = fused_bench_mrt(&rt);
+    let mut sweep: Vec<(usize, f64, f64)> = Vec::new(); // (K, disp/step, s/step)
+    for k in [1usize, 2, 4, 8] {
+        let loop_k = StepLoop::new(SWEEP_STEPS, 0).with_steps_per_dispatch(k);
+        // one untimed run to pin the dispatch count and final state
+        let mut dev = rt.device_store();
+        let mut phase = FusedBenchPhase;
+        let out = loop_k.run(&mrt, &mut phase, &mut dev).unwrap();
+        assert!(out.completed && out.ran_steps == SWEEP_STEPS);
+        assert_eq!(out.dispatches, SWEEP_STEPS.div_ceil(k));
+        let secs = bench_secs(2, 20, || {
+            let mut dev = rt.device_store();
+            let mut phase = FusedBenchPhase;
+            std::hint::black_box(
+                loop_k.run(&mrt, &mut phase, &mut dev).unwrap(),
+            );
+        }) / SWEEP_STEPS as f64;
+        report(&format!("runtime/fused_step_k{k}"), secs);
+        sweep.push((k, out.dispatches as f64 / SWEEP_STEPS as f64, secs));
+    }
+    for w in sweep.windows(2) {
+        assert!(
+            w[1].1 < w[0].1,
+            "per-step dispatch count must strictly decrease with K \
+             (K={} -> {:.3}/step, K={} -> {:.3}/step)",
+            w[0].0, w[0].1, w[1].0, w[1].1,
+        );
+    }
+    let fused_json: String = sweep
+        .iter()
+        .map(|(k, dps, sps)| {
+            format!(
+                "    {{\"steps_per_dispatch\": {k}, \
+                 \"dispatches_per_step\": {dps:.4}, \
+                 \"secs_per_step\": {sps:.3e}}}"
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+
     // The *_marshal_steps_per_sec fields are host-side marshalling
     // throughput only (graph execution needs artifacts + real PJRT and
     // is benched in the artifact-gated section below) — named so the
@@ -123,7 +252,8 @@ fn main() {
          \"resident_bytes_per_step\": {resident_bytes_per_step},\n  \
          \"roundtrip_marshal_steps_per_sec\": {:.1},\n  \
          \"resident_marshal_steps_per_sec\": {:.1},\n  \
-         \"transfer_reduction\": {reduction:.1}\n}}\n",
+         \"transfer_reduction\": {reduction:.1},\n  \
+         \"fused_dispatch_sweep\": [\n{fused_json}\n  ]\n}}\n",
         1.0 / roundtrip_secs.max(1e-12),
         1.0 / resident_secs.max(1e-12),
     );

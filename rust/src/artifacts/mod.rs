@@ -9,8 +9,9 @@
 //! stage's artifact lands.
 //!
 //! Keys deliberately exclude `workers` (parallel phases are bit-identical
-//! for any worker count, DESIGN.md §5) and include `seed` (a different
-//! seed is a different artifact). Hashing is FNV-1a 64 over a canonical
+//! for any worker count, DESIGN.md §5) and `steps_per_dispatch` (fused
+//! dispatch is identity-neutral the same way, DESIGN.md §14), and include
+//! `seed` (a different seed is a different artifact). Hashing is FNV-1a 64 over a canonical
 //! `name=value;` rendering plus raw tensor bytes — never std's SipHash,
 //! whose keys are process-random.
 //!
@@ -146,7 +147,8 @@ pub fn pretrain_key(m: &Manifest, cfg: &PretrainCfg) -> CacheKey {
 }
 
 /// The distill-config folds shared by the content and spec keys. `par`
-/// is excluded — shard fan-out never changes the images.
+/// and `steps_per_dispatch` are excluded — shard fan-out and dispatch
+/// fusion never change the images.
 fn distill_fields(b: KeyBuilder, cfg: &DistillCfg) -> KeyBuilder {
     b.field("engine", cfg.engine.as_str())
         .field("mode", cfg.mode.as_str())
@@ -225,6 +227,8 @@ pub fn plan_key(
 
 /// The quantizer-config folds shared by the content and spec keys
 /// (everything but the plan/precision identity and the upstreams).
+/// `par` and `steps_per_dispatch` are excluded — execution shape never
+/// changes the optimized qstate.
 fn quantize_fields(b: KeyBuilder, cfg: &QuantCfg) -> KeyBuilder {
     b.field("steps", cfg.steps_per_block)
         .field("lr_sw", cfg.lr_sw)
@@ -695,6 +699,10 @@ mod tests {
         let mut d3 = d.clone();
         d3.par = crate::exec::Parallelism::new(7);
         assert_eq!(distill_key(&m, &d3, th), k1);
+        // ... and neither does dispatch fusion (DESIGN.md §14)
+        let mut d4 = d.clone();
+        d4.steps_per_dispatch = 8;
+        assert_eq!(distill_key(&m, &d4, th), k1);
 
         // upstream content moves the key
         let mut teacher2 = Store::new();
@@ -786,6 +794,55 @@ mod tests {
             k1,
             quantize_key(&m, &q, th, &a, &crate::precision::PrecisionPlan::default())
         );
+    }
+
+    #[test]
+    fn steps_per_dispatch_never_moves_any_key() {
+        // the whole fused-dispatch contract at the cache layer: K is an
+        // execution-shape knob like `workers`, so every content and spec
+        // key is invariant in it — a run at K=8 hits artifacts a K=1 run
+        // stored, and vice versa
+        use crate::precision::{Granularity, LayerPlan, PrecisionPlan};
+        let m = toy_manifest();
+        let th = Store::new().content_hash();
+        let calib = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let plan = PrecisionPlan {
+            layers: vec![LayerPlan {
+                name: "stem".into(),
+                wbits: 4,
+                abits: 4,
+                granularity: Granularity::PerChannel,
+            }],
+        };
+
+        let p1 = PretrainCfg::default();
+        let mut p8 = p1.clone();
+        p8.steps_per_dispatch = 8;
+        assert_eq!(pretrain_key(&m, &p1), pretrain_key(&m, &p8));
+
+        let d1 = DistillCfg::default();
+        let mut d8 = d1.clone();
+        d8.steps_per_dispatch = 8;
+        assert_eq!(distill_key(&m, &d1, th), distill_key(&m, &d8, th));
+        let ts = pretrain_key(&m, &p1);
+        assert_eq!(
+            distill_spec_key(&m, &d1, ts),
+            distill_spec_key(&m, &d8, ts)
+        );
+
+        let q1 = QuantCfg::default();
+        let mut q8 = q1.clone();
+        q8.steps_per_dispatch = 8;
+        assert_eq!(
+            quantize_key(&m, &q1, th, &calib, &plan),
+            quantize_key(&m, &q8, th, &calib, &plan)
+        );
+        let ds = distill_spec_key(&m, &d1, ts);
+        assert_eq!(
+            quantize_spec_key(&m, &q1, ts, ds),
+            quantize_spec_key(&m, &q8, ts, ds)
+        );
+        assert_eq!(plan_key(&m, &q1, th, &calib), plan_key(&m, &q8, th, &calib));
     }
 
     #[test]

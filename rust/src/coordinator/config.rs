@@ -97,6 +97,16 @@ impl RunConfig {
                 self.distill.par = self.par;
                 self.quant.par = self.par;
             }
+            "steps_per_dispatch" | "exec.steps_per_dispatch" => {
+                let v = p!(usize);
+                anyhow::ensure!(
+                    v >= 1,
+                    "steps_per_dispatch must be >= 1 (1 = unfused)"
+                );
+                self.pretrain.steps_per_dispatch = v;
+                self.distill.steps_per_dispatch = v;
+                self.quant.steps_per_dispatch = v;
+            }
             "cache_dir" => self.cache_dir = value.to_string(),
             "cache" => self.cache = p!(bool),
             "resume" => self.resume = p!(bool),
@@ -239,6 +249,21 @@ mod tests {
         assert_eq!(c.quant.par.workers, 4);
         c.set("exec.workers", "0").unwrap();
         assert_eq!(c.quant.par.workers, 0); // auto
+    }
+
+    #[test]
+    fn steps_per_dispatch_fans_out() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.pretrain.steps_per_dispatch, 1, "default is unfused");
+        c.set("steps_per_dispatch", "8").unwrap();
+        assert_eq!(c.pretrain.steps_per_dispatch, 8);
+        assert_eq!(c.distill.steps_per_dispatch, 8);
+        assert_eq!(c.quant.steps_per_dispatch, 8);
+        // dotted alias, same fields
+        c.set("exec.steps_per_dispatch", "4").unwrap();
+        assert_eq!(c.distill.steps_per_dispatch, 4);
+        // an execution-shape knob never disables itself to 0
+        assert!(c.set("steps_per_dispatch", "0").is_err());
     }
 
     #[test]

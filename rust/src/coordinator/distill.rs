@@ -82,6 +82,10 @@ pub struct DistillCfg {
     pub seed: u64,
     /// worker pool for the shard fan-out (`workers=K`; 0 = auto)
     pub par: Parallelism,
+    /// fused steps per device dispatch (`steps_per_dispatch=K`; 1 = off).
+    /// Execution-shape knob like `par`: identity-neutral, never folded
+    /// into content keys (DESIGN.md §14).
+    pub steps_per_dispatch: usize,
 }
 
 impl Default for DistillCfg {
@@ -97,6 +101,7 @@ impl Default for DistillCfg {
             log_every: 50,
             seed: 23,
             par: Parallelism::default(),
+            steps_per_dispatch: 1,
         }
     }
 }
@@ -120,6 +125,8 @@ struct ShardResult {
     transfer: (u64, u64),
     ckpt_writes: usize,
     ckpt_bytes: u64,
+    /// (device dispatches, steps executed) — diverge under fused dispatch
+    dispatch: (u64, u64),
 }
 
 /// One distill shard through the engine: load a `done` result when
@@ -145,13 +152,15 @@ fn distill_shard(
                 transfer: (0, 0),
                 ckpt_writes: 0,
                 ckpt_bytes: 0,
+                dispatch: (0, 0),
             });
         }
     }
     // shard-local view: teacher buffers shared, own learnables on top
     let mut dev = teacher_dev.clone();
     let steploop = StepLoop::new(cfg.steps, cfg.log_every.max(1))
-        .with_checkpoint(ck.map(|c| c.shard(&shard_name)));
+        .with_checkpoint(ck.map(|c| c.shard(&shard_name)))
+        .with_steps_per_dispatch(cfg.steps_per_dispatch);
     let rng = Pcg32::new_stream(cfg.seed, b as u64);
     let mut phase = cfg.engine.policy().shard(mrt, cfg, tag, rng);
     let out = steploop.run(mrt, phase.as_mut(), &mut dev)?;
@@ -175,6 +184,7 @@ fn distill_shard(
         transfer: dev.transfer_bytes(),
         ckpt_writes: out.checkpoints_written,
         ckpt_bytes: out.checkpoint_bytes,
+        dispatch: (out.dispatches as u64, out.ran_steps as u64),
     })
 }
 
@@ -224,6 +234,7 @@ pub fn distill_ck(
     let (mut h2d, mut d2h) = teacher_dev.transfer_bytes();
     let mut ckpt_writes = 0usize;
     let mut ckpt_bytes = 0u64;
+    let (mut dispatches, mut steps_run) = (0u64, 0u64);
     for (b, shard) in shards.into_iter().enumerate() {
         final_losses.push(shard.trace.last().map(|&(_, v)| v).unwrap());
         traces.push(shard.trace);
@@ -232,6 +243,8 @@ pub fn distill_ck(
         d2h += shard.transfer.1;
         ckpt_writes += shard.ckpt_writes;
         ckpt_bytes += shard.ckpt_bytes;
+        dispatches += shard.dispatch.0;
+        steps_run += shard.dispatch.1;
         if b == 0 || b == n_batches - 1 {
             crate::progress!(
                 "distill[{}/{mode_name}/{tag}] shard {}/{}: loss {:.3}",
@@ -243,6 +256,7 @@ pub fn distill_ck(
         }
     }
     metrics.record_transfers("distill", cfg.steps, h2d, d2h);
+    metrics.record_dispatches("distill", dispatches, steps_run);
     if ckpt_writes > 0 {
         metrics.record_checkpoint("distill", ckpt_writes, ckpt_bytes);
     }

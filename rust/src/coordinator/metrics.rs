@@ -123,6 +123,27 @@ impl Metrics {
         self.log(&format!("{phase}/transfer/d2h_bytes"), step, d2h as f32);
     }
 
+    /// Log a phase's dispatch accounting as two separate series:
+    /// `<phase>/dispatches` (device programs launched) and
+    /// `<phase>/steps` (optimization steps executed). Under fused
+    /// dispatch (DESIGN.md §14) one dispatch covers K steps, so the two
+    /// series diverge — throughput and progress always quote steps, and
+    /// the dispatch series is the launch-overhead denominator. Step =
+    /// the step count, mirroring [`record_transfers`](Self::record_transfers).
+    pub fn record_dispatches(
+        &mut self,
+        phase: &str,
+        dispatches: u64,
+        steps: u64,
+    ) {
+        self.log(
+            &format!("{phase}/dispatches"),
+            steps as usize,
+            dispatches as f32,
+        );
+        self.log(&format!("{phase}/steps"), steps as usize, steps as f32);
+    }
+
     /// Record an artifact-cache lookup for a stage: bumps the
     /// `cache/<stage>/{hit|miss}` series (step = running count of that
     /// outcome) — the DAG-lookup counterpart of the dispatch stats.
@@ -254,6 +275,16 @@ mod tests {
             m.series("distill/transfer/h2d_bytes").unwrap()[0].0,
             200
         );
+    }
+
+    #[test]
+    fn record_dispatches_keeps_steps_and_dispatches_apart() {
+        let mut m = Metrics::new();
+        // 48 steps fused into 6 dispatches (K=8)
+        m.record_dispatches("distill", 6, 48);
+        assert_eq!(m.last("distill/dispatches"), Some(6.0));
+        assert_eq!(m.last("distill/steps"), Some(48.0));
+        assert_eq!(m.series("distill/dispatches").unwrap()[0].0, 48);
     }
 
     #[test]

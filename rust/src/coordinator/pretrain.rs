@@ -29,11 +29,21 @@ pub struct PretrainCfg {
     pub lr: f32,
     pub log_every: usize,
     pub seed: u64,
+    /// fused steps per device dispatch (`steps_per_dispatch=K`; 1 = off).
+    /// Execution-shape knob: identity-neutral, never folded into content
+    /// keys (DESIGN.md §14).
+    pub steps_per_dispatch: usize,
 }
 
 impl Default for PretrainCfg {
     fn default() -> Self {
-        PretrainCfg { steps: 600, lr: 4e-3, log_every: 50, seed: 17 }
+        PretrainCfg {
+            steps: 600,
+            lr: 4e-3,
+            log_every: 50,
+            seed: 17,
+            steps_per_dispatch: 1,
+        }
     }
 }
 
@@ -70,6 +80,13 @@ impl Phase for PretrainPhase<'_, '_> {
         dev.insert("t", &Tensor::scalar_f32(t as f32))?;
         dev.insert("lr", &Tensor::scalar_f32(self.sched.lr(t - 1)))?;
         Ok(())
+    }
+
+    /// Eligible for fused dispatch: `before_step` draws batches from the
+    /// snapshotted RNG and a deterministic schedule of `t`, feeds are
+    /// host uploads only, and there is no `after_step` device work.
+    fn fusible(&self) -> bool {
+        true
     }
 
     fn carried(&self) -> Vec<String> {
@@ -137,6 +154,7 @@ pub fn pretrain_ck(
     let mut dev = mrt.rt.device_store();
     let out = StepLoop::new(cfg.steps, cfg.log_every.max(1))
         .with_checkpoint(ck.map(|c| c.shard("pretrain")))
+        .with_steps_per_dispatch(cfg.steps_per_dispatch)
         .run(mrt, &mut phase, &mut dev)?;
     anyhow::ensure!(
         out.completed,
@@ -158,6 +176,11 @@ pub fn pretrain_ck(
     let teacher = out.result;
     let (h2d, d2h) = dev.transfer_bytes();
     metrics.record_transfers("pretrain", cfg.steps, h2d, d2h);
+    metrics.record_dispatches(
+        "pretrain",
+        out.dispatches as u64,
+        out.ran_steps as u64,
+    );
     let secs = metrics.stop("pretrain");
     crate::progress!(
         "pretrain[{}]: {} steps in {:.1}s  loss={:.3} acc={:.3}",

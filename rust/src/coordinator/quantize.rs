@@ -72,6 +72,11 @@ pub struct QuantCfg {
     pub seed: u64,
     /// worker pool for bounds collection + block waves (`workers=K`)
     pub par: Parallelism,
+    /// fused steps per device dispatch in the block reconstruction loop
+    /// (`steps_per_dispatch=K`; 1 = off). Execution-shape knob like
+    /// `par`: identity-neutral, never folded into content keys
+    /// (DESIGN.md §14).
+    pub steps_per_dispatch: usize,
     /// precision-plan policy (DESIGN.md §10): uniform / FirstLast8 pin /
     /// Pareto mixed precision under `target_size`
     pub precision: PrecisionCfg,
@@ -95,6 +100,7 @@ impl Default for QuantCfg {
             log_every: 50,
             seed: 31,
             par: Parallelism::default(),
+            steps_per_dispatch: 1,
             precision: PrecisionCfg::default(),
         }
     }
@@ -295,6 +301,14 @@ impl Phase for BlockPhase<'_, '_> {
         Ok(())
     }
 
+    /// Eligible for fused dispatch: `before_step` draws only from the
+    /// snapshotted block RNG, its aliases pin resident `x_in.{i}` /
+    /// `y_ref.{i}` buffers staged in `init`, and there is no
+    /// `after_step` device work.
+    fn fusible(&self) -> bool {
+        true
+    }
+
     fn carried(&self) -> Vec<String> {
         // the full quant state (this block's learnables evolve on device,
         // the rest sits as absorbed), the Adam moments, and the staged
@@ -346,6 +360,8 @@ struct BlockResult {
     transfer: (u64, u64),
     ckpt_writes: usize,
     ckpt_bytes: u64,
+    /// (device dispatches, steps executed) — diverge under fused dispatch
+    dispatch: (u64, u64),
 }
 
 /// Optimize one block's quant state against the teacher boundaries,
@@ -385,6 +401,7 @@ fn reconstruct_block(
                 transfer: (0, 0),
                 ckpt_writes: 0,
                 ckpt_bytes: 0,
+                dispatch: (0, 0),
             });
         }
     }
@@ -410,6 +427,7 @@ fn reconstruct_block(
     };
     let out = StepLoop::new(cfg.steps_per_block, cfg.log_every.max(1))
         .with_checkpoint(ck.map(|c| c.shard(&block_name)))
+        .with_steps_per_dispatch(cfg.steps_per_dispatch)
         .run(mrt, &mut phase, &mut dev)?;
     anyhow::ensure!(
         out.completed,
@@ -440,6 +458,7 @@ fn reconstruct_block(
         transfer: dev.transfer_bytes(),
         ckpt_writes: out.checkpoints_written,
         ckpt_bytes: out.checkpoint_bytes,
+        dispatch: (out.dispatches as u64, out.ran_steps as u64),
     })
 }
 
@@ -615,6 +634,7 @@ pub fn quantize_planned(
     let mut blocks_pool = crate::exec::PoolReport::default();
     let mut ckpt_writes = 0usize;
     let mut ckpt_bytes = 0u64;
+    let (mut dispatches, mut steps_run) = (0u64, 0u64);
     for wave in waves(&deps) {
         let qsnap = &qstate_now;
         let jobs: Vec<_> = wave
@@ -642,6 +662,8 @@ pub fn quantize_planned(
             d2h_total += out.transfer.1;
             ckpt_writes += out.ckpt_writes;
             ckpt_bytes += out.ckpt_bytes;
+            dispatches += out.dispatch.0;
+            steps_run += out.dispatch.1;
             crate::progress!(
                 "quantize[{} {label}] block {}/{}: rec {:.5}",
                 m.model, out.block + 1, nb, out.last_rec
@@ -655,6 +677,7 @@ pub fn quantize_planned(
         h2d_total,
         d2h_total,
     );
+    metrics.record_dispatches("quantize", dispatches, steps_run);
     if ckpt_writes > 0 {
         metrics.record_checkpoint("quantize", ckpt_writes, ckpt_bytes);
     }

@@ -70,6 +70,10 @@ fn main() -> Result<()> {
                 let v = next(&mut it, "--synthesis")?;
                 cfg.set("synthesis", &v)?;
             }
+            "--steps-per-dispatch" => {
+                let v = next(&mut it, "--steps-per-dispatch")?;
+                cfg.set("steps_per_dispatch", &v)?;
+            }
             "--axis" => axes.push(next(&mut it, "--axis")?),
             "--dry-run" => dry_run = true,
             "--json" => {
@@ -122,10 +126,11 @@ fn usage() {
          usage: genie <info|pretrain|eval|distill|zsq|run|fsq|grid|experiments>\n\
                 [--model M] [--artifacts DIR] [--exp ID]\n\
                 [--precision uniform|pareto] [--target-size F]\n\
-                [--synthesis genie|zeroq|zaq]\n\
+                [--synthesis genie|zeroq|zaq] [--steps-per-dispatch K]\n\
                 [--axis name=v1,v2 ...] [--dry-run] [--json PATH]\n\
                 [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
-         keys: wbits abits seed workers checkpoint_every json\n\
+         keys: wbits abits seed workers steps_per_dispatch\n\
+               checkpoint_every json\n\
                precision target_size first_last_bits granularity\n\
                sens_batches candidates synthesis retry.{{max,backoff_ms}}\n\
                pretrain.{{steps,lr}}\n\
@@ -133,6 +138,10 @@ fn usage() {
                quant.{{steps,lr_sw,lr_v,lr_sa,lam,drop_p,pnorm,refresh_student}}\n\
          workers=K runs distill shards, quant blocks and eval batches on\n\
          K pool workers (0 = auto); results are bit-identical for any K.\n\
+         steps_per_dispatch=K fuses K consecutive optimization steps into\n\
+         one device dispatch (DESIGN.md §14); like workers it changes\n\
+         execution shape only — results, checkpoints and cache keys are\n\
+         bit-identical for any K.\n\
          --precision pareto measures per-layer sensitivity on the\n\
          calibration set and allocates mixed weight bits to meet\n\
          --target-size (fraction of the FP32 weight payload, e.g. 0.25);\n\

@@ -18,12 +18,23 @@
 //! checkpoint replays the exact remaining schedule — same RNG draws,
 //! same scalars, same final tensors — as an uninterrupted run
 //! (`tests/integration.rs` pins this over real artifacts).
+//!
+//! Fused dispatch (DESIGN.md §14): with `steps_per_dispatch` K > 1 and a
+//! phase that opts in via [`Phase::fusible`], the engine speculatively
+//! stages K steps' feeds against the live host state, executes them as
+//! ONE `call_device_fused` dispatch (per-step scalars downloaded as one
+//! K-vector), then validates the speculation by replaying the host side
+//! from a snapshot with the real scalars in hand — committing exactly
+//! the prefix of steps whose feeds were right. Because a step's feeds
+//! can only diverge after a scalar-driven host transition (a plateau LR
+//! drop), the prefix is never empty and the result is bit-identical to
+//! K=1 for any K: same RNG draws, same trace, same final tensors.
 
 pub mod checkpoint;
 
 use anyhow::Result;
 
-use crate::runtime::{DeviceStore, ModelRt, Scalars};
+use crate::runtime::{DeviceStore, LoadedEntry, ModelRt, Scalars};
 use crate::store::Store;
 
 pub use checkpoint::{CheckpointCfg, StageCkpt};
@@ -73,6 +84,18 @@ pub trait Phase {
         Ok(())
     }
 
+    /// May the engine drive this phase through the fused K-step dispatch
+    /// path? Opting in asserts the full determinism contract the fused
+    /// speculation leans on: `before_step` is a pure function of host
+    /// state that `snapshot`/`restore` captures *completely* (so it can
+    /// be replayed), it only writes `insert`/`alias` feeds (no fetches),
+    /// and `after_step` reads nothing but the step's scalars (no
+    /// per-step device work, which a megastep could not interleave).
+    /// Default false: single-step dispatch, exactly as before.
+    fn fusible(&self) -> bool {
+        false
+    }
+
     /// Phase boundary: materialize the phase's product on the host.
     fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store>;
 }
@@ -93,6 +116,9 @@ pub struct LoopOutcome {
     pub resumed_from: usize,
     /// Steps actually executed in this invocation.
     pub ran_steps: usize,
+    /// Device dispatches issued for those steps: equal to `ran_steps`
+    /// on the single-step path, one per megastep on the fused path.
+    pub dispatches: usize,
     pub checkpoints_written: usize,
     /// Total bytes of checkpoint files written.
     pub checkpoint_bytes: u64,
@@ -106,17 +132,32 @@ pub struct StepLoop {
     /// Scalar-trace cadence (0 = no trace). The final step always logs.
     pub log_every: usize,
     pub checkpoint: Option<CheckpointCfg>,
+    /// K: device steps fused into one dispatch when the phase is
+    /// [`fusible`](Phase::fusible) (≤ 1 = classic single-step dispatch).
+    /// Identity-neutral by construction — never part of content keys.
+    pub steps_per_dispatch: usize,
 }
 
 impl StepLoop {
     pub fn new(steps: usize, log_every: usize) -> Self {
-        StepLoop { steps, log_every, checkpoint: None }
+        StepLoop {
+            steps,
+            log_every,
+            checkpoint: None,
+            steps_per_dispatch: 1,
+        }
     }
 
     /// Attach (or not) a checkpoint policy — `None` threads through so
     /// call sites can forward an optional stage config unconditionally.
     pub fn with_checkpoint(mut self, ck: Option<CheckpointCfg>) -> Self {
         self.checkpoint = ck;
+        self
+    }
+
+    /// Set K, the megastep width (values ≤ 1 mean single-step dispatch).
+    pub fn with_steps_per_dispatch(mut self, k: usize) -> Self {
+        self.steps_per_dispatch = k.max(1);
         self
     }
 
@@ -161,7 +202,9 @@ impl StepLoop {
         // entry resolution is lazy so a loop that executes no steps
         // (resumed-at-end, zero budget) never needs a compiled graph
         let mut entry = None;
+        let fused = self.steps_per_dispatch > 1 && phase.fusible();
         let mut executed = 0usize;
+        let mut dispatches = 0usize;
         let mut written = 0usize;
         let mut ck_bytes = 0u64;
         let mut t = start;
@@ -183,6 +226,7 @@ impl StepLoop {
                         completed: false,
                         resumed_from: start,
                         ran_steps: executed,
+                        dispatches,
                         checkpoints_written: written,
                         checkpoint_bytes: ck_bytes,
                     });
@@ -191,10 +235,55 @@ impl StepLoop {
             if entry.is_none() {
                 entry = Some(mrt.entry(&phase.entry())?);
             }
+            if fused {
+                // clamp the megastep to the remaining steps AND the
+                // remaining budget, so graceful preemption lands on
+                // exactly the same step count as a K=1 run would
+                let mut k = self.steps_per_dispatch.min(self.steps - t);
+                if let Some(b) =
+                    self.checkpoint.as_ref().and_then(|ck| ck.budget)
+                {
+                    k = k.min(b - executed);
+                }
+                let committed = self.run_megastep(
+                    mrt,
+                    phase,
+                    dev,
+                    entry.as_ref().unwrap(),
+                    t,
+                    k,
+                    &mut trace,
+                )?;
+                dispatches += 1;
+                let t_old = t;
+                t += committed;
+                executed += committed;
+                if let Some(ck) = &self.checkpoint {
+                    // edge-aligned periodic checkpoints: write when the
+                    // megastep crossed a multiple of `every` (at K=1
+                    // this degenerates to the `t % every == 0` rule)
+                    if ck.every > 0
+                        && t / ck.every > t_old / ck.every
+                        && t < self.steps
+                    {
+                        ck_bytes += checkpoint::write(
+                            &ck.path,
+                            t,
+                            &phase.carried(),
+                            &phase.snapshot(),
+                            &trace,
+                            dev,
+                        )?;
+                        written += 1;
+                    }
+                }
+                continue;
+            }
             t += 1;
             phase.before_step(t, dev)?;
             let scalars =
                 mrt.rt.call_device(entry.as_ref().unwrap(), dev)?;
+            dispatches += 1;
             phase.after_step(t, &scalars, dev)?;
             if self.log_every > 0
                 && (t % self.log_every == 0 || t == self.steps)
@@ -227,9 +316,112 @@ impl StepLoop {
             completed: true,
             resumed_from: start,
             ran_steps: executed,
+            dispatches,
             checkpoints_written: written,
             checkpoint_bytes: ck_bytes,
         })
+    }
+
+    /// One megastep: speculatively stage up to `k` steps from global
+    /// step `t`, execute them as one fused dispatch, validate the
+    /// speculation by host replay, and commit the correct prefix.
+    /// Returns how many steps committed (≥ 1).
+    ///
+    /// The only way staged feeds can be wrong is a scalar-driven host
+    /// transition mid-megastep (e.g. a plateau scheduler dropping the LR
+    /// after observing a fused step's loss): staging ran `before_step`
+    /// with those observations still pending. The replay runs the exact
+    /// K=1 host sequence — `before_step` (recorded, compared), then
+    /// `after_step` with the real scalars — so the first step whose
+    /// recorded feeds diverge bounds the prefix whose device results
+    /// are exact. Step 0's feeds derive from the same host state the
+    /// staging pass started from, so the prefix is never empty.
+    #[allow(clippy::too_many_arguments)]
+    fn run_megastep<P: Phase + ?Sized>(
+        &self,
+        mrt: &ModelRt,
+        phase: &mut P,
+        dev: &mut DeviceStore,
+        entry: &LoadedEntry,
+        t: usize,
+        k: usize,
+        trace: &mut Vec<(usize, Scalars)>,
+    ) -> Result<usize> {
+        let host0 = phase.snapshot();
+        // speculative staging pass: record all k steps' feeds (no
+        // uploads, no store mutation)
+        dev.begin_staging();
+        let mut stage_err = None;
+        for i in 0..k {
+            if i > 0 {
+                dev.next_staged_step();
+            }
+            if let Err(e) = phase.before_step(t + i + 1, dev) {
+                stage_err = Some(e);
+                break;
+            }
+        }
+        let staged = dev.end_staging();
+        if let Some(e) = stage_err {
+            return Err(e);
+        }
+        // one device dispatch for all k steps; the store is untouched
+        // until commit, so a shorter prefix needs no rollback
+        let (scalars, results) =
+            mrt.rt.call_device_fused(entry, dev, &staged)?;
+        // validation replay from the megastep-entry snapshot, feeding
+        // the real scalars through after_step as K=1 would have
+        phase.restore(&host0)?;
+        let mut commit = k;
+        for (i, step_scalars) in scalars.iter().enumerate() {
+            dev.begin_staging();
+            let r = phase.before_step(t + i + 1, dev);
+            let replayed = dev.end_staging();
+            r?;
+            if !staged.step_matches(i, replayed.step(0)) {
+                commit = i;
+                break;
+            }
+            phase.after_step(t + i + 1, step_scalars, dev)?;
+        }
+        anyhow::ensure!(
+            commit >= 1,
+            "{}: fused step {} diverged on replay — the phase's \
+             snapshot/restore does not capture its host state fully, so \
+             it must not claim fusible()",
+            phase.name(),
+            t + 1
+        );
+        if commit < k {
+            // the divergence-detecting replay already ran the
+            // mismatching before_step, advancing RNG streams past the
+            // prefix; rewind and replay exactly the committed steps
+            // (feeds muted through a throwaway staging recorder)
+            phase.restore(&host0)?;
+            for (i, step_scalars) in scalars.iter().take(commit).enumerate()
+            {
+                dev.begin_staging();
+                let r = phase.before_step(t + i + 1, dev);
+                dev.end_staging();
+                r?;
+                phase.after_step(t + i + 1, step_scalars, dev)?;
+            }
+        }
+        // the prefix's device results are exact: wire step commit-1 in
+        mrt.rt.commit_fused(entry, dev, results, commit)?;
+        // trace with true global step labels — correct for any K vs
+        // log_every relation, and the final step always logs
+        if self.log_every > 0 {
+            for (i, step_scalars) in
+                scalars.iter().take(commit).enumerate()
+            {
+                let g = t + i + 1;
+                if g % self.log_every == 0 || g == self.steps {
+                    trace.push((g, step_scalars.clone()));
+                }
+            }
+        }
+        Ok(commit)
     }
 }
 
@@ -402,5 +594,284 @@ mod tests {
         )
         .unwrap();
         ModelRt { rt, dir: std::path::PathBuf::from("."), manifest }
+    }
+
+    /// A ModelRt whose manifest declares the `fused_step` entrypoint,
+    /// with a matching host-fn executable pre-registered in the compile
+    /// cache: state' = state - lr, loss = state'. The `noise` arg is a
+    /// per-step host feed the program ignores — it models an RNG-derived
+    /// feed whose stream must survive the fused replay protocol.
+    fn fused_mrt(rt: &Runtime) -> ModelRt<'_> {
+        let manifest = crate::runtime::Manifest::from_json_text(
+            r#"{
+                "model": "probe", "image": [2, 2, 1], "num_classes": 2,
+                "num_blocks": 1, "latent": 4,
+                "batch": {"train": 1},
+                "params": [], "bn": [], "qstate": [], "gen_params": [],
+                "quant_layers": [], "learnable": {"0": []},
+                "bounds": [], "entrypoints": {
+                    "fused_step": {
+                        "file": "fused_step_test.hlo.txt",
+                        "args": [
+                            ["state", "f32", []],
+                            ["lr", "f32", []],
+                            ["noise", "f32", []]
+                        ],
+                        "results": [
+                            ["state", "f32", []],
+                            ["loss", "f32", []]
+                        ]
+                    }
+                }
+            }"#,
+        )
+        .unwrap();
+        let spec = manifest.entry("fused_step").unwrap().clone();
+        let exe = xla::PjRtLoadedExecutable::from_host_fn(2, |args| {
+            let state = args[0].to_vec::<f32>()?[0];
+            let lr = args[1].to_vec::<f32>()?[0];
+            let next = state - lr;
+            Ok(vec![
+                xla::Literal::vec1(&[next]).reshape(&[])?,
+                xla::Literal::vec1(&[next]).reshape(&[])?,
+            ])
+        });
+        rt.register_entry(".", "fused_step", spec, exe);
+        ModelRt { rt, dir: std::path::PathBuf::from("."), manifest }
+    }
+
+    /// A fusible phase with plateau-style scalar feedback: LR drops to
+    /// 0.25 the first time the loss falls below 6.5 — which, under a
+    /// wide megastep, happens *mid-dispatch* and forces the speculation
+    /// to commit a short prefix. `draws` models an RNG stream (advanced
+    /// by every before_step, emitted as the `noise` feed), so any replay
+    /// over- or under-run shows up as a diverged feed or final state.
+    struct PlateauProbe {
+        lr: f32,
+        draws: u32,
+    }
+
+    impl PlateauProbe {
+        fn new() -> Self {
+            PlateauProbe { lr: 1.0, draws: 0 }
+        }
+    }
+
+    impl Phase for PlateauProbe {
+        fn name(&self) -> String {
+            "plateau_probe".into()
+        }
+
+        fn entry(&self) -> String {
+            "fused_step".into()
+        }
+
+        fn init(&mut self, dev: &mut DeviceStore) -> Result<()> {
+            dev.insert("state", &Tensor::scalar_f32(10.0))
+        }
+
+        fn before_step(
+            &mut self,
+            _t: usize,
+            dev: &mut DeviceStore,
+        ) -> Result<()> {
+            self.draws += 1;
+            dev.insert("lr", &Tensor::scalar_f32(self.lr))?;
+            dev.insert("noise", &Tensor::scalar_f32(self.draws as f32))
+        }
+
+        fn after_step(
+            &mut self,
+            _t: usize,
+            scalars: &Scalars,
+            _dev: &mut DeviceStore,
+        ) -> Result<()> {
+            if scalars["loss"] < 6.5 && self.lr > 0.25 {
+                self.lr = 0.25;
+            }
+            Ok(())
+        }
+
+        fn carried(&self) -> Vec<String> {
+            vec!["state".into()]
+        }
+
+        fn snapshot(&self) -> Store {
+            let mut s = Store::new();
+            s.insert("lr", Tensor::scalar_f32(self.lr));
+            s.insert("draws", Tensor::from_u32(&[1], vec![self.draws]));
+            s
+        }
+
+        fn restore(&mut self, snap: &Store) -> Result<()> {
+            self.lr = snap.get("lr")?.scalar();
+            self.draws = snap.get("draws")?.as_u32()[0];
+            Ok(())
+        }
+
+        fn fusible(&self) -> bool {
+            true
+        }
+
+        fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
+            let mut out = Store::new();
+            out.insert("state", dev.fetch("state")?);
+            out.insert("lr", Tensor::scalar_f32(self.lr));
+            out.insert("draws", Tensor::from_u32(&[1], vec![self.draws]));
+            Ok(out)
+        }
+    }
+
+    fn run_plateau(
+        rt: &Runtime,
+        k: usize,
+        ck: Option<CheckpointCfg>,
+    ) -> LoopOutcome {
+        let mrt = fused_mrt(rt);
+        let mut dev = rt.device_store();
+        let mut phase = PlateauProbe::new();
+        StepLoop::new(10, 3)
+            .with_checkpoint(ck)
+            .with_steps_per_dispatch(k)
+            .run(&mrt, &mut phase, &mut dev)
+            .unwrap()
+    }
+
+    fn assert_same_outcome(a: &LoopOutcome, b: &LoopOutcome) {
+        assert_eq!(
+            a.result.get("state").unwrap(),
+            b.result.get("state").unwrap(),
+            "final device state diverged"
+        );
+        assert_eq!(
+            a.result.get("lr").unwrap(),
+            b.result.get("lr").unwrap(),
+            "final host LR diverged"
+        );
+        assert_eq!(
+            a.result.get("draws").unwrap(),
+            b.result.get("draws").unwrap(),
+            "RNG stream position diverged"
+        );
+        let labels = |o: &LoopOutcome| -> Vec<usize> {
+            o.trace.iter().map(|(t, _)| *t).collect()
+        };
+        assert_eq!(labels(a), labels(b), "trace labels diverged");
+        for ((ta, sa), (tb, sb)) in a.trace.iter().zip(b.trace.iter()) {
+            assert_eq!(ta, tb);
+            assert_eq!(sa["loss"], sb["loss"], "trace at step {ta} diverged");
+        }
+    }
+
+    #[test]
+    fn fused_loop_bit_identical_to_single_step_through_plateau_drop() {
+        let rt = Runtime::cpu().unwrap();
+        let k1 = run_plateau(&rt, 1, None);
+        for k in [2, 4, 8, 16] {
+            let kk = run_plateau(&rt, k, None);
+            assert!(kk.completed);
+            assert_same_outcome(&k1, &kk);
+            assert!(
+                kk.dispatches < k1.dispatches || k == 1,
+                "K={k} used {} dispatches, K=1 used {}",
+                kk.dispatches,
+                k1.dispatches
+            );
+        }
+        // K=1: one dispatch per step; the plateau drop (step 4) splits
+        // the first K=8 megastep into 4+6 → exactly 2 dispatches
+        assert_eq!(k1.dispatches, 10);
+        assert_eq!(run_plateau(&rt, 8, None).dispatches, 2);
+    }
+
+    #[test]
+    fn fused_trace_labels_match_k1_when_log_every_divides_neither() {
+        // steps=10, log_every=3, K=8: megasteps commit 4 then 6, so the
+        // logged steps 3, 6, 9 and the forced final 10 all land inside
+        // megasteps, never on their edges
+        let rt = Runtime::cpu().unwrap();
+        let k8 = run_plateau(&rt, 8, None);
+        let labels: Vec<usize> = k8.trace.iter().map(|(t, _)| *t).collect();
+        assert_eq!(labels, vec![3, 6, 9, 10]);
+        assert_same_outcome(&run_plateau(&rt, 1, None), &k8);
+    }
+
+    #[test]
+    fn fused_budget_preempts_at_the_same_step_as_single_dispatch() {
+        let rt = Runtime::cpu().unwrap();
+        let dir = std::env::temp_dir().join("genie_fused_budget_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = |name: &str, budget: Option<usize>| CheckpointCfg {
+            path: dir.join(name),
+            every: 0,
+            resume: true,
+            budget,
+        };
+
+        // budget 3 is *inside* what the first K=8 megastep would cover:
+        // the clamp must stop the fused run at exactly step 3
+        let a = run_plateau(&rt, 8, Some(ck("fused.ckpt", Some(3))));
+        assert!(!a.completed);
+        assert_eq!(a.ran_steps, 3);
+        let b = run_plateau(&rt, 1, Some(ck("single.ckpt", Some(3))));
+        assert_eq!(b.ran_steps, 3);
+
+        // cross-K resume: the fused checkpoint resumed at K=1, and the
+        // single-step checkpoint resumed at K=8, both land bit-identical
+        // to an uninterrupted K=1 run
+        let reference = run_plateau(&rt, 1, None);
+        let resumed_single =
+            run_plateau(&rt, 1, Some(ck("fused.ckpt", None)));
+        let resumed_fused =
+            run_plateau(&rt, 8, Some(ck("single.ckpt", None)));
+        assert!(resumed_single.completed && resumed_fused.completed);
+        assert_eq!(resumed_single.resumed_from, 3);
+        assert_eq!(resumed_fused.resumed_from, 3);
+        assert_same_outcome(&reference, &resumed_single);
+        assert_same_outcome(&reference, &resumed_fused);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fused_periodic_checkpoints_land_on_megastep_edges() {
+        let rt = Runtime::cpu().unwrap();
+        let dir = std::env::temp_dir().join("genie_fused_edge_test");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = CheckpointCfg {
+            path: dir.join("edge.ckpt"),
+            every: 4,
+            resume: true,
+            budget: None,
+        };
+        // megasteps commit 4 then 6: t crosses 4 at an edge (write),
+        // crosses 8 mid-flight and only surfaces at t=10 == steps (no
+        // write) — K=1 would write at 4 and 8
+        let out = run_plateau(&rt, 8, Some(ck.clone()));
+        assert!(out.completed);
+        assert_eq!(out.checkpoints_written, 1);
+        // completion removed the in-progress checkpoint
+        assert!(!ck.path.exists());
+        assert_same_outcome(&run_plateau(&rt, 1, None), &out);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_fusible_phases_ignore_steps_per_dispatch() {
+        // Probe::fusible() is default-false and its before_step bails:
+        // a K=8 loop over it must take the single-step path and so
+        // never reach before_step when steps == 0
+        let rt = Runtime::cpu().unwrap();
+        let mrt = fake_mrt(&rt);
+        let mut dev = rt.device_store();
+        let mut phase = Probe::new();
+        let out = StepLoop::new(0, 10)
+            .with_steps_per_dispatch(8)
+            .run(&mrt, &mut phase, &mut dev)
+            .unwrap();
+        assert!(out.completed);
+        assert_eq!(out.dispatches, 0);
+        assert!(!phase.restored);
     }
 }

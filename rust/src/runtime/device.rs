@@ -66,15 +66,103 @@ impl DeviceTensor {
     }
 }
 
+/// A feed recorded — not executed — while the store is in staging mode
+/// (the speculative pass of a fused megastep, DESIGN.md §14).
+#[derive(Debug, Clone)]
+pub enum StagedFeed {
+    /// What `insert` would have uploaded: the host tensor itself. No
+    /// H2D happens at staging time; the fused dispatch batches all K
+    /// steps' host feeds into one stacked upload.
+    Host(Tensor),
+    /// What `alias` would have rebound: the resolved resident buffer.
+    Alias(DeviceTensor),
+}
+
+impl StagedFeed {
+    /// Value equality for the megastep validation replay: host feeds
+    /// compare by contents, alias feeds by buffer identity (the replay
+    /// runs against the same resident store, so a matching alias
+    /// resolves to the very same `Arc`).
+    pub fn matches(&self, other: &StagedFeed) -> bool {
+        match (self, other) {
+            (StagedFeed::Host(a), StagedFeed::Host(b)) => a == b,
+            (StagedFeed::Alias(a), StagedFeed::Alias(b)) => {
+                Arc::ptr_eq(&a.buf, &b.buf)
+            }
+            _ => false,
+        }
+    }
+}
+
+/// The recorded `before_step` feeds of one speculative megastep: for
+/// each of the K staged steps, the ordered `(name, feed)` writes that
+/// step produced.
+#[derive(Debug, Clone, Default)]
+pub struct StagedSteps {
+    steps: Vec<Vec<(String, StagedFeed)>>,
+}
+
+impl StagedSteps {
+    /// Number of staged steps.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// The raw `(name, feed)` writes of step `i`, in program order.
+    pub fn step(&self, i: usize) -> &[(String, StagedFeed)] {
+        &self.steps[i]
+    }
+
+    /// The effective feed for `name` in step `i` — the last write wins,
+    /// exactly as repeated `insert`s under one name do live.
+    pub fn feed_in_step(&self, i: usize, name: &str) -> Option<&StagedFeed> {
+        self.steps[i]
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, f)| f)
+    }
+
+    /// Does step `i` equal `other` (one replayed step) write-for-write?
+    /// Used by the fused loop to find the commit prefix: the first
+    /// staged step whose feeds diverge from the ground-truth replay.
+    pub fn step_matches(&self, i: usize, other: &[(String, StagedFeed)]) -> bool {
+        let a = &self.steps[i];
+        a.len() == other.len()
+            && a.iter().zip(other).all(|((an, af), (bn, bf))| {
+                an == bn && af.matches(bf)
+            })
+    }
+
+    fn record(&mut self, name: &str, feed: StagedFeed) {
+        self.steps
+            .last_mut()
+            .expect("StagedSteps::record before begin_staging")
+            .push((name.to_string(), feed));
+    }
+}
+
 /// Ordered named device buffers bound to one [`Runtime`]'s PJRT client.
 /// The argument/result hub of [`Runtime::call_device`], wired by manifest
 /// names exactly like the host store is for [`Runtime::call`].
+///
+/// In *staging mode* (between [`begin_staging`](Self::begin_staging) and
+/// [`end_staging`](Self::end_staging)) the mutating feed operations —
+/// `insert` and `alias` — record what they would have done instead of
+/// doing it: no uploads, no rebinds, no byte accounting. The resident
+/// map is untouched, which is what lets the fused step loop speculate K
+/// steps ahead and commit only a validated prefix.
 pub struct DeviceStore<'rt> {
     rt: &'rt Runtime,
     names: Vec<String>,
     map: HashMap<String, DeviceTensor>,
     bytes_h2d: u64,
     bytes_d2h: u64,
+    staging: Option<StagedSteps>,
 }
 
 impl<'rt> Clone for DeviceStore<'rt> {
@@ -88,6 +176,7 @@ impl<'rt> Clone for DeviceStore<'rt> {
             map: self.map.clone(),
             bytes_h2d: 0,
             bytes_d2h: 0,
+            staging: None,
         }
     }
 }
@@ -100,12 +189,45 @@ impl<'rt> DeviceStore<'rt> {
             map: HashMap::new(),
             bytes_h2d: 0,
             bytes_d2h: 0,
+            staging: None,
         }
     }
 
+    /// Enter staging mode and open staged step 0. `insert`/`alias` now
+    /// record instead of execute until [`end_staging`](Self::end_staging).
+    pub fn begin_staging(&mut self) {
+        assert!(self.staging.is_none(), "begin_staging while staging");
+        self.staging = Some(StagedSteps { steps: vec![Vec::new()] });
+    }
+
+    /// Close the current staged step and open the next one.
+    pub fn next_staged_step(&mut self) {
+        self.staging
+            .as_mut()
+            .expect("next_staged_step outside staging")
+            .steps
+            .push(Vec::new());
+    }
+
+    /// Leave staging mode, returning everything recorded. The resident
+    /// map and transfer counters are exactly as they were at
+    /// `begin_staging`.
+    pub fn end_staging(&mut self) -> StagedSteps {
+        self.staging.take().expect("end_staging outside staging")
+    }
+
+    pub fn is_staging(&self) -> bool {
+        self.staging.is_some()
+    }
+
     /// Upload a host tensor (H2D transfer, counted). Replaces any
-    /// previous buffer under this name in this store only.
+    /// previous buffer under this name in this store only. In staging
+    /// mode: records the tensor as a [`StagedFeed::Host`] instead.
     pub fn insert(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        if let Some(st) = self.staging.as_mut() {
+            st.record(name, StagedFeed::Host(t.clone()));
+            return Ok(());
+        }
         let lit = to_literal(t)?;
         let buf = self
             .rt
@@ -138,8 +260,28 @@ impl<'rt> DeviceStore<'rt> {
 
     /// Rebind `dst` to the buffer currently named `src` — zero bytes
     /// moved. A later replacement of `src` (e.g. by a result carry) does
-    /// not retarget `dst`: the alias pins the buffer as it is now.
+    /// not retarget `dst`: the alias pins the buffer as it is now. In
+    /// staging mode: resolves `src` (staged aliases in the current step
+    /// first, then the resident map) and records the pinned buffer as a
+    /// [`StagedFeed::Alias`]; aliasing a staged *host* feed is an error —
+    /// that buffer does not exist yet, and no fusible phase needs it.
     pub fn alias(&mut self, dst: &str, src: &str) -> Result<()> {
+        if let Some(st) = self.staging.as_ref() {
+            let i = st.steps.len() - 1;
+            let d = match st.feed_in_step(i, src) {
+                Some(StagedFeed::Alias(d)) => d.clone(),
+                Some(StagedFeed::Host(_)) => anyhow::bail!(
+                    "staging: alias '{dst}' <- '{src}' targets a staged \
+                     host upload; this phase cannot be fused"
+                ),
+                None => self.get(src)?.clone(),
+            };
+            self.staging
+                .as_mut()
+                .expect("staging vanished")
+                .record(dst, StagedFeed::Alias(d));
+            return Ok(());
+        }
         let d = self.get(src)?.clone();
         self.insert_device(dst, d);
         Ok(())
@@ -212,6 +354,10 @@ impl<'rt> DeviceStore<'rt> {
 
     pub(super) fn add_d2h(&mut self, bytes: u64) {
         self.bytes_d2h += bytes;
+    }
+
+    pub(super) fn add_h2d(&mut self, bytes: u64) {
+        self.bytes_h2d += bytes;
     }
 }
 
@@ -290,6 +436,100 @@ mod tests {
         assert_eq!(dev.fetch("dst").unwrap().scalar(), 7.0);
         assert_eq!(dev.fetch("src").unwrap().scalar(), 8.0);
         assert!(dev.alias("x", "nope").is_err());
+    }
+
+    #[test]
+    fn staging_records_without_touching_the_store() {
+        let rt = rt();
+        let mut dev = rt.device_store();
+        dev.insert("w", &Tensor::scalar_f32(1.0)).unwrap();
+        let (h2d0, _) = dev.transfer_bytes();
+
+        dev.begin_staging();
+        assert!(dev.is_staging());
+        dev.insert("t", &Tensor::scalar_f32(1.0)).unwrap();
+        dev.insert("lr", &Tensor::scalar_f32(0.1)).unwrap();
+        dev.next_staged_step();
+        dev.insert("t", &Tensor::scalar_f32(2.0)).unwrap();
+        dev.insert("lr", &Tensor::scalar_f32(0.05)).unwrap();
+        let staged = dev.end_staging();
+
+        // nothing moved, nothing resident
+        assert!(!dev.is_staging());
+        assert_eq!(dev.transfer_bytes().0, h2d0);
+        assert!(!dev.contains("t"));
+        assert_eq!(staged.len(), 2);
+        match staged.feed_in_step(1, "t") {
+            Some(StagedFeed::Host(t)) => assert_eq!(t.scalar(), 2.0),
+            other => panic!("bad staged feed: {other:?}"),
+        }
+        assert!(staged.feed_in_step(0, "nope").is_none());
+    }
+
+    #[test]
+    fn staging_alias_pins_the_resident_buffer() {
+        let rt = rt();
+        let mut dev = rt.device_store();
+        dev.insert("x_in.0", &Tensor::scalar_f32(5.0)).unwrap();
+        dev.begin_staging();
+        dev.alias("x_in", "x_in.0").unwrap();
+        // chained alias resolves through the staged one
+        dev.alias("x_again", "x_in").unwrap();
+        // aliasing a staged host upload is a fusibility error
+        dev.insert("fresh", &Tensor::scalar_f32(0.0)).unwrap();
+        assert!(dev.alias("y", "fresh").is_err());
+        let staged = dev.end_staging();
+        let (a, b) = match (
+            staged.feed_in_step(0, "x_in"),
+            staged.feed_in_step(0, "x_again"),
+        ) {
+            (Some(StagedFeed::Alias(a)), Some(StagedFeed::Alias(b))) => (a, b),
+            other => panic!("bad staged feeds: {other:?}"),
+        };
+        assert!(Arc::ptr_eq(&a.buf, &b.buf));
+        assert!(Arc::ptr_eq(&a.buf, &dev.get("x_in.0").unwrap().buf));
+        // and the live store never gained the alias
+        assert!(!dev.contains("x_in"));
+    }
+
+    #[test]
+    fn staged_step_matching_finds_divergence() {
+        let rt = rt();
+        let mut dev = rt.device_store();
+        dev.insert("b0", &Tensor::scalar_f32(3.0)).unwrap();
+
+        dev.begin_staging();
+        dev.insert("lr", &Tensor::scalar_f32(0.1)).unwrap();
+        dev.alias("x", "b0").unwrap();
+        let staged = dev.end_staging();
+
+        // identical replay matches
+        dev.begin_staging();
+        dev.insert("lr", &Tensor::scalar_f32(0.1)).unwrap();
+        dev.alias("x", "b0").unwrap();
+        let same = dev.end_staging();
+        assert!(staged.step_matches(0, same.step(0)));
+
+        // a different host value diverges
+        dev.begin_staging();
+        dev.insert("lr", &Tensor::scalar_f32(0.05)).unwrap();
+        dev.alias("x", "b0").unwrap();
+        let diff = dev.end_staging();
+        assert!(!staged.step_matches(0, diff.step(0)));
+
+        // a different alias target diverges too
+        dev.insert("b1", &Tensor::scalar_f32(3.0)).unwrap();
+        dev.begin_staging();
+        dev.insert("lr", &Tensor::scalar_f32(0.1)).unwrap();
+        dev.alias("x", "b1").unwrap();
+        let realiased = dev.end_staging();
+        assert!(!staged.step_matches(0, realiased.step(0)));
+
+        // and so does a missing write
+        dev.begin_staging();
+        dev.insert("lr", &Tensor::scalar_f32(0.1)).unwrap();
+        let short = dev.end_staging();
+        assert!(!staged.step_matches(0, short.step(0)));
     }
 
     #[test]

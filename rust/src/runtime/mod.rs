@@ -34,7 +34,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-pub use device::{DeviceStore, DeviceTensor};
+pub use device::{DeviceStore, DeviceTensor, StagedFeed, StagedSteps};
 pub use manifest::{ArgSpec, EntrySpec, Manifest, QuantLayer};
 
 use crate::store::Store;
@@ -53,13 +53,19 @@ pub struct LoadedEntry {
 #[derive(Debug, Default, Clone)]
 pub struct DispatchStats {
     pub calls: u64,
+    /// Device steps executed across those calls. Equal to `calls` for
+    /// the single-step paths; a fused dispatch counts one call but K
+    /// steps, so throughput reads `steps / total_secs`, never
+    /// `calls / total_secs`.
+    pub steps: u64,
     pub total_secs: f64,
     /// Host→device bytes uploaded by the call itself (argument literals
-    /// in the round-trip path; 0 in the device-resident path, whose
-    /// uploads happen through [`DeviceStore::insert`]).
+    /// in the round-trip path; 0 in the device-resident paths, whose
+    /// uploads happen through [`DeviceStore::insert`] or are counted on
+    /// the store by the fused stacked upload).
     pub bytes_h2d: u64,
     /// Device→host bytes downloaded by the call (all results in the
-    /// round-trip path; scalar results only in the device path).
+    /// round-trip path; scalar results only in the device paths).
     pub bytes_d2h: u64,
 }
 
@@ -111,6 +117,26 @@ impl std::ops::Index<&str> for Scalars {
             .find(|(n, _)| n == name)
             .map(|(_, v)| v)
             .unwrap_or_else(|| panic!("no scalar result '{name}'"))
+    }
+}
+
+/// Device-resident results of one fused K-step dispatch: the untupled
+/// result buffers of every executed step, held *outside* the
+/// [`DeviceStore`] until the caller's validation replay picks the commit
+/// prefix ([`Runtime::commit_fused`]). Dropping it discards the whole
+/// speculation with zero store mutation.
+pub struct FusedResults {
+    steps: Vec<Vec<xla::PjRtBuffer>>,
+}
+
+impl FusedResults {
+    /// Number of steps the fused dispatch executed.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
     }
 }
 
@@ -170,6 +196,30 @@ impl Runtime {
         Ok(entry)
     }
 
+    /// Install a pre-built executable into the compile cache under the
+    /// exact key [`entry`](Self::entry) computes for
+    /// (`model_dir`, `spec.file`) — subsequent `entry()` lookups hit the
+    /// cache before any file I/O. This is the offline seam that lets
+    /// tests and benches drive the full dispatch machinery (single-step
+    /// and fused) with host-fn executables instead of compiled HLO.
+    pub fn register_entry(
+        &self,
+        model_dir: impl AsRef<Path>,
+        name: &str,
+        spec: EntrySpec,
+        exe: xla::PjRtLoadedExecutable,
+    ) -> Arc<LoadedEntry> {
+        let key = model_dir
+            .as_ref()
+            .join(&spec.file)
+            .to_string_lossy()
+            .to_string();
+        let entry =
+            Arc::new(LoadedEntry { name: name.to_string(), spec, exe });
+        self.cache.lock().unwrap().insert(key, entry.clone());
+        entry
+    }
+
     /// Execute an entrypoint: arguments are read from `store` by the
     /// manifest arg names (shape/dtype validated), results are written
     /// back by result names. Returns the scalar results by name (losses,
@@ -222,7 +272,13 @@ impl Runtime {
             }
             store.insert(name, t);
         }
-        self.record_dispatch(&entry.name, t0.elapsed().as_secs_f64(), h2d, d2h);
+        self.record_dispatch(
+            &entry.name,
+            1,
+            t0.elapsed().as_secs_f64(),
+            h2d,
+            d2h,
+        );
         Ok(scalars)
     }
 
@@ -292,8 +348,205 @@ impl Runtime {
             );
         }
         dev.add_d2h(d2h);
-        self.record_dispatch(&entry.name, t0.elapsed().as_secs_f64(), 0, d2h);
+        self.record_dispatch(
+            &entry.name,
+            1,
+            t0.elapsed().as_secs_f64(),
+            0,
+            d2h,
+        );
         Ok(scalars)
+    }
+
+    /// Execute K consecutive steps of an entrypoint as ONE device
+    /// dispatch (DESIGN.md §14). `staged` holds the recorded
+    /// `before_step` feeds of the K steps (see
+    /// [`DeviceStore::begin_staging`]); each manifest argument is
+    /// classified by how it varies across them:
+    ///
+    ///   * staged host feed in every step → all K values stacked into a
+    ///     `[K, ...]` tensor and uploaded once ([`xla::FusedArg::Stacked`]);
+    ///   * staged alias in every step → the K pinned resident buffers
+    ///     ([`xla::FusedArg::PerStep`]);
+    ///   * unstaged but named like a result → device-carried state:
+    ///     step i reads step i-1's result ([`xla::FusedArg::Carried`]);
+    ///   * unstaged otherwise → one fixed resident buffer.
+    ///
+    /// Scalar f32 results come back as one per-step vector (same bytes
+    /// as K single-step downloads, one sync point). Nothing is written
+    /// into `dev`: the per-step result buffers ride back in
+    /// [`FusedResults`] so the caller can validate the speculated feeds
+    /// and commit a prefix via [`commit_fused`](Self::commit_fused).
+    pub fn call_device_fused(
+        &self,
+        entry: &LoadedEntry,
+        dev: &mut DeviceStore,
+        staged: &StagedSteps,
+    ) -> Result<(Vec<Scalars>, FusedResults)> {
+        let t0 = Instant::now();
+        let k = staged.len();
+        anyhow::ensure!(k > 0, "{}: fused dispatch of 0 steps", entry.name);
+        let result_names: Vec<&str> = entry
+            .spec
+            .results
+            .iter()
+            .map(|(n, _, _)| n.as_str())
+            .collect();
+        let mut args = Vec::with_capacity(entry.spec.args.len());
+        let mut stacked_h2d = 0u64;
+        for (name, dt, shape) in &entry.spec.args {
+            let feeds: Vec<Option<&StagedFeed>> =
+                (0..k).map(|i| staged.feed_in_step(i, name)).collect();
+            let staged_count = feeds.iter().filter(|f| f.is_some()).count();
+            anyhow::ensure!(
+                staged_count == 0 || staged_count == k,
+                "{}: arg '{name}' staged in {staged_count} of {k} fused \
+                 steps; feeds must be written every step or never",
+                entry.name
+            );
+            let arg = if staged_count == 0 {
+                let d = dev
+                    .get(name)
+                    .with_context(|| format!("args of {}", entry.name))?;
+                validate_meta(name, d.dtype(), d.shape(), dt, shape)?;
+                match result_names.iter().position(|r| r == name) {
+                    // arg name == result name: carried state, chained
+                    // on device between the unrolled steps
+                    Some(from) => {
+                        xla::FusedArg::Carried { init: d.buffer(), from }
+                    }
+                    None => xla::FusedArg::Fixed(d.buffer()),
+                }
+            } else if feeds
+                .iter()
+                .all(|f| matches!(f, Some(StagedFeed::Host(_))))
+            {
+                let parts: Vec<&Tensor> = feeds
+                    .iter()
+                    .map(|f| match f {
+                        Some(StagedFeed::Host(t)) => t,
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                for t in &parts {
+                    validate_meta(name, t.dtype(), &t.shape, dt, shape)?;
+                }
+                let stacked = Tensor::stack_outer(&parts);
+                stacked_h2d += stacked.byte_len() as u64;
+                let buf = self
+                    .client
+                    .buffer_from_host_literal(None, &to_literal(&stacked)?)
+                    .with_context(|| format!("stacked upload '{name}'"))?;
+                xla::FusedArg::Stacked(Arc::new(buf))
+            } else if feeds
+                .iter()
+                .all(|f| matches!(f, Some(StagedFeed::Alias(_))))
+            {
+                let mut bufs = Vec::with_capacity(k);
+                for f in &feeds {
+                    let d = match f {
+                        Some(StagedFeed::Alias(d)) => d,
+                        _ => unreachable!(),
+                    };
+                    validate_meta(name, d.dtype(), d.shape(), dt, shape)?;
+                    bufs.push(d.buffer());
+                }
+                xla::FusedArg::PerStep(bufs)
+            } else {
+                anyhow::bail!(
+                    "{}: arg '{name}' mixes staged host uploads and \
+                     aliases across the fused steps",
+                    entry.name
+                );
+            };
+            args.push(arg);
+        }
+        // The stacked uploads are H2D the K=1 path would have done via
+        // DeviceStore::insert, so they land in the store's accounting
+        // (keeping resident-path byte comparisons K-invariant), not in
+        // the per-entry stats — same convention as call_device.
+        dev.add_h2d(stacked_h2d);
+        let steps = entry
+            .exe
+            .execute_fused(&args, k)
+            .with_context(|| format!("fused execute {}", entry.name))?;
+        anyhow::ensure!(
+            steps.len() == k,
+            "{}: fused execute returned {} step results for k={k}",
+            entry.name,
+            steps.len()
+        );
+        let mut per_step = Vec::with_capacity(k);
+        let mut d2h = 0u64;
+        for outs in &steps {
+            anyhow::ensure!(
+                outs.len() == entry.spec.results.len(),
+                "{}: got {} results per step, manifest says {}",
+                entry.name,
+                outs.len(),
+                entry.spec.results.len()
+            );
+            let mut scalars = Scalars::new();
+            for (out, (name, dt, shape)) in
+                outs.iter().zip(entry.spec.results.iter())
+            {
+                let dtype = DType::from_str(dt)?;
+                let numel: usize = shape.iter().product();
+                if numel == 1 && dtype == DType::F32 {
+                    let lit = out.to_literal_sync().with_context(|| {
+                        format!("fetch scalar {name} of {}", entry.name)
+                    })?;
+                    let t =
+                        from_literal(&lit, dtype, shape).with_context(
+                            || format!("result {name} of {}", entry.name),
+                        )?;
+                    scalars.insert(name, t.scalar());
+                    d2h += t.byte_len() as u64;
+                }
+            }
+            per_step.push(scalars);
+        }
+        dev.add_d2h(d2h);
+        self.record_dispatch(
+            &entry.name,
+            k as u64,
+            t0.elapsed().as_secs_f64(),
+            0,
+            d2h,
+        );
+        Ok((per_step, FusedResults { steps }))
+    }
+
+    /// Wire the results of fused step `committed - 1` into `dev` — the
+    /// single store mutation of a fused dispatch. Steps `0..committed`
+    /// had validated feeds, so step `committed - 1`'s result buffers are
+    /// exactly the state K single-step dispatches would have left
+    /// resident; the speculated tail (`committed..k`) is dropped.
+    pub fn commit_fused(
+        &self,
+        entry: &LoadedEntry,
+        dev: &mut DeviceStore,
+        results: FusedResults,
+        committed: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            committed >= 1 && committed <= results.steps.len(),
+            "{}: commit of {committed} steps from a fused dispatch of {}",
+            entry.name,
+            results.steps.len()
+        );
+        let mut steps = results.steps;
+        let outs = steps.swap_remove(committed - 1);
+        for (out, (name, dt, shape)) in
+            outs.into_iter().zip(entry.spec.results.iter())
+        {
+            let dtype = DType::from_str(dt)?;
+            dev.insert_device(
+                name,
+                DeviceTensor::from_parts(Arc::new(out), dtype, shape.clone()),
+            );
+        }
+        Ok(())
     }
 
     /// An empty device store bound to this runtime's PJRT client.
@@ -309,14 +562,23 @@ impl Runtime {
         Ok(dev)
     }
 
-    /// Fold one dispatch into the per-entry stats. All counters land in a
-    /// single short lock section (and the common re-dispatch case avoids
-    /// allocating the key), so pool workers hammering the same entry
-    /// contend for one brief mutex acquisition per call, nothing more.
-    fn record_dispatch(&self, name: &str, secs: f64, h2d: u64, d2h: u64) {
+    /// Fold one dispatch (of `steps` device steps) into the per-entry
+    /// stats. All counters land in a single short lock section (and the
+    /// common re-dispatch case avoids allocating the key), so pool
+    /// workers hammering the same entry contend for one brief mutex
+    /// acquisition per call, nothing more.
+    fn record_dispatch(
+        &self,
+        name: &str,
+        steps: u64,
+        secs: f64,
+        h2d: u64,
+        d2h: u64,
+    ) {
         let mut stats = self.stats.lock().unwrap();
         if let Some(s) = stats.get_mut(name) {
             s.calls += 1;
+            s.steps += steps;
             s.total_secs += secs;
             s.bytes_h2d += h2d;
             s.bytes_d2h += d2h;
@@ -325,6 +587,7 @@ impl Runtime {
                 name.to_string(),
                 DispatchStats {
                     calls: 1,
+                    steps,
                     total_secs: secs,
                     bytes_h2d: h2d,
                     bytes_d2h: d2h,
@@ -516,6 +779,125 @@ mod tests {
     #[test]
     fn dispatch_stats_default_has_no_traffic() {
         let s = DispatchStats::default();
-        assert_eq!((s.calls, s.bytes_h2d, s.bytes_d2h), (0, 0, 0));
+        assert_eq!(
+            (s.calls, s.steps, s.bytes_h2d, s.bytes_d2h),
+            (0, 0, 0, 0)
+        );
+    }
+
+    /// A tiny host-fn "training step": state' = state + lr (elementwise),
+    /// loss = sum(state'). Registered under a synthetic manifest spec so
+    /// the full device dispatch machinery runs offline.
+    fn fused_fixture(rt: &Runtime) -> Arc<LoadedEntry> {
+        let spec = EntrySpec {
+            file: "step_test.hlo.txt".to_string(),
+            args: vec![
+                ("state".to_string(), "f32".to_string(), vec![2]),
+                ("lr".to_string(), "f32".to_string(), vec![]),
+            ],
+            results: vec![
+                ("state".to_string(), "f32".to_string(), vec![2]),
+                ("loss".to_string(), "f32".to_string(), vec![]),
+            ],
+        };
+        let exe = xla::PjRtLoadedExecutable::from_host_fn(2, |args| {
+            let s = args[0].to_vec::<f32>()?;
+            let lr = args[1].to_vec::<f32>()?[0];
+            let next: Vec<f32> = s.iter().map(|x| x + lr).collect();
+            let loss: f32 = next.iter().sum();
+            let state = xla::Literal::vec1(&next).reshape(&[2])?;
+            let loss = xla::Literal::vec1(&[loss]).reshape(&[])?;
+            Ok(vec![state, loss])
+        });
+        rt.register_entry(".", "step_test", spec, exe)
+    }
+
+    #[test]
+    fn fused_dispatch_matches_single_steps_and_commits_prefixes() {
+        let rt = Runtime::cpu().unwrap();
+        let entry = fused_fixture(&rt);
+        let lrs = [0.5f32, 0.25, 0.125];
+
+        // reference: K=1, three call_device dispatches
+        let mut ref_dev = rt.device_store();
+        ref_dev.insert("state", &Tensor::from_f32(&[2], vec![1.0, 2.0]))
+            .unwrap();
+        let mut ref_losses = Vec::new();
+        for lr in lrs {
+            ref_dev.insert("lr", &Tensor::scalar_f32(lr)).unwrap();
+            let s = rt.call_device(&entry, &mut ref_dev).unwrap();
+            ref_losses.push(s["loss"]);
+        }
+        let ref_state = ref_dev.fetch("state").unwrap();
+
+        // fused: one dispatch of all three staged steps
+        let mut dev = rt.device_store();
+        dev.insert("state", &Tensor::from_f32(&[2], vec![1.0, 2.0]))
+            .unwrap();
+        dev.begin_staging();
+        for (i, lr) in lrs.iter().enumerate() {
+            if i > 0 {
+                dev.next_staged_step();
+            }
+            dev.insert("lr", &Tensor::scalar_f32(*lr)).unwrap();
+        }
+        let staged = dev.end_staging();
+        let (scalars, results) =
+            rt.call_device_fused(&entry, &mut dev, &staged).unwrap();
+        assert_eq!(scalars.len(), 3);
+        assert_eq!(results.len(), 3);
+        let losses: Vec<f32> = scalars.iter().map(|s| s["loss"]).collect();
+        assert_eq!(losses, ref_losses, "per-step scalar trace diverged");
+        // nothing committed yet: the store still holds the init state
+        assert_eq!(dev.fetch("state").unwrap().as_f32(), &[1.0, 2.0]);
+        rt.commit_fused(&entry, &mut dev, results, 3).unwrap();
+        assert_eq!(
+            dev.fetch("state").unwrap(),
+            ref_state,
+            "fused K=3 final state diverged from three K=1 dispatches"
+        );
+
+        // stats: 4 calls (3 single + 1 fused) but 6 device steps
+        let stats = rt.dispatch_stats();
+        let s = &stats["step_test"];
+        assert_eq!((s.calls, s.steps), (4, 6));
+    }
+
+    #[test]
+    fn fused_prefix_commit_stops_at_the_requested_step() {
+        let rt = Runtime::cpu().unwrap();
+        let entry = fused_fixture(&rt);
+        let mut dev = rt.device_store();
+        dev.insert("state", &Tensor::from_f32(&[2], vec![0.0, 0.0]))
+            .unwrap();
+        dev.begin_staging();
+        dev.insert("lr", &Tensor::scalar_f32(1.0)).unwrap();
+        dev.next_staged_step();
+        dev.insert("lr", &Tensor::scalar_f32(1.0)).unwrap();
+        dev.next_staged_step();
+        dev.insert("lr", &Tensor::scalar_f32(1.0)).unwrap();
+        let staged = dev.end_staging();
+        let (_, results) =
+            rt.call_device_fused(&entry, &mut dev, &staged).unwrap();
+        // commit only 2 of the 3 speculated steps
+        rt.commit_fused(&entry, &mut dev, results, 2).unwrap();
+        assert_eq!(dev.fetch("state").unwrap().as_f32(), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn fused_rejects_partially_staged_args() {
+        let rt = Runtime::cpu().unwrap();
+        let entry = fused_fixture(&rt);
+        let mut dev = rt.device_store();
+        dev.insert("state", &Tensor::from_f32(&[2], vec![0.0, 0.0]))
+            .unwrap();
+        dev.begin_staging();
+        dev.insert("lr", &Tensor::scalar_f32(1.0)).unwrap();
+        dev.next_staged_step(); // second step never writes lr
+        let staged = dev.end_staging();
+        let err = rt
+            .call_device_fused(&entry, &mut dev, &staged)
+            .unwrap_err();
+        assert!(err.to_string().contains("staged in 1 of 2"), "{err}");
     }
 }

@@ -323,6 +323,14 @@ impl Phase for GenieShard<'_, '_> {
         Ok(())
     }
 
+    /// Fused-dispatch safe: before_step only inserts RNG/schedule
+    /// scalars, after_step only observes the loss, and snapshot/restore
+    /// carries the full host state (rng, plateau sched, lr_z) — the
+    /// megastep replay handles mid-dispatch plateau drops exactly.
+    fn fusible(&self) -> bool {
+        true
+    }
+
     fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
         // phase boundary: the only full-tensor download of the shard
         self.mrt.call_device("gen_images", dev)?;
@@ -416,6 +424,12 @@ impl Phase for DirectShard<'_, '_> {
         Ok(())
     }
 
+    /// Same fused-dispatch contract as [`GenieShard`]: scalar-only
+    /// feeds, scalar-only observation, complete snapshot.
+    fn fusible(&self) -> bool {
+        true
+    }
+
     fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {
         let mut out = Store::new();
         out.insert("images", dev.fetch("x")?);
@@ -486,6 +500,12 @@ impl Phase for ZaqShard<'_, '_> {
 
     fn restore(&mut self, snap: &Store) -> Result<()> {
         self.inner.restore(snap)
+    }
+
+    /// The wrapper adds only constant scalar feeds (wp/ap) on top of the
+    /// inner GENIE shard, so it inherits its fused-dispatch safety.
+    fn fusible(&self) -> bool {
+        self.inner.fusible()
     }
 
     fn finish(&mut self, dev: &mut DeviceStore) -> Result<Store> {

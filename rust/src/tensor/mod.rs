@@ -217,6 +217,50 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// Stack same-shaped tensors along a NEW leading axis: `n` tensors
+    /// of shape `s` become one `[n, ...s]` tensor (scalars stack to
+    /// `[n]`). The batched-upload primitive of the fused dispatch path:
+    /// K steps' host feeds for one argument travel as a single H2D, and
+    /// the unrolled device program reads slice `i` per step. Dtype-
+    /// generic like [`concat_rows`](Self::concat_rows).
+    pub fn stack_outer(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty(), "stack_outer of zero tensors");
+        let tail = &parts[0].shape;
+        let dt = parts[0].dtype();
+        for p in parts {
+            assert_eq!(&p.shape, tail, "stack_outer: shapes differ");
+            assert_eq!(p.dtype(), dt, "stack_outer: dtypes differ");
+        }
+        let mut shape = Vec::with_capacity(tail.len() + 1);
+        shape.push(parts.len());
+        shape.extend_from_slice(tail);
+        let n: usize = shape.iter().product();
+        let data = match dt {
+            DType::F32 => {
+                let mut out = Vec::with_capacity(n);
+                for p in parts {
+                    out.extend_from_slice(p.as_f32());
+                }
+                Data::F32(out)
+            }
+            DType::I32 => {
+                let mut out = Vec::with_capacity(n);
+                for p in parts {
+                    out.extend_from_slice(p.as_i32());
+                }
+                Data::I32(out)
+            }
+            DType::U32 => {
+                let mut out = Vec::with_capacity(n);
+                for p in parts {
+                    out.extend_from_slice(p.as_u32());
+                }
+                Data::U32(out)
+            }
+        };
+        Tensor { shape, data }
+    }
+
     /// First `n` rows of a [N, ...] tensor — a single prefix slice copy
     /// (no index vector, no per-row gather).
     pub fn take_rows(&self, n: usize) -> Tensor {
@@ -320,6 +364,36 @@ mod tests {
         let a = Tensor::from_f32(&[1, 2], vec![1.0, 2.0]);
         let b = Tensor::from_i32(&[1, 2], vec![3, 4]);
         Tensor::concat_rows(&[&a, &b]);
+    }
+
+    #[test]
+    fn stack_outer_adds_a_leading_axis() {
+        let a = Tensor::from_f32(&[2], vec![1., 2.]);
+        let b = Tensor::from_f32(&[2], vec![3., 4.]);
+        let s = Tensor::stack_outer(&[&a, &b]);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.as_f32(), &[1., 2., 3., 4.]);
+        // scalars stack to a vector — the fused trace-upload shape
+        let t1 = Tensor::scalar_f32(0.1);
+        let t2 = Tensor::scalar_f32(0.2);
+        let t3 = Tensor::scalar_f32(0.3);
+        let v = Tensor::stack_outer(&[&t1, &t2, &t3]);
+        assert_eq!(v.shape, vec![3]);
+        assert_eq!(v.as_f32(), &[0.1, 0.2, 0.3]);
+        // dtype-generic: u32 keys stack too
+        let k1 = Tensor::key(1, 2);
+        let k2 = Tensor::key(3, 4);
+        let ks = Tensor::stack_outer(&[&k1, &k2]);
+        assert_eq!(ks.shape, vec![2, 2]);
+        assert_eq!(ks.as_u32(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shapes differ")]
+    fn stack_outer_rejects_mixed_shapes() {
+        let a = Tensor::from_f32(&[2], vec![1., 2.]);
+        let b = Tensor::scalar_f32(3.0);
+        Tensor::stack_outer(&[&a, &b]);
     }
 
     #[test]

@@ -45,6 +45,18 @@ fn require_artifacts() -> bool {
     ok
 }
 
+/// Fused steps per dispatch (`GENIE_STEPS_PER_DISPATCH`, default 1):
+/// the CI K=8 leg runs the whole fault suite through the megastep path
+/// — recovery must be K-oblivious (DESIGN.md §14).
+fn env_steps_per_dispatch() -> usize {
+    match std::env::var("GENIE_STEPS_PER_DISPATCH") {
+        Ok(v) => v
+            .parse()
+            .expect("GENIE_STEPS_PER_DISPATCH must be an integer"),
+        Err(_) => 1,
+    }
+}
+
 /// Small-budget base config at workers=1, so the order injection sites
 /// are reached in is deterministic (results are bit-identical for any
 /// worker count either way).
@@ -61,6 +73,7 @@ fn base_cfg(cache_dir: &Path) -> RunConfig {
         "distill.steps=6".into(),
         "quant.steps=8".into(),
         "workers=1".into(),
+        format!("steps_per_dispatch={}", env_steps_per_dispatch()),
     ])
     .unwrap();
     cfg

@@ -23,8 +23,8 @@ use std::path::Path;
 
 use genie::artifacts::{self, ArtifactCache};
 use genie::coordinator::{
-    distill, distill_cached, distill_ck, pretrain, DistillCfg, Metrics,
-    PretrainCfg, RunConfig,
+    distill, distill_cached, distill_ck, pretrain, quantize, DistillCfg,
+    Metrics, PretrainCfg, QuantCfg, RunConfig,
 };
 use genie::data::Dataset;
 use genie::exec::Parallelism;
@@ -90,6 +90,19 @@ fn worker_counts() -> Vec<usize> {
     }
 }
 
+/// Fused steps per dispatch for the conformance contracts: the CI matrix
+/// pins one via `GENIE_STEPS_PER_DISPATCH` (its K=8 leg re-runs every
+/// contract through the megastep path, DESIGN.md §14); a plain
+/// `cargo test` runs unfused.
+fn env_steps_per_dispatch() -> usize {
+    match std::env::var("GENIE_STEPS_PER_DISPATCH") {
+        Ok(v) => v
+            .parse()
+            .expect("GENIE_STEPS_PER_DISPATCH must be an integer"),
+        Err(_) => 1,
+    }
+}
+
 fn small_distill(e: Engine) -> DistillCfg {
     DistillCfg {
         engine: e,
@@ -97,6 +110,7 @@ fn small_distill(e: Engine) -> DistillCfg {
         steps: 6,
         seed: 47,
         log_every: 3,
+        steps_per_dispatch: env_steps_per_dispatch(),
         ..Default::default()
     }
 }
@@ -403,7 +417,14 @@ fn synthesis_genie_is_byte_identical_to_pre_refactor_loop() {
         rc.set("synthesis", "genie").unwrap();
         rc.set("distill.samples", "64").unwrap();
         rc.set("distill.steps", "9").unwrap();
-        let cfg = DistillCfg { seed: 91, ..rc.distill.clone() };
+        // the engine runs at the CI-pinned fusion width; the reference
+        // below is the strictly single-step loop, so the K=8 leg pins
+        // fused bytes against unfused history
+        let cfg = DistillCfg {
+            seed: 91,
+            steps_per_dispatch: env_steps_per_dispatch(),
+            ..rc.distill.clone()
+        };
 
         // reference: the pre-refactor inline per-shard loop, verbatim
         let m = &mrt.manifest;
@@ -571,5 +592,115 @@ fn two_engine_grid_dispatches_once_per_engine_and_matches_dry_run() {
             assert_eq!(oa.fp_acc, ob.fp_acc);
         }
         std::fs::remove_dir_all(&root).ok();
+    });
+}
+
+/// Contract 6 — fused-dispatch bit-identity (DESIGN.md §14): for every
+/// synthesis engine and for GENIE-M quantization, K=8 megasteps produce
+/// final stores byte-identical to K=1, at 1 and 4 workers alike; and a
+/// step-budget preemption taken at K=8 resumes bit-identically under
+/// K=1 (the checkpoint carries no trace of the fusion width).
+#[test]
+fn fused_dispatch_bit_identical_to_single_step_for_engines_and_quantize() {
+    with_ctx(|_rt, mrt, dataset| {
+        let mut metrics = Metrics::new();
+        let teacher = pretrain(
+            mrt,
+            dataset,
+            &PretrainCfg { steps: 30, ..Default::default() },
+            &mut metrics,
+        )
+        .unwrap();
+        let mut genie_images = None;
+        for workers in worker_counts() {
+            for e in ALL_ENGINES {
+                let mut k1 = small_distill(e);
+                if !engine_available(mrt, e, &k1) {
+                    continue;
+                }
+                k1.par = Parallelism::new(workers);
+                k1.steps_per_dispatch = 1;
+                let want =
+                    distill(mrt, &teacher, &k1, &mut metrics).unwrap();
+                let mut k8 = k1.clone();
+                k8.steps_per_dispatch = 8;
+                let got =
+                    distill(mrt, &teacher, &k8, &mut metrics).unwrap();
+                assert_eq!(
+                    got.images,
+                    want.images,
+                    "{}: K=8 diverged from K=1 at workers={workers}",
+                    e.as_str()
+                );
+                assert_eq!(
+                    got.loss_trace,
+                    want.loss_trace,
+                    "{}: K=8 trace diverged at workers={workers}",
+                    e.as_str()
+                );
+                if e == Engine::Genie {
+                    genie_images = Some(want.images);
+                }
+            }
+
+            // quantize: same calibration set through the block loops at
+            // K=1 vs K=8 must optimize the same qstate bytes
+            let calib = genie_images
+                .as_ref()
+                .expect("genie engine must be available");
+            let q1 = QuantCfg {
+                steps_per_block: 8,
+                log_every: 3,
+                par: Parallelism::new(workers),
+                ..Default::default()
+            };
+            let want =
+                quantize(mrt, &teacher, calib, &q1, &mut metrics).unwrap();
+            let q8 = QuantCfg { steps_per_dispatch: 8, ..q1.clone() };
+            let got =
+                quantize(mrt, &teacher, calib, &q8, &mut metrics).unwrap();
+            assert_eq!(
+                got.content_hash(),
+                want.content_hash(),
+                "quantize: K=8 qstate diverged from K=1 at workers={workers}"
+            );
+        }
+
+        // preemption across K: a step budget interrupts the fused run on
+        // a megastep edge; crash-looping the resume with K alternating
+        // 8/1 between attempts still converges to the uninterrupted
+        // bytes — the checkpoint protocol is K-oblivious
+        let cfg = small_distill(Engine::Genie);
+        let want = distill(mrt, &teacher, &cfg, &mut metrics).unwrap();
+        let dir = std::env::temp_dir().join("genie_fused_budget_resume");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut ck = StageCkpt::new(&dir, 2, true);
+        ck.budget = Some(4); // dies mid-shard, every attempt
+        let mut got = None;
+        for attempt in 0..30 {
+            let mut c = cfg.clone();
+            c.steps_per_dispatch = if attempt % 2 == 0 { 8 } else { 1 };
+            match distill_ck(mrt, &teacher, &c, Some(&ck), &mut metrics) {
+                Ok(out) => {
+                    assert!(
+                        attempt > 0,
+                        "the budget must interrupt at least once"
+                    );
+                    got = Some(out);
+                    break;
+                }
+                Err(err) => assert!(
+                    format!("{err}").contains("interrupted"),
+                    "unexpected error {err}"
+                ),
+            }
+        }
+        let got = got.expect("crash-looped fused distill never finished");
+        assert_eq!(
+            got.images, want.images,
+            "cross-K budget resume diverged from the uninterrupted run"
+        );
+        assert_eq!(got.loss_trace, want.loss_trace);
+        std::fs::remove_dir_all(&dir).ok();
     });
 }

@@ -4,15 +4,20 @@
 //!
 //! What is real here: [`Literal`] construction, reshape, readback and
 //! tuple decomposition — the host-side marshalling genie benches and
-//! tests exercise. What is stubbed: compilation and execution, which
-//! need the xla_extension C++ library and return [`Error::StubBackend`]
-//! in this build. Artifact-gated tests and benches detect the missing
+//! tests exercise — plus *host-function executables*
+//! ([`PjRtLoadedExecutable::from_host_fn`]): a literal→literal function
+//! standing in for a compiled program, which makes `execute_b` and the
+//! fused multi-step path ([`PjRtLoadedExecutable::execute_fused`]) fully
+//! exercisable offline. What is stubbed: `compile`, which needs the
+//! xla_extension C++ library and returns [`Error::StubBackend`] in this
+//! build. Artifact-gated tests and benches detect the missing
 //! `artifacts/` directory and skip before ever reaching those calls.
 //!
-//! Every type here is plain data (`Send + Sync`), a property the exec
-//! worker pool relies on to share one `Runtime` across worker threads.
+//! Every type here is `Send + Sync`, a property the exec worker pool
+//! relies on to share one `Runtime` across worker threads.
 
 use std::fmt;
+use std::sync::Arc;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
@@ -134,10 +139,33 @@ impl Literal {
     }
 
     /// Decompose a tuple literal into its elements. The stub never
-    /// produces tuples (execution is stubbed), so a scalar/array literal
-    /// decomposes to itself — enough for marshalling round-trip tests.
+    /// produces tuples (host-fn executables return untupled results), so
+    /// a scalar/array literal decomposes to itself — enough for
+    /// marshalling round-trip tests.
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
         Ok(vec![self])
+    }
+
+    /// Slice `i` off the leading axis of a `[k, ...]` stacked literal;
+    /// the result drops that axis (a stacked scalar `[k]` slices to
+    /// rank 0). This is the stub-side model of the dynamic-slice a real
+    /// unrolled program uses to read step `i`'s feed from a batched
+    /// upload (see [`FusedArg::Stacked`]).
+    fn slice_outer(&self, i: usize, k: usize) -> Result<Literal> {
+        if self.dims.first() != Some(&(k as i64)) {
+            return Err(Error::Invalid(format!(
+                "slice_outer: literal dims {:?} are not stacked to k={k}",
+                self.dims
+            )));
+        }
+        let part = self.data.len() / k;
+        let (lo, hi) = (i * part, (i + 1) * part);
+        let data = match &self.data {
+            Buf::F32(v) => Buf::F32(v[lo..hi].to_vec()),
+            Buf::I32(v) => Buf::I32(v[lo..hi].to_vec()),
+            Buf::U32(v) => Buf::U32(v[lo..hi].to_vec()),
+        };
+        Ok(Literal { dims: self.dims[1..].to_vec(), data })
     }
 }
 
@@ -219,16 +247,107 @@ impl PjRtClient {
     }
 }
 
-/// Compiled executable handle (never constructed by the stub).
-#[derive(Debug)]
-pub struct PjRtLoadedExecutable;
+/// One argument slot of a fused K-step dispatch — how its value varies
+/// across the K unrolled copies of the step graph. With real PJRT the
+/// whole enum lowers into one compiled program (step graph unrolled K
+/// times, `Stacked` reads becoming dynamic-slices, `Carried` reads wired
+/// result→arg between copies); the stub models that program as K
+/// sequential applications of the step function, which has the same
+/// value semantics.
+pub enum FusedArg {
+    /// Resident buffer read identically by every step (weights the
+    /// program does not rewrite).
+    Fixed(Arc<PjRtBuffer>),
+    /// A `[k, ...]` stacked host upload; step `i` reads slice `i` of the
+    /// leading axis (per-step schedule scalars batched into one H2D).
+    Stacked(Arc<PjRtBuffer>),
+    /// One pre-existing device buffer per step (aliased feeds that
+    /// already live on device, e.g. calibration batches).
+    PerStep(Vec<Arc<PjRtBuffer>>),
+    /// Step 0 reads `init`; step `i>0` reads result `from` of step
+    /// `i-1` — the state carry that keeps all K steps on-device.
+    Carried { init: Arc<PjRtBuffer>, from: usize },
+}
+
+/// Compiled executable handle. `compile` never constructs a live one in
+/// the offline stub, but [`from_host_fn`](Self::from_host_fn) installs a
+/// literal→literal function standing in for the compiled program — the
+/// same untupled-results contract `execute_b` has against real PJRT —
+/// which lets the runtime's dispatch paths (single-step and fused) run
+/// for real in tests and benches.
+#[derive(Clone)]
+pub struct PjRtLoadedExecutable {
+    inner: Exec,
+}
+
+#[derive(Clone)]
+enum Exec {
+    Stub,
+    HostFn {
+        n_results: usize,
+        f: Arc<dyn Fn(&[Literal]) -> Result<Vec<Literal>> + Send + Sync>,
+    },
+}
+
+impl fmt::Debug for PjRtLoadedExecutable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            Exec::Stub => f.write_str("PjRtLoadedExecutable(stub)"),
+            Exec::HostFn { n_results, .. } => {
+                write!(f, "PjRtLoadedExecutable(host-fn, {n_results} results)")
+            }
+        }
+    }
+}
 
 impl PjRtLoadedExecutable {
+    /// The inert executable real `compile` would return; every execute
+    /// call on it reports [`Error::StubBackend`].
+    pub fn stub() -> PjRtLoadedExecutable {
+        PjRtLoadedExecutable { inner: Exec::Stub }
+    }
+
+    /// An executable backed by a host function mapping argument literals
+    /// to exactly `n_results` result literals (one per tuple element of
+    /// the program's result, untupled).
+    pub fn from_host_fn<F>(n_results: usize, f: F) -> PjRtLoadedExecutable
+    where
+        F: Fn(&[Literal]) -> Result<Vec<Literal>> + Send + Sync + 'static,
+    {
+        PjRtLoadedExecutable {
+            inner: Exec::HostFn { n_results, f: Arc::new(f) },
+        }
+    }
+
+    fn run(
+        &self,
+        args: &[Literal],
+        what: &'static str,
+    ) -> Result<Vec<Literal>> {
+        match &self.inner {
+            Exec::Stub => Err(Error::StubBackend(what)),
+            Exec::HostFn { n_results, f } => {
+                let out = f(args)?;
+                if out.len() != *n_results {
+                    return Err(Error::Invalid(format!(
+                        "host-fn executable returned {} results, \
+                         declared {n_results}",
+                        out.len()
+                    )));
+                }
+                Ok(out)
+            }
+        }
+    }
+
     pub fn execute<T: std::borrow::Borrow<Literal>>(
         &self,
-        _args: &[T],
+        args: &[T],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(Error::StubBackend("PjRtLoadedExecutable::execute"))
+        let lits: Vec<Literal> =
+            args.iter().map(|a| a.borrow().clone()).collect();
+        let out = self.run(&lits, "PjRtLoadedExecutable::execute")?;
+        Ok(vec![out.into_iter().map(|lit| PjRtBuffer { lit }).collect()])
     }
 
     /// Execute over device-resident buffers (the `DeviceStore` hot path).
@@ -238,9 +357,71 @@ impl PjRtLoadedExecutable {
     /// `untuple_result` in the execute options to match.
     pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
         &self,
-        _args: &[T],
+        args: &[T],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(Error::StubBackend("PjRtLoadedExecutable::execute_b"))
+        let lits: Vec<Literal> =
+            args.iter().map(|a| a.borrow().lit.clone()).collect();
+        let out = self.run(&lits, "PjRtLoadedExecutable::execute_b")?;
+        Ok(vec![out.into_iter().map(|lit| PjRtBuffer { lit }).collect()])
+    }
+
+    /// Execute K unrolled copies of the step program as one dispatch.
+    /// Returns one result vector per step (outer = steps, inner = the
+    /// untupled results of that step), all still device-resident; the
+    /// caller decides which step's results to wire back (prefix commit)
+    /// and which per-step scalars to download.
+    pub fn execute_fused(
+        &self,
+        args: &[FusedArg],
+        k: usize,
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if k == 0 {
+            return Err(Error::Invalid("execute_fused: k == 0".into()));
+        }
+        for (i, a) in args.iter().enumerate() {
+            if let FusedArg::PerStep(v) = a {
+                if v.len() != k {
+                    return Err(Error::Invalid(format!(
+                        "execute_fused: per-step arg {i} has {} \
+                         entries for k={k}",
+                        v.len()
+                    )));
+                }
+            }
+        }
+        let mut steps: Vec<Vec<PjRtBuffer>> = Vec::with_capacity(k);
+        for s in 0..k {
+            let mut lits = Vec::with_capacity(args.len());
+            for (i, a) in args.iter().enumerate() {
+                let lit = match a {
+                    FusedArg::Fixed(b) => b.lit.clone(),
+                    FusedArg::Stacked(b) => b.lit.slice_outer(s, k)?,
+                    FusedArg::PerStep(v) => v[s].lit.clone(),
+                    FusedArg::Carried { init, from } => {
+                        if s == 0 {
+                            init.lit.clone()
+                        } else {
+                            let prev = &steps[s - 1];
+                            let b = prev.get(*from).ok_or_else(|| {
+                                Error::Invalid(format!(
+                                    "execute_fused: carried arg {i} reads \
+                                     result {from}, program has {}",
+                                    prev.len()
+                                ))
+                            })?;
+                            b.lit.clone()
+                        }
+                    }
+                };
+                lits.push(lit);
+            }
+            let out =
+                self.run(&lits, "PjRtLoadedExecutable::execute_fused")?;
+            steps.push(
+                out.into_iter().map(|lit| PjRtBuffer { lit }).collect(),
+            );
+        }
+        Ok(steps)
     }
 }
 
@@ -301,8 +482,143 @@ mod tests {
         let client = PjRtClient::cpu().unwrap();
         let lit = Literal::vec1(&[7i32]);
         let buf = client.buffer_from_host_literal(None, &lit).unwrap();
-        let exe = PjRtLoadedExecutable;
+        let exe = PjRtLoadedExecutable::stub();
         let err = exe.execute_b(&[&buf]).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn host_fn_execute_b_runs() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = PjRtLoadedExecutable::from_host_fn(1, |args| {
+            let a = args[0].to_vec::<f32>()?;
+            let b = args[1].to_vec::<f32>()?;
+            let sum: Vec<f32> =
+                a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            Ok(vec![Literal::vec1(&sum)])
+        });
+        let a = client
+            .buffer_from_host_literal(None, &Literal::vec1(&[1.0f32, 2.0]))
+            .unwrap();
+        let b = client
+            .buffer_from_host_literal(None, &Literal::vec1(&[10.0f32, 20.0]))
+            .unwrap();
+        let mut out = exe.execute_b(&[&a, &b]).unwrap();
+        assert_eq!(out.len(), 1);
+        let res = out.remove(0);
+        assert_eq!(res.len(), 1);
+        let lit = res[0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn host_fn_result_count_is_checked() {
+        let exe = PjRtLoadedExecutable::from_host_fn(2, |_| {
+            Ok(vec![Literal::vec1(&[0.0f32])])
+        });
+        let err = exe.execute(&[Literal::vec1(&[0.0f32])]).unwrap_err();
+        assert!(err.to_string().contains("declared 2"));
+    }
+
+    #[test]
+    fn fused_carried_chains_results_across_steps() {
+        // step program: (state, delta) -> [state + delta, state]
+        let exe = PjRtLoadedExecutable::from_host_fn(2, |args| {
+            let s = args[0].to_vec::<f32>()?[0];
+            let d = args[1].to_vec::<f32>()?[0];
+            Ok(vec![Literal::vec1(&[s + d]), Literal::vec1(&[s])])
+        });
+        let client = PjRtClient::cpu().unwrap();
+        let init = Arc::new(
+            client
+                .buffer_from_host_literal(None, &Literal::vec1(&[100.0f32]))
+                .unwrap(),
+        );
+        let delta = Arc::new(
+            client
+                .buffer_from_host_literal(None, &Literal::vec1(&[1.0f32]))
+                .unwrap(),
+        );
+        let args = [
+            FusedArg::Carried { init, from: 0 },
+            FusedArg::Fixed(delta),
+        ];
+        let steps = exe.execute_fused(&args, 4).unwrap();
+        assert_eq!(steps.len(), 4);
+        let states: Vec<f32> = steps
+            .iter()
+            .map(|r| {
+                r[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0]
+            })
+            .collect();
+        assert_eq!(states, vec![101.0, 102.0, 103.0, 104.0]);
+        // result 1 echoes the *input* state, proving step i read step
+        // i-1's result 0 (not the init buffer)
+        let echo = steps[3][1]
+            .to_literal_sync()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap()[0];
+        assert_eq!(echo, 103.0);
+    }
+
+    #[test]
+    fn fused_stacked_slices_per_step() {
+        // step program: lr -> [lr * 10]; lr arrives stacked [k]
+        let exe = PjRtLoadedExecutable::from_host_fn(1, |args| {
+            let lr = args[0].to_vec::<f32>()?[0];
+            Ok(vec![Literal::vec1(&[lr * 10.0])])
+        });
+        let client = PjRtClient::cpu().unwrap();
+        let stacked = Arc::new(
+            client
+                .buffer_from_host_literal(
+                    None,
+                    &Literal::vec1(&[0.1f32, 0.2, 0.3])
+                        .reshape(&[3])
+                        .unwrap(),
+                )
+                .unwrap(),
+        );
+        let steps = exe
+            .execute_fused(&[FusedArg::Stacked(stacked)], 3)
+            .unwrap();
+        let out: Vec<f32> = steps
+            .iter()
+            .map(|r| {
+                r[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap()[0]
+            })
+            .collect();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn fused_rejects_bad_shapes() {
+        let exe = PjRtLoadedExecutable::from_host_fn(1, |_| {
+            Ok(vec![Literal::vec1(&[0.0f32])])
+        });
+        let client = PjRtClient::cpu().unwrap();
+        let one = Arc::new(
+            client
+                .buffer_from_host_literal(None, &Literal::vec1(&[0.0f32]))
+                .unwrap(),
+        );
+        // per-step list length must equal k
+        let err = exe
+            .execute_fused(&[FusedArg::PerStep(vec![one.clone()])], 2)
+            .unwrap_err();
+        assert!(err.to_string().contains("per-step"));
+        // stacked leading axis must equal k
+        let err = exe
+            .execute_fused(&[FusedArg::Stacked(one.clone())], 2)
+            .unwrap_err();
+        assert!(err.to_string().contains("stacked"));
+        // k == 0 is rejected
+        assert!(exe.execute_fused(&[], 0).is_err());
+        // a stub executable still reports the backend as missing
+        let err = PjRtLoadedExecutable::stub()
+            .execute_fused(&[FusedArg::Fixed(one)], 1)
+            .unwrap_err();
         assert!(err.to_string().contains("stub"));
     }
 
