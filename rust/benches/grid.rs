@@ -17,6 +17,7 @@ use genie::coordinator::{
     teacher_cached, Metrics, RunConfig,
 };
 use genie::data::Dataset;
+use genie::exec::Parallelism;
 use genie::grid::{self, AxisValue, GridOpts, GridPlan, RunGrid};
 use genie::runtime::{Manifest, ModelRt, Runtime};
 use genie::testutil::{bench_secs, report};
@@ -105,6 +106,57 @@ fn main() {
         std::hint::black_box(plan.render(&manifests, &cache, None));
     });
     report("grid/dry_run_render", dry_secs);
+
+    // ---- wave vs dataflow on a heterogeneous stage DAG ---------------
+    // One 200ms source plus three independent 10-deep chains of 15ms
+    // nodes (pure sleeps — runs without artifacts). Wave barriers hold
+    // every chain rank behind the slowest node of its wave, so the long
+    // source stalls all three chains (~335ms at 4 workers); the
+    // dataflow ready queue drains the chains beside it (~200ms).
+    let (chains, depth) = (3usize, 10usize);
+    let n = 1 + chains * depth;
+    let mut deps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut ms = vec![15u64; n];
+    ms[0] = 200;
+    for c in 0..chains {
+        for j in 1..depth {
+            let id = 1 + c * depth + j;
+            deps[id] = vec![id - 1];
+        }
+    }
+    let par = Parallelism::new(4);
+    let sleep_job = |i: usize| {
+        std::thread::sleep(std::time::Duration::from_millis(ms[i]));
+    };
+
+    let t0 = std::time::Instant::now();
+    for wave in &genie::exec::waves(&deps) {
+        let jobs: Vec<_> = wave
+            .iter()
+            .map(|&i| move || -> anyhow::Result<()> { Ok(sleep_job(i)) })
+            .collect();
+        genie::exec::run_jobs(par, jobs).unwrap();
+    }
+    let wave_secs = t0.elapsed().as_secs_f64();
+    report("grid/sched_wave_w4", wave_secs);
+
+    let t0 = std::time::Instant::now();
+    let prio = genie::exec::critical_path(&deps);
+    let (_nodes, dag_rep) =
+        genie::exec::run_dag(par, &deps, &prio, |i| (sleep_job(i), true));
+    let dataflow_secs = t0.elapsed().as_secs_f64();
+    let dataflow_util = dag_rep.pool.utilization();
+    report("grid/sched_dataflow_w4", dataflow_secs);
+    println!(
+        "sched: dataflow {dataflow_secs:.3}s vs wave {wave_secs:.3}s \
+         ({:.2}x; dataflow utilization {dataflow_util:.2})",
+        wave_secs / dataflow_secs.max(1e-9)
+    );
+    assert!(
+        dataflow_secs < wave_secs,
+        "dataflow ({dataflow_secs:.3}s) must beat wave barriers \
+         ({wave_secs:.3}s) on the heterogeneous DAG at workers=4"
+    );
 
     // ---- grid vs sequential wall clock (needs artifacts + PJRT) ------
     let mut seq_w1 = -1.0f64;
@@ -215,4 +267,14 @@ fn main() {
     );
     std::fs::write("BENCH_grid.json", json).unwrap();
     println!("wrote BENCH_grid.json");
+
+    let sched_json = format!(
+        "{{\n  \"wave_w4_secs\": {wave_secs:.4},\n  \
+         \"dataflow_w4_secs\": {dataflow_secs:.4},\n  \
+         \"speedup\": {:.3},\n  \
+         \"dataflow_utilization\": {dataflow_util:.4}\n}}\n",
+        wave_secs / dataflow_secs.max(1e-9)
+    );
+    std::fs::write("BENCH_sched.json", sched_json).unwrap();
+    println!("wrote BENCH_sched.json");
 }

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::exec::Parallelism;
+use crate::exec::{Parallelism, Sched};
 use crate::precision::{validate_bits, Granularity, Policy};
 use crate::synthesis::Engine;
 
@@ -46,6 +46,11 @@ pub struct RunConfig {
     /// deterministic backoff base between attempts, milliseconds
     /// (`retry.backoff_ms`): attempt k sleeps `(k-1) * backoff_ms`
     pub retry_backoff_ms: u64,
+    /// grid scheduler (`sched=wave|dataflow`, DESIGN.md §15): both are
+    /// bit-identical in outputs; `wave` keeps the barriered reference
+    /// path. Default `dataflow`, overridable by `GENIE_SCHED` (the CI
+    /// matrix knob)
+    pub sched: Sched,
 }
 
 impl Default for RunConfig {
@@ -67,6 +72,7 @@ impl Default for RunConfig {
             json: None,
             retry_max: 2,
             retry_backoff_ms: 25,
+            sched: Sched::from_env().unwrap_or_default(),
         }
     }
 }
@@ -123,6 +129,13 @@ impl RunConfig {
                 self.retry_max = v;
             }
             "retry.backoff_ms" => self.retry_backoff_ms = p!(u64),
+            "sched" | "exec.sched" => {
+                self.sched = Sched::parse(value).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "bad value '{value}' for {key}: want wave|dataflow"
+                    )
+                })?
+            }
             "wbits" | "quant.wbits" => {
                 self.quant.wbits = validate_bits("wbits", p!(u32))?
             }
@@ -305,6 +318,24 @@ mod tests {
         c.set("retries", "1").unwrap();
         assert_eq!(c.retry_max, 1);
         assert!(c.set("retry.max", "0").is_err());
+    }
+
+    #[test]
+    fn sched_key_applies() {
+        let mut c = RunConfig::default();
+        // default comes from GENIE_SCHED when set (the CI matrix legs
+        // pin it); unset, the work-conserving scheduler is the default
+        if std::env::var("GENIE_SCHED").map_or(true, |v| v.is_empty()) {
+            assert_eq!(c.sched, Sched::Dataflow);
+        }
+        c.set("sched", "wave").unwrap();
+        assert_eq!(c.sched, Sched::Wave);
+        // dotted alias, same field
+        c.set("exec.sched", "dataflow").unwrap();
+        assert_eq!(c.sched, Sched::Dataflow);
+        assert!(c.set("sched", "eager").is_err());
+        assert_eq!(Sched::parse("wave").unwrap().as_str(), "wave");
+        assert_eq!(Sched::parse("dataflow").unwrap().as_str(), "dataflow");
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::exec::PoolReport;
+use crate::exec::{DagReport, PoolReport};
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -89,6 +89,33 @@ impl Metrics {
                 &format!("{phase}/pool/panics"),
                 r.workers,
                 r.panics as f32,
+            );
+        }
+    }
+
+    /// Record a dataflow-scheduler run (DESIGN.md §15) on top of its
+    /// [`record_pool`](Self::record_pool) accounting:
+    /// `<phase>/sched/utilization` and `<phase>/sched/ready_depth`
+    /// (step = worker count, the x-axis of a scaling curve), plus a
+    /// per-node `<phase>/sched/queue_wait_secs` series (step = node id,
+    /// seconds between a node becoming ready and a worker picking it
+    /// up — skipped nodes read 0).
+    pub fn record_sched(&mut self, phase: &str, r: &DagReport) {
+        self.log(
+            &format!("{phase}/sched/utilization"),
+            r.pool.workers,
+            r.pool.utilization() as f32,
+        );
+        self.log(
+            &format!("{phase}/sched/ready_depth"),
+            r.pool.workers,
+            r.max_ready_depth as f32,
+        );
+        for (i, secs) in r.queue_wait_secs.iter().enumerate() {
+            self.log(
+                &format!("{phase}/sched/queue_wait_secs"),
+                i,
+                *secs as f32,
             );
         }
     }
@@ -197,6 +224,17 @@ impl Metrics {
         rate
     }
 
+    /// Every series in insertion order — the scheduler-equivalence
+    /// property test (`tests/faults.rs`) enumerates these to compare
+    /// wave vs dataflow metrics without knowing the names up front.
+    pub fn series_iter(
+        &self,
+    ) -> impl Iterator<Item = (&str, &[(usize, f32)])> {
+        self.series
+            .iter()
+            .map(|(name, rows)| (name.as_str(), rows.as_slice()))
+    }
+
     /// Flush every series to `<run_dir>/<name>.csv` (step,value rows).
     pub fn flush(&self) -> Result<()> {
         let Some(dir) = &self.run_dir else { return Ok(()) };
@@ -263,6 +301,41 @@ mod tests {
         assert_eq!(m.last("distill/pool/steals"), Some(2.0));
         let u = m.last("distill/pool/utilization").unwrap();
         assert!((u - 0.7).abs() < 1e-6, "utilization {u}");
+    }
+
+    #[test]
+    fn record_sched_logs_utilization_depth_and_waits() {
+        let mut m = Metrics::new();
+        let r = DagReport {
+            pool: PoolReport {
+                workers: 4,
+                jobs: 3,
+                wall_secs: 2.0,
+                worker_busy_secs: vec![2.0, 2.0, 2.0, 2.0],
+                worker_jobs: vec![1, 1, 1, 0],
+                steals: 0,
+                panics: 0,
+            },
+            max_ready_depth: 5,
+            queue_wait_secs: vec![0.0, 0.25, 0.5],
+        };
+        m.record_sched("grid", &r);
+        assert_eq!(m.last("grid/sched/utilization"), Some(1.0));
+        assert_eq!(m.last("grid/sched/ready_depth"), Some(5.0));
+        let waits = m.series("grid/sched/queue_wait_secs").unwrap();
+        assert_eq!(waits.len(), 3);
+        assert_eq!(waits[1], (1, 0.25));
+    }
+
+    #[test]
+    fn series_iter_enumerates_in_insertion_order() {
+        let mut m = Metrics::new();
+        m.log("b", 1, 2.0);
+        m.log("a", 1, 1.0);
+        m.log("b", 2, 3.0);
+        let got: Vec<(&str, usize)> =
+            m.series_iter().map(|(n, rows)| (n, rows.len())).collect();
+        assert_eq!(got, vec![("b", 2), ("a", 1)]);
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Dataflow DAG executor (DESIGN.md §15): a dependency-counting ready
+//! queue over the exec pool's worker threads, replacing wave barriers
+//! with work-conserving scheduling.
+//!
+//! [`run_dag`] dispatches every node of a dependency graph the moment
+//! its in-degree drops to zero: completions decrement their dependents
+//! in place, and newly ready nodes enter a priority queue ordered by
+//! critical-path length ([`critical_path`]) so the long-pole chain is
+//! always draining while short chains fill the remaining workers. A
+//! wave scheduler ([`super::waves`]) would barrier after each
+//! topological rank — one slow node idles every early finisher; here a
+//! worker that finishes a node immediately pulls the highest-priority
+//! ready node, whatever rank it belongs to.
+//!
+//! Determinism contract: `run_dag` affects *scheduling only*. Results
+//! come back indexed by node (submission) id, a node's job runs exactly
+//! once with the same inputs whatever the interleaving, and skip
+//! propagation is a pure function of the dependency lists — so a caller
+//! that merges products in node-index order (the grid executor,
+//! DESIGN.md §15) is bit-identical to its wave-scheduled self at any
+//! worker count.
+//!
+//! Failure containment mirrors the pool: a panicking job is caught
+//! ([`DagNode::Panicked`]) and treated as a failed node — its
+//! dependents are never dispatched ([`DagNode::Skipped`], recording the
+//! first bad dependency in declaration order), while independent
+//! subgraphs keep executing.
+
+use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use super::pool::{lock_clean, panic_message};
+use super::{waves, Parallelism, PoolReport};
+
+/// Self-inclusive longest path (in nodes) from each node to a sink of
+/// its dependent subgraph: a sink scores 1, a node scores
+/// `1 + max(score of its dependents)`. Used as the ready-queue priority
+/// — the node with the longest chain of work hanging off it dispatches
+/// first — and reported by `--dry-run` as each node's critical-path
+/// depth. The maximum over all nodes equals the DAG's wave count.
+///
+/// Panics on cycles or out-of-range deps (delegates validation to
+/// [`waves`]); programmer error, like the wave scheduler.
+pub fn critical_path(deps: &[Vec<usize>]) -> Vec<usize> {
+    let by_wave = waves(deps);
+    let n = deps.len();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            dependents[d].push(i);
+        }
+    }
+    // dependents sit in strictly later waves, so a reverse wave sweep
+    // resolves every node's score before its dependencies ask for it
+    let mut cp = vec![1usize; n];
+    for wave in by_wave.iter().rev() {
+        for &i in wave {
+            for &j in &dependents[i] {
+                cp[i] = cp[i].max(1 + cp[j]);
+            }
+        }
+    }
+    cp
+}
+
+/// Terminal state of one DAG node after [`run_dag`].
+#[derive(Debug)]
+pub enum DagNode<T> {
+    /// The job was dispatched and returned; `ok` is the job's own
+    /// success verdict (dependents of a not-ok node are skipped).
+    Ran { out: T, ok: bool },
+    /// The job panicked outside any containment of its own; treated as
+    /// not-ok for dependency purposes.
+    Panicked(String),
+    /// Never dispatched: dependency `dep` (the first not-ok dependency
+    /// in the node's declaration order) failed, panicked or was itself
+    /// skipped.
+    Skipped { dep: usize },
+}
+
+/// Scheduling accounting for one [`run_dag`] call.
+#[derive(Debug, Clone, Default)]
+pub struct DagReport {
+    /// Worker/busy/panic accounting in the same shape as the batch
+    /// pool, so [`Metrics::record_pool`](crate::coordinator::Metrics::record_pool)
+    /// applies unchanged. `steals` is always 0 (a shared ready queue
+    /// has nothing to steal).
+    pub pool: PoolReport,
+    /// Peak ready-queue depth: how many dispatchable nodes were waiting
+    /// at the worst moment (scheduling pressure; 0-1 means the DAG
+    /// never had slack to reorder).
+    pub max_ready_depth: usize,
+    /// Per-node seconds between becoming ready and being picked up by a
+    /// worker (0 for skipped nodes).
+    pub queue_wait_secs: Vec<f64>,
+}
+
+/// Ready-queue entry: max-heap on priority, ties broken toward the
+/// lowest node index (deterministic pop order for equal chains).
+#[derive(PartialEq, Eq)]
+struct Ready {
+    prio: usize,
+    idx: usize,
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.prio
+            .cmp(&other.prio)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Shared scheduler state, guarded by one mutex (critical sections are
+/// O(dependents) pointer work; the jobs themselves run unlocked).
+struct DagState<T> {
+    indeg: Vec<usize>,
+    ready: BinaryHeap<Ready>,
+    ready_at: Vec<Option<Instant>>,
+    nodes: Vec<Option<DagNode<T>>>,
+    /// Resolved success per node (`None` = unresolved).
+    ok: Vec<Option<bool>>,
+    /// Nodes finalized (ran, panicked or skipped).
+    done: usize,
+    /// Jobs currently executing on some worker.
+    inflight: usize,
+    max_ready_depth: usize,
+    queue_wait_secs: Vec<f64>,
+    panics: usize,
+}
+
+impl<T> DagState<T> {
+    fn push_ready(&mut self, idx: usize, prio: &[usize]) {
+        self.ready.push(Ready { prio: prio[idx], idx });
+        self.ready_at[idx] = Some(Instant::now());
+        self.max_ready_depth = self.max_ready_depth.max(self.ready.len());
+    }
+
+    /// Finalize node `i` and cascade: dependents whose in-degree hits
+    /// zero either become ready or — if any dependency resolved not-ok
+    /// — are skipped in place, which cascades further down the chain
+    /// without ever dispatching a job.
+    fn settle(
+        &mut self,
+        i: usize,
+        node: DagNode<T>,
+        ok: bool,
+        deps: &[Vec<usize>],
+        dependents: &[Vec<usize>],
+        prio: &[usize],
+    ) {
+        self.nodes[i] = Some(node);
+        self.ok[i] = Some(ok);
+        self.done += 1;
+        let mut work = vec![i];
+        while let Some(c) = work.pop() {
+            for &t in &dependents[c] {
+                self.indeg[t] -= 1;
+                if self.indeg[t] > 0 {
+                    continue;
+                }
+                // every dep of t resolved: first not-ok dep (in the
+                // node's own declaration order) decides a skip — the
+                // same dep the wave scheduler's pre-dispatch scan finds
+                match deps[t].iter().find(|&&d| self.ok[d] == Some(false)) {
+                    Some(&bad) => {
+                        self.nodes[t] = Some(DagNode::Skipped { dep: bad });
+                        self.ok[t] = Some(false);
+                        self.done += 1;
+                        work.push(t);
+                    }
+                    None => self.push_ready(t, prio),
+                }
+            }
+        }
+    }
+}
+
+/// Execute a dependency DAG with work-conserving dataflow scheduling.
+///
+/// `run(i)` is called exactly once per non-skipped node, only after
+/// every dependency of `i` resolved ok; it returns the node's product
+/// plus its success verdict (a stage whose failure should quarantine
+/// dependents returns `false` while still carrying its output — the
+/// grid's metrics survive failed stages this way). Results come back
+/// indexed by node id. `priority` orders the ready queue (higher
+/// first); pass [`critical_path`] for longest-chain-first.
+///
+/// Workers: `par.resolve_for(deps.len())` threads share the ready
+/// queue; `<= 1` short-circuits to an in-thread loop with identical
+/// pop order. Panics (in `run`) are caught per node; cycles and
+/// out-of-range deps panic up front (programmer error, like [`waves`]).
+pub fn run_dag<T, F>(
+    par: Parallelism,
+    deps: &[Vec<usize>],
+    priority: &[usize],
+    run: F,
+) -> (Vec<DagNode<T>>, DagReport)
+where
+    T: Send,
+    F: Fn(usize) -> (T, bool) + Sync,
+{
+    let n = deps.len();
+    assert_eq!(priority.len(), n, "run_dag: priority.len() != deps.len()");
+    // validates deps (in-range, acyclic) before any thread spawns
+    let _ = waves(deps);
+
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut indeg = vec![0usize; n];
+    for (i, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            dependents[d].push(i);
+            indeg[i] += 1;
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut state = DagState {
+        indeg,
+        ready: BinaryHeap::new(),
+        ready_at: vec![None; n],
+        nodes: (0..n).map(|_| None).collect(),
+        ok: vec![None; n],
+        done: 0,
+        inflight: 0,
+        max_ready_depth: 0,
+        queue_wait_secs: vec![0.0; n],
+        panics: 0,
+    };
+    for i in 0..n {
+        if state.indeg[i] == 0 {
+            state.push_ready(i, priority);
+        }
+    }
+
+    let workers = par.resolve_for(n);
+    let (mut worker_busy_secs, mut worker_jobs) =
+        (vec![0.0f64; workers], vec![0usize; workers]);
+
+    if workers <= 1 {
+        // serial fast path: same heap, same pop order, no threads
+        let (mut busy, mut count) = (0.0f64, 0usize);
+        while let Some(Ready { idx, .. }) = state.ready.pop() {
+            if let Some(t) = state.ready_at[idx].take() {
+                state.queue_wait_secs[idx] = t.elapsed().as_secs_f64();
+            }
+            let tj = Instant::now();
+            let caught = catch_unwind(AssertUnwindSafe(|| run(idx)));
+            busy += tj.elapsed().as_secs_f64();
+            count += 1;
+            match caught {
+                Ok((out, ok)) => state.settle(
+                    idx,
+                    DagNode::Ran { out, ok },
+                    ok,
+                    deps,
+                    &dependents,
+                    priority,
+                ),
+                Err(p) => {
+                    state.panics += 1;
+                    state.settle(
+                        idx,
+                        DagNode::Panicked(panic_message(p.as_ref())),
+                        false,
+                        deps,
+                        &dependents,
+                        priority,
+                    );
+                }
+            }
+        }
+        worker_busy_secs[0] = busy;
+        worker_jobs[0] = count;
+    } else {
+        let state_mx = Mutex::new(state);
+        let cvar = Condvar::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let state_mx = &state_mx;
+                    let cvar = &cvar;
+                    let run = &run;
+                    s.spawn(move || {
+                        let (mut busy, mut count) = (0.0f64, 0usize);
+                        let mut st = lock_clean(state_mx);
+                        loop {
+                            if st.done >= n {
+                                break;
+                            }
+                            let Some(Ready { idx, .. }) = st.ready.pop()
+                            else {
+                                // done < n and nothing ready: some
+                                // in-flight job must settle first (the
+                                // DAG is acyclic, so one always exists)
+                                st = cvar
+                                    .wait(st)
+                                    .unwrap_or_else(|p| p.into_inner());
+                                continue;
+                            };
+                            if let Some(t) = st.ready_at[idx].take() {
+                                st.queue_wait_secs[idx] =
+                                    t.elapsed().as_secs_f64();
+                            }
+                            st.inflight += 1;
+                            drop(st);
+                            let tj = Instant::now();
+                            let caught =
+                                catch_unwind(AssertUnwindSafe(|| run(idx)));
+                            busy += tj.elapsed().as_secs_f64();
+                            count += 1;
+                            st = lock_clean(state_mx);
+                            st.inflight -= 1;
+                            match caught {
+                                Ok((out, ok)) => st.settle(
+                                    idx,
+                                    DagNode::Ran { out, ok },
+                                    ok,
+                                    deps,
+                                    &dependents,
+                                    priority,
+                                ),
+                                Err(p) => {
+                                    st.panics += 1;
+                                    st.settle(
+                                        idx,
+                                        DagNode::Panicked(panic_message(
+                                            p.as_ref(),
+                                        )),
+                                        false,
+                                        deps,
+                                        &dependents,
+                                        priority,
+                                    );
+                                }
+                            }
+                            // settling may have readied several nodes
+                            // and/or finished the run: wake everyone
+                            cvar.notify_all();
+                        }
+                        drop(st);
+                        (busy, count)
+                    })
+                })
+                .collect();
+            for (w, h) in handles.into_iter().enumerate() {
+                let (busy, count) = h.join().unwrap_or((0.0, 0));
+                worker_busy_secs[w] = busy;
+                worker_jobs[w] = count;
+            }
+        });
+        state = state_mx.into_inner().unwrap_or_else(|p| p.into_inner());
+    }
+
+    let dispatched: usize = worker_jobs.iter().sum();
+    let report = DagReport {
+        pool: PoolReport {
+            workers,
+            jobs: dispatched,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            worker_busy_secs,
+            worker_jobs,
+            steals: 0,
+            panics: state.panics,
+        },
+        max_ready_depth: state.max_ready_depth,
+        queue_wait_secs: state.queue_wait_secs,
+    };
+    let nodes = state
+        .nodes
+        .into_iter()
+        .enumerate()
+        .map(|(i, n)| n.unwrap_or_else(|| panic!("run_dag: node {i} lost")))
+        .collect();
+    (nodes, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{chain_deps, independent_deps};
+
+    fn ran_ok<T>(n: &DagNode<T>) -> Option<&T> {
+        match n {
+            DagNode::Ran { out, ok: true } => Some(out),
+            _ => None,
+        }
+    }
+
+    #[test]
+    fn critical_path_chain_and_independent() {
+        assert_eq!(critical_path(&chain_deps(4)), vec![4, 3, 2, 1]);
+        assert_eq!(critical_path(&independent_deps(3)), vec![1, 1, 1]);
+        assert_eq!(critical_path(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn critical_path_diamond_takes_longest_branch() {
+        // 0 -> {1, 2}; 2 -> 3; {1, 3} -> 4
+        let deps = vec![
+            vec![],
+            vec![0],
+            vec![0],
+            vec![2],
+            vec![1, 3],
+        ];
+        // 0 sees the 0-2-3-4 chain (4 nodes); 1 only reaches 4
+        assert_eq!(critical_path(&deps), vec![4, 2, 3, 2, 1]);
+    }
+
+    #[test]
+    fn run_dag_matches_submission_order_at_any_worker_count() {
+        let deps = vec![
+            vec![],
+            vec![0],
+            vec![0],
+            vec![1, 2],
+            vec![],
+            vec![4],
+        ];
+        let prio = critical_path(&deps);
+        for workers in [1, 2, 4, 8] {
+            let (nodes, report) = run_dag(
+                Parallelism::new(workers),
+                &deps,
+                &prio,
+                |i| (i * i, true),
+            );
+            let got: Vec<usize> =
+                nodes.iter().map(|n| *ran_ok(n).unwrap()).collect();
+            assert_eq!(got, vec![0, 1, 4, 9, 16, 25], "workers={workers}");
+            assert_eq!(report.pool.jobs, 6);
+            assert_eq!(report.pool.workers, workers.min(6));
+            assert_eq!(report.queue_wait_secs.len(), 6);
+            assert!(report.max_ready_depth >= 1);
+        }
+    }
+
+    #[test]
+    fn serial_pop_order_is_longest_chain_first_then_lowest_index() {
+        // two sources: node 0 heads a 3-chain (0->1->2), node 3 is a
+        // lone sink; equal-priority nodes pop lowest-index first
+        let deps = vec![vec![], vec![0], vec![1], vec![], vec![]];
+        let prio = critical_path(&deps);
+        assert_eq!(prio, vec![3, 2, 1, 1, 1]);
+        let order = Mutex::new(Vec::new());
+        let (_, _) = run_dag(Parallelism::SERIAL, &deps, &prio, |i| {
+            lock_clean(&order).push(i);
+            ((), true)
+        });
+        // 0 first (prio 3); settling it readies 1 (prio 2) which beats
+        // the prio-1 sources; settling 1 readies 2, which ties 3 and 4
+        // at prio 1 and wins the lowest-index tiebreak
+        assert_eq!(*lock_clean(&order), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn failed_node_skips_exactly_its_dependents() {
+        // 0 fails; 1 depends on 0 (skipped); 2 independent (runs);
+        // 3 depends on 1 (skip cascades); 4 depends on 2 (runs)
+        let deps = vec![vec![], vec![0], vec![], vec![1], vec![2]];
+        let prio = critical_path(&deps);
+        for workers in [1, 4] {
+            let (nodes, report) =
+                run_dag(Parallelism::new(workers), &deps, &prio, |i| {
+                    (i, i != 0)
+                });
+            assert!(
+                matches!(nodes[0], DagNode::Ran { ok: false, .. }),
+                "workers={workers}"
+            );
+            assert!(matches!(nodes[1], DagNode::Skipped { dep: 0 }));
+            assert!(ran_ok(&nodes[2]).is_some());
+            assert!(
+                matches!(nodes[3], DagNode::Skipped { dep: 1 }),
+                "skip chains propagate through skipped nodes"
+            );
+            assert!(ran_ok(&nodes[4]).is_some());
+            assert_eq!(report.pool.jobs, 3, "skipped nodes never dispatch");
+        }
+    }
+
+    #[test]
+    fn skip_reports_first_bad_dep_in_declaration_order() {
+        // node 2 declares deps [0, 1]; both fail — dep 0 must win
+        // whatever order they settle in
+        let deps = vec![vec![], vec![], vec![0, 1]];
+        let prio = critical_path(&deps);
+        for _ in 0..8 {
+            let (nodes, _) =
+                run_dag(Parallelism::new(2), &deps, &prio, |i| (i, false));
+            assert!(matches!(nodes[2], DagNode::Skipped { dep: 0 }));
+        }
+    }
+
+    #[test]
+    fn panicking_job_is_contained_and_fails_dependents() {
+        let deps = vec![vec![], vec![0], vec![]];
+        let prio = critical_path(&deps);
+        for workers in [1, 4] {
+            let (nodes, report) =
+                run_dag(Parallelism::new(workers), &deps, &prio, |i| {
+                    if i == 0 {
+                        panic!("boom node {i}");
+                    }
+                    (i, true)
+                });
+            match &nodes[0] {
+                DagNode::Panicked(msg) => {
+                    assert!(msg.contains("boom node 0"), "{msg}")
+                }
+                other => panic!("want Panicked, got {other:?}"),
+            }
+            assert!(matches!(nodes[1], DagNode::Skipped { dep: 0 }));
+            assert!(ran_ok(&nodes[2]).is_some());
+            assert_eq!(report.pool.panics, 1);
+        }
+    }
+
+    #[test]
+    fn empty_dag_is_fine() {
+        let (nodes, report) = run_dag(
+            Parallelism::new(4),
+            &[],
+            &[],
+            |_| ((), true),
+        );
+        assert!(nodes.is_empty());
+        assert_eq!(report.pool.jobs, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cycle_panics_before_dispatch() {
+        let deps = vec![vec![1], vec![0]];
+        let _ = run_dag(Parallelism::new(2), &deps, &[1, 1], |i| (i, true));
+    }
+
+    #[test]
+    fn uneven_durations_overlap_across_ranks() {
+        // wave scheduling of this DAG takes ~slow + 3 * fast (the slow
+        // source barriers rank 0); dataflow lets the fast chain drain
+        // while the slow node runs. Node 0: slow source. Nodes 1-3: a
+        // fast chain. With 2 workers the chain must finish without
+        // waiting for node 0.
+        let deps = vec![vec![], vec![], vec![1], vec![2]];
+        let prio = critical_path(&deps);
+        let t0 = Instant::now();
+        let (nodes, report) =
+            run_dag(Parallelism::new(2), &deps, &prio, |i| {
+                let ms = if i == 0 { 120 } else { 10 };
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                (i, true)
+            });
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(nodes.len(), 4);
+        // wave execution would need >= 150ms (120 + 3*10); dataflow
+        // needs ~120ms. Allow generous scheduling slack.
+        assert!(
+            wall < 0.40,
+            "dataflow must overlap the chain with the slow node: {wall}s"
+        );
+        assert!(report.pool.utilization() > 0.0);
+    }
+}

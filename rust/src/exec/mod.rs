@@ -17,11 +17,57 @@
 //! reproduces `workers=1` exactly (tested in `tests/exec.rs` and, over
 //! real artifacts, in `tests/integration.rs`).
 
+pub mod dag;
 pub mod pool;
 pub mod schedule;
 
+pub use dag::{critical_path, run_dag, DagNode, DagReport};
 pub use pool::{panic_message, run_jobs, PoolReport};
 pub use schedule::{chain_deps, independent_deps, waves};
+
+/// Grid scheduler selection (DESIGN.md §15): `Wave` is the barriered
+/// reference implementation, `Dataflow` the work-conserving ready-queue
+/// scheduler. Both are bit-identical in outputs; they differ only in
+/// wall-clock shape.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum Sched {
+    /// Topological waves with a full barrier between ranks.
+    Wave,
+    /// Dependency-counting ready queue, critical-path-first dispatch.
+    #[default]
+    Dataflow,
+}
+
+impl Sched {
+    /// Parse a config/env value (`wave` | `dataflow`).
+    pub fn parse(s: &str) -> Option<Sched> {
+        match s {
+            "wave" => Some(Sched::Wave),
+            "dataflow" => Some(Sched::Dataflow),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Sched::Wave => "wave",
+            Sched::Dataflow => "dataflow",
+        }
+    }
+
+    /// Scheduler pinned by `GENIE_SCHED` (the CI matrix knob), or `None`
+    /// when unset/empty. Panics on an unrecognized value — a typo'd CI
+    /// leg should fail loudly, not silently test the default.
+    pub fn from_env() -> Option<Sched> {
+        match std::env::var("GENIE_SCHED") {
+            Ok(v) if v.is_empty() => None,
+            Ok(v) => Some(Sched::parse(&v).unwrap_or_else(|| {
+                panic!("GENIE_SCHED must be wave|dataflow, got {v:?}")
+            })),
+            Err(_) => None,
+        }
+    }
+}
 
 /// Worker-count configuration, threaded from the CLI (`workers=K`)
 /// through [`RunConfig`](crate::coordinator::RunConfig) into every

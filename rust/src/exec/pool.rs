@@ -58,7 +58,7 @@ fn run_caught<T>(
 /// Poison-proof lock: a mutex poisoned by a panicking thread still
 /// guards valid data here (slots hold plain `Option`s, deques plain
 /// jobs), so recover the guard instead of propagating the poison.
-fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 

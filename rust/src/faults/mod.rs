@@ -9,6 +9,11 @@
 //! ```text
 //! <stage>:<site>:attempt<N>=panic|err    inject at a named check point
 //! <stage>:<site>:*=panic|err             ... on every attempt
+//! <stage>:<site>:attempt<N>=sleep<MS>    delay the check point MS
+//!                                        milliseconds, then succeed —
+//!                                        forces adversarial completion
+//!                                        orders for the scheduler-
+//!                                        equivalence tests (§15)
 //! artifact:corrupt:<key-prefix>          flip a byte in the next cached
 //!                                        artifact whose file stem
 //!                                        (`<kind>_<hexkey>`) starts with
@@ -48,14 +53,28 @@ pub enum FaultKind {
     /// Return an `Err` from the check point — a transient failure the
     /// bounded-retry path recovers from.
     Err,
+    /// Sleep this many milliseconds at the check point, then succeed —
+    /// a pure scheduling perturbation (`sleep<MS>`) that forces
+    /// adversarial completion orders without failing anything, so the
+    /// scheduler-equivalence tests (DESIGN.md §15) can prove the merge
+    /// is completion-order-independent.
+    Delay(u64),
 }
 
 impl FaultKind {
     fn parse(s: &str) -> Result<Self> {
+        if let Some(ms) = s.strip_prefix("sleep") {
+            let ms: u64 = ms.parse().map_err(|e| {
+                anyhow::anyhow!("bad sleep duration '{ms}': {e}")
+            })?;
+            return Ok(FaultKind::Delay(ms));
+        }
         match s {
             "panic" => Ok(FaultKind::Panic),
             "err" | "error" => Ok(FaultKind::Err),
-            other => bail!("unknown fault kind '{other}' (want panic|err)"),
+            other => bail!(
+                "unknown fault kind '{other}' (want panic|err|sleep<MS>)"
+            ),
         }
     }
 
@@ -63,6 +82,7 @@ impl FaultKind {
         match self {
             FaultKind::Panic => "panic",
             FaultKind::Err => "err",
+            FaultKind::Delay(_) => "sleep",
         }
     }
 }
@@ -223,6 +243,8 @@ impl FaultPlan {
                 None => None,
             }
         };
+        // fire outside the lock: a panic must not poison the plan, and
+        // a delay must not serialize other sites' checks
         match fired {
             None => Ok(()),
             Some((FaultKind::Err, n)) => bail!(
@@ -230,6 +252,10 @@ impl FaultPlan {
             ),
             Some((FaultKind::Panic, n)) => {
                 panic!("injected fault: {stage}:{site} attempt {n}")
+            }
+            Some((FaultKind::Delay(ms), _)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
             }
         }
     }
@@ -396,6 +422,28 @@ mod tests {
         assert!(p.check("quantize", "c1").is_err(), "per-site counters");
         assert!(p.check("distill", "c0").is_ok(), "stage must match");
         assert_eq!(p.injected().len(), 2);
+    }
+
+    #[test]
+    fn sleep_kind_delays_then_succeeds() {
+        let p = FaultPlan::parse("quantize:c0:attempt1=sleep40").unwrap();
+        assert_eq!(p.points[0].kind, FaultKind::Delay(40));
+        let t0 = std::time::Instant::now();
+        assert!(p.check("quantize", "c0").is_ok(), "a delay never fails");
+        assert!(
+            t0.elapsed().as_millis() >= 35,
+            "the check point must actually sleep"
+        );
+        // fired on attempt 1 only, and logged
+        let t1 = std::time::Instant::now();
+        assert!(p.check("quantize", "c0").is_ok());
+        assert!(t1.elapsed().as_millis() < 35);
+        assert_eq!(p.injected(), vec![
+            "quantize:c0:attempt1=sleep".to_string()
+        ]);
+        // malformed durations are parse errors
+        assert!(FaultPlan::parse("a:b:*=sleep").is_err());
+        assert!(FaultPlan::parse("a:b:*=sleepfast").is_err());
     }
 
     #[test]

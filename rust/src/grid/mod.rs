@@ -596,6 +596,13 @@ impl GridPlan {
         self.nodes.iter().map(|n| n.deps.clone()).collect()
     }
 
+    /// Per-node critical-path depth (longest chain of nodes hanging off
+    /// each node, self-inclusive) — the dataflow scheduler's dispatch
+    /// priorities (DESIGN.md §15), also reported by `--dry-run`.
+    pub fn critical_depths(&self) -> Vec<usize> {
+        crate::exec::critical_path(&self.deps())
+    }
+
     /// Stage count a naive cell-by-cell execution would run (the dedupe
     /// baseline the dry run reports against).
     pub fn naive_stages(&self) -> usize {
@@ -754,16 +761,20 @@ impl GridPlan {
             pending,
         ));
         let waves = crate::exec::waves(&self.deps());
+        // depth = critical-path length: the dataflow scheduler's
+        // dispatch priority for the node (longest chain first)
+        let depths = self.critical_depths();
         s.push_str(&format!("schedule: {} waves\n", waves.len()));
         for (w, wave) in waves.iter().enumerate() {
             s.push_str(&format!("  wave {w}:\n"));
             for &i in wave {
                 let node = &self.nodes[i];
                 s.push_str(&format!(
-                    "    [{i}] {} ({} cell{}) — {}\n",
+                    "    [{i}] {} ({} cell{}) depth={} — {}\n",
                     node.label,
                     node.cells.len(),
                     if node.cells.len() == 1 { "" } else { "s" },
+                    depths[i],
                     cached[i].as_str(),
                 ));
             }
@@ -1082,5 +1093,42 @@ mod tests {
         // nothing cached under a disabled cache: teacher runs, its
         // dependents are pending on it
         assert!(text.contains("— run"), "{text}");
+        // critical-path depths: the shared teacher heads the longest
+        // chain (teacher→distill→quantize→eval_quant = 4 nodes); evals
+        // are sinks at depth 1
+        assert!(text.contains("depth=4 —"), "{text}");
+        assert!(text.contains("depth=1 —"), "{text}");
+    }
+
+    #[test]
+    fn critical_depths_match_the_stage_chain() {
+        let grid = RunGrid::new().axis(
+            "bits",
+            vec![AxisValue::Bits(4, 4), AxisValue::Bits(2, 4)],
+        );
+        let cells = grid.cells(&base()).unwrap();
+        let plan = GridPlan::build(cells, &manifests(), false).unwrap();
+        let depths = plan.critical_depths();
+        assert_eq!(depths.len(), plan.nodes.len());
+        // the deepest chain equals the wave count
+        let waves = crate::exec::waves(&plan.deps());
+        assert_eq!(
+            depths.iter().copied().max().unwrap_or(0),
+            waves.len()
+        );
+        for c in 0..plan.cells.len() {
+            let t = plan.teacher_of[c];
+            assert_eq!(depths[t], 4, "teacher heads the 4-stage chain");
+            if let Some(e) = plan.evalq_of[c] {
+                assert_eq!(depths[e], 1, "evals are sinks");
+            }
+            // depth decreases strictly down a dependency chain
+            if let (Some(d), Some(q)) =
+                (plan.distill_of[c], plan.quantize_of[c])
+            {
+                assert!(depths[t] > depths[d]);
+                assert!(depths[d] > depths[q]);
+            }
+        }
     }
 }

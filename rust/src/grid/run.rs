@@ -1,21 +1,30 @@
-//! Grid executor (DESIGN.md §11): walk the merged stage DAG in
-//! topological waves, running every ready stage — from *different* runs
-//! — concurrently on the shared exec pool.
+//! Grid executor (DESIGN.md §11, §15): run the merged stage DAG —
+//! stages from *different* runs — concurrently on the shared exec pool,
+//! under one of two schedulers selected by `sched=wave|dataflow`:
+//!
+//! * **dataflow** (default): a dependency-counting ready queue
+//!   ([`crate::exec::run_dag`]) dispatches each node the moment its
+//!   in-degree drops to zero, ordered by critical-path length so the
+//!   long-pole chain never waits — no barriers, no idle workers while
+//!   ready work exists.
+//! * **wave**: the barriered reference implementation — topological
+//!   waves with a full join between ranks.
 //!
 //! Each stage job is self-contained: it opens its own [`ArtifactCache`]
 //! handle on the shared cache dir (stage artifacts are content-addressed
 //! and claim-locked, so concurrent jobs cooperate instead of colliding),
-//! logs into its own [`Metrics`] sink, and tags its progress lines with
-//! the cell (`c3`) or `shared:<stage>` it serves. At the wave barrier
-//! the scheduler absorbs each job's metrics under a `cell<i>/` or
-//! `shared/...` prefix — one namespaced sink for the whole grid — and
-//! publishes the stage product for downstream waves.
+//! logs into its own [`Metrics`] sink, tags its progress lines with the
+//! cell (`c3`) or `shared:<stage>` it serves, and publishes its product
+//! into a per-node once-cell read by downstream stages.
 //!
-//! Determinism: stages are bit-identical for any worker count
-//! (DESIGN.md §5), the pool returns results in submission order, and a
-//! cell's configs are exactly what a standalone run with the same
-//! overrides would use — so every cell of a grid reproduces the same
-//! run executed alone, bit for bit (`tests/grid.rs`).
+//! Determinism (DESIGN.md §15): both schedulers affect *scheduling
+//! only*. After execution, job metrics, fault accounting and cache
+//! stats are merged in node (submission) index order regardless of
+//! completion order, stages are bit-identical for any worker count
+//! (DESIGN.md §5), and a cell's configs are exactly what a standalone
+//! run with the same overrides would use — so every cell of a grid
+//! reproduces the same run executed alone, bit for bit, under either
+//! scheduler at any worker count (`tests/grid.rs`, `tests/faults.rs`).
 //!
 //! Resume: an interrupted grid re-run walks the same DAG; finished
 //! stages are cache hits, the interrupted stage continues from its wip
@@ -25,13 +34,15 @@
 //! through [`supervise`] — bounded retries with deterministic linear
 //! backoff, panics caught per attempt. A node that exhausts its budget
 //! is recorded `Failed` and quarantines only its *dependents*: nodes
-//! whose deps failed are marked `Skipped` without dispatching, while
-//! independent nodes in the same wave (and every later wave) keep
+//! whose deps failed are marked `Skipped` without dispatching (under
+//! dataflow the skip propagates through the dependency counts; under
+//! wave, through the pre-dispatch scan), while independent nodes keep
 //! running. Each cell then reports `ok | failed | skipped` on its
 //! [`CellOutcome`], so one bad cell never aborts its siblings.
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Context, Result};
 
@@ -42,7 +53,10 @@ use crate::coordinator::{
     PipelineOutcome, RunConfig,
 };
 use crate::data::Dataset;
-use crate::exec::{panic_message, run_jobs, PoolReport};
+use crate::exec::{
+    critical_path, panic_message, run_dag, run_jobs, DagNode, DagReport,
+    PoolReport, Sched,
+};
 use crate::precision::PrecisionPlan;
 use crate::runtime::json::Json;
 use crate::runtime::{Manifest, ModelRt, Runtime};
@@ -136,6 +150,9 @@ pub struct GridStats {
     pub quantize_nodes: usize,
     pub waves: usize,
     pub wall_secs: f64,
+    /// Pool utilization over the whole grid: busy worker-seconds over
+    /// `workers * wall` (1.0 = no worker ever idled).
+    pub utilization: f64,
     /// Nodes that exhausted their retry budget.
     pub failed_nodes: usize,
     /// Nodes never dispatched because an upstream node failed.
@@ -214,6 +231,7 @@ impl GridOutcome {
                     ),
                     ("waves", Json::num(s.waves as f64)),
                     ("wall_secs", Json::num(s.wall_secs)),
+                    ("utilization", Json::num(s.utilization)),
                     ("failed_nodes", Json::num(s.failed_nodes as f64)),
                     (
                         "skipped_nodes",
@@ -321,7 +339,22 @@ pub fn supervise<T>(
     (Err(wrapped), rep)
 }
 
-/// One node's published product, read by downstream waves.
+/// One stage job's accounting, returned to the scheduler while the
+/// product itself lands in the node's once-cell. Stage failure lives in
+/// the first slot so the job's metrics and cache stats survive it.
+type JobOut = (Result<()>, Metrics, CacheStats, SuperviseReport);
+
+/// What execution resolved for one node, before the deterministic
+/// node-index-order merge (the same shape whichever scheduler ran).
+enum ExecResult {
+    Ran(JobOut),
+    /// Never dispatched; `dep` is the first not-ok dependency in the
+    /// node's declaration order.
+    Skipped { dep: usize },
+}
+
+/// One node's published product, read by downstream stages through its
+/// once-cell (written exactly once by the node's own job).
 #[derive(Debug)]
 enum NodeOut {
     Teacher {
@@ -343,25 +376,28 @@ enum NodeOut {
     Acc(f32),
 }
 
-fn teacher_at(results: &[Option<NodeOut>], i: usize) -> Result<(&Store, u64)> {
-    match results[i].as_ref() {
+fn teacher_at(
+    results: &[OnceLock<NodeOut>],
+    i: usize,
+) -> Result<(&Store, u64)> {
+    match results[i].get() {
         Some(NodeOut::Teacher { store, hash }) => Ok((store, *hash)),
         _ => bail!("grid: teacher node {i} not materialized"),
     }
 }
 
-fn images_at(results: &[Option<NodeOut>], i: usize) -> Result<&Tensor> {
-    match results[i].as_ref() {
+fn images_at(results: &[OnceLock<NodeOut>], i: usize) -> Result<&Tensor> {
+    match results[i].get() {
         Some(NodeOut::Images { images, .. }) => Ok(images),
         _ => bail!("grid: distill node {i} not materialized"),
     }
 }
 
 fn quant_at(
-    results: &[Option<NodeOut>],
+    results: &[OnceLock<NodeOut>],
     i: usize,
 ) -> Result<(&Store, &PrecisionPlan, &Option<Tensor>, f64)> {
-    match results[i].as_ref() {
+    match results[i].get() {
         Some(NodeOut::Quant { qstate, plan, calib, secs }) => {
             Ok((qstate, plan, calib, *secs))
         }
@@ -369,8 +405,8 @@ fn quant_at(
     }
 }
 
-fn acc_at(results: &[Option<NodeOut>], i: usize) -> Result<f32> {
-    match results[i].as_ref() {
+fn acc_at(results: &[OnceLock<NodeOut>], i: usize) -> Result<f32> {
+    match results[i].get() {
         Some(NodeOut::Acc(a)) => Ok(*a),
         _ => bail!("grid: eval node {i} not materialized"),
     }
@@ -480,148 +516,204 @@ pub fn execute_cells(
         .collect();
 
     let plan = GridPlan::build(cells, &manifests, opts.data_only)?;
-    let waves = crate::exec::waves(&plan.deps());
+    let deps = plan.deps();
+    // critical-path depths double as dataflow priorities and the wave
+    // count (the deepest chain is exactly how many waves the DAG has)
+    let depths = critical_path(&deps);
+    let n_waves = depths.iter().copied().max().unwrap_or(0);
     crate::progress!(
         "grid: {} cells -> {} stage nodes ({} deduplicated away), {} waves \
-         on {} workers",
+         on {} workers (sched={})",
         plan.cells.len(),
         plan.nodes.len(),
         plan.naive_stages() - plan.nodes.len(),
-        waves.len(),
+        n_waves,
         cfg.par.resolve(),
+        cfg.sched.as_str(),
     );
 
-    let mut results: Vec<Option<NodeOut>> = Vec::new();
-    results.resize_with(plan.nodes.len(), || None);
-    let mut states = vec![NodeState::Pending; plan.nodes.len()];
-    let mut cache_total = CacheStats::default();
+    let n = plan.nodes.len();
+    let results: Vec<OnceLock<NodeOut>> =
+        (0..n).map(|_| OnceLock::new()).collect();
+
+    // one self-contained job per stage node, shared by both schedulers:
+    // supervised retries, job-local metrics/cache stats, product
+    // published into the node's once-cell on success
+    let node_job = |i: usize| -> JobOut {
+        let node = &plan.nodes[i];
+        // any serving cell carries the configs that key the node (equal
+        // spec key ⇒ equal configs for every field the stage reads)
+        let spec = &plan.cells[node.cells[0]];
+        let mrt = &mrts[&spec.model];
+        let mut jm = Metrics::new();
+        let mut cstats = CacheStats::default();
+        let tag = if node.cells.len() == 1 {
+            format!("c{}", node.cells[0])
+        } else {
+            format!("shared:{}", node.kind.as_str())
+        };
+        let _tag = crate::progress::push_tag(&tag);
+        let (res, rep) = supervise(
+            node.kind.as_str(),
+            &tag,
+            cfg.retry_max,
+            cfg.retry_backoff_ms,
+            || {
+                let mut cache = open_job_cache(cfg)?;
+                let r = run_node(
+                    node.kind, spec, mrt, &dataset, &results, node, opts,
+                    &mut cache, &mut jm,
+                );
+                fold_stats(&mut cstats, cache.stats());
+                r
+            },
+        );
+        // stage failure stays in the first slot: metrics and cache
+        // stats must survive it
+        let res = res.map(|out| {
+            let _ = results[i].set(out);
+        });
+        (res, jm, cstats, rep)
+    };
+
+    let mut execs: Vec<Option<ExecResult>> = (0..n).map(|_| None).collect();
     let mut pool_total = PoolReport::default();
+    let mut dag_report: Option<DagReport> = None;
+    match cfg.sched {
+        Sched::Wave => {
+            // reference scheduler: topological waves with a full
+            // barrier between ranks. Dependents of failed nodes are
+            // skipped in the pre-dispatch scan (first not-ok dep in
+            // declaration order wins, matching dataflow).
+            let mut ok: Vec<Option<bool>> = vec![None; n];
+            for wave in &crate::exec::waves(&deps) {
+                let mut runnable: Vec<usize> =
+                    Vec::with_capacity(wave.len());
+                for &i in wave {
+                    let node = &plan.nodes[i];
+                    match node.deps.iter().find(|&&d| ok[d] == Some(false))
+                    {
+                        Some(&d) => {
+                            execs[i] = Some(ExecResult::Skipped { dep: d });
+                            ok[i] = Some(false);
+                        }
+                        None => runnable.push(i),
+                    }
+                }
+                if runnable.is_empty() {
+                    continue;
+                }
+                let jobs: Vec<_> = runnable
+                    .iter()
+                    .map(|&i| {
+                        let nj = &node_job;
+                        move || -> Result<JobOut> { Ok(nj(i)) }
+                    })
+                    .collect();
+                let (outs, pool) = run_jobs(cfg.par, jobs)?;
+                pool_total.merge(&pool);
+                for (&i, out) in runnable.iter().zip(outs) {
+                    ok[i] = Some(out.0.is_ok());
+                    execs[i] = Some(ExecResult::Ran(out));
+                }
+            }
+        }
+        Sched::Dataflow => {
+            // work-conserving scheduler (DESIGN.md §15): dependency-
+            // counting ready queue, longest-chain-first; skips flow
+            // through the dependency counts inside run_dag
+            let (nodes, report) = run_dag(cfg.par, &deps, &depths, |i| {
+                let out = node_job(i);
+                let ok = out.0.is_ok();
+                (out, ok)
+            });
+            pool_total.merge(&report.pool);
+            dag_report = Some(report);
+            for (i, dn) in nodes.into_iter().enumerate() {
+                match dn {
+                    DagNode::Ran { out, .. } => {
+                        execs[i] = Some(ExecResult::Ran(out));
+                    }
+                    DagNode::Skipped { dep } => {
+                        execs[i] = Some(ExecResult::Skipped { dep });
+                    }
+                    // a panic outside supervision aborts the grid, like
+                    // the wave path's run_jobs error
+                    DagNode::Panicked(msg) => {
+                        bail!("job {i} panicked: {msg}")
+                    }
+                }
+            }
+        }
+    }
+
+    // deterministic merge (DESIGN.md §15): whatever order nodes
+    // completed in, metrics, fault accounting and cache stats fold in
+    // node (submission) index order — both schedulers at any worker
+    // count produce byte-identical outcomes and metrics
+    let mut states = vec![NodeState::Pending; n];
+    let mut cache_total = CacheStats::default();
     let mut retries_total: u64 = 0;
     let mut panics_total: u64 = 0;
-
-    for wave in &waves {
-        // quarantine dependents of failed nodes: a node whose dep did
-        // not complete is skipped without dispatch, so the failure
-        // stays contained to its cell chain while independent nodes in
-        // this wave run normally
-        let mut runnable: Vec<usize> = Vec::with_capacity(wave.len());
-        for &i in wave {
-            let node = &plan.nodes[i];
-            let bad = node.deps.iter().find_map(|&d| match &states[d] {
-                NodeState::Failed(r) => Some((d, "failed", r.clone())),
-                NodeState::Skipped(r) => Some((d, "skipped", r.clone())),
-                _ => None,
-            });
-            match bad {
-                Some((d, what, r)) => {
-                    let kind = node.kind.as_str();
-                    let reason = format!(
-                        "upstream {} node {d} {what}: {r}",
-                        plan.nodes[d].kind.as_str(),
-                    );
-                    crate::progress!(
-                        "grid: skipping {kind} node {i}: {reason}"
-                    );
-                    metrics.record_fault(kind, "skipped");
-                    states[i] = NodeState::Skipped(reason);
-                }
-                None => runnable.push(i),
-            }
-        }
-        if runnable.is_empty() {
-            continue;
-        }
-        let outs = {
-            let results_ref = &results;
-            let dataset = &dataset;
-            let plan_ref = &plan;
-            type JobOut =
-                (Result<NodeOut>, Metrics, CacheStats, SuperviseReport);
-            let jobs: Vec<_> = runnable
-                .iter()
-                .map(|&i| {
-                    let node = &plan_ref.nodes[i];
-                    // any serving cell carries the configs that key the
-                    // node (equal spec key ⇒ equal configs for every
-                    // field the stage reads)
-                    let spec = &plan_ref.cells[node.cells[0]];
-                    let mrt = &mrts[&spec.model];
-                    move || -> Result<JobOut> {
-                        let mut jm = Metrics::new();
-                        let mut cstats = CacheStats::default();
-                        let tag = if node.cells.len() == 1 {
-                            format!("c{}", node.cells[0])
-                        } else {
-                            format!("shared:{}", node.kind.as_str())
-                        };
-                        let _tag = crate::progress::push_tag(&tag);
-                        let (res, rep) = supervise(
-                            node.kind.as_str(),
-                            &tag,
-                            cfg.retry_max,
-                            cfg.retry_backoff_ms,
-                            || {
-                                let mut cache = open_job_cache(cfg)?;
-                                let r = run_node(
-                                    node.kind, spec, mrt, dataset,
-                                    results_ref, node, opts, &mut cache,
-                                    &mut jm,
-                                );
-                                fold_stats(&mut cstats, cache.stats());
-                                r
-                            },
-                        );
-                        // the outer Result never carries stage failure:
-                        // metrics and cache stats must survive it
-                        Ok((res, jm, cstats, rep))
+    for (i, ex) in execs.into_iter().enumerate() {
+        let node = &plan.nodes[i];
+        let kind = node.kind.as_str();
+        match ex {
+            None => bail!("grid: node {i} never resolved"),
+            Some(ExecResult::Skipped { dep }) => {
+                // deps are lower-indexed, so states[dep] is merged
+                let (what, r) = match &states[dep] {
+                    NodeState::Failed(r) => ("failed", r.clone()),
+                    NodeState::Skipped(r) => ("skipped", r.clone()),
+                    _ => {
+                        bail!("grid: node {i} skipped on healthy dep {dep}")
                     }
-                })
-                .collect();
-            let (outs, pool) = run_jobs(cfg.par, jobs)?;
-            pool_total.merge(&pool);
-            outs
-        };
-        // barrier: absorb job metrics under per-run namespaces
-        // (including failed jobs'), account faults, and publish the
-        // products for the next wave
-        for (&i, (res, jm, cstats, rep)) in runnable.iter().zip(outs) {
-            let node = &plan.nodes[i];
-            let kind = node.kind.as_str();
-            let prefix = if node.cells.len() == 1 {
-                format!("cell{}/", node.cells[0])
-            } else {
-                format!("shared/{}{}/", kind, i)
-            };
-            metrics.absorb(&prefix, jm);
-            fold_stats(&mut cache_total, &cstats);
-            for _ in 1..rep.attempts {
-                metrics.record_fault(kind, "retry");
+                };
+                let reason = format!(
+                    "upstream {} node {dep} {what}: {r}",
+                    plan.nodes[dep].kind.as_str(),
+                );
+                crate::progress!("grid: skipping {kind} node {i}: {reason}");
+                metrics.record_fault(kind, "skipped");
+                states[i] = NodeState::Skipped(reason);
             }
-            for _ in 0..rep.panics {
-                metrics.record_fault(kind, "panic");
-            }
-            for _ in 0..cstats.quarantined {
-                metrics.record_fault(kind, "quarantine");
-            }
-            retries_total += u64::from(rep.attempts.saturating_sub(1));
-            panics_total += u64::from(rep.panics);
-            match res {
-                Ok(out) => {
-                    results[i] = Some(out);
-                    states[i] = NodeState::Ok;
+            Some(ExecResult::Ran((res, jm, cstats, rep))) => {
+                let prefix = if node.cells.len() == 1 {
+                    format!("cell{}/", node.cells[0])
+                } else {
+                    format!("shared/{}{}/", kind, i)
+                };
+                metrics.absorb(&prefix, jm);
+                fold_stats(&mut cache_total, &cstats);
+                for _ in 1..rep.attempts {
+                    metrics.record_fault(kind, "retry");
                 }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    crate::progress!(
-                        "grid: {kind} node {i} failed permanently: {msg}"
-                    );
-                    metrics.record_fault(kind, "stage_failed");
-                    states[i] = NodeState::Failed(msg);
+                for _ in 0..rep.panics {
+                    metrics.record_fault(kind, "panic");
+                }
+                for _ in 0..cstats.quarantined {
+                    metrics.record_fault(kind, "quarantine");
+                }
+                retries_total += u64::from(rep.attempts.saturating_sub(1));
+                panics_total += u64::from(rep.panics);
+                match res {
+                    Ok(()) => states[i] = NodeState::Ok,
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        crate::progress!(
+                            "grid: {kind} node {i} failed permanently: {msg}"
+                        );
+                        metrics.record_fault(kind, "stage_failed");
+                        states[i] = NodeState::Failed(msg);
+                    }
                 }
             }
         }
     }
     metrics.record_pool("grid", &pool_total);
+    if let Some(r) = &dag_report {
+        metrics.record_sched("grid", r);
+    }
 
     // assemble per-cell outcomes; non-ok cells report their status and
     // carry no products
@@ -669,7 +761,7 @@ pub fn execute_cells(
             plan.evalq_of[c].context("grid: missing quant eval node")?,
         )?;
         let (distill_secs, final_bns_loss) = match plan.distill_of[c] {
-            Some(d) => match results[d].as_ref() {
+            Some(d) => match results[d].get() {
                 Some(NodeOut::Images { final_loss, secs, .. }) => {
                     (Some(*secs), Some(*final_loss))
                 }
@@ -713,8 +805,9 @@ pub fn execute_cells(
         teacher_nodes: plan.count(StageKind::Teacher),
         distill_nodes: plan.count(StageKind::Distill),
         quantize_nodes: plan.count(StageKind::Quantize),
-        waves: waves.len(),
+        waves: n_waves,
         wall_secs: t0.elapsed().as_secs_f64(),
+        utilization: pool_total.utilization(),
         failed_nodes,
         skipped_nodes,
         retries: retries_total,
@@ -756,7 +849,7 @@ fn run_node(
     spec: &RunSpec,
     mrt: &ModelRt,
     dataset: &Dataset,
-    results: &[Option<NodeOut>],
+    results: &[OnceLock<NodeOut>],
     node: &super::StageNode,
     opts: &GridOpts,
     cache: &mut ArtifactCache,
@@ -857,6 +950,7 @@ mod tests {
                 quantize_nodes: 1,
                 waves: 4,
                 wall_secs: 1.25,
+                utilization: 0.75,
                 failed_nodes: 0,
                 skipped_nodes: 0,
                 retries: 1,
@@ -877,6 +971,7 @@ mod tests {
         assert!(text.contains("\"status\":\"ok\""), "{text}");
         assert!(text.contains("\"reason\":null"), "{text}");
         assert!(text.contains("\"retries\":1"), "{text}");
+        assert!(text.contains("\"utilization\":0.75"), "{text}");
         assert!(text.contains("\"quarantined\":0"), "{text}");
         assert!(out.all_ok());
         assert!(Json::parse(&text).is_ok());
@@ -1017,7 +1112,7 @@ mod tests {
 
     #[test]
     fn missing_node_results_error_cleanly() {
-        let results: Vec<Option<NodeOut>> = vec![None];
+        let results: Vec<OnceLock<NodeOut>> = vec![OnceLock::new()];
         assert!(teacher_at(&results, 0).is_err());
         assert!(images_at(&results, 0).is_err());
         assert!(quant_at(&results, 0).is_err());

@@ -129,7 +129,7 @@ fn usage() {
                 [--synthesis genie|zeroq|zaq] [--steps-per-dispatch K]\n\
                 [--axis name=v1,v2 ...] [--dry-run] [--json PATH]\n\
                 [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
-         keys: wbits abits seed workers steps_per_dispatch\n\
+         keys: wbits abits seed workers steps_per_dispatch sched\n\
                checkpoint_every json\n\
                precision target_size first_last_bits granularity\n\
                sens_batches candidates synthesis retry.{{max,backoff_ms}}\n\
@@ -142,6 +142,10 @@ fn usage() {
          one device dispatch (DESIGN.md §14); like workers it changes\n\
          execution shape only — results, checkpoints and cache keys are\n\
          bit-identical for any K.\n\
+         sched=wave|dataflow picks the grid scheduler (DESIGN.md §15):\n\
+         dataflow (default) dispatches each stage the moment its inputs\n\
+         are ready, wave runs rank-by-rank with barriers; results are\n\
+         bit-identical either way (GENIE_SCHED overrides the default).\n\
          --precision pareto measures per-layer sensitivity on the\n\
          calibration set and allocates mixed weight bits to meet\n\
          --target-size (fraction of the FP32 weight payload, e.g. 0.25);\n\

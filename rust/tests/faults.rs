@@ -19,6 +19,7 @@ use genie::artifacts::{ArtifactCache, KeyBuilder};
 use genie::coordinator::{Metrics, RunConfig};
 use genie::faults::{self, FaultPlan};
 use genie::grid::{self, supervise, AxisValue, GridOpts, RunGrid};
+use genie::runtime::json::Json;
 use genie::runtime::Runtime;
 use genie::store::Store;
 use genie::tensor::Tensor;
@@ -324,6 +325,129 @@ fn grid_completes_bit_identical_under_injected_faults() {
         corrupted.stats.cache
     );
     assert_cells_match(&reference, &corrupted, "corrupted");
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Zero every timing field in a grid report: object values under a key
+/// ending `_secs` or named `utilization` become `0` (nulls stay null —
+/// whether a stage ran at all is part of the contract being compared).
+fn scrub_timings(j: &mut Json) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m.iter_mut() {
+                if k.ends_with("_secs") || k == "utilization" {
+                    if let Json::Num(n) = v {
+                        *n = 0.0;
+                    }
+                } else {
+                    scrub_timings(v);
+                }
+            }
+        }
+        Json::Arr(v) => v.iter_mut().for_each(scrub_timings),
+        _ => {}
+    }
+}
+
+fn normalized_report(out: &grid::GridOutcome) -> String {
+    let mut j = out.to_json();
+    scrub_timings(&mut j);
+    j.render()
+}
+
+/// Every metric series that is a function of the computation rather
+/// than of the clock: pool accounting (`pool/`), scheduler telemetry
+/// (`sched/`) and throughput rates (`*_per_sec`) are dropped, the rest
+/// must be byte-identical across schedulers and worker counts.
+fn det_series(m: &Metrics) -> Vec<(String, Vec<(usize, f32)>)> {
+    m.series_iter()
+        .filter(|(n, _)| {
+            !n.contains("pool/")
+                && !n.contains("sched/")
+                && !n.ends_with("_per_sec")
+        })
+        .map(|(n, rows)| (n.to_string(), rows.to_vec()))
+        .collect()
+}
+
+fn run_grid_sched(
+    rt: &Runtime,
+    root: &Path,
+    sched: &str,
+    workers: usize,
+    plan: FaultPlan,
+) -> (grid::GridOutcome, Metrics) {
+    let _s = faults::scoped(plan);
+    // a fresh cache dir per run: cache hit/miss series are part of the
+    // deterministic metrics being compared, so every run must be cold
+    let mut cfg = base_cfg(&root.join(format!("{sched}-w{workers}")));
+    cfg.apply_overrides(&[
+        format!("sched={sched}"),
+        format!("workers={workers}"),
+    ])
+    .unwrap();
+    let mut m = Metrics::new();
+    let opts = GridOpts { keep_qstate: true, ..Default::default() };
+    let out =
+        grid::execute(rt, &cfg, &bits_seed_grid(), &opts, &mut m).unwrap();
+    (out, m)
+}
+
+/// Property (DESIGN.md §15): the dataflow scheduler is an execution-
+/// order optimization only. Injected per-node `sleep` faults force
+/// adversarial completion orders (late-submitted nodes finish first);
+/// the grid report with timing fields zeroed, every cell outcome and
+/// qstate tensor, and every clock-independent metric series must be
+/// byte-identical to the wave scheduler at workers=1, for both
+/// schedulers at workers 1 and 4.
+#[test]
+fn prop_dataflow_matches_wave_bit_identical_under_delays() {
+    if !require_artifacts() {
+        return;
+    }
+    let _g = guard();
+    let rt = Runtime::cpu().unwrap();
+    let root = std::env::temp_dir().join("genie_sched_equiv");
+    std::fs::remove_dir_all(&root).ok();
+
+    let (ref_out, ref_m) =
+        run_grid_sched(&rt, &root, "wave", 1, FaultPlan::empty());
+    assert!(ref_out.all_ok());
+    let ref_json = normalized_report(&ref_out);
+    let ref_series = det_series(&ref_m);
+
+    // delay plans chosen to invert the submission order at the finish
+    // line: early cells sleep longest, so under dataflow their
+    // dependents complete after later-submitted siblings
+    let cases = [
+        ("wave", 4, ""),
+        ("dataflow", 1, "quantize:c0:*=sleep120,quantize:c2:*=sleep60"),
+        ("dataflow", 4, "quantize:c0:*=sleep120,quantize:c2:*=sleep60"),
+        ("dataflow", 4, "quantize:c3:*=sleep100,distill:shard0:*=sleep80"),
+    ];
+    for (i, (sched, workers, plan)) in cases.iter().enumerate() {
+        let plan = if plan.is_empty() {
+            FaultPlan::empty()
+        } else {
+            FaultPlan::parse(plan).unwrap()
+        };
+        let root = root.join(format!("case{i}"));
+        let (out, m) = run_grid_sched(&rt, &root, sched, *workers, plan);
+        let what = format!("case {i}: {sched} workers={workers}");
+        assert!(out.all_ok(), "{what}: grid must complete");
+        assert_cells_match(&ref_out, &out, &what);
+        assert_eq!(
+            ref_json,
+            normalized_report(&out),
+            "{what}: report diverged"
+        );
+        assert_eq!(
+            ref_series,
+            det_series(&m),
+            "{what}: metrics diverged"
+        );
+    }
 
     std::fs::remove_dir_all(&root).ok();
 }
