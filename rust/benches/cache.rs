@@ -1,0 +1,129 @@
+//! Tiered artifact-store benchmarks (DESIGN.md §16). In-tree harness
+//! (no criterion in the offline image); harness = false.
+//!
+//! Always writes `BENCH_cache.json`: a tier-0 hot hit vs the full disk
+//! deserialization it replaces, and single-pass hash-while-write vs the
+//! old write-then-rehash sidecar path. With artifacts present it
+//! additionally times a warm 2-cell grid replay with an unlimited vs a
+//! tight `cache.budget_bytes` (session pins keep the warm set live, so
+//! the tight budget should cost ~nothing on the replay path).
+
+use genie::artifacts::{self, ArtifactCache, KeyBuilder};
+use genie::coordinator::{Metrics, RunConfig};
+use genie::grid::{self, GridOpts, RunGrid};
+use genie::runtime::Runtime;
+use genie::store::{fnv1a, Store, FNV_OFFSET};
+use genie::tensor::{Pcg32, Tensor};
+use genie::testutil::{bench_secs, report};
+
+fn main() {
+    let mut rng = Pcg32::new(29);
+    let dir = std::env::temp_dir().join("genie_bench_cache");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // ---- tier-0 hit vs disk load -------------------------------------
+    // the same 384 KiB calibration-shaped artifact, served from the hot
+    // tier's shared handle vs parsed back out of the GTS1 file
+    let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+    let key = KeyBuilder::new("bench").field("x", 1).finish();
+    let mut art = Store::new();
+    art.insert("images", Tensor::randn(&[128, 16, 16, 3], &mut rng, 1.0));
+    cache.store("bench", key, &art).unwrap();
+
+    let hot_secs = bench_secs(5, 500, || {
+        std::hint::black_box(cache.load("bench", key).unwrap());
+    });
+    report("cache/tier0_hit_384KiB", hot_secs);
+    let disk_secs = bench_secs(3, 100, || {
+        // dropping tier 0 forces the verify-and-deserialize disk path
+        artifacts::clear_hot(&dir);
+        std::hint::black_box(cache.load("bench", key).unwrap());
+    });
+    report("cache/disk_load_384KiB", disk_secs);
+    let speedup = disk_secs / hot_secs.max(1e-12);
+    println!("tier-0 hit is {speedup:.0}x a disk load");
+    assert!(
+        hot_secs < disk_secs,
+        "a shared hot handle must beat deserializing from disk"
+    );
+
+    // ---- hash-while-write vs write-then-rehash -----------------------
+    // what `store()` pays to emit the `.fnv` sidecar: one serialization
+    // walk that folds the hash as bytes stream out, vs serializing,
+    // writing, then reading the file back to hash it (the old two-pass)
+    let p1 = dir.join("one_pass.gts");
+    let one_secs = bench_secs(3, 100, || {
+        let (bytes, h) = art.to_bytes_hashed().unwrap();
+        std::fs::write(&p1, &bytes).unwrap();
+        std::hint::black_box(h);
+    });
+    report("cache/store_hash_while_write", one_secs);
+    let p2 = dir.join("two_pass.gts");
+    let two_secs = bench_secs(3, 100, || {
+        let bytes = art.to_bytes().unwrap();
+        std::fs::write(&p2, &bytes).unwrap();
+        let back = std::fs::read(&p2).unwrap();
+        std::hint::black_box(fnv1a(FNV_OFFSET, &back));
+    });
+    report("cache/store_write_then_rehash", two_secs);
+
+    // ---- warm grid replay, budget unlimited vs tight (artifact-gated)
+    let mut warm_unbounded = -1.0f64;
+    let mut warm_tight = -1.0f64;
+    if std::path::Path::new("artifacts/toy/manifest.json").exists() {
+        let rt = Runtime::cpu().unwrap();
+        let mut warm_grid = |tag: &str, budget: u64| -> f64 {
+            let mut cfg = RunConfig {
+                model: "toy".into(),
+                artifacts: "artifacts".into(),
+                cache_dir: dir.join(tag).to_string_lossy().into_owned(),
+                ..Default::default()
+            };
+            // the bench measures the local tiers regardless of any
+            // GENIE_CACHE_* environment the CI matrix exports
+            cfg.apply_overrides(&[
+                "pretrain.steps=30".into(),
+                "distill.samples=64".into(),
+                "distill.steps=6".into(),
+                "quant.steps=8".into(),
+                "workers=4".into(),
+                "cache.backend=local".into(),
+                format!("cache.budget_bytes={budget}"),
+            ])
+            .unwrap();
+            let mut g = RunGrid::new();
+            g.parse_axis("bits=4,2", &cfg).unwrap();
+            let mut m = Metrics::new();
+            grid::execute(&rt, &cfg, &g, &GridOpts::default(), &mut m)
+                .unwrap();
+            let t0 = std::time::Instant::now();
+            let mut m2 = Metrics::new();
+            grid::execute(&rt, &cfg, &g, &GridOpts::default(), &mut m2)
+                .unwrap();
+            t0.elapsed().as_secs_f64()
+        };
+        warm_unbounded = warm_grid("grid_unbounded", 0);
+        warm_tight = warm_grid("grid_tight", 64 * 1024);
+        println!(
+            "warm 2-cell grid: {warm_unbounded:.2}s unlimited budget, \
+             {warm_tight:.2}s at 64 KiB (pins keep the warm set live)"
+        );
+    } else {
+        println!("bench cache/warm_grid: skipped (run `make artifacts`)");
+    }
+
+    // negative sentinel (-1.0) = artifact-gated section did not run
+    let json = format!(
+        "{{\n  \"tier0_hit_secs\": {hot_secs:.9},\n  \
+         \"disk_load_secs\": {disk_secs:.9},\n  \
+         \"tier0_speedup\": {speedup:.1},\n  \
+         \"store_hash_while_write_secs\": {one_secs:.9},\n  \
+         \"store_write_then_rehash_secs\": {two_secs:.9},\n  \
+         \"warm_grid_unbounded_secs\": {warm_unbounded:.4},\n  \
+         \"warm_grid_tight_budget_secs\": {warm_tight:.4}\n}}\n",
+    );
+    std::fs::write("BENCH_cache.json", json).unwrap();
+    println!("wrote BENCH_cache.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

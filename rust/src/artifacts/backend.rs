@@ -1,0 +1,288 @@
+//! Pluggable artifact storage backends (DESIGN.md §16): the byte-level
+//! contract the tiered [`super::ArtifactCache`] reads and writes
+//! through. A backend is a flat namespace of files (`<kind>_<key>.gts`
+//! artifacts and their `.fnv` sidecars) with atomic publication — a
+//! `write` lands via temp-file + rename, so a concurrent reader sees
+//! either the complete previous bytes or the complete new bytes, never a
+//! torn file.
+//!
+//! Two implementations ship:
+//!
+//!   * [`LocalDir`] — tier 1, the existing on-disk cache layout.
+//!   * [`SharedDir`] — tier 2, the same layout on a directory many
+//!     machines mount (NFS, a bind mount, a synced folder). It is
+//!     deliberately dumb: no coordination beyond atomic rename, temp
+//!     names salted with the writer's pid so concurrent writers from
+//!     different hosts never collide, last-writer-wins on identical keys
+//!     (harmless — equal keys mean equal bytes). Claim lockfiles and wip
+//!     checkpoint dirs stay on the *local* tier: cross-machine runs may
+//!     duplicate a computation, but every store is atomic and
+//!     deterministic, so the pool converges.
+
+use std::path::{Path, PathBuf};
+use std::time::SystemTime;
+
+use anyhow::{Context, Result};
+
+/// One file a backend holds (used by GC and `cache stats`).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// File name within the backend root (e.g. `distill_ab12..ef.gts`).
+    pub name: String,
+    pub bytes: u64,
+    pub mtime: SystemTime,
+}
+
+/// A flat, atomically-written artifact namespace. All methods are
+/// `&self`: backends hold no mutable state, so one instance is shared
+/// freely across the cache's load/store paths.
+pub trait Backend: Send + Sync + std::fmt::Debug {
+    /// Tier label for stats/metrics (`"disk"`, `"shared"`).
+    fn tier(&self) -> &'static str;
+
+    /// The backing directory.
+    fn root(&self) -> &Path;
+
+    /// Read a file's bytes; `None` for missing or unreadable.
+    fn read(&self, name: &str) -> Option<Vec<u8>>;
+
+    /// Atomically publish `bytes` under `name` (temp + rename), creating
+    /// the root if needed. Returns the final path.
+    fn write(&self, name: &str, bytes: &[u8]) -> Result<PathBuf>;
+
+    /// Delete a file; `true` if it existed and was removed.
+    fn remove(&self, name: &str) -> bool;
+
+    /// Move a (corrupt) file into the backend's `quarantine/` subdir;
+    /// `true` if it was moved.
+    fn quarantine(&self, name: &str) -> bool;
+
+    /// Every regular file directly under the root (subdirs — quarantine,
+    /// wip work dirs — excluded).
+    fn list(&self) -> Vec<Entry>;
+}
+
+fn read_file(root: &Path, name: &str) -> Option<Vec<u8>> {
+    std::fs::read(root.join(name)).ok()
+}
+
+fn write_atomic(
+    root: &Path,
+    name: &str,
+    bytes: &[u8],
+    tmp_salt: &str,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(root)
+        .with_context(|| format!("create backend dir {root:?}"))?;
+    let path = root.join(name);
+    let tmp = root.join(format!("{name}.tmp.{tmp_salt}"));
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("write {tmp:?}"))?;
+    std::fs::rename(&tmp, &path).with_context(|| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("publish {path:?}")
+    })?;
+    Ok(path)
+}
+
+fn remove_file(root: &Path, name: &str) -> bool {
+    std::fs::remove_file(root.join(name)).is_ok()
+}
+
+fn quarantine_file(root: &Path, name: &str) -> bool {
+    let from = root.join(name);
+    if !from.exists() {
+        return false;
+    }
+    let qdir = root.join("quarantine");
+    if std::fs::create_dir_all(&qdir).is_err() {
+        return false;
+    }
+    std::fs::rename(&from, qdir.join(name)).is_ok()
+}
+
+fn list_files(root: &Path) -> Vec<Entry> {
+    let Ok(rd) = std::fs::read_dir(root) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for e in rd.flatten() {
+        let Ok(meta) = e.metadata() else { continue };
+        if !meta.is_file() {
+            continue;
+        }
+        let name = e.file_name().to_string_lossy().into_owned();
+        out.push(Entry {
+            name,
+            bytes: meta.len(),
+            mtime: meta.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+        });
+    }
+    // deterministic order for callers that iterate (read_dir order is
+    // filesystem-dependent)
+    out.sort_by(|a, b| a.name.cmp(&b.name));
+    out
+}
+
+/// Tier 1: the process-local on-disk cache directory.
+#[derive(Debug, Clone)]
+pub struct LocalDir {
+    root: PathBuf,
+}
+
+impl LocalDir {
+    pub fn new(root: impl AsRef<Path>) -> Self {
+        LocalDir { root: root.as_ref().to_path_buf() }
+    }
+}
+
+impl Backend for LocalDir {
+    fn tier(&self) -> &'static str {
+        "disk"
+    }
+
+    fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn read(&self, name: &str) -> Option<Vec<u8>> {
+        read_file(&self.root, name)
+    }
+
+    fn write(&self, name: &str, bytes: &[u8]) -> Result<PathBuf> {
+        // pid-salted temp: concurrent processes sharing one local cache
+        // dir (the claim/waiter protocol allows it) never tear each
+        // other's in-flight writes
+        write_atomic(&self.root, name, bytes, &std::process::id().to_string())
+    }
+
+    fn remove(&self, name: &str) -> bool {
+        remove_file(&self.root, name)
+    }
+
+    fn quarantine(&self, name: &str) -> bool {
+        quarantine_file(&self.root, name)
+    }
+
+    fn list(&self) -> Vec<Entry> {
+        list_files(&self.root)
+    }
+}
+
+/// Tier 2: a dumb shared directory (same key scheme, atomic renames) so
+/// many machines pool one artifact store. See the module docs for the
+/// (non-)coordination contract.
+#[derive(Debug, Clone)]
+pub struct SharedDir {
+    root: PathBuf,
+}
+
+impl SharedDir {
+    pub fn new(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        anyhow::ensure!(
+            !root.as_os_str().is_empty(),
+            "shared-dir backend requires a directory \
+             (cache.shared_dir=<path> or --cache-shared-dir)"
+        );
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("create shared cache dir {root:?}"))?;
+        Ok(SharedDir { root })
+    }
+}
+
+impl Backend for SharedDir {
+    fn tier(&self) -> &'static str {
+        "shared"
+    }
+
+    fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn read(&self, name: &str) -> Option<Vec<u8>> {
+        read_file(&self.root, name)
+    }
+
+    fn write(&self, name: &str, bytes: &[u8]) -> Result<PathBuf> {
+        write_atomic(&self.root, name, bytes, &std::process::id().to_string())
+    }
+
+    fn remove(&self, name: &str) -> bool {
+        remove_file(&self.root, name)
+    }
+
+    fn quarantine(&self, name: &str) -> bool {
+        quarantine_file(&self.root, name)
+    }
+
+    fn list(&self) -> Vec<Entry> {
+        list_files(&self.root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_dir_atomic_write_read_remove() {
+        let dir = std::env::temp_dir().join("genie_backend_local_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let be = LocalDir::new(&dir);
+        assert!(be.read("a.gts").is_none());
+        let p = be.write("a.gts", b"hello").unwrap();
+        assert_eq!(p, dir.join("a.gts"));
+        assert_eq!(be.read("a.gts").unwrap(), b"hello");
+        // overwrite is atomic-replace, not append
+        be.write("a.gts", b"bye").unwrap();
+        assert_eq!(be.read("a.gts").unwrap(), b"bye");
+        // no temp droppings survive a completed write
+        let names: Vec<_> =
+            be.list().into_iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["a.gts".to_string()]);
+        assert!(be.remove("a.gts"));
+        assert!(!be.remove("a.gts"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_moves_into_subdir_and_list_skips_subdirs() {
+        let dir = std::env::temp_dir().join("genie_backend_quar_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let be = SharedDir::new(&dir).unwrap();
+        assert_eq!(be.tier(), "shared");
+        be.write("bad.gts", b"xxxx").unwrap();
+        assert!(be.quarantine("bad.gts"));
+        assert!(!be.quarantine("bad.gts"), "already moved");
+        assert!(be.read("bad.gts").is_none());
+        assert_eq!(
+            std::fs::read(dir.join("quarantine/bad.gts")).unwrap(),
+            b"xxxx"
+        );
+        // the quarantine subdir never shows up in the flat listing
+        assert!(be.list().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_dir_requires_a_path() {
+        assert!(SharedDir::new("").is_err());
+    }
+
+    #[test]
+    fn list_reports_sizes_sorted() {
+        let dir = std::env::temp_dir().join("genie_backend_list_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let be = LocalDir::new(&dir);
+        be.write("b.gts", b"123456").unwrap();
+        be.write("a.gts", b"12").unwrap();
+        let l = be.list();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l[0].name, "a.gts");
+        assert_eq!(l[0].bytes, 2);
+        assert_eq!(l[1].name, "b.gts");
+        assert_eq!(l[1].bytes, 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,339 @@
+//! Budgeted, pin-aware garbage collection for the disk tiers
+//! (DESIGN.md §16). The cache dir grows without bound as grids sweep
+//! configs; GC brings it back under `cache.budget_bytes` by evicting
+//! complete artifacts (the `.gts` file and its `.fnv` sidecar together)
+//! in least-recently-used order — recency is the newer of the pair's
+//! mtimes, and the cache refreshes the sidecar on every disk hit, so
+//! mtime order *is* use order without any extra bookkeeping file.
+//!
+//! **Pinning rule.** An artifact is never evicted while
+//!
+//!   * its stem is in the caller's pin set — `genie cache gc` pins the
+//!     transitive artifact set a grid's `--dry-run` resolves, so a
+//!     budget-squeezed store always keeps what the next grid needs;
+//!   * its stem was touched (stored or loaded) by this process — the
+//!     *session pin registry* below, which makes the automatic
+//!     enforcement at store time safe: a tight budget can never evict an
+//!     artifact a concurrently-running stage of the same process is
+//!     about to read;
+//!   * a live claim lockfile (`wip_<stem>.lock`) exists — another
+//!     process is materializing or reading it right now.
+//!
+//! Eviction removes the `.gts` before the sidecar: a concurrent reader
+//! either wins the read (and verifies against the still-present
+//! sidecar) or sees an ordinary cold miss — never a half-evicted entry
+//! that parses-but-mismatches.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::SystemTime;
+
+use super::backend::Backend;
+use super::hot;
+
+/// What one GC pass did (printed by `genie cache gc`, folded into
+/// [`super::CacheStats::gc_evictions`] by automatic enforcement).
+#[derive(Debug, Default, Clone)]
+pub struct GcReport {
+    /// Complete artifacts found (gts + sidecar pairs).
+    pub scanned: usize,
+    /// Artifacts kept because of a pin, session touch, or live lock.
+    pub pinned: usize,
+    /// Artifacts evicted.
+    pub evicted: usize,
+    /// Bytes reclaimed (artifact + sidecar).
+    pub evicted_bytes: u64,
+    /// Artifact bytes remaining after the pass.
+    pub live_bytes: u64,
+}
+
+// ---- session pin registry ------------------------------------------
+
+fn pins() -> MutexGuard<'static, HashSet<(String, String)>> {
+    static PINS: OnceLock<Mutex<HashSet<(String, String)>>> =
+        OnceLock::new();
+    PINS.get_or_init(|| Mutex::new(HashSet::new()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Mark `(ns, stem)` as touched by this process — pinned for every
+/// automatic GC pass of the session.
+pub(crate) fn pin_session(ns: &str, stem: &str) {
+    pins().insert((ns.to_string(), stem.to_string()));
+}
+
+/// Every stem this process has touched under namespace `ns`.
+pub(crate) fn session_pins(ns: &str) -> HashSet<String> {
+    pins()
+        .iter()
+        .filter(|(n, _)| n == ns)
+        .map(|(_, s)| s.clone())
+        .collect()
+}
+
+/// Forget the session pins of one namespace (tests/benches that
+/// deliberately re-cold a directory).
+pub(crate) fn clear_session_pins(ns: &str) {
+    pins().retain(|(n, _)| n != ns);
+}
+
+// ---- the GC pass ----------------------------------------------------
+
+struct Candidate {
+    stem: String,
+    bytes: u64,
+    recency: SystemTime,
+    has_sidecar: bool,
+}
+
+/// One GC pass over `backend`: evict unpinned artifacts, oldest use
+/// first, until the artifact bytes fit `budget_bytes` (0 = report-only,
+/// nothing evicted). `ns` is the hot-tier namespace to invalidate;
+/// `extra_pins` are the caller's stems on top of the session registry
+/// and live locks.
+pub fn collect(
+    backend: &dyn Backend,
+    ns: &str,
+    budget_bytes: u64,
+    extra_pins: &HashSet<String>,
+) -> GcReport {
+    let files = backend.list();
+    let locked: HashSet<String> = files
+        .iter()
+        .filter_map(|e| {
+            e.name
+                .strip_prefix("wip_")?
+                .strip_suffix(".lock")
+                .map(str::to_string)
+        })
+        .collect();
+    let session = session_pins(ns);
+
+    let mut cands: Vec<Candidate> = Vec::new();
+    let mut total = 0u64;
+    for e in &files {
+        let Some(stem) = e.name.strip_suffix(".gts") else { continue };
+        let mut bytes = e.bytes;
+        let mut recency = e.mtime;
+        let sidecar =
+            files.iter().find(|f| f.name == format!("{}.fnv", e.name));
+        if let Some(sc) = sidecar {
+            bytes += sc.bytes;
+            if sc.mtime > recency {
+                recency = sc.mtime;
+            }
+        }
+        total += bytes;
+        cands.push(Candidate {
+            stem: stem.to_string(),
+            bytes,
+            recency,
+            has_sidecar: sidecar.is_some(),
+        });
+    }
+
+    let mut report = GcReport {
+        scanned: cands.len(),
+        live_bytes: total,
+        ..Default::default()
+    };
+    let pinned = |stem: &String| {
+        extra_pins.contains(stem)
+            || session.contains(stem)
+            || locked.contains(stem)
+    };
+    report.pinned = cands.iter().filter(|c| pinned(&c.stem)).count();
+    if budget_bytes == 0 || total <= budget_bytes {
+        return report;
+    }
+
+    // oldest use first; stem as the tie-break so a pass is deterministic
+    // on filesystems with coarse mtime granularity
+    cands.sort_by(|a, b| {
+        a.recency.cmp(&b.recency).then_with(|| a.stem.cmp(&b.stem))
+    });
+    for c in &cands {
+        if report.live_bytes <= budget_bytes {
+            break;
+        }
+        if pinned(&c.stem) {
+            continue;
+        }
+        // artifact first, sidecar second: a racing reader sees a cold
+        // miss or a complete verifiable pair, never the reverse half
+        if !backend.remove(&format!("{}.gts", c.stem)) {
+            continue;
+        }
+        if c.has_sidecar {
+            backend.remove(&format!("{}.gts.fnv", c.stem));
+        }
+        hot::remove(ns, &c.stem);
+        report.evicted += 1;
+        report.evicted_bytes += c.bytes;
+        report.live_bytes -= c.bytes;
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ArtifactCache, CacheKey, KeyBuilder};
+    use super::*;
+    use crate::store::Store;
+    use crate::tensor::{Pcg32, Tensor};
+
+    fn key_of(i: u64) -> CacheKey {
+        KeyBuilder::new("gc").field("i", i).finish()
+    }
+
+    fn art_of(rng: &mut Pcg32, len: usize) -> Store {
+        let mut s = Store::new();
+        s.insert("x", Tensor::randn(&[len], rng, 1.0));
+        s
+    }
+
+    /// Satellite contract: fill past budget, GC with a pinned "grid"
+    /// set, and check (a) every pinned key still hits tier 1
+    /// bit-identically, (b) evicted keys recompute bit-identically,
+    /// (c) no stem is ever half-evicted, and (d) a concurrently-claimed
+    /// stem survives untouched.
+    #[test]
+    fn gc_property_pins_survive_evictions_recompute() {
+        for seed in [3u64, 17, 40, 99] {
+            let dir = std::env::temp_dir()
+                .join(format!("genie_gc_prop_{seed}"));
+            std::fs::remove_dir_all(&dir).ok();
+            let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+            let ns = cache.hot_namespace().to_string();
+            let mut rng = Pcg32::new(seed);
+
+            let n = 6 + (rng.next_u32() % 5) as u64;
+            let mut originals = Vec::new();
+            let mut total = 0u64;
+            for i in 0..n {
+                let len = 64 + (rng.next_u32() % 512) as usize;
+                let art = art_of(&mut rng, len);
+                cache.store("gc", key_of(i), &art).unwrap();
+                total += std::fs::metadata(cache.path("gc", key_of(i)))
+                    .unwrap()
+                    .len();
+                originals.push(art);
+            }
+
+            // a pinned "grid transitive set": every even key (half the
+            // store, and deterministically never all of it)
+            let pinned: HashSet<String> = (0..n)
+                .filter(|i| i % 2 == 0)
+                .map(|i| format!("gc_{}", key_of(i).hex()))
+                .collect();
+            // one unpinned key held by a live claim during the pass
+            let claimed = (0..n).find(|i| {
+                !pinned.contains(&format!("gc_{}", key_of(*i).hex()))
+            });
+            let _claim =
+                claimed.map(|i| cache.claim("gc", key_of(i)).unwrap());
+
+            // the session registry pinned everything this process
+            // stored — drop it so the pass exercises real eviction
+            clear_session_pins(&ns);
+            let budget = total / 3;
+            let report =
+                collect(cache.local_backend(), &ns, budget, &pinned);
+            assert_eq!(report.scanned as u64, n);
+            assert!(
+                report.evicted > 0,
+                "seed {seed}: past-budget store must evict something"
+            );
+
+            // (c) never half-evicted: a sidecar implies its artifact
+            for e in cache.local_backend().list() {
+                if let Some(stem) = e.name.strip_suffix(".gts.fnv") {
+                    assert!(
+                        dir.join(format!("{stem}.gts")).exists(),
+                        "seed {seed}: orphan sidecar {}",
+                        e.name
+                    );
+                }
+            }
+
+            // (a) pinned + claimed keys still hit tier 1 bit-identically
+            super::super::clear_hot(&dir);
+            for i in 0..n {
+                let stem = format!("gc_{}", key_of(i).hex());
+                let keep =
+                    pinned.contains(&stem) || claimed == Some(i);
+                let got = cache.load("gc", key_of(i));
+                if keep {
+                    let got = got.unwrap_or_else(|| {
+                        panic!("seed {seed}: pinned {stem} evicted")
+                    });
+                    assert_eq!(
+                        got.content_hash(),
+                        originals[i as usize].content_hash()
+                    );
+                } else if let Some(got) = got {
+                    // unpinned survivor (under budget before its turn):
+                    // must still be intact
+                    assert_eq!(
+                        got.content_hash(),
+                        originals[i as usize].content_hash()
+                    );
+                }
+            }
+
+            // (b) evicted keys recompute + re-store bit-identically
+            super::super::clear_hot(&dir);
+            for i in 0..n {
+                if cache.load("gc", key_of(i)).is_none() {
+                    cache.store("gc", key_of(i), &originals[i as usize])
+                        .unwrap();
+                    let back = cache.load("gc", key_of(i)).unwrap();
+                    assert_eq!(
+                        back.content_hash(),
+                        originals[i as usize].content_hash()
+                    );
+                }
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn report_only_when_unbudgeted_or_within() {
+        let dir = std::env::temp_dir().join("genie_gc_report_only");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let ns = cache.hot_namespace().to_string();
+        let mut rng = Pcg32::new(7);
+        cache.store("gc", key_of(0), &art_of(&mut rng, 64)).unwrap();
+        clear_session_pins(&ns);
+        let none = HashSet::new();
+        let r = collect(cache.local_backend(), &ns, 0, &none);
+        assert_eq!(r.evicted, 0, "budget 0 reports, never evicts");
+        assert_eq!(r.scanned, 1);
+        let r = collect(cache.local_backend(), &ns, u64::MAX, &none);
+        assert_eq!(r.evicted, 0, "within budget evicts nothing");
+        assert!(r.live_bytes > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn session_registry_pins_this_processes_artifacts() {
+        let dir = std::env::temp_dir().join("genie_gc_session_pins");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let ns = cache.hot_namespace().to_string();
+        let mut rng = Pcg32::new(11);
+        cache.store("gc", key_of(0), &art_of(&mut rng, 256)).unwrap();
+        // stored ⇒ session-pinned ⇒ a 1-byte budget cannot evict it
+        let r = collect(cache.local_backend(), &ns, 1, &HashSet::new());
+        assert_eq!(r.evicted, 0);
+        assert_eq!(r.pinned, 1);
+        assert!(cache.path("gc", key_of(0)).exists());
+        clear_session_pins(&ns);
+        let r = collect(cache.local_backend(), &ns, 1, &HashSet::new());
+        assert_eq!(r.evicted, 1, "unpinned it *is* evictable");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,239 @@
+//! Tier 0 of the artifact store (DESIGN.md §16): a process-global
+//! in-memory cache of deserialized artifacts behind `Arc<Store>`
+//! handles. N grid jobs that agree on a content key deserialize the
+//! GTS1 bytes exactly once; every later load clones an `Arc` instead of
+//! re-reading and re-parsing a multi-megabyte file.
+//!
+//! The map is namespaced by *canonical cache directory*, and byte
+//! accounting + LRU eviction are per-namespace: two `ArtifactCache`
+//! instances on different dirs (every unit test, every grid job with a
+//! scratch cache) never see each other's entries or evict each other's
+//! budget, while instances on the same dir (the N per-node job caches of
+//! one grid run) share one hot pool — which is the whole point.
+//!
+//! Sizes are accounted as the artifact's *serialized* length — a stable,
+//! cheap proxy for resident memory (GTS1 bytes are within a few percent
+//! of the deserialized tensor payload). The budget is passed per call by
+//! the owning cache, so different dirs can run different budgets.
+//!
+//! A second process-global table counts tier-1 deserializations per
+//! `(dir, stem)` — the observable the "N agreeing cells parse once"
+//! acceptance test pins (`tests/grid.rs`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::sync::Arc;
+
+use crate::store::Store;
+
+#[derive(Debug)]
+struct HotEntry {
+    store: Arc<Store>,
+    bytes: u64,
+    /// Monotone recency stamp (global counter; larger = more recent).
+    tick: u64,
+}
+
+#[derive(Debug, Default)]
+struct DirCache {
+    entries: HashMap<String, HotEntry>,
+    bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct HotState {
+    dirs: HashMap<String, DirCache>,
+    tick: u64,
+}
+
+fn state() -> MutexGuard<'static, HotState> {
+    static HOT: OnceLock<Mutex<HotState>> = OnceLock::new();
+    HOT.get_or_init(|| Mutex::new(HotState::default()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// The hot tier's namespace key for a cache dir: the canonical path when
+/// resolvable (so `cache/` and `./cache/` share entries), the lossy
+/// string otherwise.
+pub(crate) fn namespace(dir: &Path) -> String {
+    std::fs::canonicalize(dir)
+        .map(|p| p.to_string_lossy().into_owned())
+        .unwrap_or_else(|_| dir.to_string_lossy().into_owned())
+}
+
+/// Tier-0 lookup; bumps the entry's recency on hit.
+pub(crate) fn get(ns: &str, stem: &str) -> Option<Arc<Store>> {
+    let mut st = state();
+    st.tick += 1;
+    let tick = st.tick;
+    let entry = st.dirs.get_mut(ns)?.entries.get_mut(stem)?;
+    entry.tick = tick;
+    Some(entry.store.clone())
+}
+
+/// Insert (or replace) an entry, then evict least-recently-used entries
+/// of the same namespace until its bytes fit `budget` (0 = unlimited).
+/// Returns how many entries were evicted. An artifact larger than the
+/// whole budget is not cached at all — caching it would evict everything
+/// else for a single-use resident.
+pub(crate) fn insert(
+    ns: &str,
+    stem: &str,
+    store: Arc<Store>,
+    bytes: u64,
+    budget: u64,
+) -> u64 {
+    let mut st = state();
+    st.tick += 1;
+    let tick = st.tick;
+    let dir = st.dirs.entry(ns.to_string()).or_default();
+    if budget > 0 && bytes > budget {
+        // still drop any stale copy under this stem
+        if let Some(old) = dir.entries.remove(stem) {
+            dir.bytes -= old.bytes;
+        }
+        return 0;
+    }
+    if let Some(old) =
+        dir.entries.insert(stem.to_string(), HotEntry { store, bytes, tick })
+    {
+        dir.bytes -= old.bytes;
+    }
+    dir.bytes += bytes;
+    let mut evicted = 0u64;
+    while budget > 0 && dir.bytes > budget {
+        let Some(victim) = dir
+            .entries
+            .iter()
+            .filter(|(k, _)| k.as_str() != stem)
+            .min_by_key(|(_, e)| e.tick)
+            .map(|(k, _)| k.clone())
+        else {
+            break;
+        };
+        if let Some(e) = dir.entries.remove(&victim) {
+            dir.bytes -= e.bytes;
+            evicted += 1;
+        }
+    }
+    evicted
+}
+
+/// Drop one entry (GC eviction, corrupt-artifact invalidation).
+pub(crate) fn remove(ns: &str, stem: &str) {
+    let mut st = state();
+    if let Some(dir) = st.dirs.get_mut(ns) {
+        if let Some(e) = dir.entries.remove(stem) {
+            dir.bytes -= e.bytes;
+        }
+    }
+}
+
+/// Bytes currently resident for a namespace.
+pub(crate) fn dir_bytes(ns: &str) -> u64 {
+    state().dirs.get(ns).map_or(0, |d| d.bytes)
+}
+
+/// Drop every hot entry of one namespace (tests, benches, `cache gc`).
+pub(crate) fn clear(ns: &str) {
+    state().dirs.remove(ns);
+}
+
+// ---- tier-1 deserialization counter --------------------------------
+
+fn deser() -> MutexGuard<'static, HashMap<(String, String), u64>> {
+    static DESER: OnceLock<Mutex<HashMap<(String, String), u64>>> =
+        OnceLock::new();
+    DESER
+        .get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// Record one GTS1 parse of `stem` from a disk tier of namespace `ns`.
+pub(crate) fn note_deser(ns: &str, stem: &str) {
+    *deser()
+        .entry((ns.to_string(), stem.to_string()))
+        .or_insert(0) += 1;
+}
+
+/// How many times `stem` has been parsed from disk for this namespace
+/// over the process lifetime (the tier-0 acceptance observable).
+pub(crate) fn deser_count(ns: &str, stem: &str) -> u64 {
+    deser()
+        .get(&(ns.to_string(), stem.to_string()))
+        .copied()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn mk(v: f32) -> Arc<Store> {
+        let mut s = Store::new();
+        s.insert("x", Tensor::scalar_f32(v));
+        Arc::new(s)
+    }
+
+    #[test]
+    fn hit_shares_the_arc_and_namespaces_isolate() {
+        let ns = "hot_test_ns_a";
+        clear(ns);
+        let a = mk(1.0);
+        insert(ns, "k1", a.clone(), 10, 0);
+        let got = get(ns, "k1").unwrap();
+        assert!(Arc::ptr_eq(&a, &got), "tier 0 serves shared handles");
+        assert!(get("hot_test_ns_other", "k1").is_none());
+        assert_eq!(dir_bytes(ns), 10);
+        clear(ns);
+        assert!(get(ns, "k1").is_none());
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_budget() {
+        let ns = "hot_test_ns_lru";
+        clear(ns);
+        insert(ns, "a", mk(1.0), 40, 100);
+        insert(ns, "b", mk(2.0), 40, 100);
+        // touch a so b is the LRU entry
+        assert!(get(ns, "a").is_some());
+        let evicted = insert(ns, "c", mk(3.0), 40, 100);
+        assert_eq!(evicted, 1);
+        assert!(get(ns, "b").is_none(), "LRU entry evicted");
+        assert!(get(ns, "a").is_some());
+        assert!(get(ns, "c").is_some());
+        assert_eq!(dir_bytes(ns), 80);
+        clear(ns);
+    }
+
+    #[test]
+    fn oversized_entry_is_not_cached_and_replace_reaccounts() {
+        let ns = "hot_test_ns_big";
+        clear(ns);
+        insert(ns, "a", mk(1.0), 10, 100);
+        assert_eq!(insert(ns, "huge", mk(9.0), 1000, 100), 0);
+        assert!(get(ns, "huge").is_none(), "never evict the world for one");
+        assert!(get(ns, "a").is_some(), "small resident survives");
+        // replacing a stem swaps the accounting, not accumulates
+        insert(ns, "a", mk(2.0), 30, 100);
+        assert_eq!(dir_bytes(ns), 30);
+        assert_eq!(get(ns, "a").unwrap().get("x").unwrap().scalar(), 2.0);
+        clear(ns);
+    }
+
+    #[test]
+    fn deser_counter_tracks_per_dir_stem() {
+        let ns = "hot_test_ns_deser";
+        assert_eq!(deser_count(ns, "s"), 0);
+        note_deser(ns, "s");
+        note_deser(ns, "s");
+        note_deser(ns, "t");
+        assert_eq!(deser_count(ns, "s"), 2);
+        assert_eq!(deser_count(ns, "t"), 1);
+        assert_eq!(deser_count("elsewhere", "s"), 0);
+    }
+}

@@ -32,23 +32,63 @@
 //! lock releases, then re-check the cache and hit.
 //!
 //! Integrity (DESIGN.md §13): every store writes a `<file>.fnv` sidecar
-//! carrying the FNV-1a 64 hash of the artifact bytes; every load
-//! re-hashes the raw file and verifies it (plus the GTS1 parse). A
-//! corrupt or torn artifact is moved into the `quarantine/` sidecar dir,
-//! counted as a miss *and* as [`CacheStats::quarantined`], and the stage
-//! recomputes — a crash-looping service never wedges on a bad file.
+//! carrying the FNV-1a 64 hash of the artifact bytes — folded in the
+//! same pass that serializes them, never a re-read; every load hashes
+//! the byte buffer the parser consumes, once, and verifies it (plus the
+//! GTS1 parse). A corrupt or torn artifact is moved into the tier's
+//! `quarantine/` sidecar dir, counted as a miss *and* as
+//! [`CacheStats::quarantined`], its claim lockfile is released so
+//! waiters recompute immediately, and the stage re-runs — a
+//! crash-looping service never wedges on a bad file.
+//!
+//! **Tiers (DESIGN.md §16).** The cache is a three-tier read-through /
+//! write-through stack:
+//!
+//!   * **tier 0** ([`hot`]) — a process-global in-memory map of
+//!     deserialized artifacts behind `Arc<Store>` handles, LRU-bounded
+//!     by `cache.hot_bytes`. N grid jobs agreeing on a content key parse
+//!     the GTS1 bytes exactly once; every later load clones an `Arc`.
+//!   * **tier 1** ([`backend::LocalDir`]) — the on-disk layout, bounded
+//!     by `cache.budget_bytes` via pin-aware GC ([`gc`]).
+//!   * **tier 2** ([`backend::SharedDir`], optional) — the same layout
+//!     on a shared directory so many machines pool one artifact store;
+//!     a tier-2 hit is copied down to tier 1, a store is written through
+//!     to both.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{DistillCfg, PretrainCfg, QuantCfg};
-use crate::phase::checkpoint::atomic_save;
 use crate::phase::StageCkpt;
 use crate::precision::PrecisionPlan;
 use crate::runtime::Manifest;
 use crate::store::{fnv1a, Store, FNV_OFFSET};
 use crate::tensor::{Data, Tensor};
+
+pub mod backend;
+pub mod gc;
+mod hot;
+
+pub use backend::{Backend, LocalDir, SharedDir};
+pub use gc::GcReport;
+
+/// Drop every tier-0 entry for one cache directory (tests and benches
+/// that need to observe true disk behavior after in-process stores).
+pub fn clear_hot(dir: impl AsRef<Path>) {
+    hot::clear(&hot::namespace(dir.as_ref()));
+}
+
+/// How many times `<kind>_<key>` has been deserialized from a disk tier
+/// of `dir` over the process lifetime — the observable behind the
+/// "N agreeing cells parse a shared artifact exactly once" contract.
+pub fn disk_deser_count(dir: impl AsRef<Path>, kind: &str, key: CacheKey) -> u64 {
+    hot::deser_count(
+        &hot::namespace(dir.as_ref()),
+        &format!("{kind}_{}", key.hex()),
+    )
+}
 
 /// A 64-bit content-addressed cache key.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -309,6 +349,8 @@ pub fn eval_q_spec_key(m: &Manifest, quantize_spec: CacheKey) -> CacheKey {
 }
 
 /// Cache traffic counters, mirrored into `Metrics` by the pipeline.
+/// `hits` counts a hit on *any* tier; the per-tier fields break it down
+/// (`hits == hot_hits + disk_hits + shared_hits`).
 #[derive(Debug, Default, Clone)]
 pub struct CacheStats {
     pub hits: u64,
@@ -318,6 +360,17 @@ pub struct CacheStats {
     /// `quarantine/` sidecar dir (each is also counted as a miss — the
     /// stage recomputes and rewrites).
     pub quarantined: u64,
+    /// Tier-0 hits: served from the in-process `Arc<Store>` map, no
+    /// disk read, no parse.
+    pub hot_hits: u64,
+    /// Tier-1 hits: read + verified + parsed from the local dir.
+    pub disk_hits: u64,
+    /// Tier-2 hits: read from the shared backend (and copied down).
+    pub shared_hits: u64,
+    /// Tier-0 entries evicted to stay under `cache.hot_bytes`.
+    pub hot_evictions: u64,
+    /// Tier-1 artifacts evicted by automatic GC (`cache.budget_bytes`).
+    pub gc_evictions: u64,
 }
 
 /// A held materialization claim on one artifact key (DESIGN.md §11):
@@ -347,15 +400,39 @@ impl Drop for WipClaim {
     }
 }
 
-/// The on-disk cache: completed artifacts as `<kind>_<key>.gts`, stage
-/// work dirs as `wip_<kind>_<key>/`, materialization locks as
-/// `wip_<kind>_<key>.lock`.
+/// Outcome of reading one artifact from one disk tier.
+enum TierRead {
+    /// No file — the ordinary cold miss at this tier.
+    Missing,
+    /// Bytes present but hash-mismatched or unparseable.
+    Corrupt(&'static str),
+    /// Verified and parsed: the store, the raw bytes (for write-through
+    /// and tier-0 size accounting), and their FNV-1a hash.
+    Parsed(Store, Vec<u8>, u64),
+}
+
+/// The tiered cache: completed artifacts as `<kind>_<key>.gts` (local
+/// dir = tier 1, optional shared dir = tier 2, hot `Arc<Store>` map =
+/// tier 0), stage work dirs as `wip_<kind>_<key>/`, materialization
+/// locks as `wip_<kind>_<key>.lock` (always local — see
+/// [`backend`] for the shared tier's coordination contract).
 #[derive(Debug)]
 pub struct ArtifactCache {
     dir: PathBuf,
+    /// Hot-tier namespace: the canonical form of `dir`, so every cache
+    /// instance on the same directory shares one tier-0 pool.
+    ns: String,
+    local: LocalDir,
+    /// Tier 2, when `cache.backend = shared-dir`.
+    shared: Option<SharedDir>,
     enabled: bool,
     resume: bool,
     checkpoint_every: usize,
+    /// Tier-0 byte budget (0 = unlimited).
+    hot_bytes: u64,
+    /// Tier-1 byte budget (0 = unlimited); enforced by a pin-aware GC
+    /// pass after every store.
+    budget_bytes: u64,
     /// Lockfiles older than this are treated as left by a crashed
     /// claimant and broken (claims touch their lock only at creation, so
     /// age = mtime age).
@@ -377,11 +454,17 @@ impl ArtifactCache {
             std::fs::create_dir_all(dir.as_ref())
                 .with_context(|| format!("create cache dir {:?}", dir.as_ref()))?;
         }
+        let dir = dir.as_ref().to_path_buf();
         Ok(ArtifactCache {
-            dir: dir.as_ref().to_path_buf(),
+            ns: hot::namespace(&dir),
+            local: LocalDir::new(&dir),
+            shared: None,
+            dir,
             enabled,
             resume,
             checkpoint_every: 50,
+            hot_bytes: 0,
+            budget_bytes: 0,
             claim_stale_secs: 1800,
             stats: CacheStats::default(),
         })
@@ -390,11 +473,17 @@ impl ArtifactCache {
     /// A cache that never hits nor persists — for call sites that opt
     /// out of caching entirely.
     pub fn disabled() -> Self {
+        let dir = PathBuf::from("cache");
         ArtifactCache {
-            dir: PathBuf::from("cache"),
+            ns: String::new(),
+            local: LocalDir::new(&dir),
+            shared: None,
+            dir,
             enabled: false,
             resume: false,
             checkpoint_every: 0,
+            hot_bytes: 0,
+            budget_bytes: 0,
             claim_stale_secs: 1800,
             stats: CacheStats::default(),
         }
@@ -414,6 +503,53 @@ impl ArtifactCache {
         self.checkpoint_every = every;
     }
 
+    /// Tier-0 byte budget (0 = unlimited).
+    pub fn set_hot_bytes(&mut self, bytes: u64) {
+        self.hot_bytes = bytes;
+    }
+
+    /// Tier-1 byte budget (0 = unlimited). When set, every store runs a
+    /// pin-aware GC pass ([`gc::collect`]) — artifacts this process has
+    /// touched are session-pinned, so a tight budget only evicts other
+    /// sessions' leftovers.
+    pub fn set_budget_bytes(&mut self, bytes: u64) {
+        self.budget_bytes = bytes;
+    }
+
+    /// Attach the tier-2 shared-directory backend.
+    pub fn attach_shared(&mut self, dir: impl AsRef<Path>) -> Result<()> {
+        self.shared = Some(SharedDir::new(dir)?);
+        Ok(())
+    }
+
+    /// The hot-tier namespace this cache reads/writes (test hook).
+    pub fn hot_namespace(&self) -> &str {
+        &self.ns
+    }
+
+    /// The tier-1 backend (GC and `cache stats|gc` operate on it).
+    pub fn local_backend(&self) -> &dyn Backend {
+        &self.local
+    }
+
+    /// The tier-2 backend, when configured.
+    pub fn shared_backend(&self) -> Option<&dyn Backend> {
+        self.shared.as_ref().map(|s| s as &dyn Backend)
+    }
+
+    /// `(hot, disk)` bytes currently resident for this cache dir — the
+    /// `cache/<tier>/bytes` metric sources.
+    pub fn tier_bytes(&self) -> (u64, u64) {
+        let disk = self
+            .local
+            .list()
+            .iter()
+            .filter(|e| e.name.ends_with(".gts"))
+            .map(|e| e.bytes)
+            .sum();
+        (hot::dir_bytes(&self.ns), disk)
+    }
+
     pub fn path(&self, kind: &str, key: CacheKey) -> PathBuf {
         self.dir.join(format!("{kind}_{}.gts", key.hex()))
     }
@@ -429,73 +565,162 @@ impl ArtifactCache {
         self.dir.join("quarantine")
     }
 
-    /// Move a bad artifact (and its sidecar) into `quarantine/`,
-    /// counting it. The caller then reports a miss and recomputes; the
-    /// re-store overwrites cleanly.
-    fn quarantine(&mut self, kind: &str, key: CacheKey, why: &str) {
-        let qdir = self.quarantine_dir();
-        std::fs::create_dir_all(&qdir).ok();
-        for p in [self.path(kind, key), self.sidecar_path(kind, key)] {
-            if let Some(name) = p.file_name() {
-                if p.exists() {
-                    std::fs::rename(&p, qdir.join(name)).ok();
-                }
+    /// Move a bad artifact (and its sidecar) into the tier's
+    /// `quarantine/`, counting it, dropping any tier-0 copy, and
+    /// releasing the claim lockfile — waiters should wake and recompute
+    /// immediately instead of riding out the stale-takeover timeout.
+    /// (Deleting a lockfile out from under its holder is safe:
+    /// [`WipClaim`]'s drop is token-checked.) The caller then reports a
+    /// miss; the re-store overwrites cleanly.
+    fn quarantine_tier(
+        &mut self,
+        shared: bool,
+        kind: &str,
+        key: CacheKey,
+        why: &str,
+    ) {
+        let stem = format!("{kind}_{}", key.hex());
+        let file = format!("{stem}.gts");
+        let tier = if shared { "shared" } else { "disk" };
+        if shared {
+            if let Some(b) = &self.shared {
+                b.quarantine(&file);
+                b.quarantine(&format!("{file}.fnv"));
             }
+        } else {
+            self.local.quarantine(&file);
+            self.local.quarantine(&format!("{file}.fnv"));
         }
+        hot::remove(&self.ns, &stem);
+        std::fs::remove_file(self.lock_path(kind, key)).ok();
         self.stats.quarantined += 1;
         crate::progress!(
-            "cache: quarantined {kind}_{} ({why}); stage will recompute",
-            key.hex()
+            "cache[{tier}]: quarantined {stem} ({why}); stage will recompute"
         );
     }
 
-    /// Read + verify one artifact: offer it to the fault injector, hash
-    /// the raw bytes against the sidecar (a missing sidecar skips the
-    /// hash check — pre-§13 caches), then parse. Hash mismatches and
-    /// parse failures quarantine the file; a missing file is `None`
-    /// without quarantine (the ordinary cold miss).
-    fn load_verified(&mut self, kind: &str, key: CacheKey) -> Option<Store> {
-        let path = self.path(kind, key);
-        crate::faults::corrupt_hook(
-            &format!("{kind}_{}", key.hex()),
-            &path,
-        );
-        let bytes = std::fs::read(&path).ok()?;
-        if let Ok(want) = std::fs::read_to_string(self.sidecar_path(kind, key))
-        {
-            let got = format!("{:016x}", fnv1a(FNV_OFFSET, &bytes));
-            if want.trim() != got {
-                self.quarantine(kind, key, "content hash mismatch");
-                return None;
+    /// Read + verify one artifact from one disk tier: hash the byte
+    /// buffer the parser consumes — once, no second read — against the
+    /// sidecar (a missing sidecar skips the hash check: pre-§13
+    /// caches), then parse the same buffer.
+    fn read_tier(&self, shared: bool, file: &str) -> TierRead {
+        let read = |name: &str| {
+            if shared {
+                self.shared.as_ref().and_then(|b| b.read(name))
+            } else {
+                self.local.read(name)
+            }
+        };
+        let Some(bytes) = read(file) else {
+            return TierRead::Missing;
+        };
+        let hash = fnv1a(FNV_OFFSET, &bytes);
+        if let Some(sc) = read(&format!("{file}.fnv")) {
+            let want = String::from_utf8_lossy(&sc);
+            if want.trim() != format!("{hash:016x}") {
+                return TierRead::Corrupt("content hash mismatch");
             }
         }
         match Store::from_bytes(&bytes) {
-            Ok(s) => Some(s),
-            Err(_) => {
-                self.quarantine(kind, key, "unparseable GTS1 bytes");
-                None
-            }
+            Ok(s) => TierRead::Parsed(s, bytes, hash),
+            Err(_) => TierRead::Corrupt("unparseable GTS1 bytes"),
         }
     }
 
-    /// Look a completed artifact up, counting the hit/miss. A missing
-    /// file is a miss; a corrupt/torn file is quarantined *and* counted
-    /// as a miss (the stage re-runs and rewrites it).
-    pub fn load(&mut self, kind: &str, key: CacheKey) -> Option<Store> {
+    /// The tiered lookup behind [`load`](Self::load) and
+    /// [`load_checked`](Self::load_checked): tier 0 serves a shared
+    /// handle with no I/O; a tier-1 hit re-publishes the sidecar (which
+    /// refreshes the artifact's GC recency); a tier-2 hit is copied
+    /// down to tier 1; any disk hit is promoted into tier 0. A corrupt
+    /// tier is quarantined and the next tier tried — read-through
+    /// repair. A `check` failure at one tier falls through to the next
+    /// (a partial copy elsewhere may be complete here).
+    fn load_tiered(
+        &mut self,
+        kind: &str,
+        key: CacheKey,
+        check: Option<&dyn Fn(&Store) -> bool>,
+    ) -> Option<Arc<Store>> {
         if !self.enabled {
             self.stats.misses += 1;
             return None;
         }
-        match self.load_verified(kind, key) {
-            Some(s) => {
+        let stem = format!("{kind}_{}", key.hex());
+        let file = format!("{stem}.gts");
+        // fault injection first: an injected disk corruption must be
+        // observed on this load, never masked by a hot copy
+        if crate::faults::corrupt_hook(&stem, &self.path(kind, key)) {
+            hot::remove(&self.ns, &stem);
+        }
+        if let Some(s) = hot::get(&self.ns, &stem) {
+            if check.map_or(true, |c| c(&s)) {
+                gc::pin_session(&self.ns, &stem);
                 self.stats.hits += 1;
-                Some(s)
+                self.stats.hot_hits += 1;
+                return Some(s);
             }
-            None => {
-                self.stats.misses += 1;
-                None
+            // incoherent resident (the artifact was re-stored partial
+            // elsewhere): drop it and re-read the disk tiers
+            hot::remove(&self.ns, &stem);
+        }
+        for shared in [false, true] {
+            if shared && self.shared.is_none() {
+                break;
+            }
+            match self.read_tier(shared, &file) {
+                TierRead::Missing => continue,
+                TierRead::Corrupt(why) => {
+                    self.quarantine_tier(shared, kind, key, why);
+                    continue;
+                }
+                TierRead::Parsed(s, bytes, hash) => {
+                    if check.is_some_and(|c| !c(&s)) {
+                        continue;
+                    }
+                    hot::note_deser(&self.ns, &stem);
+                    let hex = format!("{hash:016x}");
+                    if shared {
+                        // write-through down to tier 1: the next
+                        // process-cold load is local
+                        self.local.write(&file, &bytes).ok();
+                        self.local
+                            .write(&format!("{file}.fnv"), hex.as_bytes())
+                            .ok();
+                        self.stats.shared_hits += 1;
+                    } else {
+                        // re-publish the sidecar: refreshes this
+                        // artifact's mtime recency for GC (and emits
+                        // the sidecar for pre-§13 caches)
+                        self.local
+                            .write(&format!("{file}.fnv"), hex.as_bytes())
+                            .ok();
+                        self.stats.disk_hits += 1;
+                    }
+                    gc::pin_session(&self.ns, &stem);
+                    let arc = Arc::new(s);
+                    self.stats.hot_evictions += hot::insert(
+                        &self.ns,
+                        &stem,
+                        arc.clone(),
+                        bytes.len() as u64,
+                        self.hot_bytes,
+                    );
+                    self.stats.hits += 1;
+                    return Some(arc);
+                }
             }
         }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Look a completed artifact up, counting the hit/miss. A missing
+    /// file is a miss; a corrupt/torn file is quarantined *and* counted
+    /// as a miss (the stage re-runs and rewrites it). Returns a shared
+    /// handle — N agreeing callers deserialize once and clone the
+    /// `Arc`; `Store::clone` through it is copy-on-write either way.
+    pub fn load(&mut self, kind: &str, key: CacheKey) -> Option<Arc<Store>> {
+        self.load_tiered(kind, key, None)
     }
 
     /// [`Self::load`] gated on a coherence check: an artifact that
@@ -509,28 +734,75 @@ impl ArtifactCache {
         kind: &str,
         key: CacheKey,
         check: impl Fn(&Store) -> bool,
-    ) -> Option<Store> {
-        if !self.enabled {
-            self.stats.misses += 1;
-            return None;
-        }
-        match self.load_verified(kind, key) {
-            Some(s) if check(&s) => {
-                self.stats.hits += 1;
-                Some(s)
-            }
-            _ => {
-                self.stats.misses += 1;
-                None
-            }
-        }
+    ) -> Option<Arc<Store>> {
+        self.load_tiered(kind, key, Some(&check))
     }
 
-    /// Store a completed artifact (atomic write + content-hash sidecar)
-    /// and clear the stage's work dir. No-op when disabled. The sidecar
-    /// lands after the artifact, so a crash between the two leaves a
-    /// state the next load either verifies (no sidecar yet: parse-only)
-    /// or quarantines — never serves silently corrupted.
+    /// A tiered lookup that touches no traffic counters — the grid's
+    /// `--dry-run` resolution predicts cache dispositions without
+    /// polluting the stats a real run will report. Disk hits are still
+    /// promoted into tier 0, so a dry run warms the real one.
+    pub fn peek(&self, kind: &str, key: CacheKey) -> Option<Arc<Store>> {
+        if !self.enabled {
+            return None;
+        }
+        let stem = format!("{kind}_{}", key.hex());
+        let file = format!("{stem}.gts");
+        if let Some(s) = hot::get(&self.ns, &stem) {
+            return Some(s);
+        }
+        for shared in [false, true] {
+            if shared && self.shared.is_none() {
+                break;
+            }
+            if let TierRead::Parsed(s, bytes, _) =
+                self.read_tier(shared, &file)
+            {
+                hot::note_deser(&self.ns, &stem);
+                gc::pin_session(&self.ns, &stem);
+                let arc = Arc::new(s);
+                hot::insert(
+                    &self.ns,
+                    &stem,
+                    arc.clone(),
+                    bytes.len() as u64,
+                    self.hot_bytes,
+                );
+                return Some(arc);
+            }
+        }
+        None
+    }
+
+    /// Does any tier hold this artifact? (Existence only — no read, no
+    /// verification, no counters; the dry-run disposition for stages
+    /// that would load lazily.)
+    pub fn contains(&self, kind: &str, key: CacheKey) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        let stem = format!("{kind}_{}", key.hex());
+        if hot::get(&self.ns, &stem).is_some() {
+            return true;
+        }
+        if self.path(kind, key).exists() {
+            return true;
+        }
+        self.shared
+            .as_ref()
+            .is_some_and(|b| b.root().join(format!("{stem}.gts")).exists())
+    }
+
+    /// Store a completed artifact and clear the stage's work dir: one
+    /// serialization pass yields the bytes *and* the FNV-1a content
+    /// hash ([`Store::to_bytes_hashed`]), the artifact lands atomically
+    /// on tier 1 (then tier 2, write-through), the sidecar lands after
+    /// the artifact — a crash between the two leaves a state the next
+    /// load either verifies (no sidecar yet: parse-only) or
+    /// quarantines, never serves silently corrupted — and the
+    /// deserialized store is promoted into tier 0. No-op when disabled.
+    /// With a tier-1 budget set, a pin-aware GC pass runs after the
+    /// write (artifacts this session touched are pinned, see [`gc`]).
     pub fn store(
         &mut self,
         kind: &str,
@@ -540,17 +812,37 @@ impl ArtifactCache {
         if !self.enabled {
             return Ok(None);
         }
-        let p = self.path(kind, key);
-        atomic_save(s, &p)?;
-        // Store::write_to is the file serializer, so the content hash
-        // *is* the FNV-1a of the on-disk bytes — no re-read needed
-        std::fs::write(
-            self.sidecar_path(kind, key),
-            format!("{:016x}", s.content_hash()),
-        )
-        .with_context(|| format!("write hash sidecar for {p:?}"))?;
+        let stem = format!("{kind}_{}", key.hex());
+        let file = format!("{stem}.gts");
+        let (bytes, hash) = s.to_bytes_hashed()?;
+        let hex = format!("{hash:016x}");
+        let p = self.local.write(&file, &bytes)?;
+        self.local
+            .write(&format!("{file}.fnv"), hex.as_bytes())
+            .with_context(|| format!("write hash sidecar for {p:?}"))?;
+        if let Some(sh) = &self.shared {
+            sh.write(&file, &bytes)?;
+            sh.write(&format!("{file}.fnv"), hex.as_bytes())?;
+        }
+        gc::pin_session(&self.ns, &stem);
+        self.stats.hot_evictions += hot::insert(
+            &self.ns,
+            &stem,
+            Arc::new(s.clone()),
+            bytes.len() as u64,
+            self.hot_bytes,
+        );
         self.stats.stores += 1;
         self.clear_wip(kind, key);
+        if self.budget_bytes > 0 {
+            let r = gc::collect(
+                &self.local,
+                &self.ns,
+                self.budget_bytes,
+                &std::collections::HashSet::new(),
+            );
+            self.stats.gc_evictions += r.evicted as u64;
+        }
         Ok(Some(p))
     }
 
@@ -1085,6 +1377,9 @@ mod tests {
         let want = std::fs::read_to_string(&sidecar).unwrap();
         assert_eq!(want, format!("{:016x}", art.content_hash()));
 
+        // drop the tier-0 copy: this test is about *disk* verification,
+        // and a hot hit would legitimately never touch the bytes
+        clear_hot(&dir);
         // a flipped byte in the middle of a *parseable* region is caught
         // by the hash (the parse alone might accept it)
         let p = cache.path("stage", key);
@@ -1103,6 +1398,166 @@ mod tests {
         let back = cache.load("stage", key).unwrap();
         assert_eq!(back.content_hash(), art.content_hash());
         assert_eq!(cache.stats().hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hot_tier_parses_a_shared_artifact_once() {
+        let dir = std::env::temp_dir().join("genie_artifact_hot_once");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").field("x", 5).finish();
+        let mut art = Store::new();
+        art.insert("images", Tensor::from_f32(&[8], vec![0.5; 8]));
+        cache.store("stage", key, &art).unwrap();
+
+        // force process-cold: the first load parses tier 1, every later
+        // load (from any cache instance on this dir) clones the Arc
+        clear_hot(&dir);
+        let a = cache.load("stage", key).unwrap();
+        let b = cache.load("stage", key).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "tier 0 must share one handle");
+        let mut cache2 = ArtifactCache::open(&dir, true, false).unwrap();
+        let c = cache2.load("stage", key).unwrap();
+        assert!(Arc::ptr_eq(&a, &c), "instances on one dir share tier 0");
+        assert_eq!(
+            disk_deser_count(&dir, "stage", key),
+            1,
+            "exactly one GTS1 parse for three loads"
+        );
+        assert_eq!(cache.stats().disk_hits, 1);
+        assert_eq!(cache.stats().hot_hits, 1);
+        assert_eq!(cache.stats().hits, 2);
+        assert_eq!(cache2.stats().hot_hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quarantine_releases_the_claim_lockfile() {
+        let dir = std::env::temp_dir().join("genie_artifact_quar_claim");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").field("x", 6).finish();
+        let mut art = Store::new();
+        art.insert("images", Tensor::from_f32(&[4], vec![1.; 4]));
+        cache.store("stage", key, &art).unwrap();
+        clear_hot(&dir);
+        // corrupt the artifact on disk, then discover it while a claim
+        // is held (the normal claim → load → recompute sequence)
+        let p = cache.path("stage", key);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let claim = cache.claim("stage", key).unwrap();
+        assert!(cache.lock_path("stage", key).exists());
+        assert!(cache.load("stage", key).is_none());
+        assert_eq!(cache.stats().quarantined, 1);
+        assert!(
+            !cache.lock_path("stage", key).exists(),
+            "quarantine must release the claim so waiters recompute"
+        );
+        // the superseded claim's drop must not resurrect or remove
+        // anything (token check: its file is simply gone)
+        drop(claim);
+        assert!(!cache.lock_path("stage", key).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_backend_read_through_and_write_through() {
+        let root = std::env::temp_dir().join("genie_artifact_shared");
+        std::fs::remove_dir_all(&root).ok();
+        let pool = root.join("pool");
+        let key = KeyBuilder::new("test").field("x", 7).finish();
+        let mut art = Store::new();
+        art.insert("images", Tensor::from_f32(&[6], vec![2.; 6]));
+
+        // "machine A" stores: write-through lands the artifact + sidecar
+        // in both its local dir and the shared pool
+        let mut a =
+            ArtifactCache::open(root.join("a"), true, false).unwrap();
+        a.attach_shared(&pool).unwrap();
+        a.store("stage", key, &art).unwrap();
+        assert!(a.path("stage", key).exists());
+        let pool_file = pool.join(format!("stage_{}.gts", key.hex()));
+        assert!(pool_file.exists(), "write-through to tier 2");
+        assert!(pool
+            .join(format!("stage_{}.gts.fnv", key.hex()))
+            .exists());
+
+        // "machine B" (cold local dir) hits via the pool, and the hit is
+        // copied down so its next cold load is local
+        let mut b =
+            ArtifactCache::open(root.join("b"), true, false).unwrap();
+        b.attach_shared(&pool).unwrap();
+        let got = b.load("stage", key).unwrap();
+        assert_eq!(got.content_hash(), art.content_hash());
+        assert_eq!(b.stats().shared_hits, 1);
+        assert_eq!(b.stats().hits, 1);
+        assert!(b.path("stage", key).exists(), "read-through to tier 1");
+        clear_hot(root.join("b"));
+        b.load("stage", key).unwrap();
+        assert_eq!(b.stats().disk_hits, 1, "second cold load is local");
+
+        // a corrupt *local* copy falls through to the intact pool copy
+        let mut c =
+            ArtifactCache::open(root.join("c"), true, false).unwrap();
+        c.attach_shared(&pool).unwrap();
+        std::fs::write(c.path("stage", key), b"NOPE").unwrap();
+        let got = c.load("stage", key).unwrap();
+        assert_eq!(got.content_hash(), art.content_hash());
+        assert_eq!(c.stats().quarantined, 1, "bad local copy quarantined");
+        assert_eq!(c.stats().shared_hits, 1, "repaired from tier 2");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn hot_budget_bounds_residency() {
+        let dir = std::env::temp_dir().join("genie_artifact_hot_budget");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        cache.set_hot_bytes(400);
+        let mk = |v: f32| {
+            let mut s = Store::new();
+            s.insert("x", Tensor::from_f32(&[64], vec![v; 64]));
+            s
+        };
+        let k1 = KeyBuilder::new("test").field("i", 1).finish();
+        let k2 = KeyBuilder::new("test").field("i", 2).finish();
+        cache.store("stage", k1, &mk(1.0)).unwrap();
+        cache.store("stage", k2, &mk(2.0)).unwrap();
+        assert!(
+            cache.stats().hot_evictions >= 1,
+            "two ~300 B artifacts cannot both fit a 400 B hot budget: {:?}",
+            cache.stats()
+        );
+        // evicted entries are still served — from disk
+        assert!(cache.load("stage", k1).is_some());
+        assert!(cache.load("stage", k2).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn peek_counts_nothing_but_warms_tier0() {
+        let dir = std::env::temp_dir().join("genie_artifact_peek");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cache = ArtifactCache::open(&dir, true, false).unwrap();
+        let key = KeyBuilder::new("test").field("x", 8).finish();
+        let mut art = Store::new();
+        art.insert("images", Tensor::from_f32(&[4], vec![3.; 4]));
+        cache.store("stage", key, &art).unwrap();
+        clear_hot(&dir);
+        assert!(cache.peek("stage", key).is_some());
+        assert!(cache.contains("stage", key));
+        assert_eq!(cache.stats().hits, 0, "peek is stats-silent");
+        assert_eq!(cache.stats().misses, 0);
+        cache.load("stage", key).unwrap();
+        assert_eq!(cache.stats().hot_hits, 1, "peek warmed tier 0");
+        let missing = KeyBuilder::new("test").field("x", 9999).finish();
+        assert!(cache.peek("stage", missing).is_none());
+        assert!(!cache.contains("stage", missing));
+        assert_eq!(cache.stats().misses, 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -7,11 +7,22 @@
 
 use anyhow::{bail, Result};
 
+use crate::artifacts::ArtifactCache;
 use crate::exec::{Parallelism, Sched};
 use crate::precision::{validate_bits, Granularity, Policy};
 use crate::synthesis::Engine;
 
 use super::{DistillCfg, DistillMode, PretrainCfg, QuantCfg};
+
+/// Parse an env var as a number, treating unset/empty/garbage as absent
+/// (the CI matrix sets these to `''` on legs that don't pin them).
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok())
+}
+
+fn env_str(name: &str) -> Option<String> {
+    std::env::var(name).ok().filter(|v| !v.trim().is_empty())
+}
 
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -51,6 +62,21 @@ pub struct RunConfig {
     /// path. Default `dataflow`, overridable by `GENIE_SCHED` (the CI
     /// matrix knob)
     pub sched: Sched,
+    /// tier-1 disk budget in bytes (`cache.budget_bytes`, DESIGN.md
+    /// §16): every store runs a pin-aware GC pass back under it; 0 =
+    /// unlimited. Default from `GENIE_CACHE_BUDGET_BYTES` (CI knob)
+    pub cache_budget_bytes: u64,
+    /// tier-0 in-memory budget in bytes (`cache.hot_bytes`): LRU-evict
+    /// hot entries past it; 0 = unlimited. Default from
+    /// `GENIE_CACHE_HOT_BYTES`
+    pub cache_hot_bytes: u64,
+    /// storage backend (`cache.backend=local|shared-dir`): `shared-dir`
+    /// stacks a tier-2 shared directory pool under the local dir.
+    /// Default from `GENIE_CACHE_BACKEND` (the CI matrix knob)
+    pub cache_backend: String,
+    /// the shared pool's directory (`cache.shared_dir`, required when
+    /// backend is `shared-dir`). Default from `GENIE_CACHE_SHARED_DIR`
+    pub cache_shared_dir: String,
 }
 
 impl Default for RunConfig {
@@ -73,6 +99,13 @@ impl Default for RunConfig {
             retry_max: 2,
             retry_backoff_ms: 25,
             sched: Sched::from_env().unwrap_or_default(),
+            cache_budget_bytes: env_u64("GENIE_CACHE_BUDGET_BYTES")
+                .unwrap_or(0),
+            cache_hot_bytes: env_u64("GENIE_CACHE_HOT_BYTES").unwrap_or(0),
+            cache_backend: env_str("GENIE_CACHE_BACKEND")
+                .unwrap_or_else(|| "local".into()),
+            cache_shared_dir: env_str("GENIE_CACHE_SHARED_DIR")
+                .unwrap_or_default(),
         }
     }
 }
@@ -115,6 +148,17 @@ impl RunConfig {
             }
             "cache_dir" => self.cache_dir = value.to_string(),
             "cache" => self.cache = p!(bool),
+            "cache.budget_bytes" => self.cache_budget_bytes = p!(u64),
+            "cache.hot_bytes" => self.cache_hot_bytes = p!(u64),
+            "cache.backend" => match value {
+                "local" | "shared-dir" => {
+                    self.cache_backend = value.to_string()
+                }
+                _ => bail!(
+                    "bad value '{value}' for {key}: want local|shared-dir"
+                ),
+            },
+            "cache.shared_dir" => self.cache_shared_dir = value.to_string(),
             "resume" => self.resume = p!(bool),
             "checkpoint_every" | "ckpt.every" => {
                 self.checkpoint_every = p!(usize)
@@ -216,6 +260,23 @@ impl RunConfig {
         }
         Ok(())
     }
+
+    /// Open the artifact cache this config describes, with every tier
+    /// knob applied (DESIGN.md §16): checkpoint cadence, tier-0/tier-1
+    /// budgets, and the shared tier-2 backend when configured. The one
+    /// construction path `genie run`, `genie grid` jobs, and
+    /// `genie cache` all share.
+    pub fn open_cache(&self) -> Result<ArtifactCache> {
+        let mut cache =
+            ArtifactCache::open(&self.cache_dir, self.cache, self.resume)?;
+        cache.set_checkpoint_every(self.checkpoint_every);
+        cache.set_hot_bytes(self.cache_hot_bytes);
+        cache.set_budget_bytes(self.cache_budget_bytes);
+        if self.cache_backend == "shared-dir" {
+            cache.attach_shared(&self.cache_shared_dir)?;
+        }
+        Ok(cache)
+    }
 }
 
 #[cfg(test)]
@@ -302,6 +363,58 @@ mod tests {
         assert!(c.resume);
         assert_eq!(c.cache_dir, "/tmp/x");
         assert_eq!(c.checkpoint_every, 25);
+    }
+
+    #[test]
+    fn cache_tier_keys_apply() {
+        let mut c = RunConfig::default();
+        // defaults come from the GENIE_CACHE_* env knobs when set (the
+        // CI matrix legs pin them); unset, everything is off/unlimited
+        if std::env::var("GENIE_CACHE_BUDGET_BYTES")
+            .map_or(true, |v| v.is_empty())
+        {
+            assert_eq!(c.cache_budget_bytes, 0, "default is unlimited");
+        }
+        if std::env::var("GENIE_CACHE_BACKEND")
+            .map_or(true, |v| v.is_empty())
+        {
+            assert_eq!(c.cache_backend, "local");
+        }
+        c.apply_overrides(&[
+            "cache.budget_bytes=4096".into(),
+            "cache.hot_bytes=1024".into(),
+            "cache.backend=shared-dir".into(),
+            "cache.shared_dir=/tmp/pool".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.cache_budget_bytes, 4096);
+        assert_eq!(c.cache_hot_bytes, 1024);
+        assert_eq!(c.cache_backend, "shared-dir");
+        assert_eq!(c.cache_shared_dir, "/tmp/pool");
+        assert!(c.set("cache.backend", "s3").is_err());
+        assert!(c.set("cache.budget_bytes", "lots").is_err());
+    }
+
+    #[test]
+    fn open_cache_applies_the_tier_knobs() {
+        let dir = std::env::temp_dir().join("genie_cfg_open_cache");
+        let _ = std::fs::remove_dir_all(&dir);
+        let pool = dir.join("pool");
+        let mut c = RunConfig::default();
+        c.cache_dir = dir.join("local").to_string_lossy().into_owned();
+        c.set("cache.backend", "shared-dir").unwrap();
+        c.cache_shared_dir = pool.to_string_lossy().into_owned();
+        let cache = c.open_cache().unwrap();
+        assert!(
+            cache.shared_backend().is_some(),
+            "shared-dir backend attaches tier 2"
+        );
+        assert!(pool.is_dir(), "tier-2 pool dir is created");
+        // shared-dir without a directory is a config error, not a
+        // silent local fallback
+        c.cache_shared_dir = String::new();
+        assert!(c.open_cache().is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

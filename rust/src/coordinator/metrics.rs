@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::artifacts::CacheStats;
 use crate::exec::{DagReport, PoolReport};
 
 #[derive(Debug, Default)]
@@ -183,6 +184,45 @@ impl Metrics {
         self.log(&name, n + 1, 1.0);
     }
 
+    /// Record the end-of-run tiered-cache rollup (DESIGN.md §16):
+    /// totals plus `cache/<tier>/{hits,misses,evictions,bytes}` from
+    /// the folded per-run [`CacheStats`]. Per-tier misses are derived
+    /// from the hit waterfall — a load that misses tier 0 either hits a
+    /// lower tier or misses outright, so `hot/misses = disk_hits +
+    /// shared_hits + misses` and `disk/misses = shared_hits + misses`.
+    /// One sample per run at step 0; every value is a deterministic
+    /// function of *what* ran, not when, so the scheduler-equivalence
+    /// test compares these across wave/dataflow and worker counts.
+    pub fn record_cache_tiers(
+        &mut self,
+        s: &CacheStats,
+        tier_bytes: (u64, u64),
+    ) {
+        let (hot_bytes, disk_bytes) = tier_bytes;
+        self.log("cache/hits", 0, s.hits as f32);
+        self.log("cache/misses", 0, s.misses as f32);
+        self.log("cache/stores", 0, s.stores as f32);
+        self.log("cache/quarantined", 0, s.quarantined as f32);
+        self.log("cache/hot/hits", 0, s.hot_hits as f32);
+        self.log(
+            "cache/hot/misses",
+            0,
+            (s.disk_hits + s.shared_hits + s.misses) as f32,
+        );
+        self.log("cache/hot/evictions", 0, s.hot_evictions as f32);
+        self.log("cache/hot/bytes", 0, hot_bytes as f32);
+        self.log("cache/disk/hits", 0, s.disk_hits as f32);
+        self.log(
+            "cache/disk/misses",
+            0,
+            (s.shared_hits + s.misses) as f32,
+        );
+        self.log("cache/disk/evictions", 0, s.gc_evictions as f32);
+        self.log("cache/disk/bytes", 0, disk_bytes as f32);
+        self.log("cache/shared/hits", 0, s.shared_hits as f32);
+        self.log("cache/shared/misses", 0, s.misses as f32);
+    }
+
     /// Record a phase's checkpoint writes: `<phase>/checkpoint/bytes`
     /// with the write count as the step. Like every metric the value is
     /// f32; the byte-exact counters come from the engine's `LoopOutcome`.
@@ -336,6 +376,33 @@ mod tests {
         let got: Vec<(&str, usize)> =
             m.series_iter().map(|(n, rows)| (n, rows.len())).collect();
         assert_eq!(got, vec![("b", 2), ("a", 1)]);
+    }
+
+    #[test]
+    fn record_cache_tiers_rolls_up_the_waterfall() {
+        let mut m = Metrics::new();
+        let s = CacheStats {
+            hits: 5,
+            misses: 2,
+            stores: 3,
+            hot_hits: 3,
+            disk_hits: 1,
+            shared_hits: 1,
+            hot_evictions: 4,
+            gc_evictions: 6,
+            ..Default::default()
+        };
+        m.record_cache_tiers(&s, (1024, 4096));
+        assert_eq!(m.last("cache/hits"), Some(5.0));
+        assert_eq!(m.last("cache/hot/hits"), Some(3.0));
+        // hot misses = everything that fell past tier 0
+        assert_eq!(m.last("cache/hot/misses"), Some(4.0));
+        assert_eq!(m.last("cache/disk/misses"), Some(3.0));
+        assert_eq!(m.last("cache/shared/misses"), Some(2.0));
+        assert_eq!(m.last("cache/hot/evictions"), Some(4.0));
+        assert_eq!(m.last("cache/disk/evictions"), Some(6.0));
+        assert_eq!(m.last("cache/hot/bytes"), Some(1024.0));
+        assert_eq!(m.last("cache/disk/bytes"), Some(4096.0));
     }
 
     #[test]

@@ -104,6 +104,12 @@ impl PipelineOutcome {
                     ("hits", Json::num(s.hits as f64)),
                     ("misses", Json::num(s.misses as f64)),
                     ("stores", Json::num(s.stores as f64)),
+                    ("hot_hits", Json::num(s.hot_hits as f64)),
+                    ("disk_hits", Json::num(s.disk_hits as f64)),
+                    ("shared_hits", Json::num(s.shared_hits as f64)),
+                    ("hot_evictions", Json::num(s.hot_evictions as f64)),
+                    ("gc_evictions", Json::num(s.gc_evictions as f64)),
+                    ("quarantined", Json::num(s.quarantined as f64)),
                 ]),
             ));
         }
@@ -278,7 +284,9 @@ pub fn quantize_cached_planned(
             mrt.manifest.model,
             key.hex()
         );
-        return Ok(qstate);
+        // tier 0 hands out a shared handle; this API returns an owned
+        // Store, which is a cheap COW clone (Arc-backed tensor maps)
+        return Ok((*qstate).clone());
     }
     metrics.record_cache("qstate", false);
     let ck = cache.stage_ckpt("qstate", key);
@@ -314,6 +322,7 @@ pub fn zsq(
     let q_acc = eval_quantized_metered(
         mrt, teacher, &qstate, dataset, qcfg.par, metrics,
     )?;
+    metrics.record_cache_tiers(cache.stats(), cache.tier_bytes());
     Ok(PipelineOutcome {
         model: mrt.manifest.model.clone(),
         fp_acc,
@@ -349,6 +358,7 @@ pub fn fsq(
     let q_acc = eval_quantized_metered(
         mrt, teacher, &qstate, dataset, qcfg.par, metrics,
     )?;
+    metrics.record_cache_tiers(cache.stats(), cache.tier_bytes());
     Ok(PipelineOutcome {
         model: mrt.manifest.model.clone(),
         fp_acc,
@@ -426,7 +436,9 @@ mod tests {
             hits: 2,
             misses: 1,
             stores: 1,
-            quarantined: 0,
+            hot_hits: 1,
+            disk_hits: 1,
+            ..Default::default()
         };
         let with_cache = PipelineOutcome {
             distill_secs: Some(1.5),
@@ -437,5 +449,7 @@ mod tests {
         .render();
         assert!(with_cache.contains("\"distill_secs\":1.5"), "{with_cache}");
         assert!(with_cache.contains("\"hits\":2"), "{with_cache}");
+        assert!(with_cache.contains("\"hot_hits\":1"), "{with_cache}");
+        assert!(with_cache.contains("\"gc_evictions\":0"), "{with_cache}");
     }
 }

@@ -216,7 +216,9 @@ pub fn teacher_cached(
             mrt.manifest.model,
             key.hex()
         );
-        return Ok(s);
+        // tier 0 hands out a shared handle; this API returns an owned
+        // Store, which is a cheap COW clone (Arc-backed tensor maps)
+        return Ok((*s).clone());
     }
     metrics.record_cache("teacher", false);
     let ck = cache.stage_ckpt("teacher", key);

@@ -350,13 +350,18 @@ pub fn check(stage: &str, site: &str) -> Result<()> {
 }
 
 /// Process-global corrupt hook: called by the artifact cache before every
-/// load with the file stem (`<kind>_<hexkey>`) and path.
-pub fn corrupt_hook(stem: &str, path: &Path) {
+/// load with the file stem (`<kind>_<hexkey>`) and path. Returns whether
+/// the file was corrupted, so the caller can invalidate any in-memory
+/// (tier-0) copy of the same artifact — an injected disk corruption must
+/// be observed, not masked by the hot cache.
+pub fn corrupt_hook(stem: &str, path: &Path) -> bool {
     if let Some(p) = current() {
         if p.corrupt_artifact(stem, path) {
             crate::progress!("faults: corrupted cached artifact {stem}");
+            return true;
         }
     }
+    false
 }
 
 /// Restores the previously active plan when dropped.

@@ -625,7 +625,33 @@ impl GridPlan {
         cache: &ArtifactCache,
         dataset: Option<&Dataset>,
     ) -> Vec<Cached> {
+        self.resolve_with_pins(manifests, cache, dataset).0
+    }
+
+    /// The transitive artifact stems (`<kind>_<hexkey>`) this grid's
+    /// dry-run resolution can name — the pin set `genie cache gc`
+    /// protects, so a budget-squeezed store keeps exactly what the next
+    /// grid run will read. Stems whose content key is undecidable (an
+    /// upstream must run first) cannot be named and thus not pinned;
+    /// those are exactly the stages the dry run already predicts will
+    /// recompute.
+    pub fn pin_stems(
+        &self,
+        manifests: &BTreeMap<String, Manifest>,
+        cache: &ArtifactCache,
+        dataset: Option<&Dataset>,
+    ) -> std::collections::BTreeSet<String> {
+        self.resolve_with_pins(manifests, cache, dataset).1
+    }
+
+    fn resolve_with_pins(
+        &self,
+        manifests: &BTreeMap<String, Manifest>,
+        cache: &ArtifactCache,
+        dataset: Option<&Dataset>,
+    ) -> (Vec<Cached>, std::collections::BTreeSet<String>) {
         let mut out = vec![Cached::Run; self.nodes.len()];
+        let mut pins = std::collections::BTreeSet::new();
         // per teacher node: the cached teacher's content hash
         let mut teacher_hash: HashMap<usize, u64> = HashMap::new();
         // per distill node: the cached synthetic images
@@ -640,8 +666,8 @@ impl GridPlan {
                     if !cache.is_enabled() {
                         continue;
                     }
-                    if let Ok(s) = Store::load(cache.path("teacher", node.spec))
-                    {
+                    pins.insert(format!("teacher_{}", node.spec.hex()));
+                    if let Some(s) = cache.peek("teacher", node.spec) {
                         out[i] = Cached::Hit;
                         teacher_hash.insert(i, s.content_hash());
                     }
@@ -652,19 +678,20 @@ impl GridPlan {
                         continue;
                     };
                     let key = artifacts::distill_key(m, &cell.distill, th);
+                    pins.insert(format!("distill_{}", key.hex()));
                     // a parseable artifact without its images tensor is
                     // incoherent (e.g. a partial copy): execution treats
                     // it as a miss and recomputes, so the prediction
                     // must too — Hit only when the images are loadable
-                    match Store::load(cache.path("distill", key)) {
-                        Ok(art) => match art.get("images") {
+                    match cache.peek("distill", key) {
+                        Some(art) => match art.get("images") {
                             Ok(t) => {
                                 images.insert(i, t.clone());
                                 out[i] = Cached::Hit;
                             }
                             Err(_) => out[i] = Cached::Run,
                         },
-                        Err(_) => out[i] = Cached::Run,
+                        None => out[i] = Cached::Run,
                     }
                 }
                 StageKind::Quantize => {
@@ -703,11 +730,10 @@ impl GridPlan {
                             let pk = artifacts::plan_key(
                                 m, &cell.quant, th, &calib,
                             );
-                            Store::load(cache.path("plan", pk))
-                                .ok()
-                                .and_then(|s| {
-                                    PrecisionPlan::from_store(m, &s).ok()
-                                })
+                            pins.insert(format!("plan_{}", pk.hex()));
+                            cache.peek("plan", pk).and_then(|s| {
+                                PrecisionPlan::from_store(m, &s).ok()
+                            })
                         }
                     };
                     let Some(plan) = plan else {
@@ -717,7 +743,8 @@ impl GridPlan {
                     let key = artifacts::quantize_key(
                         m, &cell.quant, th, &calib, &plan,
                     );
-                    if Store::load(cache.path("qstate", key)).is_ok() {
+                    pins.insert(format!("qstate_{}", key.hex()));
+                    if cache.contains("qstate", key) {
                         out[i] = Cached::Hit;
                     }
                 }
@@ -725,7 +752,7 @@ impl GridPlan {
                 StageKind::EvalFp | StageKind::EvalQ => out[i] = Cached::Run,
             }
         }
-        out
+        (out, pins)
     }
 
     /// Render the resolved DAG for `--dry-run`: cells, deduplicated

@@ -249,6 +249,26 @@ impl GridOutcome {
                                 "quarantined",
                                 Json::num(s.cache.quarantined as f64),
                             ),
+                            (
+                                "hot_hits",
+                                Json::num(s.cache.hot_hits as f64),
+                            ),
+                            (
+                                "disk_hits",
+                                Json::num(s.cache.disk_hits as f64),
+                            ),
+                            (
+                                "shared_hits",
+                                Json::num(s.cache.shared_hits as f64),
+                            ),
+                            (
+                                "hot_evictions",
+                                Json::num(s.cache.hot_evictions as f64),
+                            ),
+                            (
+                                "gc_evictions",
+                                Json::num(s.cache.gc_evictions as f64),
+                            ),
                         ]),
                     ),
                 ]),
@@ -413,9 +433,9 @@ fn acc_at(results: &[OnceLock<NodeOut>], i: usize) -> Result<f32> {
 }
 
 fn open_job_cache(cfg: &RunConfig) -> Result<ArtifactCache> {
-    let mut cache = ArtifactCache::open(&cfg.cache_dir, cfg.cache, cfg.resume)?;
-    cache.set_checkpoint_every(cfg.checkpoint_every);
-    Ok(cache)
+    // per-job caches on one dir share the process-global tier 0, so the
+    // budget/backend wiring (open_cache) applies uniformly across jobs
+    cfg.open_cache()
 }
 
 fn fold_stats(total: &mut CacheStats, job: &CacheStats) {
@@ -423,6 +443,11 @@ fn fold_stats(total: &mut CacheStats, job: &CacheStats) {
     total.misses += job.misses;
     total.stores += job.stores;
     total.quarantined += job.quarantined;
+    total.hot_hits += job.hot_hits;
+    total.disk_hits += job.disk_hits;
+    total.shared_hits += job.shared_hits;
+    total.hot_evictions += job.hot_evictions;
+    total.gc_evictions += job.gc_evictions;
 }
 
 /// First non-`Ok` node in a cell's stage chain decides the cell's
@@ -714,6 +739,11 @@ pub fn execute_cells(
     if let Some(r) = &dag_report {
         metrics.record_sched("grid", r);
     }
+    // one folded emission per run: per-tier cache counters plus the
+    // resident bytes of tiers 0/1 — deterministic across schedulers and
+    // worker counts because the fold above is node-index-ordered and
+    // the end-of-run tier contents depend only on what ran, not when
+    metrics.record_cache_tiers(&cache_total, open_job_cache(cfg)?.tier_bytes());
 
     // assemble per-cell outcomes; non-ok cells report their status and
     // carry no products
@@ -959,7 +989,8 @@ mod tests {
                     hits: 1,
                     misses: 4,
                     stores: 4,
-                    quarantined: 0,
+                    hot_hits: 1,
+                    ..Default::default()
                 },
             },
         };
@@ -968,6 +999,8 @@ mod tests {
         assert!(text.contains("\"dedup_saved\":0"), "{text}");
         assert!(text.contains("\"distill_secs\":null"), "{text}");
         assert!(text.contains("\"hits\":1"), "{text}");
+        assert!(text.contains("\"hot_hits\":1"), "{text}");
+        assert!(text.contains("\"gc_evictions\":0"), "{text}");
         assert!(text.contains("\"status\":\"ok\""), "{text}");
         assert!(text.contains("\"reason\":null"), "{text}");
         assert!(text.contains("\"retries\":1"), "{text}");

@@ -10,6 +10,9 @@
 //!   grid      --axis k=v1,v2 ...       multi-run sweep on the shared-
 //!                                      artifact scheduler (DESIGN.md §11);
 //!                                      --dry-run prints the resolved DAG
+//!   cache     stats|gc [--axis ...]    tiered artifact store inspection
+//!                                      and budgeted, pin-aware GC
+//!                                      (DESIGN.md §16)
 //!   experiments --exp ID [k=v ...]     paper table/figure harnesses
 //!
 //! Config overrides are `key=value` (see coordinator::config); notably
@@ -26,7 +29,7 @@
 
 use anyhow::{bail, Result};
 
-use genie::artifacts::ArtifactCache;
+use genie::artifacts::{ArtifactCache, Backend};
 use genie::coordinator::{
     self, fsq, zsq, Metrics, RunConfig,
 };
@@ -51,6 +54,15 @@ fn main() -> Result<()> {
     let mut dry_run = false;
     let mut overrides = Vec::new();
     let mut it = args[1..].iter().peekable();
+    // `genie cache <gc|stats>` carries a bare action word before the flags
+    let mut action = String::new();
+    if cmd == "cache" {
+        if let Some(a) = it.peek() {
+            if !a.starts_with("--") && !a.contains('=') {
+                action = it.next().cloned().unwrap_or_default();
+            }
+        }
+    }
     while let Some(a) = it.next() {
         match a.as_str() {
             "--model" => cfg.model = next(&mut it, "--model")?,
@@ -58,6 +70,22 @@ fn main() -> Result<()> {
             "--cache-dir" => cfg.cache_dir = next(&mut it, "--cache-dir")?,
             "--no-cache" => cfg.cache = false,
             "--resume" => cfg.resume = true,
+            "--cache-budget" => {
+                let v = next(&mut it, "--cache-budget")?;
+                cfg.set("cache.budget_bytes", &v)?;
+            }
+            "--cache-hot-bytes" => {
+                let v = next(&mut it, "--cache-hot-bytes")?;
+                cfg.set("cache.hot_bytes", &v)?;
+            }
+            "--cache-backend" => {
+                let v = next(&mut it, "--cache-backend")?;
+                cfg.set("cache.backend", &v)?;
+            }
+            "--cache-shared-dir" => {
+                let v = next(&mut it, "--cache-shared-dir")?;
+                cfg.set("cache.shared_dir", &v)?;
+            }
             "--precision" => {
                 let v = next(&mut it, "--precision")?;
                 cfg.set("precision", &v)?;
@@ -101,6 +129,7 @@ fn main() -> Result<()> {
         "zsq" | "run" => cmd_zsq(&cfg),
         "fsq" => cmd_fsq(&cfg),
         "grid" => cmd_grid(&cfg, &axes, dry_run),
+        "cache" => cmd_cache(&cfg, &action, &axes),
         "export" => cmd_export(&cfg),
         "report" => cmd_report(),
         "experiments" => experiments::run(&exp, &cfg),
@@ -123,14 +152,18 @@ fn next(
 fn usage() {
     println!(
         "genie — GENIE zero-shot quantization (rust+JAX+Pallas reproduction)\n\
-         usage: genie <info|pretrain|eval|distill|zsq|run|fsq|grid|experiments>\n\
+         usage: genie <info|pretrain|eval|distill|zsq|run|fsq|grid|cache|experiments>\n\
                 [--model M] [--artifacts DIR] [--exp ID]\n\
                 [--precision uniform|pareto] [--target-size F]\n\
                 [--synthesis genie|zeroq|zaq] [--steps-per-dispatch K]\n\
                 [--axis name=v1,v2 ...] [--dry-run] [--json PATH]\n\
-                [--cache-dir DIR] [--no-cache] [--resume] [key=value ...]\n\
+                [--cache-dir DIR] [--no-cache] [--resume]\n\
+                [--cache-budget BYTES] [--cache-hot-bytes BYTES]\n\
+                [--cache-backend local|shared-dir] [--cache-shared-dir DIR]\n\
+                [key=value ...]\n\
          keys: wbits abits seed workers steps_per_dispatch sched\n\
                checkpoint_every json\n\
+               cache.{{budget_bytes,hot_bytes,backend,shared_dir}}\n\
                precision target_size first_last_bits granularity\n\
                sens_batches candidates synthesis retry.{{max,backoff_ms}}\n\
                pretrain.{{steps,lr}}\n\
@@ -153,6 +186,14 @@ fn usage() {
          Stages cache as content-addressed artifacts under --cache-dir;\n\
          identical configs re-load instead of re-running, --resume picks\n\
          an interrupted stage up from its last checkpoint.\n\
+         The store is tiered (DESIGN.md §16): an in-process hot tier\n\
+         shares one deserialized copy across agreeing grid cells\n\
+         (cache.hot_bytes caps it), disk is tier 1 with a GC budget\n\
+         (cache.budget_bytes; 0 = unlimited), and cache.backend=shared-dir\n\
+         pools artifacts in cache.shared_dir across machines.\n\
+         `genie cache stats` reports per-tier contents; `genie cache gc`\n\
+         evicts LRU down to the budget, pinning whatever the configured\n\
+         run/grid (same --axis flags as `genie grid`) would read.\n\
          --synthesis picks the calibration-data engine (DESIGN.md §12):\n\
          genie (generator+latents, default), zeroq (BN-statistics\n\
          image-space matching), zaq (adversarial generator vs a W4A4\n\
@@ -185,18 +226,24 @@ fn setup<'a>(
 }
 
 fn open_cache(cfg: &RunConfig) -> Result<ArtifactCache> {
-    let mut cache = ArtifactCache::open(&cfg.cache_dir, cfg.cache, cfg.resume)?;
-    cache.set_checkpoint_every(cfg.checkpoint_every);
-    Ok(cache)
+    cfg.open_cache()
 }
 
 fn print_cache_stats(cache: &ArtifactCache) {
     let s = cache.stats();
     if cache.is_enabled() {
         println!(
-            "cache: {} hits, {} misses, {} artifacts stored",
-            s.hits, s.misses, s.stores
+            "cache: {} hits ({} hot, {} disk, {} shared), {} misses, {} \
+             artifacts stored",
+            s.hits, s.hot_hits, s.disk_hits, s.shared_hits, s.misses, s.stores
         );
+        if s.hot_evictions + s.gc_evictions > 0 {
+            println!(
+                "cache: {} hot eviction(s), {} disk artifact(s) GCed to \
+                 budget",
+                s.hot_evictions, s.gc_evictions
+            );
+        }
         if s.quarantined > 0 {
             println!(
                 "cache: {} corrupt artifact(s) quarantined and recomputed",
@@ -204,6 +251,133 @@ fn print_cache_stats(cache: &ArtifactCache) {
             );
         }
     }
+}
+
+/// `genie cache stats|gc` (DESIGN.md §16): inspect the tiered store or
+/// collect tier 1 back under `cache.budget_bytes`. `gc` pins the
+/// transitive artifact set of the configured run/grid (`--axis` flags
+/// compose exactly like `genie grid --dry-run`), live claims, and this
+/// process's touches; everything else is evictable, oldest use first.
+fn cmd_cache(cfg: &RunConfig, action: &str, axes: &[String]) -> Result<()> {
+    anyhow::ensure!(
+        cfg.cache,
+        "the cache is disabled (--no-cache); nothing to {action}"
+    );
+    let cache = open_cache(cfg)?;
+    match action {
+        "stats" => {
+            let (hot, _disk) = cache.tier_bytes();
+            println!("tier 0 (hot): {} KiB resident", hot / 1024);
+            print_tier("tier 1", cache.local_backend());
+            if let Some(be) = cache.shared_backend() {
+                print_tier("tier 2", be);
+            }
+            println!(
+                "budget: {} (disk), {} (hot)",
+                fmt_budget(cfg.cache_budget_bytes),
+                fmt_budget(cfg.cache_hot_bytes),
+            );
+            Ok(())
+        }
+        "gc" => {
+            let pins: std::collections::HashSet<String> =
+                match grid_pin_stems(cfg, axes, &cache) {
+                    Ok(p) => p.into_iter().collect(),
+                    Err(e) => {
+                        println!(
+                            "cache gc: no pin set resolved ({e:#}); \
+                             falling back to live claims + LRU only"
+                        );
+                        Default::default()
+                    }
+                };
+            let report = genie::artifacts::gc::collect(
+                cache.local_backend(),
+                cache.hot_namespace(),
+                cfg.cache_budget_bytes,
+                &pins,
+            );
+            println!(
+                "cache gc: {} artifact(s) scanned, {} pinned, {} evicted \
+                 ({} KiB reclaimed), {} KiB live",
+                report.scanned,
+                report.pinned,
+                report.evicted,
+                report.evicted_bytes / 1024,
+                report.live_bytes / 1024,
+            );
+            if cfg.cache_budget_bytes == 0 {
+                println!(
+                    "cache gc: no budget set (cache.budget_bytes=0) — \
+                     report only, nothing evicted"
+                );
+            }
+            Ok(())
+        }
+        "" => bail!("cache needs an action: genie cache <stats|gc>"),
+        other => bail!("unknown cache action '{other}' (want stats|gc)"),
+    }
+}
+
+fn fmt_budget(bytes: u64) -> String {
+    if bytes == 0 {
+        "unlimited".to_string()
+    } else {
+        format!("{} KiB", bytes / 1024)
+    }
+}
+
+fn print_tier(label: &str, be: &dyn Backend) {
+    let files = be.list();
+    let arts = files.iter().filter(|e| e.name.ends_with(".gts")).count();
+    let bytes: u64 = files
+        .iter()
+        .filter(|e| {
+            e.name.ends_with(".gts") || e.name.ends_with(".gts.fnv")
+        })
+        .map(|e| e.bytes)
+        .sum();
+    let locks = files
+        .iter()
+        .filter(|e| e.name.starts_with("wip_") && e.name.ends_with(".lock"))
+        .count();
+    let quarantined = std::fs::read_dir(be.root().join("quarantine"))
+        .map(|rd| rd.count())
+        .unwrap_or(0);
+    println!(
+        "{label} ({}): {:?} — {arts} artifact(s), {} KiB, {locks} live \
+         claim(s), {quarantined} quarantined",
+        be.tier(),
+        be.root(),
+        bytes / 1024,
+    );
+}
+
+/// The pin set for `genie cache gc`: the transitive artifact stems the
+/// configured grid (base config + `--axis` flags) resolves in its dry
+/// run — exactly what a subsequent `genie grid` with the same flags
+/// would read instead of recompute.
+fn grid_pin_stems(
+    cfg: &RunConfig,
+    axes: &[String],
+    cache: &ArtifactCache,
+) -> Result<std::collections::BTreeSet<String>> {
+    let mut grid = RunGrid::new();
+    for a in axes {
+        grid.parse_axis(a, cfg)?;
+    }
+    let cells = grid.cells(cfg)?;
+    let mut manifests = std::collections::BTreeMap::new();
+    for c in &cells {
+        if !manifests.contains_key(&c.model) {
+            let dir = std::path::Path::new(&cfg.artifacts).join(&c.model);
+            manifests
+                .insert(c.model.clone(), genie::runtime::Manifest::load(dir)?);
+        }
+    }
+    let plan = GridPlan::build(cells, &manifests, false)?;
+    let dataset = Dataset::load(&cfg.artifacts).ok();
+    Ok(plan.pin_stems(&manifests, cache, dataset.as_ref()))
 }
 
 fn info(cfg: &RunConfig) -> Result<()> {

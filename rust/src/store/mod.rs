@@ -111,6 +111,16 @@ impl Store {
         w.hash
     }
 
+    /// Single-pass serialize-and-hash: the GTS1 byte stream plus its
+    /// FNV-1a 64 content hash from one `write_to` walk, so the artifact
+    /// cache can emit the `.fnv` sidecar without re-serializing (or
+    /// re-reading) the bytes it just wrote (DESIGN.md §16).
+    pub fn to_bytes_hashed(&self) -> Result<(Vec<u8>, u64)> {
+        let mut w = HashingBuf { buf: Vec::new(), hash: FNV_OFFSET };
+        self.write_to(&mut w)?;
+        Ok((w.buf, w.hash))
+    }
+
     /// Write the GTS1 stream (magic, count, then per-tensor name/dtype/
     /// shape/bytes records) — shared by `save`, `to_bytes` and
     /// `content_hash`.
@@ -223,6 +233,27 @@ impl Write for FnvWriter {
     }
 }
 
+/// A `Write` sink that buffers the stream *and* folds it into a running
+/// FNV-1a hash — one serialization walk yields both the artifact bytes
+/// and the sidecar hash (`to_bytes_hashed`).
+#[derive(Debug)]
+struct HashingBuf {
+    buf: Vec<u8>,
+    hash: u64,
+}
+
+impl Write for HashingBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.hash = fnv1a(self.hash, buf);
+        self.buf.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
 fn read_u16(c: &mut impl Read) -> Result<u16> {
     let mut b = [0u8; 2];
     c.read_exact(&mut b)?;
@@ -306,6 +337,17 @@ mod tests {
         c.insert("y", Tensor::scalar_f32(3.0));
         c.insert("x", Tensor::from_f32(&[2], vec![1.0, 2.0]));
         assert_ne!(a.content_hash(), c.content_hash());
+    }
+
+    #[test]
+    fn to_bytes_hashed_matches_two_pass() {
+        let mut s = Store::new();
+        s.insert("a", Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        s.insert("b", Tensor::from_i32(&[3], vec![-1, 0, 7]));
+        let (bytes, hash) = s.to_bytes_hashed().unwrap();
+        assert_eq!(bytes, s.to_bytes().unwrap());
+        assert_eq!(hash, s.content_hash());
+        assert_eq!(hash, fnv1a(FNV_OFFSET, &bytes));
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use genie::artifacts::{ArtifactCache, KeyBuilder};
+use genie::artifacts::{self, ArtifactCache, KeyBuilder};
 use genie::coordinator::{Metrics, RunConfig};
 use genie::faults::{self, FaultPlan};
 use genie::grid::{self, supervise, AxisValue, GridOpts, RunGrid};
@@ -77,6 +77,14 @@ fn base_cfg(cache_dir: &Path) -> RunConfig {
         format!("steps_per_dispatch={}", env_steps_per_dispatch()),
     ])
     .unwrap();
+    // the shared-dir CI leg sets GENIE_CACHE_BACKEND/GENIE_CACHE_SHARED_DIR
+    // globally; scope the tier-2 pool under this test's own cache root so a
+    // pool warmed by an earlier run never diverges the cold-run cache
+    // series the determinism properties compare
+    if cfg.cache_backend == "shared-dir" {
+        cfg.cache_shared_dir =
+            cache_dir.join("pool").to_string_lossy().into_owned();
+    }
     cfg
 }
 
@@ -176,6 +184,9 @@ fn prop_corrupt_artifact_quarantined_then_recomputed_bit_identical() {
             bytes.truncate(rng.below(bytes.len()));
         }
         std::fs::write(&path, &bytes).unwrap();
+        // the damage was done behind the cache's back, so drop the
+        // tier-0 copy too — this property is about *disk* verification
+        artifacts::clear_hot(&dir);
 
         let before = cache.stats().clone();
         assert!(

@@ -11,7 +11,7 @@
 
 use std::path::Path;
 
-use genie::artifacts::ArtifactCache;
+use genie::artifacts::{self, ArtifactCache};
 use genie::coordinator::{
     distill_cached, eval_fp32, eval_quantized, quantize_cached,
     teacher_cached, Metrics, RunConfig,
@@ -52,6 +52,14 @@ fn base_cfg(cache_dir: &Path) -> RunConfig {
         "quant.steps=8".into(),
     ])
     .unwrap();
+    // the shared-dir CI leg sets GENIE_CACHE_BACKEND/GENIE_CACHE_SHARED_DIR
+    // globally; scope the tier-2 pool under this test's own cache root so
+    // same-keyed artifacts from other tests (or earlier runs) never warm a
+    // run that asserts cold-cache counters
+    if cfg.cache_backend == "shared-dir" {
+        cfg.cache_shared_dir =
+            cache_dir.join("pool").to_string_lossy().into_owned();
+    }
     cfg
 }
 
@@ -231,6 +239,84 @@ fn grid_dispatches_shared_pretrain_and_distill_once() {
         );
     }
     assert!(out2.stats.cache.hits >= 5, "{:?}", out2.stats.cache);
+    for (a, b) in out.cells.iter().zip(&out2.cells) {
+        let (oa, ob) =
+            (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(oa.q_acc, ob.q_acc);
+        assert_eq!(oa.fp_acc, ob.fp_acc);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The tier-0 sharing contract (DESIGN.md §16): a warm 2×2 grid whose
+/// four cells agree on one distill set deserializes that artifact from
+/// a disk tier exactly once — the first consumer parses it, everyone
+/// else gets the shared in-process handle.
+#[test]
+fn warm_grid_deserializes_shared_distill_exactly_once() {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let root = std::env::temp_dir().join("genie_grid_hot_share");
+    std::fs::remove_dir_all(&root).ok();
+    let mut cfg = base_cfg(&root);
+    cfg.set("workers", "4").unwrap();
+
+    // 2×2: bits × quantizer arm — neither axis touches the distill
+    // config, so all four cells share one teacher and one distill set
+    let mut grid = RunGrid::new();
+    grid.parse_axis("bits=4,2", &cfg).unwrap();
+    grid.parse_axis("quant=genie_m,adaround", &cfg).unwrap();
+
+    let mut metrics = Metrics::new();
+    let out = grid::execute(
+        &rt, &cfg, &grid, &GridOpts::default(), &mut metrics,
+    )
+    .unwrap();
+    assert_eq!(out.cells.len(), 4);
+    assert_eq!(out.stats.distill_nodes, 1, "{:?}", out.stats);
+
+    // the shared distill artifact's content key: teacher is still hot
+    // from the cold run, so this peek does not touch disk
+    let mrt = ModelRt::load(&rt, &cfg.artifacts, "toy").unwrap();
+    let cache = cfg.open_cache().unwrap();
+    let tkey = artifacts::pretrain_key(&mrt.manifest, &cfg.pretrain);
+    let teacher = cache.peek("teacher", tkey).expect("teacher cached");
+    let dkey = artifacts::distill_key(
+        &mrt.manifest, &cfg.distill, teacher.content_hash(),
+    );
+    assert_eq!(
+        artifacts::disk_deser_count(&cfg.cache_dir, "distill", dkey),
+        0,
+        "cold run computed the distill set; nothing came from disk"
+    );
+
+    // drop tier 0: the warm run must now go back to a disk tier —
+    // exactly once, despite four cells (and their resolve pass) all
+    // consuming the artifact
+    artifacts::clear_hot(&cfg.cache_dir);
+    let mut metrics2 = Metrics::new();
+    let out2 = grid::execute(
+        &rt, &cfg, &grid, &GridOpts::default(), &mut metrics2,
+    )
+    .unwrap();
+    assert!(out2.all_ok());
+    assert_eq!(
+        artifacts::disk_deser_count(&cfg.cache_dir, "distill", dkey),
+        1,
+        "warm grid must deserialize the shared distill set exactly once \
+         ({:?})",
+        out2.stats.cache
+    );
+    assert_eq!(
+        artifacts::disk_deser_count(&cfg.cache_dir, "teacher", tkey),
+        1,
+        "warm grid must deserialize the shared teacher exactly once \
+         ({:?})",
+        out2.stats.cache
+    );
+    // and the cells replay bit-identically off the cache
     for (a, b) in out.cells.iter().zip(&out2.cells) {
         let (oa, ob) =
             (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
